@@ -1,0 +1,39 @@
+//! Compare the generated algorithms against the human-designed baselines
+//! of both frameworks (Kernel Tuner's tuned GA + SA, pyATF's DE) on a
+//! training-GPU slice of the benchmark — a fast preview of Fig. 8.
+//!
+//! Run: `cargo run --release --example compare_frameworks`
+
+use llamea_kt::methodology::{evaluate_all, NamedFactory, OptimizerFactory};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let caches = llamea_kt::tuning::build_caches_for(&["A100", "A4000"]);
+    println!("built {} evaluation caches in {:?}", caches.len(), t0.elapsed());
+
+    let names = ["hybrid_vndx", "atgw", "ga", "sa", "de", "random"];
+    let factories: Vec<NamedFactory> =
+        names.iter().map(|n| NamedFactory(n.to_string())).collect();
+    let refs: Vec<&dyn OptimizerFactory> = factories.iter().map(|f| f as _).collect();
+
+    let results = evaluate_all(&caches, &refs, 20, 1234);
+    println!("\n{:14} {:>8} {:>8}   (20 runs x {} spaces)", "algorithm", "P", "±std", caches.len());
+    for (name, agg) in &results {
+        println!("{:14} {:+8.3} {:8.3}", name, agg.score, agg.score_std);
+    }
+    let best_gen = results
+        .iter()
+        .filter(|(n, _)| n == "hybrid_vndx" || n == "atgw")
+        .map(|(_, a)| a.score)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let best_human = results
+        .iter()
+        .filter(|(n, _)| ["ga", "sa", "de"].contains(&n.as_str()))
+        .map(|(_, a)| a.score)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nbest generated {:+.3} vs best human-designed {:+.3} (paper: generated wins)",
+        best_gen, best_human
+    );
+    println!("total {:?}", t0.elapsed());
+}

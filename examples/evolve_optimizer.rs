@@ -1,0 +1,74 @@
+//! Run one LLaMEA evolution: generate an optimization algorithm for a
+//! target application (with search-space information), then evaluate the
+//! winner on a held-out test-GPU space.
+//!
+//! Run: `cargo run --release --example evolve_optimizer`
+
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::llamea::{evolve, EvolutionConfig, GenomeOptimizer, MockLlm, SpaceInfo};
+use llamea_kt::methodology::{run_many, FnFactory, SpaceSetup};
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::Cache;
+use llamea_kt::util::stats;
+
+fn main() {
+    let app = Application::Dedispersion;
+    // Training set: the target application on the three training GPUs.
+    let space = std::sync::Arc::new(app.build_space());
+    let caches: Vec<Cache> = llamea_kt::kernels::gpu::TRAIN_GPUS
+        .iter()
+        .map(|g| {
+            Cache::build_with_space(app, GpuSpec::by_name(g).unwrap(), std::sync::Arc::clone(&space))
+        })
+        .collect();
+    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    let info = SpaceInfo::from_cache(&caches[0], &setups[0]);
+    println!(
+        "evolving an optimizer for {} (dims {}, {} valid configs, ~{:.0} evals/budget)",
+        app.name(),
+        info.dims,
+        info.constrained_size,
+        info.expected_evals
+    );
+
+    let mut config = EvolutionConfig::paper_defaults(app.name(), Some(info));
+    config.llm_call_budget = 60; // trimmed from the paper's 100 for demo speed
+    let mut llm = MockLlm::new(7);
+    let t0 = std::time::Instant::now();
+    let result = evolve(&config, &mut llm, &caches, 7);
+    println!(
+        "evolved '{}' in {:?}: train fitness {:.3}, {} LLM calls, {} broken candidates, {} tokens",
+        result.best.genome.name,
+        t0.elapsed(),
+        result.best.fitness,
+        result.llm_calls,
+        result.failures,
+        result.tokens.total()
+    );
+    println!("  {}", result.best.genome.summary());
+    println!("  fitness per generation: {:?}", result.fitness_history);
+
+    // Held-out evaluation: same application, unseen GPU (W7800).
+    let test_cache = Cache::build_with_space(
+        app,
+        GpuSpec::by_name("W7800").unwrap(),
+        std::sync::Arc::clone(&space),
+    );
+    let test_setup = SpaceSetup::new(&test_cache);
+    let genome = result.best.genome.clone();
+    let name = result.best.genome.name.clone();
+    let factory = FnFactory {
+        f: move || {
+            Box::new(GenomeOptimizer::new(genome.clone()))
+                as Box<dyn llamea_kt::optimizers::Optimizer>
+        },
+        name,
+    };
+    let curves = run_many(&test_cache, &test_setup, &factory, 30, 11);
+    let score = stats::mean(&stats::mean_curve(&curves));
+    println!(
+        "held-out {}: P = {:+.3} over 30 runs (0 = random search, 1 = optimum)",
+        test_cache.id(),
+        score
+    );
+}

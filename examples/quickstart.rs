@@ -1,0 +1,56 @@
+//! Quickstart: build a benchmark search space, tune it with the paper's
+//! best generated optimizer, and score the run with the methodology.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::methodology::{Baseline, SpaceSetup};
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::{Cache, TuningContext};
+
+fn main() {
+    // 1. Pick an application and a device; build the constrained space and
+    //    its pre-explored evaluation cache (simulation mode).
+    let app = Application::Gemm;
+    let gpu = GpuSpec::by_name("A100").unwrap();
+    let cache = Cache::build(app, gpu);
+    println!(
+        "space {}: {} valid of {} cartesian configurations ({} dims)",
+        cache.id(),
+        cache.len(),
+        cache.space.cartesian_size(),
+        cache.space.dims()
+    );
+
+    // 2. The methodology assigns the space a budget: the time random search
+    //    needs to get 95% of the way from the median to the optimum.
+    let setup = SpaceSetup::new(&cache);
+    println!(
+        "budget: {:.0} simulated seconds (~{:.0} evaluations)",
+        setup.budget_s,
+        setup.budget_s / cache.mean_eval_cost_s
+    );
+
+    // 3. Tune with HybridVNDX (the paper's Algorithm 1).
+    let mut opt = llamea_kt::optimizers::by_name("hybrid_vndx").unwrap();
+    let mut ctx = TuningContext::new(&cache, setup.budget_s, 42);
+    opt.run(&mut ctx);
+    let (best_i, best_ms) = ctx.best().unwrap();
+    println!(
+        "hybrid_vndx found {:.3} ms (global optimum {:.3} ms) in {} unique evaluations",
+        best_ms,
+        cache.optimum_ms,
+        ctx.unique_evals()
+    );
+    println!(
+        "best configuration: {}",
+        cache.space.params.describe(cache.space.config(best_i))
+    );
+
+    // 4. Score the run against the calculated random-search baseline.
+    let baseline = Baseline::from_cache(&cache);
+    let best_at_end = ctx.trajectory.last().map(|&(_, v)| v).unwrap();
+    let b_end = baseline.value_at(setup.budget_s);
+    let p = (b_end - best_at_end) / (b_end - baseline.optimum());
+    println!("end-of-budget performance score P = {:.3} (0 = random search, 1 = optimum)", p);
+}

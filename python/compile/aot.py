@@ -1,0 +1,95 @@
+"""AOT bridge: lower every program variant to HLO *text* for the Rust L3.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo.
+
+Outputs, under ``--out-dir`` (default ``../artifacts``):
+  <kernel>__<param>-<value>__...hlo.txt   one per variant
+  manifest.tsv                            index the Rust runtime parses
+
+Manifest columns (tab-separated):
+  kernel  name  file  params(k=v;k=v)  inputs(dtype:d0xd1;...)  n_outputs
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variant_name(kernel: str, params: dict) -> str:
+    parts = [f"{k}-{v}" for k, v in sorted(params.items())]
+    return f"{kernel}__" + "__".join(parts)
+
+
+def spec_str(spec) -> str:
+    dims = "x".join(str(d) for d in spec.shape)
+    return f"{spec.dtype}:{dims}"
+
+
+def lower_variant(kernel: str, params: dict, out_dir: str) -> tuple:
+    """Lower one configuration; returns its manifest row."""
+    builder, _ = model.VARIANT_BUILDERS[kernel]
+    fn, specs = builder(**params)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    name = variant_name(kernel, params)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    params_s = ";".join(f"{k}={v}" for k, v in sorted(params.items()))
+    inputs_s = ";".join(spec_str(s) for s in specs)
+    return (kernel, name, fname, params_s, inputs_s, "1")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--kernels", default="all",
+                    help="comma-separated subset of %s" %
+                         ",".join(model.VARIANT_BUILDERS))
+    args = ap.parse_args(argv)
+
+    kernels = (list(model.VARIANT_BUILDERS) if args.kernels == "all"
+               else args.kernels.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    rows = []
+    t0 = time.time()
+    for kernel in kernels:
+        _, variants = model.VARIANT_BUILDERS[kernel]
+        for params in variants:
+            t1 = time.time()
+            rows.append(lower_variant(kernel, params, args.out_dir))
+            print(f"  lowered {rows[-1][1]} ({time.time() - t1:.2f}s)",
+                  file=sys.stderr)
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# kernel\tname\tfile\tparams\tinputs\tn_outputs\n")
+        for row in rows:
+            f.write("\t".join(row) + "\n")
+    print(f"wrote {len(rows)} variants + manifest to {args.out_dir} "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Tunable tiled 2D convolution Pallas kernel (L1).
+
+The paper's convolution search space (van Werkhoven et al. 2014) tiles the
+output image over threadblocks, with each thread computing ``tile_x x tile_y``
+output pixels and the input staged through shared memory. The Pallas
+adaptation expresses the same schedule with the grid iterating over output
+tiles and the (overlapping) input window loaded from the full array with
+dynamic slices — the interpret-mode equivalent of the HBM->VMEM halo load.
+
+Tunables: ``tile_h``, ``tile_w`` (output tile shape) and ``unroll`` (how many
+filter rows are unrolled per accumulation step, the analogue of the paper's
+loop-unroll factors).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def conv2d(image: jnp.ndarray, filt: jnp.ndarray,
+           *, tile_h: int, tile_w: int, unroll: int = 1) -> jnp.ndarray:
+    """Direct 2D convolution of a padded ``image`` with ``filt``.
+
+    ``image`` has shape ``(H + Fh - 1, W + Fw - 1)`` (pre-padded border, as
+    in the BAT/convolution benchmark); output is ``(H, W)``. ``tile_h`` and
+    ``tile_w`` must divide ``H`` and ``W``; ``unroll`` must divide ``Fh``.
+    """
+    fh, fw = filt.shape
+    h = image.shape[0] - fh + 1
+    w = image.shape[1] - fw + 1
+    assert h % tile_h == 0, f"tile_h={tile_h} !| H={h}"
+    assert w % tile_w == 0, f"tile_w={tile_w} !| W={w}"
+    assert fh % unroll == 0, f"unroll={unroll} !| Fh={fh}"
+
+    def kernel(x_ref, f_ref, o_ref):
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        # Halo load: (tile_h + fh - 1, tile_w + fw - 1) input window.
+        win = x_ref[pl.dslice(i * tile_h, tile_h + fh - 1),
+                    pl.dslice(j * tile_w, tile_w + fw - 1)]
+        f = f_ref[...]
+        acc = jnp.zeros((tile_h, tile_w), dtype=jnp.float32)
+        # Filter loops fully unrolled in groups of `unroll` rows — mirrors
+        # the paper's partial loop unrolling tunable.
+        for a0 in range(0, fh, unroll):
+            for a in range(a0, a0 + unroll):
+                for b in range(fw):
+                    acc = acc + win[a:a + tile_h, b:b + tile_w] * f[a, b]
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(h // tile_h, w // tile_w),
+        in_specs=[
+            # Full input resident (interpret mode); the index_map pins the
+            # whole array so the kernel can take overlapping halo windows.
+            pl.BlockSpec(image.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(filt.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_h, tile_w), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(image, filt)

@@ -1,0 +1,57 @@
+"""Tunable dedispersion Pallas kernel (L1).
+
+AMBER's GPU dedispersion assigns thread blocks to (DM, time) tiles, each
+thread summing frequency channels at per-(DM, channel) sample delays. The
+Pallas adaptation runs the grid over DMs, loads the delay row for the current
+DM as a blocked operand, and strides through the channel loop with a tunable
+``channel_unroll`` factor — the analogue of the paper's partial loop unrolling
+over frequency channels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def dedisperse(samples: jnp.ndarray, delays: jnp.ndarray,
+               *, n_time_out: int, channel_unroll: int = 1) -> jnp.ndarray:
+    """Dedisperse ``samples`` for every DM row of ``delays``.
+
+    ``samples`` — (n_channels, n_time_in) f32
+    ``delays``  — (n_dms, n_channels) i32, with
+                  ``delays[dm, c] + n_time_out <= n_time_in``.
+    Output: (n_dms, n_time_out) f32 where
+    ``out[dm, t] = sum_c samples[c, t + delays[dm, c]]``.
+
+    ``channel_unroll`` must divide ``n_channels``.
+    """
+    n_chan, n_time_in = samples.shape
+    n_dms = delays.shape[0]
+    assert delays.shape[1] == n_chan
+    assert n_chan % channel_unroll == 0, \
+        f"channel_unroll={channel_unroll} !| channels={n_chan}"
+
+    def kernel(s_ref, d_ref, o_ref):
+        acc = jnp.zeros((1, n_time_out), dtype=jnp.float32)
+        # Channel loop unrolled in groups — the tunable schedule knob.
+        for c0 in range(0, n_chan, channel_unroll):
+            part = jnp.zeros((1, n_time_out), dtype=jnp.float32)
+            for c in range(c0, c0 + channel_unroll):
+                d = d_ref[0, c]
+                part = part + s_ref[pl.dslice(c, 1), pl.dslice(d, n_time_out)]
+            acc = acc + part
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_dms,),
+        in_specs=[
+            pl.BlockSpec(samples.shape, lambda dm: (0, 0)),
+            pl.BlockSpec((1, n_chan), lambda dm: (dm, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_time_out), lambda dm: (dm, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_dms, n_time_out), jnp.float32),
+        interpret=True,
+    )(samples, delays)

@@ -1,0 +1,119 @@
+"""Tunable tiled GEMM Pallas kernel (L1).
+
+The paper's GEMM search space comes from CLBlast, whose CUDA/OpenCL kernel
+tiles the computation over threadblocks and per-thread work items. On the
+Pallas side the same insight maps to the HBM->VMEM block schedule:
+
+  * CLBlast ``MWG x NWG`` workgroup tile  -> BlockSpec block shape
+    ``(block_m, block_n)`` of the output,
+  * the ``KWG`` k-loop staging tile       -> ``block_k`` grid dimension with
+    an accumulate-in-place output block,
+  * vector widths ``VWM/VWN``             -> lane-dimension alignment of the
+    block shapes (multiples of 8 sublanes x 128 lanes target the MXU).
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, k_steps: int,
+                 alpha: float, beta: float, c_ref=None):
+    """One (i, j, k) grid step: accumulate a (bm, bk) @ (bk, bn) product.
+
+    The output block is revisited for every k step (its index map ignores
+    ``k``), so it doubles as the accumulator — the standard Pallas matmul
+    pattern that avoids scratch memory and works under interpret mode.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        if c_ref is None or beta == 0.0:
+            o_ref[...] = jnp.zeros_like(o_ref)
+        else:
+            o_ref[...] = beta * c_ref[...]
+
+    o_ref[...] += alpha * jnp.dot(a_ref[...], b_ref[...],
+                                  preferred_element_type=jnp.float32)
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+         *, block_m: int, block_n: int, block_k: int,
+         alpha: float = 1.0, beta: float = 0.0) -> jnp.ndarray:
+    """Compute ``alpha * A @ B + beta * C`` with a tiled Pallas kernel.
+
+    Tunable parameters (the auto-tuning search space of this kernel):
+      block_m, block_n — output tile shape staged in VMEM
+      block_k          — reduction staging depth
+
+    All three must divide the corresponding GEMM dimensions; the auto-tuner's
+    constraint system guarantees this for every configuration it emits.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % block_m == 0, f"block_m={block_m} !| M={m}"
+    assert n % block_n == 0, f"block_n={block_n} !| N={n}"
+    assert k % block_k == 0, f"block_k={block_k} !| K={k}"
+    k_steps = k // block_k
+
+    grid = (m // block_m, n // block_n, k_steps)
+    kernel = functools.partial(_gemm_kernel, k_steps=k_steps,
+                               alpha=alpha, beta=beta)
+
+    if beta != 0.0:
+        def kernel_c(a_ref, b_ref, c_ref, o_ref):
+            _gemm_kernel(a_ref, b_ref, o_ref, k_steps=k_steps,
+                         alpha=alpha, beta=beta, c_ref=c_ref)
+
+        return pl.pallas_call(
+            kernel_c,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(a, b, c)
+
+    def kernel_nc(a_ref, b_ref, o_ref):
+        kernel(a_ref, b_ref, o_ref)
+
+    return pl.pallas_call(
+        kernel_nc,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int,
+                         with_c: bool) -> int:
+    """Estimated per-step VMEM residency of a configuration (f32).
+
+    Used by DESIGN.md §Perf to rank configurations for real-TPU viability:
+    A-block + B-block + output accumulator (+ C-block when beta != 0).
+    """
+    f32 = 4
+    total = (block_m * block_k + block_k * block_n + block_m * block_n) * f32
+    if with_c:
+        total += block_m * block_n * f32
+    return total

@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package is checked against these references by
+``python/tests/``: the kernels must agree (up to float tolerance) with the
+oracle for *every* tunable configuration, because the auto-tuner treats all
+configurations as functionally equivalent program variants.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+             alpha: float = 1.0, beta: float = 0.0) -> jnp.ndarray:
+    """GEMM oracle: ``alpha * A @ B + beta * C`` (CLBlast semantics)."""
+    return alpha * jnp.dot(a, b, preferred_element_type=jnp.float32) + beta * c
+
+
+def conv2d_ref(image: jnp.ndarray, filt: jnp.ndarray) -> jnp.ndarray:
+    """2D convolution oracle (van Werkhoven et al. 2014 semantics).
+
+    ``image`` is the *padded* input of shape ``(H + Fh - 1, W + Fw - 1)``;
+    the output is ``(H, W)`` with
+    ``O(x, y) = sum_j sum_i I(x + i, y + j) * F(i, j)``.
+    """
+    fh, fw = filt.shape
+    h = image.shape[0] - fh + 1
+    w = image.shape[1] - fw + 1
+    out = jnp.zeros((h, w), dtype=jnp.float32)
+    for i in range(fh):
+        for j in range(fw):
+            out = out + image[i:i + h, j:j + w] * filt[i, j]
+    return out
+
+
+def dedispersion_ref(samples: jnp.ndarray, delays: jnp.ndarray,
+                     n_time_out: int) -> jnp.ndarray:
+    """Dedispersion oracle (AMBER semantics).
+
+    ``samples``  — (n_channels, n_time_in) frequency-channel time series.
+    ``delays``   — (n_dms, n_channels) integer sample delays per DM/channel.
+    Output (n_dms, n_time_out):
+    ``D(dm, t) = sum_c S(c, t + delays[dm, c])``.
+    """
+    n_dms = delays.shape[0]
+    n_chan = samples.shape[0]
+    rows = []
+    for dm in range(n_dms):
+        acc = jnp.zeros((n_time_out,), dtype=jnp.float32)
+        for c in range(n_chan):
+            d = int(delays[dm, c])
+            acc = acc + samples[c, d:d + n_time_out]
+        rows.append(acc)
+    return jnp.stack(rows)
+
+
+def hotspot_ref(temp: jnp.ndarray, power: jnp.ndarray,
+                coeffs: tuple, steps: int = 1) -> jnp.ndarray:
+    """Hotspot thermal stencil oracle (Rodinia semantics, simplified 2D).
+
+    One step:
+    ``T'[y,x] = T + cap*(P + cx*(T[y,x-1]+T[y,x+1]-2T) +
+                          cy*(T[y-1,x]+T[y+1,x]-2T) + cz*(amb - T))``
+    with clamped (edge-replicated) boundaries; ``coeffs = (cap, cx, cy, cz)``
+    and ambient temperature 80.0 (Rodinia default).
+    """
+    cap, cx, cy, cz = coeffs
+    amb = 80.0
+    t = temp
+    for _ in range(steps):
+        left = jnp.concatenate([t[:, :1], t[:, :-1]], axis=1)
+        right = jnp.concatenate([t[:, 1:], t[:, -1:]], axis=1)
+        up = jnp.concatenate([t[:1, :], t[:-1, :]], axis=0)
+        down = jnp.concatenate([t[1:, :], t[-1:, :]], axis=0)
+        t = t + cap * (power + cx * (left + right - 2.0 * t)
+                       + cy * (up + down - 2.0 * t) + cz * (amb - t))
+    return t

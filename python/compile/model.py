@@ -1,0 +1,134 @@
+"""L2 — JAX compute graphs for the auto-tunable applications.
+
+Each function here is the *program variant generator* of one of the paper's
+four benchmark applications: a jitted JAX function, parameterized by the
+tunable configuration, that calls the L1 Pallas kernel so that the kernel
+lowers into the same HLO module. ``aot.py`` lowers a grid of configurations
+to HLO text; the Rust coordinator (L3) loads, compiles and *measures* them
+via PJRT — the real compile-and-measure path of the auto-tuner.
+
+Python never runs at tuning time; these functions exist only on the
+build/compile path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as conv2d_k
+from .kernels import dedispersion as dedispersion_k
+from .kernels import gemm as gemm_k
+from .kernels import hotspot as hotspot_k
+
+# Problem sizes for the AOT variant grid. Small enough that interpret-mode
+# Pallas lowers and runs in reasonable time on CPU-PJRT, large enough that
+# configuration choice changes measured runtime.
+GEMM_M, GEMM_N, GEMM_K = 256, 256, 256
+GEMM_ALPHA, GEMM_BETA = 1.5, 0.5
+
+CONV_H, CONV_W = 256, 256
+CONV_FH, CONV_FW = 7, 7
+
+DEDISP_CHANNELS = 64
+DEDISP_DMS = 32
+DEDISP_TIME_OUT = 256
+DEDISP_MAX_DELAY = 64  # n_time_in = TIME_OUT + MAX_DELAY
+
+HOTSPOT_H, HOTSPOT_W = 128, 128
+HOTSPOT_COEFFS = (0.5, 0.1, 0.1, 0.05)
+
+
+def gemm_variant(block_m: int, block_n: int, block_k: int):
+    """Return the jittable GEMM program variant for one configuration."""
+
+    def fn(a, b, c):
+        return (gemm_k.gemm(a, b, c, block_m=block_m, block_n=block_n,
+                            block_k=block_k,
+                            alpha=GEMM_ALPHA, beta=GEMM_BETA),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((GEMM_M, GEMM_K), jnp.float32),
+        jax.ShapeDtypeStruct((GEMM_K, GEMM_N), jnp.float32),
+        jax.ShapeDtypeStruct((GEMM_M, GEMM_N), jnp.float32),
+    )
+
+
+def conv2d_variant(tile_h: int, tile_w: int, unroll: int = 1):
+    """Return the jittable conv2d program variant for one configuration."""
+
+    def fn(image, filt):
+        return (conv2d_k.conv2d(image, filt, tile_h=tile_h, tile_w=tile_w,
+                                unroll=unroll),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((CONV_H + CONV_FH - 1, CONV_W + CONV_FW - 1),
+                             jnp.float32),
+        jax.ShapeDtypeStruct((CONV_FH, CONV_FW), jnp.float32),
+    )
+
+
+def dedispersion_variant(channel_unroll: int):
+    """Return the jittable dedispersion program variant."""
+
+    def fn(samples, delays):
+        return (dedispersion_k.dedisperse(
+            samples, delays, n_time_out=DEDISP_TIME_OUT,
+            channel_unroll=channel_unroll),)
+
+    return fn, (
+        jax.ShapeDtypeStruct(
+            (DEDISP_CHANNELS, DEDISP_TIME_OUT + DEDISP_MAX_DELAY),
+            jnp.float32),
+        jax.ShapeDtypeStruct((DEDISP_DMS, DEDISP_CHANNELS), jnp.int32),
+    )
+
+
+def hotspot_variant(tile_h: int, tile_w: int, t_tile: int = 1):
+    """Return the jittable hotspot program variant."""
+
+    def fn(temp, power):
+        return (hotspot_k.hotspot(temp, power, HOTSPOT_COEFFS,
+                                  tile_h=tile_h, tile_w=tile_w,
+                                  t_tile=t_tile),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((HOTSPOT_H, HOTSPOT_W), jnp.float32),
+        jax.ShapeDtypeStruct((HOTSPOT_H, HOTSPOT_W), jnp.float32),
+    )
+
+
+# The AOT variant grids: every entry must satisfy the kernels' divisibility
+# constraints (mirrored by the L3 constraint engine for the measured space).
+GEMM_VARIANTS = [
+    dict(block_m=bm, block_n=bn, block_k=bk)
+    for bm in (32, 64, 128)
+    for bn in (32, 64, 128)
+    for bk in (32, 64, 128)
+]
+
+CONV_VARIANTS = [
+    dict(tile_h=th, tile_w=tw, unroll=u)
+    for th in (8, 16, 32)
+    for tw in (8, 16, 32)
+    for u in (1, 7)
+]
+
+DEDISP_VARIANTS = [dict(channel_unroll=u) for u in (1, 2, 4, 8, 16)]
+
+HOTSPOT_VARIANTS = [
+    dict(tile_h=th, tile_w=tw, t_tile=tt)
+    for th in (16, 32, 64)
+    for tw in (16, 32, 64)
+    for tt in (1, 2, 4)
+    if HOTSPOT_H >= th + 2 * tt and HOTSPOT_W >= tw + 2 * tt
+]
+
+VARIANT_BUILDERS = {
+    "gemm": (gemm_variant, GEMM_VARIANTS),
+    "conv2d": (conv2d_variant, CONV_VARIANTS),
+    "dedispersion": (dedispersion_variant, DEDISP_VARIANTS),
+    "hotspot": (hotspot_variant, HOTSPOT_VARIANTS),
+}

@@ -1,0 +1,205 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+These are the core correctness signal of the compile path: the auto-tuner
+assumes all configurations of a kernel are functionally equivalent, so every
+tunable configuration exercised here must match the oracle.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import gemm, vmem_footprint_bytes
+from compile.kernels.conv2d import conv2d
+from compile.kernels.dedispersion import dedisperse
+from compile.kernels.hotspot import hotspot
+
+RNG = np.random.default_rng(42)
+
+
+def rand(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- GEMM ----
+
+GEMM_CFGS = [(bm, bn, bk) for bm in (16, 32, 64) for bn in (16, 32, 64)
+             for bk in (16, 32, 64)]
+
+
+@pytest.mark.parametrize("bm,bn,bk", GEMM_CFGS)
+def test_gemm_all_tile_configs(bm, bn, bk):
+    m, n, k = 64, 64, 64
+    a, b, c = rand(m, k), rand(k, n), rand(m, n)
+    got = gemm(a, b, c, block_m=bm, block_n=bn, block_k=bk,
+               alpha=1.5, beta=0.5)
+    want = ref.gemm_ref(a, b, c, alpha=1.5, beta=0.5)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_beta_zero_skips_c():
+    a, b, c = rand(32, 32), rand(32, 32), rand(32, 32)
+    got = gemm(a, b, c, block_m=16, block_n=16, block_k=16,
+               alpha=2.0, beta=0.0)
+    want = ref.gemm_ref(a, b, c, alpha=2.0, beta=0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_rectangular():
+    a, b, c = rand(64, 32), rand(32, 128), rand(64, 128)
+    got = gemm(a, b, c, block_m=32, block_n=64, block_k=16,
+               alpha=1.0, beta=1.0)
+    want = ref.gemm_ref(a, b, c, alpha=1.0, beta=1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_rejects_nondividing_tiles():
+    a, b, c = rand(64, 64), rand(64, 64), rand(64, 64)
+    with pytest.raises(AssertionError):
+        gemm(a, b, c, block_m=48, block_n=16, block_k=16)
+
+
+def test_gemm_vmem_footprint_monotone():
+    small = vmem_footprint_bytes(32, 32, 32, with_c=False)
+    large = vmem_footprint_bytes(128, 128, 128, with_c=False)
+    assert small < large
+    assert vmem_footprint_bytes(32, 32, 32, True) > small
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 4), ni=st.integers(1, 4), ki=st.integers(1, 4),
+    bm=st.sampled_from([8, 16, 32]), bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    alpha=st.floats(-2, 2, allow_nan=False),
+    beta=st.floats(-2, 2, allow_nan=False),
+)
+def test_gemm_hypothesis_shapes(mi, ni, ki, bm, bn, bk, alpha, beta):
+    """Hypothesis sweep: arbitrary multiples of the tile in every dim."""
+    m, n, k = mi * bm, ni * bn, ki * bk
+    a, b, c = rand(m, k), rand(k, n), rand(m, n)
+    got = gemm(a, b, c, block_m=bm, block_n=bn, block_k=bk,
+               alpha=alpha, beta=beta)
+    want = ref.gemm_ref(a, b, c, alpha=alpha, beta=beta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- conv2d ----
+
+@pytest.mark.parametrize("th,tw", [(8, 8), (8, 16), (16, 8), (16, 16),
+                                   (32, 32), (8, 32)])
+@pytest.mark.parametrize("unroll", [1, 7])
+def test_conv2d_tile_configs(th, tw, unroll):
+    h, w, fh, fw = 32, 32, 7, 7
+    img = rand(h + fh - 1, w + fw - 1)
+    filt = rand(fh, fw)
+    got = conv2d(img, filt, tile_h=th, tile_w=tw, unroll=unroll)
+    want = ref.conv2d_ref(img, filt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_identity_filter():
+    img = rand(34, 34)
+    filt = jnp.zeros((3, 3), jnp.float32).at[1, 1].set(1.0)
+    got = conv2d(img, filt, tile_h=16, tile_w=16)
+    np.testing.assert_allclose(got, img[1:33, 1:33], rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ti=st.integers(1, 3), tj=st.integers(1, 3),
+    th=st.sampled_from([4, 8]), tw=st.sampled_from([4, 8]),
+    fh=st.sampled_from([3, 5]), fw=st.sampled_from([3, 5]),
+)
+def test_conv2d_hypothesis(ti, tj, th, tw, fh, fw):
+    h, w = ti * th, tj * tw
+    img = rand(h + fh - 1, w + fw - 1)
+    filt = rand(fh, fw)
+    got = conv2d(img, filt, tile_h=th, tile_w=tw)
+    want = ref.conv2d_ref(img, filt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------- dedispersion ----
+
+def make_delays(n_dms, n_chan, max_delay):
+    # Quadratic-in-frequency delay curve like the real DM sweep.
+    dms = np.arange(n_dms)[:, None]
+    chans = np.arange(n_chan)[None, :]
+    d = (max_delay * (dms / max(n_dms - 1, 1))
+         * (1.0 - chans / max(n_chan, 1)) ** 2).astype(np.int32)
+    return jnp.asarray(d)
+
+
+@pytest.mark.parametrize("unroll", [1, 2, 4, 8])
+def test_dedispersion_unroll_configs(unroll):
+    n_chan, n_dms, t_out, max_d = 16, 8, 32, 8
+    samples = rand(n_chan, t_out + max_d)
+    delays = make_delays(n_dms, n_chan, max_d)
+    got = dedisperse(samples, delays, n_time_out=t_out,
+                     channel_unroll=unroll)
+    want = ref.dedispersion_ref(samples, delays, t_out)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dedispersion_zero_delays_is_channel_sum():
+    samples = rand(8, 16)
+    delays = jnp.zeros((4, 8), jnp.int32)
+    got = dedisperse(samples, delays, n_time_out=16, channel_unroll=2)
+    want = jnp.tile(samples.sum(axis=0), (4, 1))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_chan=st.sampled_from([4, 8, 16]),
+    n_dms=st.integers(1, 6),
+    t_out=st.sampled_from([8, 16]),
+    unroll=st.sampled_from([1, 2, 4]),
+)
+def test_dedispersion_hypothesis(n_chan, n_dms, t_out, unroll):
+    max_d = 4
+    samples = rand(n_chan, t_out + max_d)
+    delays = make_delays(n_dms, n_chan, max_d)
+    got = dedisperse(samples, delays, n_time_out=t_out,
+                     channel_unroll=unroll)
+    want = ref.dedispersion_ref(samples, delays, t_out)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- hotspot ----
+
+COEFFS = (0.5, 0.1, 0.1, 0.05)
+
+
+@pytest.mark.parametrize("th,tw", [(8, 8), (16, 16), (8, 16), (32, 32)])
+def test_hotspot_single_step_tiles(th, tw):
+    h = w = 64
+    temp = jnp.asarray(RNG.uniform(60, 100, (h, w)).astype(np.float32))
+    power = jnp.asarray(RNG.uniform(0, 1, (h, w)).astype(np.float32))
+    got = hotspot(temp, power, COEFFS, tile_h=th, tile_w=tw, t_tile=1)
+    want = ref.hotspot_ref(temp, power, COEFFS, steps=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("t_tile", [1, 2, 4])
+def test_hotspot_temporal_tiling_exact(t_tile):
+    """Temporal tiling with halo == t_tile must be exact everywhere."""
+    h = w = 64
+    temp = jnp.asarray(RNG.uniform(60, 100, (h, w)).astype(np.float32))
+    power = jnp.asarray(RNG.uniform(0, 1, (h, w)).astype(np.float32))
+    got = hotspot(temp, power, COEFFS, tile_h=16, tile_w=16, t_tile=t_tile)
+    want = ref.hotspot_ref(temp, power, COEFFS, steps=t_tile)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_hotspot_equilibrium_fixed_point():
+    """Uniform ambient temperature with zero power stays put."""
+    h = w = 32
+    temp = jnp.full((h, w), 80.0, jnp.float32)
+    power = jnp.zeros((h, w), jnp.float32)
+    got = hotspot(temp, power, COEFFS, tile_h=16, tile_w=16, t_tile=2)
+    np.testing.assert_allclose(got, temp, rtol=1e-6, atol=1e-6)

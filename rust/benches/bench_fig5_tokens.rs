@@ -1,0 +1,13 @@
+//! Fig 5 bench: token accounting through a full (trimmed) generation run.
+mod common;
+use llamea_kt::harness::{fig5, generate_all, ExpOptions};
+
+fn main() {
+    common::section("Fig 5: generation-stage token accounting (trimmed)");
+    let opts = ExpOptions { runs: 5, gen_runs: 2, llm_calls: 24, seed: 5 };
+    let t0 = std::time::Instant::now();
+    let generated = generate_all(&opts, false);
+    println!("generation of 8 conditions took {:?}", t0.elapsed());
+    let t = fig5(&generated, std::path::Path::new("results"));
+    println!("{}", t.to_text());
+}

@@ -1,0 +1,22 @@
+//! Fig 7 bench: per-space scoring throughput of one generated algorithm
+//! across all 24 spaces.
+mod common;
+use llamea_kt::llamea::{Genome, GenomeOptimizer};
+use llamea_kt::methodology::{run_many, FnFactory, SpaceSetup};
+
+fn main() {
+    common::section("Fig 7: per-space evaluation throughput");
+    let caches = llamea_kt::tuning::build_all_caches();
+    let factory = FnFactory {
+        f: || Box::new(GenomeOptimizer::new(Genome::hybrid_vndx_like()))
+            as Box<dyn llamea_kt::optimizers::Optimizer>,
+        name: "hybrid_vndx_genome".into(),
+    };
+    for cache in caches.iter().take(8) {
+        let setup = SpaceSetup::new(cache);
+        common::bench(&cache.id(), 0, 3, || {
+            let curves = run_many(cache, &setup, &factory, 10, 3);
+            assert_eq!(curves.len(), 10);
+        });
+    }
+}

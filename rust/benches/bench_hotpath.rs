@@ -1,0 +1,70 @@
+//! Hot-path microbenchmarks (§Perf): the primitives every simulated
+//! evaluation touches — space construction, membership lookups, neighbor
+//! enumeration, cache evaluation, baseline math, and a full optimizer run.
+mod common;
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::methodology::{Baseline, SpaceSetup};
+use llamea_kt::searchspace::{Application, NeighborKind};
+use llamea_kt::tuning::{Cache, TuningContext};
+use llamea_kt::util::rng::Rng;
+
+fn main() {
+    common::section("hot path");
+    let app = Application::Gemm;
+    common::bench("gemm space construction", 1, 5, || {
+        assert!(app.build_space().len() > 0);
+    });
+
+    let cache = Cache::build(app, GpuSpec::by_name("A100").unwrap());
+    let space = &cache.space;
+    let mut rng = Rng::new(1);
+
+    common::bench("1M index_of lookups", 1, 5, || {
+        let mut acc = 0u32;
+        for _ in 0..1_000_000 {
+            let i = rng.below(space.len()) as u32;
+            acc ^= space.index_of(space.config(i)).unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+
+    common::bench("10k hamming neighbor enumerations", 1, 5, || {
+        let mut total = 0usize;
+        for _ in 0..10_000 {
+            let i = rng.below(space.len()) as u32;
+            total += space.neighbors(i, NeighborKind::Hamming).len();
+        }
+        std::hint::black_box(total);
+    });
+
+    common::bench("100k simulated evaluations", 1, 5, || {
+        let mut ctx = TuningContext::new(&cache, f64::INFINITY, 3);
+        for _ in 0..100_000 {
+            let i = ctx.rng.below(space.len()) as u32;
+            ctx.evaluate(i);
+        }
+        std::hint::black_box(ctx.unique_evals());
+    });
+
+    common::bench("cache build gemm@A100", 1, 3, || {
+        let c = Cache::build_with_space(
+            app,
+            GpuSpec::by_name("A100").unwrap(),
+            std::sync::Arc::clone(&cache.space),
+        );
+        std::hint::black_box(c.optimum_ms);
+    });
+
+    let baseline = Baseline::from_cache(&cache);
+    common::bench("baseline budget computation", 1, 10, || {
+        std::hint::black_box(baseline.budget_s(0.95));
+    });
+
+    let setup = SpaceSetup::new(&cache);
+    common::bench("one hybrid_vndx run (gemm@A100 budget)", 0, 3, || {
+        let mut opt = llamea_kt::optimizers::by_name("hybrid_vndx").unwrap();
+        let mut ctx = TuningContext::new(&cache, setup.budget_s, 9);
+        opt.run(&mut ctx);
+        std::hint::black_box(ctx.unique_evals());
+    });
+}

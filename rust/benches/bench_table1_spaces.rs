@@ -1,0 +1,17 @@
+//! Table 1 bench: constrained search-space construction for all four
+//! applications (the substrate cost of every experiment).
+mod common;
+use llamea_kt::searchspace::Application;
+
+fn main() {
+    common::section("Table 1: space construction");
+    for app in Application::ALL {
+        common::bench(app.name(), 1, if app == Application::Hotspot { 3 } else { 10 }, || {
+            let s = app.build_space();
+            assert!(s.len() > 0);
+        });
+    }
+    // Regenerate the table itself.
+    let t = llamea_kt::harness::table1(std::path::Path::new("results"));
+    println!("\n{}", t.to_text());
+}

@@ -1,0 +1,13 @@
+//! Table 2 / Fig 6 bench: with/without-info evaluation pipeline (trimmed).
+mod common;
+use llamea_kt::harness::{evaluate_generated, generate_all, ExpOptions};
+
+fn main() {
+    common::section("Table 2 + Fig 6: with/without-info pipeline (trimmed)");
+    let opts = ExpOptions { runs: 10, gen_runs: 1, llm_calls: 16, seed: 6 };
+    let t0 = std::time::Instant::now();
+    let generated = generate_all(&opts, false);
+    let (t2, _, _) = evaluate_generated(&generated, &opts, std::path::Path::new("results"));
+    println!("pipeline took {:?}", t0.elapsed());
+    println!("{}", t2.to_text());
+}

@@ -1,0 +1,14 @@
+//! Table 3 bench: target vs non-target regrouping (reuses the Table 2
+//! pipeline; the regrouping itself is measured separately).
+mod common;
+use llamea_kt::harness::{evaluate_generated, generate_all, ExpOptions};
+
+fn main() {
+    common::section("Table 3: target vs non-target (trimmed)");
+    let opts = ExpOptions { runs: 8, gen_runs: 1, llm_calls: 16, seed: 7 };
+    let generated = generate_all(&opts, false);
+    let t0 = std::time::Instant::now();
+    let (_, _, t3) = evaluate_generated(&generated, &opts, std::path::Path::new("results"));
+    println!("evaluation + regrouping took {:?}", t0.elapsed());
+    println!("{}", t3.to_text());
+}

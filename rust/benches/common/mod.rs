@@ -1,0 +1,23 @@
+//! Tiny bench harness (criterion unavailable offline): timed sections with
+//! warmup + repetitions, reporting mean ± std.
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) {
+    for _ in 0..warmup { f(); }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / reps.max(1) as f64;
+    println!("bench {:40} {:>12.3} ms ± {:>8.3} ms  ({} reps)",
+        name, mean * 1e3, var.sqrt() * 1e3, reps);
+}
+
+#[allow(dead_code)]
+pub fn section(name: &str) {
+    println!("\n== {} ==", name);
+}

@@ -1,0 +1,503 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§4). Each function writes CSV + markdown into `out_dir` and
+//! returns the rendered table for the CLI to print. See DESIGN.md §5 for
+//! the experiment index and EXPERIMENTS.md for recorded runs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::kernels::gpu::{ALL_GPUS, TEST_GPUS, TRAIN_GPUS};
+use crate::llamea::{
+    evolve_best_of_runs, EvolutionConfig, Genome, GenomeOptimizer, MockLlm, SpaceInfo,
+};
+use crate::methodology::{
+    aggregate, run_many, Aggregate, NamedFactory, OptimizerFactory, SpaceSetup,
+};
+use crate::searchspace::Application;
+use crate::tuning::Cache;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::{delta, f, Table};
+
+/// Shared experiment options.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Tuning runs per (algorithm, space) in final evaluations (paper: 100).
+    pub runs: usize,
+    /// Independent LLaMEA runs per generation condition (paper: 5).
+    pub gen_runs: usize,
+    /// LLM calls per LLaMEA run (paper: 100).
+    pub llm_calls: u64,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { runs: 100, gen_runs: 5, llm_calls: 100, seed: 2026 }
+    }
+}
+
+fn write(out_dir: &Path, name: &str, content: &str) {
+    std::fs::create_dir_all(out_dir).ok();
+    std::fs::write(out_dir.join(name), content).expect("writing result file");
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Table 1: search-space characteristics, paper vs ours.
+pub fn table1(out_dir: &Path) -> Table {
+    let mut t = Table::new(
+        "Table 1: search-space characteristics (paper vs reproduction)",
+        &[
+            "Name",
+            "Cartesian (paper)",
+            "Cartesian (ours)",
+            "Constrained (paper)",
+            "Constrained (ours)",
+            "Dims (paper)",
+            "Dims (ours)",
+        ],
+    );
+    for app in Application::ALL {
+        let (pc, pcon, pd) = app.paper_table1();
+        let space = app.build_space();
+        t.row(vec![
+            app.name().to_string(),
+            pc.to_string(),
+            space.cartesian_size().to_string(),
+            pcon.to_string(),
+            space.len().to_string(),
+            pd.to_string(),
+            space.dims().to_string(),
+        ]);
+    }
+    write(out_dir, "table1.csv", &t.to_csv());
+    write(out_dir, "table1.md", &t.to_markdown());
+    t
+}
+
+// ------------------------------------------------ Generation (Figs 5-7, T2-3)
+
+/// One generated optimizer: its condition and the evolved genome.
+pub struct GeneratedAlgo {
+    pub application: Application,
+    pub with_info: bool,
+    pub genome: Genome,
+    pub train_fitness: f64,
+    /// Token totals of the 5 independent runs (Fig. 5).
+    pub run_tokens: Vec<u64>,
+    pub failures: u64,
+}
+
+impl GeneratedAlgo {
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}",
+            self.application.name(),
+            if self.with_info { "info" } else { "noinfo" }
+        )
+    }
+}
+
+struct GenomeFactory(Genome);
+
+impl OptimizerFactory for GenomeFactory {
+    fn build(&self) -> Box<dyn crate::optimizers::Optimizer> {
+        Box::new(GenomeOptimizer::new(self.0.clone()))
+    }
+    fn label(&self) -> String {
+        self.0.name.clone()
+    }
+}
+
+/// Run the generation stage: 4 applications x {with, without info}
+/// (paper §4.2), each the best of `gen_runs` independent LLaMEA runs
+/// trained on the target application's three training-GPU spaces.
+pub fn generate_all(opts: &ExpOptions, progress: bool) -> Vec<GeneratedAlgo> {
+    let mut out = Vec::new();
+    for app in Application::ALL {
+        let space = std::sync::Arc::new(app.build_space());
+        let caches: Vec<Cache> = TRAIN_GPUS
+            .iter()
+            .map(|g| {
+                Cache::build_with_space(
+                    app,
+                    crate::kernels::gpu::GpuSpec::by_name(g).unwrap(),
+                    std::sync::Arc::clone(&space),
+                )
+            })
+            .collect();
+        let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+        for with_info in [false, true] {
+            let info = with_info.then(|| SpaceInfo::from_cache(&caches[0], &setups[0]));
+            let mut config = EvolutionConfig::paper_defaults(app.name(), info);
+            config.llm_call_budget = opts.llm_calls;
+            let mut make = |seed: u64| -> Box<dyn crate::llamea::LlmClient> {
+                Box::new(MockLlm::new(seed))
+            };
+            let (result, run_tokens) = evolve_best_of_runs(
+                &config,
+                &mut make,
+                &caches,
+                opts.gen_runs,
+                opts.seed ^ crate::util::rng::fnv1a(app.name().as_bytes())
+                    ^ (with_info as u64) << 32,
+            );
+            if progress {
+                eprintln!(
+                    "  generated {}-{}: fitness {:.3}, {} failures, {} tokens avg",
+                    app.name(),
+                    if with_info { "info" } else { "noinfo" },
+                    result.best.fitness,
+                    result.failures,
+                    run_tokens.iter().sum::<u64>() / run_tokens.len() as u64
+                );
+            }
+            out.push(GeneratedAlgo {
+                application: app,
+                with_info,
+                genome: result.best.genome,
+                train_fitness: result.best.fitness,
+                run_tokens,
+                failures: result.failures,
+            });
+        }
+    }
+    out
+}
+
+/// Fig. 5: total LLM tokens per generated optimizer (mean +- std over runs).
+pub fn fig5(generated: &[GeneratedAlgo], out_dir: &Path) -> Table {
+    let mut t = Table::new(
+        "Fig 5: LLM tokens per generated optimizer (mean ± std over runs)",
+        &["Optimizer", "Mean tokens", "Std"],
+    );
+    for g in generated {
+        let toks: Vec<f64> = g.run_tokens.iter().map(|&x| x as f64).collect();
+        t.row(vec![
+            g.label(),
+            format!("{:.0}", stats::mean(&toks)),
+            format!("{:.0}", stats::std_dev(&toks)),
+        ]);
+    }
+    write(out_dir, "fig5.csv", &t.to_csv());
+    write(out_dir, "fig5.md", &t.to_markdown());
+    t
+}
+
+/// Evaluation of a set of labeled optimizers over all 24 spaces.
+/// Returns (label, per-space aggregate) plus writes curve CSVs.
+pub fn evaluate_on_all_spaces(
+    factories: &[(String, &dyn OptimizerFactory)],
+    runs: usize,
+    seed: u64,
+    out_dir: &Path,
+    file_prefix: &str,
+) -> Vec<(String, Aggregate, Vec<String>)> {
+    let caches = crate::tuning::build_all_caches();
+    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    let space_ids: Vec<String> = caches.iter().map(|c| c.id()).collect();
+
+    let mut curves_csv = String::from("algorithm,t_frac,mean,ci95\n");
+    let mut out = Vec::new();
+    for (label, factory) in factories {
+        let per_space: Vec<Vec<Vec<f64>>> = caches
+            .iter()
+            .zip(&setups)
+            .map(|(c, s)| run_many(c, s, *factory, runs, seed))
+            .collect();
+        let agg = aggregate(&per_space);
+        let n = agg.curve.len();
+        for (j, (&m, &ci)) in agg.curve.iter().zip(&agg.ci95).enumerate() {
+            curves_csv.push_str(&format!(
+                "{},{:.4},{:.4},{:.4}\n",
+                label,
+                (j + 1) as f64 / n as f64,
+                m,
+                ci
+            ));
+        }
+        out.push((label.clone(), agg, space_ids.clone()));
+    }
+    write(out_dir, &format!("{}_curves.csv", file_prefix), &curves_csv);
+    out
+}
+
+/// Table 2 + Figs 6-7 + Table 3: evaluate the 8 generated algorithms on all
+/// 24 spaces and derive every §4.2 artifact.
+pub fn evaluate_generated(
+    generated: &[GeneratedAlgo],
+    opts: &ExpOptions,
+    out_dir: &Path,
+) -> (Table, Table, Table) {
+    let factories: Vec<(String, GenomeFactory)> = generated
+        .iter()
+        .map(|g| (g.label(), GenomeFactory(g.genome.clone())))
+        .collect();
+    let refs: Vec<(String, &dyn OptimizerFactory)> = factories
+        .iter()
+        .map(|(l, f)| (l.clone(), f as &dyn OptimizerFactory))
+        .collect();
+    let results = evaluate_on_all_spaces(&refs, opts.runs, opts.seed, out_dir, "fig6");
+
+    // ---- Table 2: per-application with/without info ----
+    let mut t2 = Table::new(
+        "Table 2: overall performance scores, without vs with extra info",
+        &["Target application", "Without extra info", "With extra info", "Difference"],
+    );
+    let mut sums = (0.0, 0.0);
+    for app in Application::ALL {
+        let find = |with_info: bool| -> &Aggregate {
+            let label = format!(
+                "{}-{}",
+                app.name(),
+                if with_info { "info" } else { "noinfo" }
+            );
+            &results.iter().find(|(l, _, _)| *l == label).unwrap().1
+        };
+        let (wo, wi) = (find(false), find(true));
+        sums.0 += wo.score;
+        sums.1 += wi.score;
+        t2.row(vec![
+            app.name().to_string(),
+            format!("{} ± {}", f(wo.score, 3), f(wo.score_std, 3)),
+            format!("{} ± {}", f(wi.score, 3), f(wi.score_std, 3)),
+            delta(wi.score - wo.score, 3),
+        ]);
+    }
+    t2.row(vec![
+        "Mean".into(),
+        f(sums.0 / 4.0, 3),
+        f(sums.1 / 4.0, 3),
+        delta((sums.1 - sums.0) / 4.0, 3),
+    ]);
+    write(out_dir, "table2.csv", &t2.to_csv());
+    write(out_dir, "table2.md", &t2.to_markdown());
+
+    // ---- Fig 7: per-space score matrix ----
+    let space_ids = &results[0].2;
+    let mut f7 = Table::new(
+        "Fig 7: per-search-space performance scores of the generated algorithms",
+        &std::iter::once("space")
+            .chain(results.iter().map(|(l, _, _)| l.as_str()))
+            .collect::<Vec<_>>(),
+    );
+    for (si, sid) in space_ids.iter().enumerate() {
+        let mut row = vec![sid.clone()];
+        for (_, agg, _) in &results {
+            row.push(f(agg.per_space_scores[si], 3));
+        }
+        f7.row(row);
+    }
+    write(out_dir, "fig7.csv", &f7.to_csv());
+    write(out_dir, "fig7.md", &f7.to_markdown());
+
+    // ---- Table 3: target vs non-target ----
+    // Per-application score of each algorithm: mean over that app's spaces.
+    let app_of_space = |sid: &str| -> Application {
+        Application::from_name(sid.split('@').next().unwrap()).unwrap()
+    };
+    let mut t3 = Table::new(
+        "Table 3: non-target vs target scores per application",
+        &["Target application", "Non-target mean score", "Target score", "Difference"],
+    );
+    let mut mean_nt = 0.0;
+    let mut mean_t = 0.0;
+    let mut rows = 0;
+    for app in Application::ALL {
+        let space_idx: Vec<usize> = space_ids
+            .iter()
+            .enumerate()
+            .filter(|(_, sid)| app_of_space(sid) == app)
+            .map(|(i, _)| i)
+            .collect();
+        let app_score = |agg: &Aggregate| -> f64 {
+            stats::mean(&space_idx.iter().map(|&i| agg.per_space_scores[i]).collect::<Vec<_>>())
+        };
+        for with_info in [false, true] {
+            let label = format!(
+                "{}-{}",
+                app.name(),
+                if with_info { "info" } else { "noinfo" }
+            );
+            let target = app_score(&results.iter().find(|(l, _, _)| *l == label).unwrap().1);
+            // Non-target mean: algorithms targeted at other applications,
+            // scored on this application's spaces.
+            let nt: Vec<f64> = results
+                .iter()
+                .filter(|(l, _, _)| !l.starts_with(app.name()))
+                .map(|(_, agg, _)| app_score(agg))
+                .collect();
+            let nt_mean = stats::mean(&nt);
+            mean_nt += nt_mean;
+            mean_t += target;
+            rows += 1;
+            t3.row(vec![
+                format!(
+                    "{} {} extra info",
+                    app.name(),
+                    if with_info { "with" } else { "without" }
+                ),
+                f(nt_mean, 3),
+                f(target, 3),
+                delta(target - nt_mean, 3),
+            ]);
+        }
+    }
+    t3.row(vec![
+        "Mean".into(),
+        f(mean_nt / rows as f64, 3),
+        f(mean_t / rows as f64, 3),
+        delta((mean_t - mean_nt) / rows as f64, 3),
+    ]);
+    write(out_dir, "table3.csv", &t3.to_csv());
+    write(out_dir, "table3.md", &t3.to_markdown());
+
+    (t2, f7, t3)
+}
+
+// ------------------------------------------------------- Figs 8-9
+
+/// Figs 8-9: the two best generated algorithms (paper's HybridVNDX and
+/// AdaptiveTabuGreyWolf, our faithful implementations) against the
+/// human-designed baselines GA + SA (Kernel Tuner) and DE (pyATF).
+pub fn fig8_fig9(opts: &ExpOptions, out_dir: &Path) -> (Table, Table) {
+    let names = ["hybrid_vndx", "atgw", "ga", "sa", "de"];
+    let factories: Vec<(String, NamedFactory)> = names
+        .iter()
+        .map(|n| (n.to_string(), NamedFactory(n.to_string())))
+        .collect();
+    let refs: Vec<(String, &dyn OptimizerFactory)> = factories
+        .iter()
+        .map(|(l, f)| (l.clone(), f as &dyn OptimizerFactory))
+        .collect();
+    let results = evaluate_on_all_spaces(&refs, opts.runs, opts.seed ^ 0x89, out_dir, "fig8");
+
+    let mut f8 = Table::new(
+        "Fig 8: aggregate performance, generated vs human-designed",
+        &["Algorithm", "Score P", "± std", "Δ vs GA", "Δ vs SA", "Δ vs DE"],
+    );
+    let score_of = |n: &str| results.iter().find(|(l, _, _)| l == n).unwrap().1.score;
+    let (ga, sa, de) = (score_of("ga"), score_of("sa"), score_of("de"));
+    for (label, agg, _) in &results {
+        f8.row(vec![
+            label.clone(),
+            f(agg.score, 3),
+            f(agg.score_std, 3),
+            delta(agg.score - ga, 3),
+            delta(agg.score - sa, 3),
+            delta(agg.score - de, 3),
+        ]);
+    }
+    write(out_dir, "fig8.csv", &f8.to_csv());
+    write(out_dir, "fig8.md", &f8.to_markdown());
+
+    let space_ids = &results[0].2;
+    let mut f9 = Table::new(
+        "Fig 9: per-search-space performance, generated vs human-designed",
+        &std::iter::once("space")
+            .chain(results.iter().map(|(l, _, _)| l.as_str()))
+            .collect::<Vec<_>>(),
+    );
+    for (si, sid) in space_ids.iter().enumerate() {
+        let mut row = vec![sid.clone()];
+        for (_, agg, _) in &results {
+            row.push(f(agg.per_space_scores[si], 3));
+        }
+        f9.row(row);
+    }
+    write(out_dir, "fig9.csv", &f9.to_csv());
+    write(out_dir, "fig9.md", &f9.to_markdown());
+
+    // Summary JSON for EXPERIMENTS.md automation.
+    let mut j = Json::obj();
+    for (label, agg, _) in &results {
+        let mut o = Json::obj();
+        o.set("score", agg.score).set("std", agg.score_std);
+        j.set(label, o);
+    }
+    let avg_gen = (score_of("hybrid_vndx") + score_of("atgw")) / 2.0;
+    let avg_human = (ga + sa + de) / 3.0;
+    j.set("avg_generated", avg_gen);
+    j.set("avg_human", avg_human);
+    j.set(
+        "improvement_pct",
+        if avg_human.abs() > 1e-12 { (avg_gen - avg_human) / avg_human.abs() * 100.0 } else { 0.0 },
+    );
+    write(out_dir, "fig8_summary.json", &j.to_pretty());
+
+    (f8, f9)
+}
+
+// --------------------------------------------------- train/test split view
+
+/// Supplementary: generated-algorithm scores split by train vs test GPUs
+/// (the paper's generalization argument in §4.1.2).
+pub fn train_test_split(
+    generated: &[GeneratedAlgo],
+    opts: &ExpOptions,
+    out_dir: &Path,
+) -> Table {
+    let mut t = Table::new(
+        "Generalization: mean score on training GPUs vs held-out GPUs",
+        &["Algorithm", "Train-GPU score", "Test-GPU score"],
+    );
+    let caches = crate::tuning::build_all_caches();
+    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    for g in generated {
+        let factory = GenomeFactory(g.genome.clone());
+        let mut train_scores = Vec::new();
+        let mut test_scores = Vec::new();
+        for (c, s) in caches.iter().zip(&setups) {
+            let curves = run_many(c, s, &factory, opts.runs.min(30), opts.seed ^ 0x77);
+            let score = stats::mean(&stats::mean_curve(&curves));
+            if TRAIN_GPUS.contains(&c.gpu.name) {
+                train_scores.push(score);
+            } else if TEST_GPUS.contains(&c.gpu.name) {
+                test_scores.push(score);
+            }
+        }
+        t.row(vec![
+            g.label(),
+            f(stats::mean(&train_scores), 3),
+            f(stats::mean(&test_scores), 3),
+        ]);
+    }
+    write(out_dir, "train_test.csv", &t.to_csv());
+    write(out_dir, "train_test.md", &t.to_markdown());
+    t
+}
+
+/// Ensure the GPU list covers the paper's six devices (sanity used by CLI).
+pub fn testbed_summary() -> Table {
+    let mut t = Table::new(
+        "Testbed: the six GPUs (train: MI250X/A100/A4000, test: W6600/W7800/A6000)",
+        &["GPU", "Vendor", "SMs", "BW GB/s", "fp32 TFLOPs", "role"],
+    );
+    for g in ALL_GPUS.iter() {
+        let role = if TRAIN_GPUS.contains(&g.name) { "train" } else { "test" };
+        t.row(vec![
+            g.name.to_string(),
+            format!("{:?}", g.vendor),
+            g.sm_count.to_string(),
+            format!("{}", g.mem_bandwidth_gbs),
+            format!("{}", g.fp32_tflops),
+            role.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Persist generated-genome summaries for reproducibility.
+pub fn dump_genomes(generated: &[GeneratedAlgo], out_dir: &Path) {
+    let mut s = String::new();
+    let mut sorted: BTreeMap<String, &GeneratedAlgo> =
+        generated.iter().map(|g| (g.label(), g)).collect();
+    for (label, g) in sorted.iter_mut() {
+        s.push_str(&format!(
+            "## {}\ntrain fitness: {:.3}\nfailures: {}\n{}\n{:#?}\n\n",
+            label, g.train_fitness, g.failures, g.genome.summary(), g.genome
+        ));
+    }
+    write(out_dir, "generated_genomes.md", &s);
+}

@@ -1,0 +1,8 @@
+//! Experiment harness regenerating the paper's tables and figures.
+
+pub mod experiments;
+
+pub use experiments::{
+    dump_genomes, evaluate_generated, fig5, fig8_fig9, generate_all, table1,
+    testbed_summary, train_test_split, ExpOptions, GeneratedAlgo,
+};

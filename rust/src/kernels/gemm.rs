@@ -1,0 +1,225 @@
+//! GEMM performance model (compute-bound, CLBlast xgemm, 4096^3).
+//!
+//! The classic GPU GEMM trade-offs: workgroup tile (MWG x NWG) sets the
+//! DRAM reuse factor; per-thread register tile ((MWG/MDIMC) x (NWG/NDIMC))
+//! sets ILP vs register pressure; staging A/B through shared memory (SA/SB)
+//! trades LDS capacity for cache pressure; vector widths must match the
+//! device's load granularity; and the reshaping between compute and load
+//! thread layouts (MDIMA/NDIMB vs MDIMC/NDIMC) costs shuffles.
+
+use super::gpu::{self, GpuSpec, Vendor};
+use super::KernelModel;
+use crate::searchspace::{Application, ParamSet};
+
+const M: f64 = 4096.0;
+const N: f64 = 4096.0;
+const K: f64 = 4096.0;
+
+pub struct GemmModel {
+    d_mwg: usize,
+    d_nwg: usize,
+    d_kwg: usize,
+    d_mdimc: usize,
+    d_ndimc: usize,
+    d_mdima: usize,
+    d_ndimb: usize,
+    d_kwi: usize,
+    d_vwm: usize,
+    d_vwn: usize,
+    d_strm: usize,
+    d_strn: usize,
+    d_sa: usize,
+    d_sb: usize,
+}
+
+impl GemmModel {
+    pub fn new(params: &ParamSet) -> Self {
+        GemmModel {
+            d_mwg: super::dim(params, "MWG"),
+            d_nwg: super::dim(params, "NWG"),
+            d_kwg: super::dim(params, "KWG"),
+            d_mdimc: super::dim(params, "MDIMC"),
+            d_ndimc: super::dim(params, "NDIMC"),
+            d_mdima: super::dim(params, "MDIMA"),
+            d_ndimb: super::dim(params, "NDIMB"),
+            d_kwi: super::dim(params, "KWI"),
+            d_vwm: super::dim(params, "VWM"),
+            d_vwn: super::dim(params, "VWN"),
+            d_strm: super::dim(params, "STRM"),
+            d_strn: super::dim(params, "STRN"),
+            d_sa: super::dim(params, "SA"),
+            d_sb: super::dim(params, "SB"),
+        }
+    }
+}
+
+impl KernelModel for GemmModel {
+    fn application(&self) -> Application {
+        Application::Gemm
+    }
+
+    fn workload_flops(&self) -> f64 {
+        2.0 * M * N * K
+    }
+
+    fn workload_bytes(&self) -> f64 {
+        (M * K + K * N + 2.0 * M * N) * 4.0
+    }
+
+    fn runtime_ms(&self, vals: &[f64], gpu: &GpuSpec, salt: u64) -> Option<f64> {
+        let mwg = vals[self.d_mwg];
+        let nwg = vals[self.d_nwg];
+        let kwg = vals[self.d_kwg];
+        let mdimc = vals[self.d_mdimc];
+        let ndimc = vals[self.d_ndimc];
+        let mdima = vals[self.d_mdima];
+        let ndimb = vals[self.d_ndimb];
+        let kwi = vals[self.d_kwi];
+        let vwm = vals[self.d_vwm];
+        let vwn = vals[self.d_vwn];
+        let strm = vals[self.d_strm] > 0.5;
+        let strn = vals[self.d_strn] > 0.5;
+        let sa = vals[self.d_sa] > 0.5;
+        let sb = vals[self.d_sb] > 0.5;
+
+        if super::hidden_failure(salt, vals, 0.025) {
+            return None;
+        }
+
+        let threads = (mdimc * ndimc) as u32;
+        let shmem_bytes = (((if sa { mwg * kwg } else { 0.0 })
+            + (if sb { kwg * nwg } else { 0.0 }))
+            * 4.0) as u32;
+        // Register tile per thread.
+        let rt_m = mwg / mdimc;
+        let rt_n = nwg / ndimc;
+        let regs = (20.0 + 1.6 * rt_m * rt_n + 2.0 * (vwm + vwn) + 2.0 * kwi) as u32;
+        let blocks = gpu::active_blocks_per_sm(gpu, threads, shmem_bytes, regs, 0);
+        if blocks == 0 {
+            return None;
+        }
+        let occ = gpu::occupancy_fraction(gpu, threads, blocks);
+
+        // --- Compute efficiency ---
+        // Per-thread register tile: ILP sweet spot near 8x8 = 64 MACs.
+        let ilp = super::unroll_efficiency(rt_m * rt_n, 48.0);
+        // KWI unroll: deeper k-unroll helps ILP slightly.
+        let kwi_eff = if kwi >= 8.0 { 1.03 } else { 1.0 };
+        // Layout remap shuffle cost when the load layout differs from the
+        // compute layout.
+        let remap = 1.0
+            - 0.02 * ((mdima != mdimc) as u8 as f64)
+            - 0.02 * ((ndimb != ndimc) as u8 as f64);
+        // Vector width match: the device load granularity is 16 B.
+        let vec_target: f64 = 4.0;
+        let vec_eff = |v: f64| -> f64 {
+            let d = (v.ln() - vec_target.ln()).abs() / std::f64::consts::LN_2;
+            0.94 + 0.06 * (-0.5 * d * d).exp()
+        };
+        // Strided access helps coalescing of vector loads on Nvidia.
+        let stride_eff = match gpu.vendor {
+            Vendor::Nvidia => 1.0 + 0.01 * (strm as u8 as f64) + 0.01 * (strn as u8 as f64),
+            Vendor::Amd => 1.0 - 0.005 * (strm as u8 as f64) - 0.005 * (strn as u8 as f64),
+        };
+        let comp_eff = super::compute_utilization(occ)
+            * ilp
+            * kwi_eff
+            * remap
+            * vec_eff(vwm)
+            * vec_eff(vwn)
+            * stride_eff
+            * 0.93;
+        let comp_time_s = self.workload_flops() / (gpu.fp32_tflops * 1e12 * comp_eff);
+
+        // --- Memory traffic ---
+        // A is read N/NWG times, B is read M/MWG times; shared-memory
+        // staging (SA/SB) makes the reuse perfect within a tile, otherwise
+        // the cache path leaks a fraction of the reuse.
+        let a_reuse_leak = if sa { 1.0 } else { 1.8 };
+        let b_reuse_leak = if sb { 1.0 } else { 1.8 };
+        let bytes = (M * K * (N / nwg) * a_reuse_leak + K * N * (M / mwg) * b_reuse_leak
+            + 2.0 * M * N)
+            * 4.0;
+        let bw = gpu.mem_bandwidth_gbs * 1e9 * super::bandwidth_utilization(occ);
+        let mem_time_s = bytes / bw;
+
+        let total_blocks = ((M / mwg).ceil() * (N / nwg).ceil()) as u64;
+        let wave = gpu::wave_quantization(gpu, total_blocks, blocks);
+
+        let t_s = comp_time_s.max(mem_time_s) * wave * super::rugged(salt, vals, 0.40)
+            + gpu.launch_overhead_us * 1e-6;
+        Some(t_s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::space_salt;
+    use crate::searchspace::builder::build_gemm;
+
+    #[test]
+    fn best_hits_reasonable_mxu_fraction() {
+        let space = build_gemm();
+        let model = GemmModel::new(&space.params);
+        let gpu = gpu::GpuSpec::by_name("A100").unwrap();
+        let salt = space_salt(Application::Gemm, gpu);
+        let best = space
+            .iter_indices()
+            .filter_map(|i| model.runtime_ms(&space.values_f64(i), gpu, salt))
+            .fold(f64::INFINITY, f64::min);
+        let roofline_ms = model.workload_flops() / (gpu.fp32_tflops * 1e12) * 1e3;
+        let efficiency = roofline_ms / best;
+        // Tuned GEMM reaches 50-90% of peak.
+        assert!(efficiency > 0.5 && efficiency < 0.95, "eff {}", efficiency);
+    }
+
+    #[test]
+    fn shared_memory_staging_generally_helps() {
+        let space = build_gemm();
+        let model = GemmModel::new(&space.params);
+        let gpu = gpu::GpuSpec::by_name("A4000").unwrap();
+        let d_sa = space.params.index_of("SA").unwrap();
+        let (mut with, mut without) = (Vec::new(), Vec::new());
+        for i in space.iter_indices().step_by(17) {
+            if let Some(t) = model.runtime_ms(&space.values_f64(i), gpu, 0) {
+                if space.config(i)[d_sa] == 1 {
+                    with.push(t);
+                } else {
+                    without.push(t);
+                }
+            }
+        }
+        let m_with = crate::util::stats::median(&with);
+        let m_without = crate::util::stats::median(&without);
+        assert!(m_with < m_without, "{} vs {}", m_with, m_without);
+    }
+
+    #[test]
+    fn occupancy_zero_configs_fail() {
+        // A config that requests more shared memory than any device has
+        // should be rejected by the occupancy calculation. MWG=NWG=128 with
+        // SA=SB=1, KWG=32 -> (128*32 + 32*128)*4 = 32 KiB ok; our spaces
+        // never overflow, so instead verify the plumbing directly.
+        let gpu = gpu::GpuSpec::by_name("W6600").unwrap();
+        assert_eq!(gpu::active_blocks_per_sm(gpu, 64, 100_000, 32, 0), 0);
+    }
+
+    #[test]
+    fn compute_bound_everywhere_sensible() {
+        let space = build_gemm();
+        let model = GemmModel::new(&space.params);
+        for name in ["A100", "A6000", "MI250X"] {
+            let gpu = gpu::GpuSpec::by_name(name).unwrap();
+            let salt = space_salt(Application::Gemm, gpu);
+            let mut times: Vec<f64> = space
+                .iter_indices()
+                .step_by(7)
+                .filter_map(|i| model.runtime_ms(&space.values_f64(i), gpu, salt))
+                .collect();
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let spread = times[times.len() / 2] / times[0];
+            assert!(spread > 1.4, "{}: spread {}", name, spread);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! GPU hardware catalog — the six devices of the paper's testbed.
+//!
+//! Training set (LLaMEA feedback loop): AMD MI250X, Nvidia A100, Nvidia
+//! A4000. Test set (held-out evaluation): AMD W6600, AMD W7800, Nvidia
+//! A6000. Specifications are public datasheet values; they parameterize the
+//! analytic performance models in this module's siblings, which stand in
+//! for the paper's pre-exhaustively-explored cachefiles (DESIGN.md §3).
+
+/// GPU vendor; some model effects are vendor-specific (e.g. the read-only
+/// data cache path only exists on Nvidia, wave64 on CDNA).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vendor {
+    Nvidia,
+    Amd,
+}
+
+/// Datasheet-level device description.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub vendor: Vendor,
+    /// Streaming multiprocessors (Nvidia) / compute units (AMD).
+    pub sm_count: u32,
+    /// Hardware scheduling granularity (warp/wavefront).
+    pub warp_size: u32,
+    pub max_threads_per_block: u32,
+    pub max_threads_per_sm: u32,
+    /// Shared memory (LDS) capacity per SM, bytes.
+    pub shared_mem_per_sm: u32,
+    /// Register file per SM (32-bit registers).
+    pub regs_per_sm: u32,
+    /// Peak DRAM bandwidth, GB/s.
+    pub mem_bandwidth_gbs: f64,
+    /// Peak fp32 throughput, TFLOP/s.
+    pub fp32_tflops: f64,
+    /// L2 cache, MiB.
+    pub l2_mib: f64,
+    /// Fixed kernel-launch overhead, microseconds.
+    pub launch_overhead_us: f64,
+    /// Mean compile time for one configuration of a typical kernel, s.
+    pub compile_time_s: f64,
+}
+
+impl GpuSpec {
+    pub fn by_name(name: &str) -> Option<&'static GpuSpec> {
+        ALL_GPUS.iter().find(|g| g.name.eq_ignore_ascii_case(name))
+    }
+}
+
+/// The six GPUs of the paper's evaluation.
+pub static ALL_GPUS: [GpuSpec; 6] = [
+    // ---- training set ----
+    GpuSpec {
+        name: "MI250X",
+        vendor: Vendor::Amd,
+        sm_count: 110,
+        warp_size: 64,
+        max_threads_per_block: 1024,
+        max_threads_per_sm: 2048,
+        shared_mem_per_sm: 65_536,
+        regs_per_sm: 65_536 * 4,
+        mem_bandwidth_gbs: 1638.0,
+        fp32_tflops: 23.9,
+        l2_mib: 8.0,
+        launch_overhead_us: 8.0,
+        compile_time_s: 4.5,
+    },
+    GpuSpec {
+        name: "A100",
+        vendor: Vendor::Nvidia,
+        sm_count: 108,
+        warp_size: 32,
+        max_threads_per_block: 1024,
+        max_threads_per_sm: 2048,
+        shared_mem_per_sm: 167_936,
+        regs_per_sm: 65_536 * 4,
+        mem_bandwidth_gbs: 1555.0,
+        fp32_tflops: 19.5,
+        l2_mib: 40.0,
+        launch_overhead_us: 5.0,
+        compile_time_s: 3.5,
+    },
+    GpuSpec {
+        name: "A4000",
+        vendor: Vendor::Nvidia,
+        sm_count: 48,
+        warp_size: 32,
+        max_threads_per_block: 1024,
+        max_threads_per_sm: 1536,
+        shared_mem_per_sm: 102_400,
+        regs_per_sm: 65_536 * 4,
+        mem_bandwidth_gbs: 448.0,
+        fp32_tflops: 19.2,
+        l2_mib: 4.0,
+        launch_overhead_us: 5.0,
+        compile_time_s: 3.0,
+    },
+    // ---- test set ----
+    GpuSpec {
+        name: "W6600",
+        vendor: Vendor::Amd,
+        sm_count: 28,
+        warp_size: 32,
+        max_threads_per_block: 1024,
+        max_threads_per_sm: 1024,
+        shared_mem_per_sm: 65_536,
+        regs_per_sm: 65_536 * 4,
+        mem_bandwidth_gbs: 224.0,
+        fp32_tflops: 10.4,
+        l2_mib: 2.0,
+        launch_overhead_us: 9.0,
+        compile_time_s: 4.0,
+    },
+    GpuSpec {
+        name: "W7800",
+        vendor: Vendor::Amd,
+        sm_count: 70,
+        warp_size: 32,
+        max_threads_per_block: 1024,
+        max_threads_per_sm: 2048,
+        shared_mem_per_sm: 65_536,
+        regs_per_sm: 65_536 * 4,
+        mem_bandwidth_gbs: 576.0,
+        fp32_tflops: 45.2,
+        l2_mib: 64.0,
+        launch_overhead_us: 8.0,
+        compile_time_s: 4.0,
+    },
+    GpuSpec {
+        name: "A6000",
+        vendor: Vendor::Nvidia,
+        sm_count: 84,
+        warp_size: 32,
+        max_threads_per_block: 1024,
+        max_threads_per_sm: 1536,
+        shared_mem_per_sm: 102_400,
+        regs_per_sm: 65_536 * 4,
+        mem_bandwidth_gbs: 768.0,
+        fp32_tflops: 38.7,
+        l2_mib: 6.0,
+        launch_overhead_us: 5.0,
+        compile_time_s: 3.0,
+    },
+];
+
+/// Pseudo-device for the *measured* PJRT-CPU tuning path: real wall-clock
+/// measurements are attributed to this host instead of a modeled GPU.
+pub static CPU_HOST: GpuSpec = GpuSpec {
+    name: "CPU-PJRT",
+    vendor: Vendor::Nvidia, // unused on the measured path
+    sm_count: 1,
+    warp_size: 1,
+    max_threads_per_block: 1,
+    max_threads_per_sm: 1,
+    shared_mem_per_sm: 0,
+    regs_per_sm: 0,
+    mem_bandwidth_gbs: 0.0,
+    fp32_tflops: 0.0,
+    l2_mib: 0.0,
+    launch_overhead_us: 0.0,
+    compile_time_s: 0.3,
+};
+
+/// Training-set GPU names (generation-stage feedback loop).
+pub const TRAIN_GPUS: [&str; 3] = ["MI250X", "A100", "A4000"];
+/// Held-out test-set GPU names.
+pub const TEST_GPUS: [&str; 3] = ["W6600", "W7800", "A6000"];
+
+/// Occupancy calculation: how many blocks are concurrently resident per SM.
+///
+/// Limited by threads, shared memory, registers and an optional explicit
+/// `blocks_per_sm` cap (the `__launch_bounds__`-style tunable; 0 = off).
+pub fn active_blocks_per_sm(
+    gpu: &GpuSpec,
+    threads_per_block: u32,
+    shmem_per_block: u32,
+    regs_per_thread: u32,
+    blocks_per_sm_cap: u32,
+) -> u32 {
+    if threads_per_block == 0 || threads_per_block > gpu.max_threads_per_block {
+        return 0;
+    }
+    let by_threads = gpu.max_threads_per_sm / threads_per_block;
+    let by_shmem = if shmem_per_block == 0 {
+        u32::MAX
+    } else if shmem_per_block > gpu.shared_mem_per_sm {
+        0
+    } else {
+        gpu.shared_mem_per_sm / shmem_per_block
+    };
+    let by_regs = {
+        let per_block = regs_per_thread.max(16) * threads_per_block;
+        if per_block > gpu.regs_per_sm {
+            0
+        } else {
+            gpu.regs_per_sm / per_block
+        }
+    };
+    let mut blocks = by_threads.min(by_shmem).min(by_regs);
+    if blocks_per_sm_cap > 0 {
+        blocks = blocks.min(blocks_per_sm_cap);
+    }
+    blocks
+}
+
+/// Occupancy fraction in [0, 1]: resident threads / max threads.
+pub fn occupancy_fraction(gpu: &GpuSpec, threads_per_block: u32, blocks: u32) -> f64 {
+    ((blocks * threads_per_block) as f64 / gpu.max_threads_per_sm as f64).min(1.0)
+}
+
+/// Wave-quantization multiplier: executing `total_blocks` in waves of
+/// `sm_count * blocks_per_sm` rounds the tail wave up.
+pub fn wave_quantization(gpu: &GpuSpec, total_blocks: u64, blocks_per_sm: u32) -> f64 {
+    if total_blocks == 0 || blocks_per_sm == 0 {
+        return 1.0;
+    }
+    let per_wave = (gpu.sm_count as u64 * blocks_per_sm as u64).max(1);
+    let waves_exact = total_blocks as f64 / per_wave as f64;
+    let waves_ceil = waves_exact.ceil().max(1.0);
+    waves_ceil / waves_exact.max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100() -> &'static GpuSpec {
+        GpuSpec::by_name("A100").unwrap()
+    }
+
+    #[test]
+    fn catalog_complete() {
+        assert_eq!(ALL_GPUS.len(), 6);
+        for n in TRAIN_GPUS.iter().chain(TEST_GPUS.iter()) {
+            assert!(GpuSpec::by_name(n).is_some(), "{}", n);
+        }
+        assert!(GpuSpec::by_name("H100").is_none());
+    }
+
+    #[test]
+    fn occupancy_limits() {
+        let g = a100();
+        // Thread-limited: 256-thread blocks, no other pressure.
+        assert_eq!(active_blocks_per_sm(g, 256, 0, 32, 0), 8);
+        // Shared-memory limited.
+        assert_eq!(active_blocks_per_sm(g, 64, 84_000, 32, 0), 1);
+        // Explicit cap wins.
+        assert_eq!(active_blocks_per_sm(g, 64, 0, 16, 2), 2);
+        // Oversized block -> zero.
+        assert_eq!(active_blocks_per_sm(g, 2048, 0, 32, 0), 0);
+        // Shared overflow -> zero.
+        assert_eq!(active_blocks_per_sm(g, 64, 200_000, 32, 0), 0);
+    }
+
+    #[test]
+    fn occupancy_fraction_bounds() {
+        let g = a100();
+        let f = occupancy_fraction(g, 256, 8);
+        assert!((f - 1.0).abs() < 1e-9);
+        assert!(occupancy_fraction(g, 32, 1) < 0.05);
+    }
+
+    #[test]
+    fn wave_quantization_tail() {
+        let g = a100(); // 108 SMs
+        // Exactly one wave -> 1.0.
+        assert!((wave_quantization(g, 108, 1) - 1.0).abs() < 1e-9);
+        // One extra block costs a whole second wave.
+        assert!(wave_quantization(g, 109, 1) > 1.9);
+        // Large grids amortize.
+        assert!(wave_quantization(g, 108 * 100 + 1, 1) < 1.02);
+    }
+}

@@ -1,0 +1,199 @@
+//! Hotspot performance model (thermal stencil with temporal tiling).
+//!
+//! Workload: 1024x1024 grid, 1000 simulation steps. The central trade-off
+//! is temporal tiling: fusing `temporal_tiling_factor` steps per launch
+//! divides the DRAM traffic and launch count by that factor, but the halo
+//! grows with it, inflating redundant compute quadratically — so the
+//! optimal factor depends on the device's bandwidth/compute ratio, which is
+//! why different GPUs prefer different configurations.
+
+use super::gpu::{self, GpuSpec, Vendor};
+use super::KernelModel;
+use crate::searchspace::{Application, ParamSet};
+
+const GRID: f64 = 1024.0;
+const STEPS: f64 = 1000.0;
+const FLOPS_PER_CELL: f64 = 12.0;
+
+pub struct HotspotModel {
+    d_bsx: usize,
+    d_bsy: usize,
+    d_tsx: usize,
+    d_tsy: usize,
+    d_tt: usize,
+    d_unroll_t: usize,
+    d_shp: usize,
+    d_bpsm: usize,
+    d_vec: usize,
+    d_reorder: usize,
+    d_dbuf: usize,
+}
+
+impl HotspotModel {
+    pub fn new(params: &ParamSet) -> Self {
+        HotspotModel {
+            d_bsx: super::dim(params, "block_size_x"),
+            d_bsy: super::dim(params, "block_size_y"),
+            d_tsx: super::dim(params, "tile_size_x"),
+            d_tsy: super::dim(params, "tile_size_y"),
+            d_tt: super::dim(params, "temporal_tiling_factor"),
+            d_unroll_t: super::dim(params, "loop_unroll_factor_t"),
+            d_shp: super::dim(params, "sh_power"),
+            d_bpsm: super::dim(params, "blocks_per_sm"),
+            d_vec: super::dim(params, "vector"),
+            d_reorder: super::dim(params, "reorder"),
+            d_dbuf: super::dim(params, "double_buffer"),
+        }
+    }
+}
+
+impl KernelModel for HotspotModel {
+    fn application(&self) -> Application {
+        Application::Hotspot
+    }
+
+    fn workload_flops(&self) -> f64 {
+        GRID * GRID * STEPS * FLOPS_PER_CELL
+    }
+
+    fn workload_bytes(&self) -> f64 {
+        // Per step: read temp+power, write temp (ideal temporal locality).
+        3.0 * GRID * GRID * 4.0 * STEPS
+    }
+
+    fn runtime_ms(&self, vals: &[f64], gpu: &GpuSpec, salt: u64) -> Option<f64> {
+        let bsx = vals[self.d_bsx];
+        let bsy = vals[self.d_bsy];
+        let tsx = vals[self.d_tsx];
+        let tsy = vals[self.d_tsy];
+        let tt = vals[self.d_tt];
+        let unroll_t = vals[self.d_unroll_t];
+        let sh_power = vals[self.d_shp] > 0.5;
+        let bpsm_cap = vals[self.d_bpsm] as u32;
+        let vec = vals[self.d_vec];
+        let reorder = vals[self.d_reorder] > 0.5;
+        let dbuf = vals[self.d_dbuf] > 0.5;
+
+        if super::hidden_failure(salt, vals, 0.02) {
+            return None;
+        }
+
+        let threads = (bsx * bsy) as u32;
+        let tile_w = bsx * tsx;
+        let tile_h = bsy * tsy;
+        let halo = 2.0 * tt;
+        // Shared tile: temperature (+ power when sh_power), double-buffered
+        // temperature when requested.
+        let shmem_cells = (tile_w + halo) * (tile_h + halo);
+        let shmem_bytes = (shmem_cells
+            * 4.0
+            * (1.0 + sh_power as u8 as f64 + dbuf as u8 as f64)) as u32;
+        let regs = (26.0 + 2.0 * tsx * tsy + 1.5 * unroll_t + vec) as u32;
+        let blocks = gpu::active_blocks_per_sm(gpu, threads, shmem_bytes, regs, bpsm_cap);
+        if blocks == 0 {
+            return None;
+        }
+        let occ = gpu::occupancy_fraction(gpu, threads, blocks);
+
+        let launches = (STEPS / tt).ceil();
+
+        // --- Memory per launch ---
+        // Read temp + power (with halo amplification), write temp; sh_power
+        // avoids re-reading power every fused step.
+        let halo_amp = (tile_w + halo) * (tile_h + halo) / (tile_w * tile_h);
+        let power_reads = if sh_power { 1.0 } else { tt };
+        let bytes_per_launch =
+            GRID * GRID * 4.0 * (halo_amp * (1.0 + power_reads / tt.max(1.0)) + 1.0);
+        let coalesce = super::coalescing_efficiency(tile_w, gpu.warp_size as f64);
+        let reorder_eff = if reorder { 1.04 } else { 1.0 };
+        let vec_eff = if vec > 1.5 {
+            match gpu.vendor {
+                Vendor::Amd => 1.08,
+                Vendor::Nvidia => 1.03,
+            }
+        } else {
+            1.0
+        };
+        let bw = gpu.mem_bandwidth_gbs * 1e9
+            * super::bandwidth_utilization(occ)
+            * coalesce
+            * reorder_eff
+            * vec_eff;
+        let mem_time_s = bytes_per_launch / bw;
+
+        // --- Compute per launch ---
+        // Redundant halo compute: each fused step s computes the tile plus
+        // a shrinking halo; approximation via the mean inflation factor.
+        let inflation = {
+            let grow = (tile_w + halo) * (tile_h + halo) / (tile_w * tile_h);
+            1.0 + (grow - 1.0) * 0.5
+        };
+        let unroll_eff = super::unroll_efficiency(unroll_t, 2.0);
+        let dbuf_eff = if dbuf { 1.05 } else { 1.0 };
+        let comp_eff = super::compute_utilization(occ) * unroll_eff * dbuf_eff * 0.92;
+        let flops_per_launch = GRID * GRID * tt * FLOPS_PER_CELL * inflation;
+        let comp_time_s = flops_per_launch / (gpu.fp32_tflops * 1e12 * comp_eff);
+
+        let total_blocks = ((GRID / tile_w).ceil() * (GRID / tile_h).ceil()) as u64;
+        let wave = gpu::wave_quantization(gpu, total_blocks, blocks);
+
+        let per_launch_s =
+            mem_time_s.max(comp_time_s) * wave + gpu.launch_overhead_us * 1e-6;
+        let t_s = launches * per_launch_s * super::rugged(salt, vals, 0.35);
+        Some(t_s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::space_salt;
+    use crate::searchspace::builder::build_hotspot;
+
+    #[test]
+    fn sampled_configs_sane() {
+        let space = build_hotspot();
+        let model = HotspotModel::new(&space.params);
+        let gpu = gpu::GpuSpec::by_name("A100").unwrap();
+        let salt = space_salt(Application::Hotspot, gpu);
+        let mut ok = 0;
+        let mut n = 0;
+        for i in space.iter_indices().step_by(97) {
+            n += 1;
+            if let Some(t) = model.runtime_ms(&space.values_f64(i), gpu, salt) {
+                assert!(t > 0.5 && t < 1e6, "t={}", t);
+                ok += 1;
+            }
+        }
+        assert!(ok as f64 > 0.85 * n as f64);
+    }
+
+    #[test]
+    fn temporal_tiling_has_an_interior_optimum_somewhere() {
+        // On a bandwidth-starved device (W6600) larger temporal tiling must
+        // help relative to tt=1 for at least some configurations.
+        let space = build_hotspot();
+        let model = HotspotModel::new(&space.params);
+        let gpu = gpu::GpuSpec::by_name("W6600").unwrap();
+        let d_tt = space.params.index_of("temporal_tiling_factor").unwrap();
+        let mut best_by_tt: std::collections::HashMap<u16, f64> = Default::default();
+        for i in space.iter_indices().step_by(31) {
+            if let Some(t) = model.runtime_ms(&space.values_f64(i), gpu, 0) {
+                let tt = space.config(i)[d_tt];
+                let e = best_by_tt.entry(tt).or_insert(f64::INFINITY);
+                *e = e.min(t);
+            }
+        }
+        let t1 = best_by_tt[&0]; // tt = 1
+        let better = best_by_tt.iter().any(|(&tt, &t)| tt > 0 && t < t1);
+        assert!(better, "temporal tiling never helps: {:?}", best_by_tt);
+    }
+
+    #[test]
+    fn launch_overhead_visible_at_high_launch_count() {
+        // tt=1 => 1000 launches; overhead must be a visible fraction.
+        let gpu = gpu::GpuSpec::by_name("MI250X").unwrap();
+        let overhead_ms = 1000.0 * gpu.launch_overhead_us * 1e-3;
+        assert!(overhead_ms > 5.0);
+    }
+}

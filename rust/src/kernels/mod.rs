@@ -1,0 +1,188 @@
+//! Analytic GPU performance models for the four benchmark kernels.
+//!
+//! These stand in for the paper's pre-exhaustively-explored cachefiles
+//! (DESIGN.md §3): for every valid configuration they produce a plausible
+//! mean runtime on a given [`gpu::GpuSpec`], built from first-principles
+//! components (occupancy, roofline bandwidth/compute balance, tiling reuse,
+//! vectorization and unrolling efficiencies, wave quantization) plus a
+//! deterministic hash-keyed rugged term that reproduces the irregular,
+//! multi-modal structure real auto-tuning spaces exhibit (Willemsen et al.
+//! 2025a). Bandwidth-bound (dedispersion, hotspot) vs compute-bound
+//! (convolution, GEMM) character follows the paper's §4.1.1.
+
+pub mod convolution;
+pub mod dedispersion;
+pub mod gemm;
+pub mod gpu;
+pub mod hotspot;
+
+use crate::searchspace::{Application, ParamSet};
+use crate::util::rng::{hash_config, hash_normal};
+use gpu::GpuSpec;
+
+/// A kernel performance model bound to a parameter set (dims resolved).
+pub trait KernelModel: Send + Sync {
+    fn application(&self) -> Application;
+
+    /// Mean runtime in milliseconds of one configuration on `gpu`.
+    ///
+    /// `vals` are the configuration's numeric parameter values (by
+    /// dimension); `salt` keys the deterministic rugged term (unique per
+    /// (kernel, GPU) pair). Returns `None` for *hidden-constraint* failures
+    /// — configurations that pass the static constraints but fail at
+    /// compile/run time (BaCO-style), which the paper's methodology treats
+    /// as wasted evaluations.
+    fn runtime_ms(&self, vals: &[f64], gpu: &GpuSpec, salt: u64) -> Option<f64>;
+
+    /// Total useful FLOPs of the workload (for roofline reporting).
+    fn workload_flops(&self) -> f64;
+    /// Minimal DRAM traffic of the workload in bytes (roofline).
+    fn workload_bytes(&self) -> f64;
+}
+
+/// Construct the model for an application, resolving dims against `params`.
+pub fn model_for(app: Application, params: &ParamSet) -> Box<dyn KernelModel> {
+    match app {
+        Application::Dedispersion => Box::new(dedispersion::DedispersionModel::new(params)),
+        Application::Convolution => Box::new(convolution::ConvolutionModel::new(params)),
+        Application::Hotspot => Box::new(hotspot::HotspotModel::new(params)),
+        Application::Gemm => Box::new(gemm::GemmModel::new(params)),
+    }
+}
+
+/// Salt for the rugged/noise terms of a (kernel, GPU) pair.
+pub fn space_salt(app: Application, gpu: &GpuSpec) -> u64 {
+    crate::util::rng::fnv1a(format!("{}::{}", app.name(), gpu.name).as_bytes())
+}
+
+// ----------------------------------------------------------------------
+// Shared model components
+// ----------------------------------------------------------------------
+
+/// Resolve a parameter name to its dimension, panicking with context —
+/// models are always paired with the space builder that defines the names.
+pub(crate) fn dim(params: &ParamSet, name: &str) -> usize {
+    params
+        .index_of(name)
+        .unwrap_or_else(|| panic!("model expects parameter '{}'", name))
+}
+
+/// Deterministic multiplicative rugged-terrain term, a half-normal penalty
+/// in [1, inf).
+///
+/// Keyed by (salt, quantized values) so the same configuration always maps
+/// to the same multiplier — this is what makes the simulated spaces
+/// *irregular* rather than smooth, without breaking reproducibility. It is
+/// one-sided (a slowdown) so no configuration can beat the analytic
+/// roofline of its own formula; the tuned optimum stays physical.
+pub(crate) fn rugged(salt: u64, vals: &[f64], sigma: f64) -> f64 {
+    // Separable per-dimension penalties: each (dimension, value) pair draws
+    // a fixed half-normal penalty, so configurations combining the good
+    // value in *every* dimension are exponentially rare under random
+    // sampling, yet coordinate moves (the neighbor operations) can descend
+    // to them — matching how real tuning spaces reward local search.
+    let mut acc = 0.0;
+    for (d, &v) in vals.iter().enumerate() {
+        let h = hash_config(
+            salt ^ (d as u64 + 1).wrapping_mul(0xA24BAED4963EE407),
+            &[(v as i64 & 0xffff) as u16],
+        );
+        acc += hash_normal(h).abs();
+    }
+    let separable = acc / vals.len() as f64;
+    // Non-separable residual: interactions / irregularity.
+    let q: Vec<u16> = vals.iter().map(|&v| (v as i64 & 0xffff) as u16).collect();
+    let residual = hash_normal(hash_config(salt, &q)).abs();
+    (sigma * (1.4 * separable + 0.5 * residual)).exp()
+}
+
+/// Deterministic hidden-failure test: ~`rate` of configurations crash at
+/// run time even though they satisfy all static constraints.
+pub(crate) fn hidden_failure(salt: u64, vals: &[f64], rate: f64) -> bool {
+    let q: Vec<u16> = vals.iter().map(|&v| (v as i64 & 0xffff) as u16).collect();
+    let h = hash_config(salt ^ 0xDEAD_BEEF, &q);
+    ((h >> 16) as f64 / (1u64 << 48) as f64) < rate
+}
+
+/// Loop-unroll efficiency: log-space Gaussian around a hardware-dependent
+/// sweet spot; `unroll == 0` (compiler-chosen) gets a solid default.
+pub(crate) fn unroll_efficiency(unroll: f64, optimal: f64) -> f64 {
+    if unroll <= 0.0 {
+        return 0.88;
+    }
+    let d = (unroll.ln() - optimal.ln()) / 0.8;
+    0.55 + 0.45 * (-0.5 * d * d).exp()
+}
+
+/// Memory-coalescing efficiency of a block whose fastest-moving extent is
+/// `width` lanes on a device with `warp` scheduling granularity.
+pub(crate) fn coalescing_efficiency(width: f64, warp: f64) -> f64 {
+    if width >= warp {
+        0.97
+    } else {
+        // Partially-filled transactions.
+        0.35 + 0.62 * (width / warp)
+    }
+}
+
+/// Occupancy-to-achieved-bandwidth curve: DRAM saturates around 40%
+/// occupancy; below that, latency hiding fails roughly linearly.
+pub(crate) fn bandwidth_utilization(occupancy: f64) -> f64 {
+    (occupancy / 0.40).min(1.0) * 0.92 + 0.03
+}
+
+/// Occupancy-to-achieved-compute curve: ALUs saturate around 50%.
+pub(crate) fn compute_utilization(occupancy: f64) -> f64 {
+    (occupancy / 0.50).min(1.0) * 0.90 + 0.05
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rugged_is_deterministic_one_sided_penalty() {
+        let vals = [4.0, 8.0, 1.0];
+        assert_eq!(rugged(1, &vals, 0.1), rugged(1, &vals, 0.1));
+        assert_ne!(rugged(1, &vals, 0.1), rugged(2, &vals, 0.1));
+        // Always a slowdown; mean log-penalty follows the half-normal
+        // composition: sigma * (1.4 + 0.5) * E[|z|], E[|z|] ~ 0.798.
+        let mut sum = 0.0;
+        for i in 0..10_000 {
+            let r = rugged(7, &[i as f64, (i * 3) as f64], 0.15);
+            assert!(r >= 1.0);
+            sum += r.ln();
+        }
+        let mean_ln = sum / 10_000.0;
+        assert!((mean_ln - 0.15 * 1.9 * 0.798).abs() < 0.03, "{}", mean_ln);
+    }
+
+    #[test]
+    fn hidden_failure_rate_close_to_target() {
+        let mut fails = 0;
+        let n = 50_000;
+        for i in 0..n {
+            if hidden_failure(3, &[i as f64, (i * 7 + 1) as f64], 0.02) {
+                fails += 1;
+            }
+        }
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.02).abs() < 0.005, "rate {}", rate);
+    }
+
+    #[test]
+    fn unroll_sweet_spot() {
+        let at_opt = unroll_efficiency(8.0, 8.0);
+        assert!(at_opt > unroll_efficiency(1.0, 8.0));
+        assert!(at_opt > unroll_efficiency(32.0, 8.0));
+        assert!(unroll_efficiency(0.0, 8.0) > 0.85);
+    }
+
+    #[test]
+    fn utilization_curves_monotone() {
+        assert!(bandwidth_utilization(0.1) < bandwidth_utilization(0.4));
+        assert!((bandwidth_utilization(0.4) - bandwidth_utilization(1.0)).abs() < 1e-9);
+        assert!(compute_utilization(0.2) < compute_utilization(0.5));
+        assert!(coalescing_efficiency(8.0, 32.0) < coalescing_efficiency(32.0, 32.0));
+    }
+}

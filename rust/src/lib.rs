@@ -1,0 +1,11 @@
+//! llamea-kt — reproduction of "Automated Algorithm Design for Auto-Tuning
+//! Optimizers" (Willemsen, van Stein, van Werkhoven).
+pub mod harness;
+pub mod kernels;
+pub mod llamea;
+pub mod methodology;
+pub mod optimizers;
+pub mod runtime;
+pub mod searchspace;
+pub mod tuning;
+pub mod util;

@@ -1,0 +1,297 @@
+//! The LLaMEA evolutionary loop (paper §3.2): a (mu + lambda) elitist ES
+//! over algorithm genomes, with mu = 4 parents, lambda = 12 offspring per
+//! generation, LLM-driven mutation (Fig. 4 prompts), fitness = the
+//! methodology performance score P on the training caches, broken-candidate
+//! discarding, and stack-trace repair when a whole generation fails.
+//! A run stops after `llm_call_budget` LLM calls (paper: 100).
+
+use super::genome::Genome;
+use super::llm::{Generation, LlmClient, TokenUsage};
+use super::prompt::{MutationPrompt, Prompt, SpaceInfo};
+use crate::llamea::interpreter::GenomeOptimizer;
+use crate::methodology::{aggregate, run_many, OptimizerFactory, SpaceSetup};
+use crate::tuning::Cache;
+use crate::util::rng::Rng;
+
+/// Configuration of one evolution run.
+pub struct EvolutionConfig {
+    /// Parent population size (paper: 4).
+    pub mu: usize,
+    /// Offspring per generation (paper: 12).
+    pub lambda: usize,
+    /// Total LLM calls per run (paper: 100).
+    pub llm_call_budget: u64,
+    /// Tuning runs per candidate evaluation (kept small in the generation
+    /// loop — candidates get a full 100-run evaluation afterwards).
+    pub eval_runs: usize,
+    /// Target application name inserted into the prompt.
+    pub application: String,
+    /// With/without search-space information (the §4.2 contrast).
+    pub space_info: Option<SpaceInfo>,
+}
+
+impl EvolutionConfig {
+    pub fn paper_defaults(application: &str, space_info: Option<SpaceInfo>) -> EvolutionConfig {
+        EvolutionConfig {
+            mu: 4,
+            lambda: 12,
+            llm_call_budget: 100,
+            eval_runs: 5,
+            application: application.to_string(),
+            space_info,
+        }
+    }
+}
+
+/// A scored member of the algorithm population.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub genome: Genome,
+    pub fitness: f64,
+}
+
+/// Outcome of one evolution run.
+pub struct EvolutionResult {
+    pub best: Candidate,
+    pub population: Vec<Candidate>,
+    /// Total LLM token usage (Fig. 5).
+    pub tokens: TokenUsage,
+    pub llm_calls: u64,
+    pub failures: u64,
+    /// Best fitness after each generation (convergence reporting).
+    pub fitness_history: Vec<f64>,
+}
+
+struct GenomeFactory {
+    genome: Genome,
+}
+
+impl OptimizerFactory for GenomeFactory {
+    fn build(&self) -> Box<dyn crate::optimizers::Optimizer> {
+        Box::new(GenomeOptimizer::new(self.genome.clone()))
+    }
+    fn label(&self) -> String {
+        self.genome.name.clone()
+    }
+}
+
+/// Fitness: aggregate performance score of the genome on the training set.
+pub fn fitness_of(
+    genome: &Genome,
+    caches: &[Cache],
+    setups: &[SpaceSetup],
+    runs: usize,
+    seed: u64,
+) -> f64 {
+    let factory = GenomeFactory { genome: genome.clone() };
+    let per_space: Vec<Vec<Vec<f64>>> = caches
+        .iter()
+        .zip(setups)
+        .map(|(c, s)| run_many(c, s, &factory, runs, seed))
+        .collect();
+    aggregate(&per_space).score
+}
+
+/// Run one LLaMEA evolution (one of the paper's 5 independent runs).
+pub fn evolve(
+    config: &EvolutionConfig,
+    llm: &mut dyn LlmClient,
+    caches: &[Cache],
+    seed: u64,
+) -> EvolutionResult {
+    let mut rng = Rng::new(seed ^ 0x11AEA);
+    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    let mut tokens = TokenUsage::default();
+    let mut llm_calls = 0u64;
+    let mut failures = 0u64;
+    let mut population: Vec<Candidate> = Vec::new();
+    let mut fitness_history: Vec<f64> = Vec::new();
+    let mut last_trace: Option<String> = None;
+
+    let base_prompt = |parent: Option<(Genome, MutationPrompt)>, trace: Option<String>| {
+        let mut p = Prompt::task(&config.application);
+        if let Some(info) = &config.space_info {
+            p = p.with_info(info.clone());
+        }
+        if let Some((g, op)) = parent {
+            p = p.mutate(g, op);
+        }
+        p.repair_trace = trace;
+        p
+    };
+
+    // --- Initial population: mu fresh generations ---
+    while population.len() < config.mu && llm_calls < config.llm_call_budget {
+        let prompt = base_prompt(None, last_trace.take());
+        let (gen, usage) = llm.generate(&prompt);
+        llm_calls += 1;
+        tokens.prompt_tokens += usage.prompt_tokens;
+        tokens.completion_tokens += usage.completion_tokens;
+        match gen {
+            Generation::Code(genome) if genome.is_valid() => {
+                let fitness =
+                    fitness_of(&genome, caches, &setups, config.eval_runs, seed ^ llm_calls);
+                population.push(Candidate { genome, fitness });
+            }
+            Generation::Code(_) => {
+                failures += 1;
+                last_trace =
+                    Some("ValueError: generated algorithm failed validation".into());
+            }
+            Generation::Broken { stack_trace } => {
+                failures += 1;
+                last_trace = Some(stack_trace);
+            }
+        }
+    }
+    assert!(!population.is_empty(), "no valid initial candidate generated");
+
+    // --- Generations ---
+    while llm_calls < config.llm_call_budget {
+        let mut offspring: Vec<Candidate> = Vec::new();
+        let mut gen_failures = 0u64;
+        let mut gen_trace: Option<String> = None;
+        for _ in 0..config.lambda {
+            if llm_calls >= config.llm_call_budget {
+                break;
+            }
+            let parent = &population[rng.below(population.len())];
+            let op = *rng.choose(&MutationPrompt::ALL);
+            // If every candidate so far this generation failed, feed the
+            // stack trace back (the paper's self-debugging path).
+            let trace = if gen_failures > 0 && offspring.is_empty() {
+                gen_trace.clone()
+            } else {
+                None
+            };
+            let prompt = base_prompt(Some((parent.genome.clone(), op)), trace);
+            let (gen, usage) = llm.generate(&prompt);
+            llm_calls += 1;
+            tokens.prompt_tokens += usage.prompt_tokens;
+            tokens.completion_tokens += usage.completion_tokens;
+            match gen {
+                Generation::Code(genome) if genome.is_valid() => {
+                    let fitness = fitness_of(
+                        &genome,
+                        caches,
+                        &setups,
+                        config.eval_runs,
+                        seed ^ llm_calls,
+                    );
+                    offspring.push(Candidate { genome, fitness });
+                }
+                Generation::Code(_) => {
+                    failures += 1;
+                    gen_failures += 1;
+                    gen_trace =
+                        Some("ValueError: generated algorithm failed validation".into());
+                }
+                Generation::Broken { stack_trace } => {
+                    failures += 1;
+                    gen_failures += 1;
+                    gen_trace = Some(stack_trace);
+                }
+            }
+        }
+        // Elitist (mu + lambda) selection.
+        population.extend(offspring);
+        population.sort_by(|a, b| b.fitness.partial_cmp(&a.fitness).unwrap());
+        population.truncate(config.mu);
+        fitness_history.push(population[0].fitness);
+    }
+
+    let best = population[0].clone();
+    EvolutionResult { best, population, tokens, llm_calls, failures, fitness_history }
+}
+
+/// The paper's protocol: 5 independent runs, keep the best-performing
+/// algorithm. Returns (best result, per-run token totals).
+pub fn evolve_best_of_runs(
+    config: &EvolutionConfig,
+    make_llm: &mut dyn FnMut(u64) -> Box<dyn LlmClient>,
+    caches: &[Cache],
+    n_runs: usize,
+    base_seed: u64,
+) -> (EvolutionResult, Vec<u64>) {
+    let mut best: Option<EvolutionResult> = None;
+    let mut token_totals = Vec::with_capacity(n_runs);
+    for r in 0..n_runs {
+        let seed = base_seed.wrapping_add(r as u64 * 0x9E37);
+        let mut llm = make_llm(seed);
+        let result = evolve(config, llm.as_mut(), caches, seed);
+        token_totals.push(result.tokens.total());
+        if best
+            .as_ref()
+            .map(|b| result.best.fitness > b.best.fitness)
+            .unwrap_or(true)
+        {
+            best = Some(result);
+        }
+    }
+    (best.unwrap(), token_totals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::llamea::llm::MockLlm;
+    use crate::searchspace::Application;
+
+    fn tiny_setup() -> (Vec<Cache>, EvolutionConfig) {
+        let caches = vec![Cache::build(
+            Application::Convolution,
+            GpuSpec::by_name("A4000").unwrap(),
+        )];
+        let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+        let info = SpaceInfo::from_cache(&caches[0], &setups[0]);
+        let mut config = EvolutionConfig::paper_defaults("convolution", Some(info));
+        config.llm_call_budget = 20; // keep the test fast
+        config.eval_runs = 2;
+        (caches, config)
+    }
+
+    #[test]
+    fn evolution_improves_or_holds_fitness() {
+        let (caches, config) = tiny_setup();
+        let mut llm = MockLlm::new(42);
+        let result = evolve(&config, &mut llm, &caches, 1);
+        assert_eq!(result.llm_calls, 20);
+        assert!(result.best.genome.is_valid());
+        // Elitism: best fitness is non-decreasing across generations.
+        assert!(result
+            .fitness_history
+            .windows(2)
+            .all(|w| w[1] >= w[0] - 1e-12));
+        assert!(result.tokens.total() > 1000);
+    }
+
+    #[test]
+    fn failures_counted_and_survivable() {
+        let (caches, config) = tiny_setup();
+        let mut llm = MockLlm::new(7);
+        llm.failure_rate = 0.5; // hostile LLM
+        let result = evolve(&config, &mut llm, &caches, 2);
+        assert!(result.failures > 0);
+        assert!(result.best.genome.is_valid());
+    }
+
+    #[test]
+    fn best_of_runs_selects_max() {
+        let (caches, mut config) = tiny_setup();
+        config.llm_call_budget = 8;
+        let mut make = |seed: u64| -> Box<dyn LlmClient> { Box::new(MockLlm::new(seed)) };
+        let (best, tokens) = evolve_best_of_runs(&config, &mut make, &caches, 3, 11);
+        assert_eq!(tokens.len(), 3);
+        assert!(best.best.genome.is_valid());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (caches, config) = tiny_setup();
+        let r1 = evolve(&config, &mut MockLlm::new(5), &caches, 9);
+        let r2 = evolve(&config, &mut MockLlm::new(5), &caches, 9);
+        assert_eq!(r1.best.genome, r2.best.genome);
+        assert_eq!(r1.best.fitness, r2.best.fitness);
+    }
+}

@@ -1,0 +1,265 @@
+//! The algorithm genome: a structured representation of a metaheuristic.
+//!
+//! The paper's LLM emits Python classes; selection pressure, not the LLM,
+//! guarantees quality. Our `MockLlm` emits *genomes* over the same design
+//! space those classes span — initialization, neighborhood structures with
+//! adaptive weights, surrogate pre-screening, tabu, SA-style acceptance,
+//! elite recombination, restarts, population mixing — which the interpreter
+//! (`super::interpreter`) turns into runnable [`Optimizer`]s. Both of the
+//! paper's published winners are expressible: HybridVNDX is a
+//! `SingleSolution` genome with surrogate+tabu+elites, AdaptiveTabuGreyWolf
+//! a `Population` genome with leader mixing and budget-decayed acceptance.
+//!
+//! [`Optimizer`]: crate::optimizers::Optimizer
+
+use crate::searchspace::NeighborKind;
+
+/// Top-level control-flow skeleton.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Skeleton {
+    /// One incumbent, candidate pools, VND-style neighborhood switching.
+    SingleSolution,
+    /// A small population with leader-based mixing (grey-wolf style).
+    Population,
+}
+
+/// Initialization strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Init {
+    /// Single random valid configuration / population of them.
+    Random,
+    /// Evaluate `k` random configs, start from the best.
+    BestOfSample(usize),
+}
+
+/// Acceptance criterion for candidate moves.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Acceptance {
+    /// Accept only improvements.
+    Greedy,
+    /// Metropolis with geometric cooling per step.
+    Metropolis { t0: f64, cooling: f64 },
+    /// Metropolis with budget-coupled temperature (ATGW style).
+    BudgetMetropolis { t0: f64, lambda: f64, t_min: f64 },
+}
+
+/// Surrogate pre-screening of candidate pools.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SurrogateGene {
+    pub k: usize,
+    pub window: usize,
+}
+
+/// Restart / partial-reinit policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RestartGene {
+    pub stagnation: u32,
+    /// Fraction of the population reinitialized (1.0 for single-solution).
+    pub reinit_ratio: f64,
+}
+
+/// Elite archive + recombination.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EliteGene {
+    pub size: usize,
+    /// Probability a pool slot is filled by an elite-crossover child.
+    pub crossover_prob: f64,
+}
+
+/// Population-skeleton specifics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PopulationGene {
+    pub size: usize,
+    /// Shaking probability (post-mixing perturbation).
+    pub shake_rate: f64,
+    /// Probability a shake is a fresh-sample coordinate jump.
+    pub jump_rate: f64,
+}
+
+/// A complete algorithm genome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Genome {
+    pub name: String,
+    pub description: String,
+    pub skeleton: Skeleton,
+    pub init: Init,
+    /// Neighborhood set sampled (roulette if `adaptive_weights`).
+    pub neighborhoods: Vec<NeighborKind>,
+    pub adaptive_weights: bool,
+    /// Candidate pool size per step (single-solution skeleton).
+    pub pool_size: usize,
+    pub surrogate: Option<SurrogateGene>,
+    pub tabu_size: Option<usize>,
+    pub acceptance: Acceptance,
+    pub restart: Option<RestartGene>,
+    pub elites: Option<EliteGene>,
+    pub population: PopulationGene,
+}
+
+impl Genome {
+    /// Rough structural complexity — drives the synthetic output-token count
+    /// (Fig. 5) and the "simplify" mutation's pressure.
+    pub fn complexity(&self) -> u32 {
+        let mut c = 6; // skeleton + init + acceptance + loop scaffolding
+        c += 2 * self.neighborhoods.len() as u32;
+        if self.adaptive_weights {
+            c += 3;
+        }
+        if self.surrogate.is_some() {
+            c += 6;
+        }
+        if self.tabu_size.is_some() {
+            c += 3;
+        }
+        if self.restart.is_some() {
+            c += 3;
+        }
+        if self.elites.is_some() {
+            c += 5;
+        }
+        if self.skeleton == Skeleton::Population {
+            c += 6;
+        }
+        c
+    }
+
+    /// Structural validity: the interpreter can run anything that passes
+    /// this; the mock LLM's "broken code" failures are modeled separately.
+    pub fn is_valid(&self) -> bool {
+        !self.neighborhoods.is_empty()
+            && self.pool_size >= 1
+            && self.pool_size <= 64
+            && self.population.size >= 4
+            && self.population.size <= 64
+            && (0.0..=1.0).contains(&self.population.shake_rate)
+            && (0.0..=1.0).contains(&self.population.jump_rate)
+            && self.surrogate.map(|s| s.k >= 1 && s.window >= s.k).unwrap_or(true)
+            && self.tabu_size.map(|t| t >= 1).unwrap_or(true)
+            && self.elites.map(|e| e.size >= 1).unwrap_or(true)
+            && match self.acceptance {
+                Acceptance::Greedy => true,
+                Acceptance::Metropolis { t0, cooling } => {
+                    t0 > 0.0 && (0.5..1.0).contains(&cooling)
+                }
+                Acceptance::BudgetMetropolis { t0, lambda, t_min } => {
+                    t0 > 0.0 && lambda > 0.0 && t_min > 0.0
+                }
+            }
+    }
+
+    /// A compact single-line summary (the "one-line description" of the
+    /// paper's output format specification).
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<&str> = Vec::new();
+        match self.skeleton {
+            Skeleton::SingleSolution => parts.push("VND-style single-solution search"),
+            Skeleton::Population => parts.push("leader-mixed population search"),
+        }
+        if self.adaptive_weights {
+            parts.push("adaptive neighborhood weights");
+        }
+        if self.surrogate.is_some() {
+            parts.push("k-NN surrogate pre-screening");
+        }
+        if self.tabu_size.is_some() {
+            parts.push("tabu");
+        }
+        if self.elites.is_some() {
+            parts.push("elite recombination");
+        }
+        match self.acceptance {
+            Acceptance::Greedy => parts.push("greedy acceptance"),
+            Acceptance::Metropolis { .. } => parts.push("SA acceptance"),
+            Acceptance::BudgetMetropolis { .. } => parts.push("budget-decayed SA acceptance"),
+        }
+        if self.restart.is_some() {
+            parts.push("stagnation restarts");
+        }
+        format!("{}: {}", self.name, parts.join(", "))
+    }
+
+    /// The HybridVNDX genome (paper Algorithm 1) — used as a regression
+    /// anchor in tests: interpreting this genome must behave like the
+    /// hand-written implementation.
+    pub fn hybrid_vndx_like() -> Genome {
+        Genome {
+            name: "HybridVNDX".into(),
+            description: "VND with dynamic weights, kNN prescreen, elites, tabu+SA".into(),
+            skeleton: Skeleton::SingleSolution,
+            init: Init::Random,
+            neighborhoods: vec![
+                NeighborKind::Adjacent,
+                NeighborKind::StrictlyAdjacent,
+                NeighborKind::Hamming,
+            ],
+            adaptive_weights: true,
+            pool_size: 8,
+            surrogate: Some(SurrogateGene { k: 5, window: 512 }),
+            tabu_size: Some(300),
+            acceptance: Acceptance::Metropolis { t0: 1.0, cooling: 0.995 },
+            restart: Some(RestartGene { stagnation: 100, reinit_ratio: 1.0 }),
+            elites: Some(EliteGene { size: 5, crossover_prob: 0.15 }),
+            population: PopulationGene { size: 8, shake_rate: 0.0, jump_rate: 0.0 },
+        }
+    }
+
+    /// The AdaptiveTabuGreyWolf genome (paper Algorithm 2).
+    pub fn atgw_like() -> Genome {
+        Genome {
+            name: "AdaptiveTabuGreyWolf".into(),
+            description: "leader-mixed population, shaking, tabu, budget-decayed SA".into(),
+            skeleton: Skeleton::Population,
+            init: Init::Random,
+            neighborhoods: vec![NeighborKind::Hamming, NeighborKind::Adjacent],
+            adaptive_weights: false,
+            pool_size: 8,
+            surrogate: None,
+            tabu_size: Some(24),
+            acceptance: Acceptance::BudgetMetropolis { t0: 1.0, lambda: 5.0, t_min: 1e-4 },
+            restart: Some(RestartGene { stagnation: 80, reinit_ratio: 0.3 }),
+            elites: None,
+            population: PopulationGene { size: 8, shake_rate: 0.2, jump_rate: 0.15 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_are_valid() {
+        assert!(Genome::hybrid_vndx_like().is_valid());
+        assert!(Genome::atgw_like().is_valid());
+    }
+
+    #[test]
+    fn complexity_orders_sensibly() {
+        let rich = Genome::hybrid_vndx_like();
+        let mut lean = rich.clone();
+        lean.surrogate = None;
+        lean.elites = None;
+        lean.adaptive_weights = false;
+        assert!(rich.complexity() > lean.complexity());
+    }
+
+    #[test]
+    fn invalid_genomes_detected() {
+        let mut g = Genome::hybrid_vndx_like();
+        g.neighborhoods.clear();
+        assert!(!g.is_valid());
+        let mut g2 = Genome::atgw_like();
+        g2.population.size = 1;
+        assert!(!g2.is_valid());
+        let mut g3 = Genome::hybrid_vndx_like();
+        g3.acceptance = Acceptance::Metropolis { t0: 1.0, cooling: 1.5 };
+        assert!(!g3.is_valid());
+    }
+
+    #[test]
+    fn summary_mentions_components() {
+        let s = Genome::hybrid_vndx_like().summary();
+        assert!(s.contains("surrogate"));
+        assert!(s.contains("tabu"));
+    }
+}

@@ -1,0 +1,405 @@
+//! Genome interpreter: turns a [`Genome`] into a runnable optimizer.
+//!
+//! This is the executable stand-in for "the LLM's generated code": a
+//! universal metaheuristic whose control flow is dictated entirely by the
+//! genome's components. Both skeletons share the building blocks of
+//! `crate::optimizers::components`.
+
+use super::genome::{Acceptance, Genome, Init, Skeleton};
+use crate::optimizers::components::{
+    metropolis_accept, Cooling, EliteArchive, History, KnnSurrogate, TabuList,
+};
+use crate::optimizers::Optimizer;
+use crate::tuning::TuningContext;
+
+/// An optimizer executing a genome.
+pub struct GenomeOptimizer {
+    pub genome: Genome,
+}
+
+impl GenomeOptimizer {
+    pub fn new(genome: Genome) -> GenomeOptimizer {
+        GenomeOptimizer { genome }
+    }
+
+    fn accept(
+        &self,
+        acceptance: &Acceptance,
+        cooling: &mut Cooling,
+        current: f64,
+        cand: f64,
+        b: f64,
+        rng: &mut crate::util::rng::Rng,
+    ) -> bool {
+        match *acceptance {
+            Acceptance::Greedy => cand <= current,
+            Acceptance::Metropolis { .. } => {
+                let ok = metropolis_accept(current, cand, cooling.temperature(), rng);
+                cooling.step();
+                ok
+            }
+            Acceptance::BudgetMetropolis { t0, lambda, t_min } => {
+                let t = Cooling::at_budget(t0, lambda, t_min, b);
+                metropolis_accept(current, cand, t, rng)
+            }
+        }
+    }
+
+    fn initial(&self, ctx: &mut TuningContext) -> Option<(u32, f64)> {
+        match self.genome.init {
+            Init::Random => {
+                for _ in 0..16 {
+                    if ctx.budget_exhausted() {
+                        return None;
+                    }
+                    let i = ctx.space().random_valid(&mut ctx.rng);
+                    if let Some(v) = ctx.evaluate(i) {
+                        return Some((i, v));
+                    }
+                }
+                None
+            }
+            Init::BestOfSample(k) => {
+                let mut best: Option<(u32, f64)> = None;
+                for i in ctx.space().random_sample(&mut ctx.rng, k) {
+                    if ctx.budget_exhausted() {
+                        break;
+                    }
+                    if let Some(v) = ctx.evaluate(i) {
+                        if best.map(|(_, bv)| v < bv).unwrap_or(true) {
+                            best = Some((i, v));
+                        }
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    fn run_single(&self, ctx: &mut TuningContext) {
+        let g = &self.genome;
+        let mut history = History::default();
+        let mut elites = g.elites.map(|e| EliteArchive::new(e.size));
+        let mut tabu = g.tabu_size.map(TabuList::new);
+        let surrogate = g.surrogate.map(|s| KnnSurrogate::new(s.k, s.window));
+        let mut weights = vec![1.0f64; g.neighborhoods.len()];
+        let (t0, cooling_rate) = match g.acceptance {
+            Acceptance::Metropolis { t0, cooling } => (t0, cooling),
+            _ => (1.0, 1.0),
+        };
+        let mut cooling = Cooling::new(t0, cooling_rate, 1e-6);
+
+        let Some((mut x, mut f_x)) = self.initial(ctx) else { return };
+        history.push(x, ctx.space().config(x), f_x);
+        if let Some(e) = elites.as_mut() {
+            e.push(x, f_x);
+        }
+        let mut stagnation = 0u32;
+        // Convergence guard: steps that discover no new configuration only
+        // pay bookkeeping time; a genome without restarts that has fully
+        // converged would otherwise spin to the budget end. Kernel Tuner
+        // strategies likewise terminate when converged.
+        let mut idle_steps = 0u32;
+        let mut last_unique = ctx.unique_evals();
+        let mut memo: Option<(u32, usize, Vec<u32>)> = None;
+
+        while !ctx.budget_exhausted() {
+            if ctx.unique_evals() == last_unique {
+                idle_steps += 1;
+                if idle_steps > 300 {
+                    if g.restart.is_some() {
+                        if let Some((nx, nf)) = self.initial(ctx) {
+                            x = nx;
+                            f_x = nf;
+                        }
+                        idle_steps = 0;
+                    } else {
+                        return; // converged
+                    }
+                }
+            } else {
+                last_unique = ctx.unique_evals();
+                idle_steps = 0;
+            }
+            let n_idx = if g.adaptive_weights {
+                ctx.rng.roulette(&weights)
+            } else {
+                ctx.rng.below(g.neighborhoods.len())
+            };
+            let kind = g.neighborhoods[n_idx];
+
+            // Candidate pool. Neighbor lists are memoized per (x, kind):
+            // enumeration is the hot allocation of this loop (§Perf).
+            if memo
+                .as_ref()
+                .map(|&(mx, mk, _)| mx != x || mk != n_idx)
+                .unwrap_or(true)
+            {
+                memo = Some((x, n_idx, ctx.space().neighbors(x, kind)));
+            }
+            let neigh = &memo.as_ref().unwrap().2;
+            let mut pool: Vec<u32> = Vec::with_capacity(g.pool_size);
+            let reserve = usize::from(elites.is_some());
+            let take = g.pool_size.saturating_sub(1 + reserve).min(neigh.len());
+            for &p in &ctx.rng.sample_indices(neigh.len(), take) {
+                pool.push(neigh[p]);
+            }
+            if let Some(e) = elites.as_ref() {
+                if ctx.rng.chance(g.elites.unwrap().crossover_prob.max(0.05)) {
+                    if let Some(child) = e.crossover_child(ctx.space(), &mut ctx.rng) {
+                        let idx = match ctx.space().index_of(&child) {
+                            Some(i) => i,
+                            None => ctx.space().repair(&child, &mut ctx.rng),
+                        };
+                        pool.push(idx);
+                    }
+                }
+            }
+            while pool.len() < g.pool_size {
+                pool.push(ctx.space().random_valid(&mut ctx.rng));
+            }
+
+            // Pre-screen.
+            let chosen = if let Some(s) = surrogate.as_ref() {
+                let mut best_c = pool[0];
+                let mut best_score = f64::INFINITY;
+                for &c in &pool {
+                    let mut score =
+                        s.predict(&history, ctx.space().config(c)).unwrap_or(f_x);
+                    if tabu.as_ref().map(|t| t.contains(c)).unwrap_or(false) {
+                        score += 0.25 * f_x.abs().max(score.abs());
+                    }
+                    if score < best_score {
+                        best_score = score;
+                        best_c = c;
+                    }
+                }
+                best_c
+            } else {
+                // No surrogate: pick a non-tabu pool member at random.
+                *pool
+                    .iter()
+                    .find(|&&c| !tabu.as_ref().map(|t| t.contains(c)).unwrap_or(false))
+                    .unwrap_or(&pool[0])
+            };
+
+            let Some(f_c) = ctx.evaluate(chosen) else {
+                stagnation += 1;
+                continue;
+            };
+            history.push(chosen, ctx.space().config(chosen), f_c);
+            if let Some(e) = elites.as_mut() {
+                e.push(chosen, f_c);
+            }
+
+            let b = ctx.budget_spent_fraction();
+            if self.accept(&g.acceptance, &mut cooling, f_x, f_c, b, &mut ctx.rng) {
+                if f_c < f_x {
+                    stagnation = 0;
+                } else {
+                    stagnation += 1;
+                }
+                x = chosen;
+                f_x = f_c;
+                if let Some(t) = tabu.as_mut() {
+                    t.push(x);
+                }
+                if g.adaptive_weights {
+                    weights[n_idx] = (weights[n_idx] * 1.1).min(1e3);
+                }
+            } else {
+                stagnation += 1;
+                if g.adaptive_weights {
+                    weights[n_idx] = (weights[n_idx] * 0.9).max(1e-3);
+                }
+            }
+
+            if let Some(r) = g.restart {
+                if stagnation > r.stagnation {
+                    if let Some((nx, nf)) = self.initial(ctx) {
+                        x = nx;
+                        f_x = nf;
+                        history.push(x, ctx.space().config(x), f_x);
+                    }
+                    cooling.reset();
+                    stagnation = 0;
+                }
+            }
+        }
+    }
+
+    fn run_population(&self, ctx: &mut TuningContext) {
+        let g = &self.genome;
+        let p = g.population.size.max(4);
+        let mut tabu = g.tabu_size.map(TabuList::new);
+        let mut cooling = match g.acceptance {
+            Acceptance::Metropolis { t0, cooling } => Cooling::new(t0, cooling, 1e-6),
+            _ => Cooling::new(1.0, 1.0, 1e-6),
+        };
+
+        let mut pop: Vec<u32> = ctx.space().random_sample(&mut ctx.rng, p);
+        let mut fit: Vec<f64> = Vec::with_capacity(p);
+        for &i in &pop {
+            if ctx.budget_exhausted() {
+                return;
+            }
+            fit.push(ctx.evaluate(i).unwrap_or(f64::INFINITY));
+            if let Some(t) = tabu.as_mut() {
+                t.push(i);
+            }
+        }
+        let mut best_seen = fit.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut stagnation = 0u32;
+        let dims = ctx.space().dims();
+        let mut idle_loops = 0u32;
+        let mut last_unique = ctx.unique_evals();
+
+        while !ctx.budget_exhausted() {
+            // Convergence guard (see run_single).
+            if ctx.unique_evals() == last_unique {
+                idle_loops += 1;
+                if idle_loops > 100 && g.restart.is_none() {
+                    return; // converged
+                }
+            } else {
+                last_unique = ctx.unique_evals();
+                idle_loops = 0;
+            }
+            let b = ctx.budget_spent_fraction();
+            let mut order: Vec<usize> = (0..pop.len()).collect();
+            order.sort_by(|&a, &c| fit[a].partial_cmp(&fit[c]).unwrap());
+            let leaders = [pop[order[0]], pop[order[1]], pop[order[2]]];
+
+            for &t_idx in order.iter().skip(3) {
+                if ctx.budget_exhausted() {
+                    return;
+                }
+                let x = pop[t_idx];
+                let (xa, xb, xd) = (
+                    ctx.space().config(leaders[0]).to_vec(),
+                    ctx.space().config(leaders[1]).to_vec(),
+                    ctx.space().config(leaders[2]).to_vec(),
+                );
+                let xx = ctx.space().config(x).to_vec();
+                let mut y: Vec<u16> = (0..dims)
+                    .map(|d| match ctx.rng.below(4) {
+                        0 => xa[d],
+                        1 => xb[d],
+                        2 => xd[d],
+                        _ => xx[d],
+                    })
+                    .collect();
+                if ctx.rng.chance(g.population.shake_rate) {
+                    let d = ctx.rng.below(dims);
+                    if ctx.rng.chance(g.population.jump_rate) {
+                        let fresh = ctx.space().random_valid(&mut ctx.rng);
+                        y[d] = ctx.space().config(fresh)[d];
+                    } else {
+                        let card = ctx.space().params.params[d].cardinality() as i32;
+                        let step = if ctx.rng.chance(0.5) { 1 } else { -1 };
+                        y[d] = (y[d] as i32 + step).clamp(0, card - 1) as u16;
+                    }
+                }
+                let mut idx = match ctx.space().index_of(&y) {
+                    Some(i) => i,
+                    None => ctx.space().repair(&y, &mut ctx.rng),
+                };
+                if tabu.as_ref().map(|t| t.contains(idx)).unwrap_or(false) {
+                    idx = ctx
+                        .space()
+                        .random_neighbor(idx, &mut ctx.rng, g.neighborhoods[0])
+                        .unwrap_or_else(|| ctx.space().random_valid(&mut ctx.rng));
+                }
+                let Some(f_y) = ctx.evaluate(idx) else { continue };
+                if self.accept(&g.acceptance, &mut cooling, fit[t_idx], f_y, b, &mut ctx.rng) {
+                    pop[t_idx] = idx;
+                    fit[t_idx] = f_y;
+                    if let Some(t) = tabu.as_mut() {
+                        t.push(idx);
+                    }
+                }
+                if f_y < best_seen {
+                    best_seen = f_y;
+                    stagnation = 0;
+                } else {
+                    stagnation += 1;
+                }
+            }
+
+            if let Some(r) = g.restart {
+                if stagnation > r.stagnation {
+                    let k = ((r.reinit_ratio * p as f64).ceil() as usize).clamp(1, p);
+                    let mut order: Vec<usize> = (0..pop.len()).collect();
+                    order.sort_by(|&a, &c| fit[c].partial_cmp(&fit[a]).unwrap());
+                    for &w in order.iter().take(k) {
+                        if ctx.budget_exhausted() {
+                            return;
+                        }
+                        let fresh = ctx.space().random_valid(&mut ctx.rng);
+                        pop[w] = fresh;
+                        fit[w] = ctx.evaluate(fresh).unwrap_or(f64::INFINITY);
+                    }
+                    stagnation = 0;
+                }
+            }
+        }
+    }
+}
+
+impl Optimizer for GenomeOptimizer {
+    fn name(&self) -> &str {
+        &self.genome.name
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        match self.genome.skeleton {
+            Skeleton::SingleSolution => self.run_single(ctx),
+            Skeleton::Population => self.run_population(ctx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llamea::genome::Genome;
+    use crate::optimizers::testutil;
+
+    #[test]
+    fn interpreted_vndx_performs_like_handwritten() {
+        let cache = testutil::conv_cache();
+        let mut interp = GenomeOptimizer::new(Genome::hybrid_vndx_like());
+        let mut hand = crate::optimizers::generated::HybridVndx::default();
+        let (bi, _) = testutil::run_on(&mut interp, &cache, 500.0, 3);
+        let (bh, _) = testutil::run_on(&mut hand, &cache, 500.0, 3);
+        // Not bit-identical (independent streams) but the same class of
+        // result: both in the top quintile.
+        let sorted = cache.sorted_times();
+        let p20 = sorted[sorted.len() / 5];
+        assert!(bi < p20, "interpreted {} p20 {}", bi, p20);
+        assert!(bh < p20);
+    }
+
+    #[test]
+    fn interpreted_atgw_runs() {
+        let cache = testutil::conv_cache();
+        let mut interp = GenomeOptimizer::new(Genome::atgw_like());
+        let (best, evals) = testutil::run_on(&mut interp, &cache, 400.0, 4);
+        assert!(best.is_finite());
+        assert!(evals > 10);
+    }
+
+    #[test]
+    fn greedy_minimal_genome_runs() {
+        let mut g = Genome::hybrid_vndx_like();
+        g.surrogate = None;
+        g.tabu_size = None;
+        g.elites = None;
+        g.adaptive_weights = false;
+        g.acceptance = crate::llamea::genome::Acceptance::Greedy;
+        g.restart = None;
+        let cache = testutil::conv_cache();
+        let (best, _) = testutil::run_on(&mut GenomeOptimizer::new(g), &cache, 300.0, 5);
+        assert!(best.is_finite());
+    }
+}

@@ -1,0 +1,438 @@
+//! LLM clients for algorithm generation.
+//!
+//! `LlmClient` is the narrow interface LLaMEA needs: given a prompt,
+//! return generated algorithm "code" (a [`Genome`]) plus token usage.
+//! `MockLlm` is the offline stand-in (DESIGN.md §3): a grammar-based
+//! sampler over the genome space with
+//!   * ~25% failure injection (invalid code / runtime errors / timeouts —
+//!     the paper's observed rate),
+//!   * prompt conditioning: the *with search-space information* condition
+//!     biases structural and hyperparameter choices using the space
+//!     statistics embedded in the prompt (dimensionality, cardinalities,
+//!     constraint tightness, expected budget),
+//!   * stack-trace repair: a repair prompt greatly reduces the failure
+//!     rate (the paper reports this is "consistently effective"),
+//!   * token accounting for Fig. 5.
+
+use super::genome::{
+    Acceptance, EliteGene, Genome, Init, PopulationGene, RestartGene, SurrogateGene,
+};
+use super::prompt::{MutationPrompt, Prompt};
+use crate::searchspace::NeighborKind;
+use crate::util::rng::Rng;
+
+/// Outcome of one LLM call.
+#[derive(Debug, Clone)]
+pub enum Generation {
+    /// Parsable, runnable algorithm code.
+    Code(Genome),
+    /// Broken output: does not run (syntax/runtime/timeout). Carries the
+    /// "stack trace" fed back on repair attempts.
+    Broken { stack_trace: String },
+}
+
+/// Token usage of one call (prompt + completion), for Fig. 5.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TokenUsage {
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+}
+
+impl TokenUsage {
+    pub fn total(&self) -> u64 {
+        self.prompt_tokens + self.completion_tokens
+    }
+}
+
+/// The narrow LLM interface LLaMEA consumes.
+pub trait LlmClient {
+    fn generate(&mut self, prompt: &Prompt) -> (Generation, TokenUsage);
+}
+
+/// Grammar-based mock LLM (see module docs).
+pub struct MockLlm {
+    rng: Rng,
+    /// Failure probability of a fresh generation (paper: ~25%).
+    pub failure_rate: f64,
+    /// Failure probability when repairing with a stack trace.
+    pub repair_failure_rate: f64,
+    counter: u64,
+}
+
+impl MockLlm {
+    pub fn new(seed: u64) -> MockLlm {
+        MockLlm {
+            rng: Rng::new(seed),
+            failure_rate: 0.25,
+            repair_failure_rate: 0.05,
+            counter: 0,
+        }
+    }
+
+    /// Sample a fresh genome from the grammar, conditioned on the prompt.
+    fn sample_genome(&mut self, prompt: &Prompt) -> Genome {
+        let rng = &mut self.rng;
+        let info = prompt.space_info.as_ref();
+
+        let skeleton = if rng.chance(0.5) {
+            super::genome::Skeleton::SingleSolution
+        } else {
+            super::genome::Skeleton::Population
+        };
+
+        // --- Neighborhood set ---
+        // With space info, high-dimensional / tightly-constrained spaces
+        // bias towards including Hamming moves (constraint-aware wide
+        // moves) and adaptive weighting; without info, uniform choices.
+        let mut neighborhoods = Vec::new();
+        let p_hamming = match info {
+            Some(si) if si.dims >= 10 || si.constraint_tightness < 0.3 => 0.9,
+            Some(_) => 0.6,
+            None => 0.5,
+        };
+        if rng.chance(0.8) {
+            neighborhoods.push(NeighborKind::Adjacent);
+        }
+        if rng.chance(p_hamming) {
+            neighborhoods.push(NeighborKind::Hamming);
+        }
+        if rng.chance(0.35) {
+            neighborhoods.push(NeighborKind::StrictlyAdjacent);
+        }
+        if neighborhoods.is_empty() {
+            neighborhoods.push(NeighborKind::Hamming);
+        }
+        let adaptive_weights = rng.chance(if info.is_some() { 0.7 } else { 0.4 });
+
+        // --- Budget-aware control parameters ---
+        // Expected evaluations within budget inform restart thresholds,
+        // tabu sizes and init sampling; without info, generic guesses.
+        let expected_evals = info.map(|si| si.expected_evals).unwrap_or(500.0);
+        let restart = if rng.chance(0.7) {
+            let stag = if info.is_some() {
+                (expected_evals * (0.08 + 0.12 * rng.f64())).max(8.0) as u32
+            } else {
+                [25u32, 50, 100, 200, 400][rng.below(5)]
+            };
+            Some(RestartGene {
+                stagnation: stag,
+                reinit_ratio: if rng.chance(0.5) { 1.0 } else { 0.2 + 0.4 * rng.f64() },
+            })
+        } else {
+            None
+        };
+        let tabu_size = if rng.chance(0.6) {
+            Some(if let Some(si) = info {
+                ((si.constrained_size as f64).sqrt() as usize).clamp(16, 512)
+            } else {
+                [10usize, 50, 100, 300, 1000][rng.below(5)]
+            })
+        } else {
+            None
+        };
+
+        // Small budgets reward best-of-sample seeding (with info only —
+        // the uninformed generator cannot know the budget scale).
+        let init = if info.map(|si| si.expected_evals < 120.0).unwrap_or(false)
+            && rng.chance(0.6)
+        {
+            Init::BestOfSample((expected_evals * 0.15).max(3.0) as usize)
+        } else if rng.chance(0.2) {
+            Init::BestOfSample([4usize, 8, 16][rng.below(3)])
+        } else {
+            Init::Random
+        };
+
+        let surrogate = if rng.chance(if info.is_some() { 0.55 } else { 0.35 }) {
+            Some(SurrogateGene {
+                k: [3usize, 5, 7][rng.below(3)],
+                window: [128usize, 256, 512][rng.below(3)],
+            })
+        } else {
+            None
+        };
+
+        let acceptance = match rng.below(3) {
+            0 => Acceptance::Greedy,
+            1 => {
+                // With info: cool so that T decays substantially within the
+                // expected evaluation count; without: canonical 0.995.
+                let cooling = if info.is_some() {
+                    (0.02f64).powf(1.0 / expected_evals.max(16.0)).clamp(0.5, 0.9999)
+                } else {
+                    [0.9f64, 0.99, 0.995, 0.999][rng.below(4)]
+                };
+                Acceptance::Metropolis { t0: 0.3 + 0.9 * rng.f64(), cooling }
+            }
+            _ => Acceptance::BudgetMetropolis {
+                t0: 0.5 + 0.8 * rng.f64(),
+                lambda: 3.0 + 4.0 * rng.f64(),
+                t_min: 1e-4,
+            },
+        };
+
+        let elites = if rng.chance(0.45) {
+            Some(EliteGene {
+                size: [3usize, 5, 8][rng.below(3)],
+                crossover_prob: 0.1 + 0.2 * rng.f64(),
+            })
+        } else {
+            None
+        };
+
+        let population = PopulationGene {
+            size: [6usize, 8, 12, 16][rng.below(4)],
+            shake_rate: 0.1 + 0.3 * rng.f64(),
+            jump_rate: 0.05 + 0.2 * rng.f64(),
+        };
+
+        self.counter += 1;
+        let name = format!(
+            "{}{}{}",
+            ["Adaptive", "Hybrid", "Dynamic", "Guided", "Annealed"][rng.below(5)],
+            ["Tabu", "VND", "Wolf", "Elite", "Swarm"][rng.below(5)],
+            self.counter
+        );
+        let mut g = Genome {
+            name,
+            description: String::new(),
+            skeleton,
+            init,
+            neighborhoods,
+            adaptive_weights,
+            pool_size: [4usize, 6, 8, 12][rng.below(4)],
+            surrogate,
+            tabu_size,
+            acceptance,
+            restart,
+            elites,
+            population,
+        };
+        g.description = g.summary();
+        g
+    }
+
+    fn mutate_genome(&mut self, parent: &Genome, op: MutationPrompt, prompt: &Prompt) -> Genome {
+        let mut g = parent.clone();
+        let rng = &mut self.rng;
+        match op {
+            MutationPrompt::Refine => {
+                // Perturb 1-2 hyperparameters / toggle one component.
+                for _ in 0..1 + rng.below(2) {
+                    match rng.below(6) {
+                        0 => {
+                            g.pool_size =
+                                (g.pool_size as i64 + rng.range_inclusive(-2, 3)).clamp(2, 32)
+                                    as usize
+                        }
+                        1 => {
+                            if let Some(t) = g.tabu_size.as_mut() {
+                                *t = ((*t as f64) * (0.5 + rng.f64())) as usize + 1;
+                            } else {
+                                g.tabu_size = Some(50);
+                            }
+                        }
+                        2 => {
+                            if let Some(r) = g.restart.as_mut() {
+                                r.stagnation =
+                                    ((r.stagnation as f64) * (0.5 + rng.f64())).max(4.0) as u32;
+                            } else {
+                                g.restart =
+                                    Some(RestartGene { stagnation: 100, reinit_ratio: 1.0 });
+                            }
+                        }
+                        3 => {
+                            g.acceptance = match g.acceptance {
+                                Acceptance::Metropolis { t0, cooling } => Acceptance::Metropolis {
+                                    t0: (t0 * (0.6 + 0.8 * rng.f64())).clamp(0.05, 3.0),
+                                    cooling,
+                                },
+                                other => other,
+                            }
+                        }
+                        4 => g.adaptive_weights = !g.adaptive_weights,
+                        _ => {
+                            if g.surrogate.is_none() {
+                                g.surrogate = Some(SurrogateGene { k: 5, window: 256 });
+                            } else if rng.chance(0.3) {
+                                g.surrogate = None;
+                            }
+                        }
+                    }
+                }
+            }
+            MutationPrompt::NewDifferent => {
+                // A fresh sample (biased away from the parent's skeleton).
+                let fresh = self.sample_genome(prompt);
+                g = fresh;
+                if g.skeleton == parent.skeleton && self.rng.chance(0.6) {
+                    g.skeleton = match parent.skeleton {
+                        super::genome::Skeleton::SingleSolution => {
+                            super::genome::Skeleton::Population
+                        }
+                        super::genome::Skeleton::Population => {
+                            super::genome::Skeleton::SingleSolution
+                        }
+                    };
+                }
+            }
+            MutationPrompt::Simplify => {
+                // Drop the most complex optional component.
+                if g.surrogate.is_some() {
+                    g.surrogate = None;
+                } else if g.elites.is_some() {
+                    g.elites = None;
+                } else if g.neighborhoods.len() > 1 {
+                    g.neighborhoods.pop();
+                } else if g.tabu_size.is_some() {
+                    g.tabu_size = None;
+                } else {
+                    g.adaptive_weights = false;
+                }
+            }
+        }
+        g.description = g.summary();
+        g
+    }
+
+    fn completion_tokens(&mut self, g: &Genome) -> u64 {
+        // ~35 tokens of code per structural unit, plus preamble, plus noise.
+        let base = 120 + 35 * g.complexity() as u64;
+        (base as f64 * (0.85 + 0.3 * self.rng.f64())) as u64
+    }
+}
+
+impl LlmClient for MockLlm {
+    fn generate(&mut self, prompt: &Prompt) -> (Generation, TokenUsage) {
+        let prompt_tokens = prompt.token_estimate();
+        let fail_p = if prompt.repair_trace.is_some() {
+            self.repair_failure_rate
+        } else {
+            self.failure_rate
+        };
+        if self.rng.chance(fail_p) {
+            // Broken generation still consumes completion tokens.
+            let completion = 150 + self.rng.below(400) as u64;
+            let traces = [
+                "AttributeError: 'SearchSpace' object has no attribute 'get_neighbours'",
+                "TypeError: repair() missing 1 required positional argument",
+                "TimeoutError: candidate exceeded 300 s evaluation limit",
+                "IndexError: list index out of range in neighbor sampling",
+                "ValueError: configuration violates constraints after mutation",
+            ];
+            let trace = traces[self.rng.below(traces.len())].to_string();
+            return (
+                Generation::Broken { stack_trace: trace },
+                TokenUsage { prompt_tokens, completion_tokens: completion },
+            );
+        }
+        let genome = match (&prompt.parent, prompt.mutation) {
+            (Some(parent), Some(op)) => self.mutate_genome(&parent.clone(), op, prompt),
+            _ => self.sample_genome(prompt),
+        };
+        let completion_tokens = self.completion_tokens(&genome);
+        (
+            Generation::Code(genome),
+            TokenUsage { prompt_tokens, completion_tokens },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llamea::prompt::SpaceInfo;
+
+    fn base_prompt(with_info: bool) -> Prompt {
+        let mut p = Prompt::task("dedispersion");
+        if with_info {
+            p.space_info = Some(SpaceInfo {
+                dims: 8,
+                cartesian_size: 21504,
+                constrained_size: 11340,
+                constraint_tightness: 0.53,
+                cardinalities: vec![6, 2, 4, 4, 2, 2, 7, 4],
+                expected_evals: 40.0,
+            });
+        }
+        p
+    }
+
+    #[test]
+    fn failure_rate_near_quarter() {
+        let mut llm = MockLlm::new(1);
+        let p = base_prompt(false);
+        let mut fails = 0;
+        for _ in 0..2000 {
+            if matches!(llm.generate(&p).0, Generation::Broken { .. }) {
+                fails += 1;
+            }
+        }
+        let rate = fails as f64 / 2000.0;
+        assert!((rate - 0.25).abs() < 0.04, "rate {}", rate);
+    }
+
+    #[test]
+    fn generated_genomes_are_valid() {
+        let mut llm = MockLlm::new(2);
+        let p = base_prompt(true);
+        for _ in 0..200 {
+            if let (Generation::Code(g), _) = llm.generate(&p) {
+                assert!(g.is_valid(), "{:?}", g);
+            }
+        }
+    }
+
+    #[test]
+    fn repair_prompt_rarely_fails() {
+        let mut llm = MockLlm::new(3);
+        let mut p = base_prompt(false);
+        p.repair_trace = Some("TimeoutError: ...".into());
+        let mut fails = 0;
+        for _ in 0..1000 {
+            if matches!(llm.generate(&p).0, Generation::Broken { .. }) {
+                fails += 1;
+            }
+        }
+        assert!(fails < 100, "repair fails {}", fails);
+    }
+
+    #[test]
+    fn with_info_prompts_cost_more_tokens() {
+        let mut llm = MockLlm::new(4);
+        let (_, t_with) = llm.generate(&base_prompt(true));
+        let (_, t_without) = llm.generate(&base_prompt(false));
+        assert!(t_with.prompt_tokens > t_without.prompt_tokens);
+    }
+
+    #[test]
+    fn mutation_preserves_validity() {
+        let mut llm = MockLlm::new(5);
+        let mut p = base_prompt(true);
+        p.parent = Some(Genome::hybrid_vndx_like());
+        for op in [
+            MutationPrompt::Refine,
+            MutationPrompt::NewDifferent,
+            MutationPrompt::Simplify,
+        ] {
+            p.mutation = Some(op);
+            for _ in 0..50 {
+                if let (Generation::Code(g), _) = llm.generate(&p) {
+                    assert!(g.is_valid(), "{:?} via {:?}", g, op);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simplify_reduces_complexity() {
+        let mut llm = MockLlm::new(6);
+        llm.failure_rate = 0.0;
+        let mut p = base_prompt(false);
+        p.parent = Some(Genome::hybrid_vndx_like());
+        p.mutation = Some(MutationPrompt::Simplify);
+        if let (Generation::Code(g), _) = llm.generate(&p) {
+            assert!(g.complexity() < Genome::hybrid_vndx_like().complexity());
+        }
+    }
+}

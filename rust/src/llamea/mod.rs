@@ -1,0 +1,17 @@
+//! LLaMEA — LLM-driven evolutionary synthesis of optimization algorithms
+//! (van Stein & Bäck 2025), integrated with the tuning substrate exactly as
+//! the paper describes: the LLM proposes algorithms, the (4+12) elitist ES
+//! selects on the methodology's performance score, broken candidates are
+//! discarded, and stack traces feed self-repair.
+
+pub mod evolution;
+pub mod genome;
+pub mod interpreter;
+pub mod llm;
+pub mod prompt;
+
+pub use evolution::{evolve, evolve_best_of_runs, Candidate, EvolutionConfig, EvolutionResult};
+pub use genome::Genome;
+pub use interpreter::GenomeOptimizer;
+pub use llm::{Generation, LlmClient, MockLlm, TokenUsage};
+pub use prompt::{MutationPrompt, Prompt, SpaceInfo};

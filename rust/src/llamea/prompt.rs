@@ -1,0 +1,228 @@
+//! Prompt construction (paper Figs. 3–4).
+//!
+//! The task prompt carries the problem framing ("design novel metaheuristic
+//! algorithms to solve kernel tuner problems (integer, variable dimension,
+//! constraint)"), the code-format specification, an *optional* search-space
+//! specification (the with/without-information experimental contrast of
+//! §4.2), a minimum working example, and the output format spec. Mutation
+//! prompts are the three natural-language operators of Fig. 4.
+
+use super::genome::Genome;
+use crate::methodology::SpaceSetup;
+use crate::tuning::Cache;
+
+/// The three LLaMEA mutation prompts (Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MutationPrompt {
+    /// "Refine the strategy of the selected solution to improve it."
+    Refine,
+    /// "Generate a new algorithm that is different from the algorithms you
+    /// have tried before."
+    NewDifferent,
+    /// "Refine and simplify the selected algorithm to improve it."
+    Simplify,
+}
+
+impl MutationPrompt {
+    pub const ALL: [MutationPrompt; 3] = [
+        MutationPrompt::Refine,
+        MutationPrompt::NewDifferent,
+        MutationPrompt::Simplify,
+    ];
+
+    pub fn text(&self) -> &'static str {
+        match self {
+            MutationPrompt::Refine => {
+                "Refine the strategy of the selected solution to improve it."
+            }
+            MutationPrompt::NewDifferent => {
+                "Generate a new algorithm that is different from the algorithms you have tried before."
+            }
+            MutationPrompt::Simplify => {
+                "Refine and simplify the selected algorithm to improve it."
+            }
+        }
+    }
+}
+
+/// The search-space specification optionally inserted into the prompt
+/// ("with extra info" condition): everything a generator could exploit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpaceInfo {
+    pub dims: usize,
+    pub cartesian_size: u64,
+    pub constrained_size: u64,
+    /// constrained / cartesian.
+    pub constraint_tightness: f64,
+    /// Cardinality per tunable parameter.
+    pub cardinalities: Vec<usize>,
+    /// Budget divided by mean evaluation cost — how many evaluations an
+    /// algorithm can afford on this space.
+    pub expected_evals: f64,
+}
+
+impl SpaceInfo {
+    /// Extract from a cache + its methodology setup.
+    pub fn from_cache(cache: &Cache, setup: &SpaceSetup) -> SpaceInfo {
+        let space = &cache.space;
+        SpaceInfo {
+            dims: space.dims(),
+            cartesian_size: space.cartesian_size(),
+            constrained_size: space.len() as u64,
+            constraint_tightness: space.len() as f64 / space.cartesian_size() as f64,
+            cardinalities: space
+                .params
+                .params
+                .iter()
+                .map(|p| p.cardinality())
+                .collect(),
+            expected_evals: setup.budget_s / cache.mean_eval_cost_s,
+        }
+    }
+}
+
+/// A full generation prompt.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    /// Target application name (task framing).
+    pub application: String,
+    /// Present in the "with search space information" condition.
+    pub space_info: Option<SpaceInfo>,
+    /// Parent code for mutation calls.
+    pub parent: Option<Genome>,
+    pub mutation: Option<MutationPrompt>,
+    /// Stack trace fed back for self-repair.
+    pub repair_trace: Option<String>,
+}
+
+impl Prompt {
+    /// Initial-population task prompt (Fig. 3).
+    pub fn task(application: &str) -> Prompt {
+        Prompt {
+            application: application.to_string(),
+            space_info: None,
+            parent: None,
+            mutation: None,
+            repair_trace: None,
+        }
+    }
+
+    pub fn with_info(mut self, info: SpaceInfo) -> Prompt {
+        self.space_info = Some(info);
+        self
+    }
+
+    pub fn mutate(mut self, parent: Genome, op: MutationPrompt) -> Prompt {
+        self.parent = Some(parent);
+        self.mutation = Some(op);
+        self
+    }
+
+    /// Render the prompt text (what would be sent to a real LLM endpoint).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "Your task is to design novel metaheuristic algorithms to solve \
+             kernel tuner problems (integer, variable dimension, constraint).\n\n",
+        );
+        s.push_str(
+            "<code format specification: subclass OptAlg; use the SearchSpace \
+             object to generate an initial population, retrieve neighbors of a \
+             configuration, and repair invalid configurations>\n\n",
+        );
+        if let Some(info) = &self.space_info {
+            s.push_str(&format!(
+                "Search space specification (json): {{\"application\": \"{}\", \
+                 \"dimensions\": {}, \"cartesian_size\": {}, \"constrained_size\": {}, \
+                 \"constraint_tightness\": {:.3}, \"cardinalities\": {:?}, \
+                 \"expected_evaluations_within_budget\": {:.0}}}\n\n",
+                self.application,
+                info.dims,
+                info.cartesian_size,
+                info.constrained_size,
+                info.constraint_tightness,
+                info.cardinalities,
+                info.expected_evals,
+            ));
+        }
+        s.push_str("<minimum working code example>\n\n");
+        if let (Some(parent), Some(op)) = (&self.parent, self.mutation) {
+            s.push_str(&format!("Selected solution:\n{}\n\n", parent.summary()));
+            s.push_str(op.text());
+            s.push('\n');
+        } else {
+            s.push_str(
+                "Give an excellent and novel heuristic algorithm to solve this \
+                 task and also give it a one-line description, describing the \
+                 main idea.\n",
+            );
+        }
+        if let Some(trace) = &self.repair_trace {
+            s.push_str(&format!(
+                "\nThe previous candidate failed with:\n{}\nPlease repair the \
+                 implementation.\n",
+                trace
+            ));
+        }
+        s.push_str("<output format specification>\n");
+        s
+    }
+
+    /// Token estimate of the rendered prompt (~4 chars/token heuristic).
+    pub fn token_estimate(&self) -> u64 {
+        (self.render().len() as u64) / 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutation_prompt_texts_match_paper() {
+        assert!(MutationPrompt::Refine.text().starts_with("Refine the strategy"));
+        assert!(MutationPrompt::NewDifferent.text().contains("different from the algorithms"));
+        assert!(MutationPrompt::Simplify.text().contains("simplify"));
+    }
+
+    #[test]
+    fn rendered_prompt_contains_sections() {
+        let p = Prompt::task("gemm");
+        let r = p.render();
+        assert!(r.contains("kernel tuner problems"));
+        assert!(r.contains("minimum working code example"));
+        assert!(r.contains("one-line description"));
+        assert!(!r.contains("Search space specification"));
+    }
+
+    #[test]
+    fn info_increases_prompt_tokens() {
+        // (with-info prompts must be strictly longer)
+        let without = Prompt::task("gemm");
+        let with = Prompt::task("gemm").with_info(SpaceInfo {
+            dims: 17,
+            cartesian_size: 663_552,
+            constrained_size: 112_912,
+            constraint_tightness: 0.17,
+            cardinalities: vec![4; 17],
+            expected_evals: 3000.0,
+        });
+        assert!(with.token_estimate() > without.token_estimate());
+        assert!(with.render().contains("Search space specification"));
+    }
+
+    #[test]
+    fn mutation_prompt_replaces_initial_ask() {
+        let p = Prompt::task("gemm").mutate(Genome::atgw_like(), MutationPrompt::Refine);
+        let r = p.render();
+        assert!(r.contains("Selected solution"));
+        assert!(!r.contains("excellent and novel"));
+    }
+
+    #[test]
+    fn repair_trace_rendered() {
+        let mut p = Prompt::task("x");
+        p.repair_trace = Some("TimeoutError".into());
+        assert!(p.render().contains("Please repair"));
+    }
+}

@@ -1,0 +1,210 @@
+//! llamea-kt CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   spaces                         print Table-1 style space statistics
+//!   testbed                        print the six-GPU testbed
+//!   tune --space A@G --opt NAME    one tuning run on a simulated space
+//!   evolve --app NAME [--info]     one LLaMEA generation run
+//!   real-tune [--kernel K]         measured PJRT tuning over AOT variants
+//!   experiment <id|all> [--out D]  regenerate paper tables/figures
+//!       ids: table1 fig5 fig6 table2 fig7 table3 fig8 fig9 all
+//!   options: --runs N --gen-runs N --llm-calls N --seed S
+
+use std::path::{Path, PathBuf};
+
+use llamea_kt::harness::{self, ExpOptions};
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::llamea::{evolve, EvolutionConfig, MockLlm, SpaceInfo};
+use llamea_kt::methodology::SpaceSetup;
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::{Cache, TuningContext};
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn options(args: &[String]) -> ExpOptions {
+    let mut o = ExpOptions::default();
+    if let Some(v) = flag_value(args, "--runs") {
+        o.runs = v.parse().expect("--runs");
+    }
+    if let Some(v) = flag_value(args, "--gen-runs") {
+        o.gen_runs = v.parse().expect("--gen-runs");
+    }
+    if let Some(v) = flag_value(args, "--llm-calls") {
+        o.llm_calls = v.parse().expect("--llm-calls");
+    }
+    if let Some(v) = flag_value(args, "--seed") {
+        o.seed = v.parse().expect("--seed");
+    }
+    o
+}
+
+fn out_dir(args: &[String]) -> PathBuf {
+    PathBuf::from(flag_value(args, "--out").unwrap_or_else(|| "results".into()))
+}
+
+fn cmd_spaces() {
+    println!("{}", harness::table1(Path::new("results")).to_text());
+}
+
+fn cmd_tune(args: &[String]) {
+    let spec = flag_value(args, "--space").unwrap_or_else(|| "convolution@A4000".into());
+    let opt_name = flag_value(args, "--opt").unwrap_or_else(|| "hybrid_vndx".into());
+    let seed: u64 = flag_value(args, "--seed").map(|s| s.parse().unwrap()).unwrap_or(1);
+    let (app_s, gpu_s) = spec.split_once('@').expect("--space app@gpu");
+    let app = Application::from_name(app_s).expect("unknown application");
+    let gpu = GpuSpec::by_name(gpu_s).expect("unknown GPU");
+    let t0 = std::time::Instant::now();
+    let cache = Cache::build(app, gpu);
+    let setup = SpaceSetup::new(&cache);
+    println!(
+        "space {} ({} configs), budget {:.0}s simulated, built in {:?}",
+        cache.id(),
+        cache.len(),
+        setup.budget_s,
+        t0.elapsed()
+    );
+    let mut opt = llamea_kt::optimizers::by_name(&opt_name).expect("unknown optimizer");
+    let mut ctx = TuningContext::new(&cache, setup.budget_s, seed);
+    opt.run(&mut ctx);
+    let (best_i, best_v) = ctx.best().expect("no configuration found");
+    println!(
+        "{}: best {:.4} ms (optimum {:.4} ms) after {} unique evals",
+        opt_name,
+        best_v,
+        cache.optimum_ms,
+        ctx.unique_evals()
+    );
+    println!("best config: {}", cache.space.params.describe(cache.space.config(best_i)));
+}
+
+fn cmd_evolve(args: &[String]) {
+    let app_s = flag_value(args, "--app").unwrap_or_else(|| "gemm".into());
+    let app = Application::from_name(&app_s).expect("unknown application");
+    let with_info = has_flag(args, "--info");
+    let opts = options(args);
+    let space = std::sync::Arc::new(app.build_space());
+    let caches: Vec<Cache> = llamea_kt::kernels::gpu::TRAIN_GPUS
+        .iter()
+        .map(|g| {
+            Cache::build_with_space(app, GpuSpec::by_name(g).unwrap(), std::sync::Arc::clone(&space))
+        })
+        .collect();
+    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    let info = with_info.then(|| SpaceInfo::from_cache(&caches[0], &setups[0]));
+    let mut config = EvolutionConfig::paper_defaults(app.name(), info);
+    config.llm_call_budget = opts.llm_calls;
+    let mut llm = MockLlm::new(opts.seed);
+    let result = evolve(&config, &mut llm, &caches, opts.seed);
+    println!(
+        "evolved {} (fitness {:.3}) in {} LLM calls ({} failures, {} tokens)",
+        result.best.genome.name,
+        result.best.fitness,
+        result.llm_calls,
+        result.failures,
+        result.tokens.total()
+    );
+    println!("{}", result.best.genome.summary());
+    println!("fitness history: {:?}", result.fitness_history);
+}
+
+fn cmd_real_tune(args: &[String]) {
+    let kernel = flag_value(args, "--kernel").unwrap_or_else(|| "gemm".into());
+    let dir = PathBuf::from(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+    let set = llamea_kt::runtime::ArtifactSet::load(&dir).expect("loading manifest");
+    let runtime = llamea_kt::runtime::PjrtRuntime::new().expect("PJRT client");
+    println!("platform: {}", runtime.platform());
+    let t0 = std::time::Instant::now();
+    let measured =
+        llamea_kt::runtime::measure_kernel(&runtime, &set, &kernel, 2, 7, 42).expect("measuring");
+    println!(
+        "measured {} variants of {} in {:?}",
+        measured.measurements.len(),
+        kernel,
+        t0.elapsed()
+    );
+    let cache = &measured.cache;
+    let mut sorted = measured.measurements.clone();
+    sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    for (name, ms, compile) in sorted.iter().take(5) {
+        println!("  {:50} {:8.3} ms  (compile {:.2}s)", name, ms, compile);
+    }
+    println!("  ... optimum {:.3} ms, median {:.3} ms", cache.optimum_ms, cache.median_ms);
+}
+
+fn cmd_experiment(args: &[String]) {
+    let id = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let rest = &args[args.len().min(1)..];
+    let opts = options(rest);
+    let out = out_dir(rest);
+    std::fs::create_dir_all(&out).ok();
+    let t0 = std::time::Instant::now();
+    match id {
+        "table1" => println!("{}", harness::table1(&out).to_text()),
+        "fig8" | "fig9" => {
+            let (f8, f9) = harness::fig8_fig9(&opts, &out);
+            println!("{}", f8.to_text());
+            println!("{}", f9.to_text());
+        }
+        "fig5" | "fig6" | "table2" | "fig7" | "table3" | "generated" => {
+            eprintln!(
+                "generation stage ({} runs x {} LLM calls per condition)...",
+                opts.gen_runs, opts.llm_calls
+            );
+            let generated = harness::generate_all(&opts, true);
+            harness::dump_genomes(&generated, &out);
+            println!("{}", harness::fig5(&generated, &out).to_text());
+            let (t2, f7, t3) = harness::evaluate_generated(&generated, &opts, &out);
+            println!("{}", t2.to_text());
+            println!("{}", f7.to_text());
+            println!("{}", t3.to_text());
+        }
+        "all" => {
+            println!("{}", harness::table1(&out).to_text());
+            println!("{}", harness::testbed_summary().to_text());
+            eprintln!("generation stage...");
+            let generated = harness::generate_all(&opts, true);
+            harness::dump_genomes(&generated, &out);
+            println!("{}", harness::fig5(&generated, &out).to_text());
+            let (t2, f7, t3) = harness::evaluate_generated(&generated, &opts, &out);
+            println!("{}", t2.to_text());
+            println!("{}", f7.to_text());
+            println!("{}", t3.to_text());
+            let (f8, f9) = harness::fig8_fig9(&opts, &out);
+            println!("{}", f8.to_text());
+            println!("{}", f9.to_text());
+            println!("{}", harness::train_test_split(&generated, &opts, &out).to_text());
+        }
+        other => {
+            eprintln!("unknown experiment '{}'", other);
+            std::process::exit(2);
+        }
+    }
+    eprintln!("experiment {} done in {:?}; results in {}", id, t0.elapsed(), out.display());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("spaces") => cmd_spaces(),
+        Some("testbed") => println!("{}", harness::testbed_summary().to_text()),
+        Some("tune") => cmd_tune(&args[1..]),
+        Some("evolve") => cmd_evolve(&args[1..]),
+        Some("real-tune") => cmd_real_tune(&args[1..]),
+        Some("experiment") => cmd_experiment(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: llamea-kt <spaces|testbed|tune|evolve|real-tune|experiment> [options]\n\
+                 see rust/src/main.rs header for details"
+            );
+            std::process::exit(2);
+        }
+    }
+}

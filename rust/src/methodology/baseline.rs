@@ -1,0 +1,200 @@
+//! Calculated random-search baseline (Willemsen et al. 2024).
+//!
+//! Instead of running random search many times, the expected
+//! best-objective-after-n-draws curve is computed *exactly* from the
+//! cached objective-value distribution via order statistics:
+//!
+//!   P(best of n draws > v_k) = ((N - k) / N)^n
+//!
+//! over the N total configurations (crashing configurations count as draws
+//! that never produce a value — exactly how they waste auto-tuning budget).
+//! Time is mapped to draws through the space's mean evaluation cost.
+
+use crate::tuning::Cache;
+
+/// The calculated baseline for one search space.
+pub struct Baseline {
+    /// Sorted successful objective values, ascending (ms).
+    values: Vec<f64>,
+    /// Total configurations incl. failures (the draw population).
+    n_total: usize,
+    /// Mean seconds per random-search evaluation.
+    pub mean_eval_cost_s: f64,
+}
+
+impl Baseline {
+    pub fn from_cache(cache: &Cache) -> Baseline {
+        Baseline {
+            values: cache.sorted_times(),
+            n_total: cache.len(),
+            mean_eval_cost_s: cache.mean_eval_cost_s,
+        }
+    }
+
+    /// Expected best objective value after `n` uniform draws (ms).
+    ///
+    /// For n = 0 (before any evaluation) returns the worst successful value
+    /// — the neutral "no information" level.
+    pub fn expected_best_after(&self, n: u64) -> f64 {
+        let m = self.values.len();
+        if m == 0 {
+            return f64::INFINITY;
+        }
+        if n == 0 {
+            return self.values[m - 1];
+        }
+        let nn = self.n_total as f64;
+        let n = n as f64;
+        // E[best] = sum_k v_k * (P(best > v_{k-1}) - P(best > v_k)),
+        // with P(best > v_k) = ((N - (k+1)) / N)^n for 0-indexed k.
+        // The residual mass (all draws fail) is assigned the worst value.
+        let mut e = 0.0;
+        let mut p_prev = 1.0; // P(best "worse" than everything before v_0)
+        for (k, &v) in self.values.iter().enumerate() {
+            let p_k = (((self.n_total - (k + 1)) as f64) / nn).powf(n);
+            e += v * (p_prev - p_k);
+            p_prev = p_k;
+            if p_prev < 1e-15 {
+                break; // the remaining mass is numerically zero
+            }
+        }
+        // All-draws-fail mass keeps the worst successful value.
+        e += self.values[m - 1] * p_prev;
+        e
+    }
+
+    /// Baseline objective value at wall-clock time `t` seconds.
+    pub fn value_at(&self, t_s: f64) -> f64 {
+        let n = (t_s / self.mean_eval_cost_s).floor().max(0.0) as u64;
+        self.expected_best_after(n)
+    }
+
+    /// The cutoff objective value: `cutoff` of the way from the median down
+    /// to the optimum (paper: ~0.95).
+    pub fn cutoff_value(&self, cutoff: f64) -> f64 {
+        let opt = self.values[0];
+        let med = self.values[self.values.len() / 2];
+        opt + (1.0 - cutoff) * (med - opt)
+    }
+
+    /// Number of draws for the expected best to reach the cutoff value
+    /// (doubling + binary search over the monotone curve).
+    pub fn draws_to_reach(&self, target: f64) -> u64 {
+        let mut hi = 1u64;
+        while self.expected_best_after(hi) > target {
+            hi *= 2;
+            if hi > 1 << 40 {
+                return hi; // unreachable targets: effectively infinite
+            }
+        }
+        let mut lo = hi / 2;
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.expected_best_after(mid) > target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    }
+
+    /// The time budget for this space: time for the baseline to reach the
+    /// `cutoff` point between median and optimum (paper §4.1.5, 95%).
+    pub fn budget_s(&self, cutoff: f64) -> f64 {
+        let draws = self.draws_to_reach(self.cutoff_value(cutoff));
+        draws as f64 * self.mean_eval_cost_s
+    }
+
+    pub fn optimum(&self) -> f64 {
+        self.values[0]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.values[self.values.len() / 2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::searchspace::Application;
+
+    fn baseline() -> Baseline {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        Baseline::from_cache(&cache)
+    }
+
+    #[test]
+    fn expected_best_is_monotone_decreasing() {
+        let b = baseline();
+        let mut prev = b.expected_best_after(0);
+        for n in [1, 2, 5, 10, 50, 200, 1000, 5000] {
+            let e = b.expected_best_after(n);
+            assert!(e <= prev + 1e-12, "n={} e={} prev={}", n, e, prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn expected_best_converges_to_optimum() {
+        let b = baseline();
+        let e = b.expected_best_after(100_000_000);
+        assert!((e - b.optimum()) / b.optimum() < 1e-3);
+    }
+
+    #[test]
+    fn one_draw_expectation_is_distribution_mean_ish() {
+        // E[best of 1 draw] = mean of successful values weighted by success
+        // probability + worst * failure probability; must sit between
+        // optimum and worst, above the median of successes.
+        let b = baseline();
+        let e1 = b.expected_best_after(1);
+        assert!(e1 > b.median() * 0.5);
+        assert!(e1 < b.values[b.values.len() - 1] * 1.01);
+    }
+
+    #[test]
+    fn budget_reaches_cutoff() {
+        let b = baseline();
+        let cutoff_v = b.cutoff_value(0.95);
+        assert!(cutoff_v > b.optimum() && cutoff_v < b.median());
+        let n = b.draws_to_reach(cutoff_v);
+        assert!(b.expected_best_after(n) <= cutoff_v);
+        assert!(b.expected_best_after(n - 1) > cutoff_v);
+        assert!(b.budget_s(0.95) > 0.0);
+    }
+
+    #[test]
+    fn monte_carlo_agrees_with_analytic() {
+        // Cross-check the order-statistics formula against simulation.
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let b = Baseline::from_cache(&cache);
+        let mut rng = crate::util::rng::Rng::new(99);
+        let n_draws = 30u64;
+        let trials = 3000;
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            let mut best = f64::INFINITY;
+            for _ in 0..n_draws {
+                let i = rng.below(cache.len()) as u32;
+                if let Some(t) = cache.true_mean_ms(i) {
+                    best = best.min(t);
+                }
+            }
+            if !best.is_finite() {
+                best = *b.values.last().unwrap();
+            }
+            sum += best;
+        }
+        let mc = sum / trials as f64;
+        let analytic = b.expected_best_after(n_draws);
+        assert!(
+            (mc - analytic).abs() / analytic < 0.05,
+            "mc {} vs analytic {}",
+            mc,
+            analytic
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Performance-over-time curves at equidistant sampling points (Eq. 2).
+//!
+//! A tuning run's trajectory (improvement events) is resampled at |T|
+//! equidistant fractions of the budget and normalized against the
+//! calculated baseline:
+//!
+//!   P_t = (S_baseline(t) - F_t) / (S_baseline(t) - S_opt)
+//!
+//! so P_t = 0 means parity with random search and P_t = 1 means the
+//! optimum was already found at time t.
+
+use super::baseline::Baseline;
+
+/// Number of equidistant time sampling points |T| (paper uses a smooth
+/// curve; 50 points matches its plots' resolution).
+pub const DEFAULT_T_POINTS: usize = 50;
+
+/// The equidistant sampling times for a budget.
+pub fn sample_times(budget_s: f64, n_points: usize) -> Vec<f64> {
+    (1..=n_points)
+        .map(|j| budget_s * j as f64 / n_points as f64)
+        .collect()
+}
+
+/// Best-so-far objective value at each sample time, from an improvement
+/// trajectory `[(t_s, best_ms)]` (step function, non-increasing).
+/// Before the first evaluation completes the baseline's n=0 level is used.
+pub fn resample_trajectory(
+    trajectory: &[(f64, f64)],
+    times: &[f64],
+    no_value_level: f64,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(times.len());
+    let mut k = 0usize;
+    let mut current = no_value_level;
+    for &t in times {
+        while k < trajectory.len() && trajectory[k].0 <= t {
+            current = trajectory[k].1;
+            k += 1;
+        }
+        out.push(current);
+    }
+    out
+}
+
+/// Normalize a resampled best-value curve into a performance curve (Eq. 2).
+///
+/// Scores are clamped to [-1, 1]: late in the budget the baseline sits just
+/// above the optimum, so the raw ratio for a lagging run diverges to large
+/// negative values; one unlucky run would otherwise dominate a 100-run
+/// mean. -1 ("a full baseline-to-optimum unit behind") is the floor.
+pub fn performance_curve(
+    best_values: &[f64],
+    times: &[f64],
+    baseline: &Baseline,
+) -> Vec<f64> {
+    debug_assert_eq!(best_values.len(), times.len());
+    let opt = baseline.optimum();
+    best_values
+        .iter()
+        .zip(times)
+        .map(|(&f_t, &t)| {
+            let b_t = baseline.value_at(t);
+            let denom = b_t - opt;
+            if denom <= 1e-12 {
+                // Baseline already at the optimum: score 1 iff we are too.
+                if (f_t - opt).abs() < 1e-9 {
+                    1.0
+                } else {
+                    0.0
+                }
+            } else {
+                ((b_t - f_t) / denom).clamp(-1.0, 1.0)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::searchspace::Application;
+    use crate::tuning::Cache;
+
+    #[test]
+    fn sample_times_equidistant_and_end_at_budget() {
+        let ts = sample_times(100.0, 4);
+        assert_eq!(ts, vec![25.0, 50.0, 75.0, 100.0]);
+    }
+
+    #[test]
+    fn resample_steps_correctly() {
+        let traj = vec![(10.0, 5.0), (30.0, 3.0), (90.0, 1.0)];
+        let times = vec![5.0, 20.0, 50.0, 100.0];
+        let r = resample_trajectory(&traj, &times, 9.0);
+        assert_eq!(r, vec![9.0, 5.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn perfect_optimizer_scores_one() {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let b = Baseline::from_cache(&cache);
+        let budget = b.budget_s(0.95);
+        let times = sample_times(budget, 10);
+        // Found the optimum instantly.
+        let best = vec![b.optimum(); times.len()];
+        let p = performance_curve(&best, &times, &b);
+        assert!(p.iter().all(|&x| (x - 1.0).abs() < 1e-9), "{:?}", p);
+    }
+
+    #[test]
+    fn baseline_equals_zero_score() {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let b = Baseline::from_cache(&cache);
+        let budget = b.budget_s(0.95);
+        let times = sample_times(budget, 10);
+        let best: Vec<f64> = times.iter().map(|&t| b.value_at(t)).collect();
+        let p = performance_curve(&best, &times, &b);
+        assert!(p.iter().all(|&x| x.abs() < 1e-9), "{:?}", p);
+    }
+
+    #[test]
+    fn worse_than_baseline_is_negative() {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let b = Baseline::from_cache(&cache);
+        let budget = b.budget_s(0.95);
+        let times = sample_times(budget, 5);
+        let worst = b.median() * 2.0;
+        let p = performance_curve(&vec![worst; 5], &times, &b);
+        assert!(p.iter().all(|&x| x < 0.0));
+    }
+}

@@ -1,0 +1,35 @@
+//! The community evaluation methodology (Willemsen et al. 2024): calculated
+//! random-search baseline, budget from the 95% cutoff, performance curves
+//! at equidistant times, and the aggregate performance score P of Eq. (3).
+
+pub mod baseline;
+pub mod curve;
+pub mod runner;
+pub mod score;
+
+pub use baseline::Baseline;
+pub use runner::{run_many, FnFactory, NamedFactory, OptimizerFactory, SpaceSetup, DEFAULT_CUTOFF};
+pub use score::{aggregate, Aggregate};
+
+/// Evaluate a set of optimizer factories over a set of caches; returns, per
+/// factory, the aggregate over all spaces. `runs` seeds per (space,
+/// optimizer); setups are computed once per cache.
+pub fn evaluate_all(
+    caches: &[crate::tuning::Cache],
+    factories: &[&dyn OptimizerFactory],
+    runs: usize,
+    base_seed: u64,
+) -> Vec<(String, Aggregate)> {
+    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    factories
+        .iter()
+        .map(|f| {
+            let per_space: Vec<Vec<Vec<f64>>> = caches
+                .iter()
+                .zip(&setups)
+                .map(|(c, s)| run_many(c, s, *f, runs, base_seed))
+                .collect();
+            (f.label(), aggregate(&per_space))
+        })
+        .collect()
+}

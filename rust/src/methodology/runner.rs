@@ -1,0 +1,169 @@
+//! Run optimizers on spaces under the methodology's budget and produce
+//! per-run performance curves. Runs are embarrassingly parallel and spread
+//! over `std::thread` workers.
+
+use super::baseline::Baseline;
+use super::curve::{performance_curve, resample_trajectory, sample_times, DEFAULT_T_POINTS};
+use crate::optimizers::Optimizer;
+use crate::tuning::{Cache, TuningContext};
+
+/// The methodology's cutoff percentile (paper: ~95%).
+pub const DEFAULT_CUTOFF: f64 = 0.95;
+
+/// Precomputed per-space evaluation setup: baseline, budget, sample times.
+pub struct SpaceSetup {
+    pub baseline: Baseline,
+    pub budget_s: f64,
+    pub times: Vec<f64>,
+}
+
+impl SpaceSetup {
+    pub fn new(cache: &Cache) -> SpaceSetup {
+        Self::with(cache, DEFAULT_CUTOFF, DEFAULT_T_POINTS)
+    }
+
+    pub fn with(cache: &Cache, cutoff: f64, n_points: usize) -> SpaceSetup {
+        let baseline = Baseline::from_cache(cache);
+        let budget_s = baseline.budget_s(cutoff);
+        let times = sample_times(budget_s, n_points);
+        SpaceSetup { baseline, budget_s, times }
+    }
+}
+
+/// A thread-safe optimizer factory (fresh instance per run).
+pub trait OptimizerFactory: Sync {
+    fn build(&self) -> Box<dyn Optimizer>;
+    fn label(&self) -> String;
+}
+
+/// Factory from a closure.
+pub struct FnFactory<F: Fn() -> Box<dyn Optimizer> + Sync> {
+    pub f: F,
+    pub name: String,
+}
+
+impl<F: Fn() -> Box<dyn Optimizer> + Sync> OptimizerFactory for FnFactory<F> {
+    fn build(&self) -> Box<dyn Optimizer> {
+        (self.f)()
+    }
+    fn label(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Factory for a registry name (`crate::optimizers::by_name`).
+pub struct NamedFactory(pub String);
+
+impl OptimizerFactory for NamedFactory {
+    fn build(&self) -> Box<dyn Optimizer> {
+        crate::optimizers::by_name(&self.0)
+            .unwrap_or_else(|| panic!("unknown optimizer '{}'", self.0))
+    }
+    fn label(&self) -> String {
+        self.0.clone()
+    }
+}
+
+/// Execute one tuning run and return its performance curve.
+pub fn single_run(
+    cache: &Cache,
+    setup: &SpaceSetup,
+    opt: &mut dyn Optimizer,
+    seed: u64,
+) -> Vec<f64> {
+    let mut ctx = TuningContext::new(cache, setup.budget_s, seed);
+    opt.run(&mut ctx);
+    let no_value = setup.baseline.expected_best_after(0);
+    let best = resample_trajectory(&ctx.trajectory, &setup.times, no_value);
+    performance_curve(&best, &setup.times, &setup.baseline)
+}
+
+/// Run `runs` independent seeds of the factory's optimizer on one space,
+/// in parallel; returns `runs` performance curves.
+pub fn run_many(
+    cache: &Cache,
+    setup: &SpaceSetup,
+    factory: &dyn OptimizerFactory,
+    runs: usize,
+    base_seed: u64,
+) -> Vec<Vec<f64>> {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(runs.max(1));
+    let mut curves: Vec<Option<Vec<f64>>> = vec![None; runs];
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut Option<Vec<f64>>>> =
+        curves.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let r = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if r >= runs {
+                    break;
+                }
+                let mut opt = factory.build();
+                let curve = single_run(
+                    cache,
+                    setup,
+                    opt.as_mut(),
+                    base_seed.wrapping_add(r as u64 * 0x9E3779B97F4A7C15),
+                );
+                **slots[r].lock().unwrap() = Some(curve);
+            });
+        }
+    });
+    curves.into_iter().map(|c| c.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::searchspace::Application;
+
+    fn cache() -> Cache {
+        Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap())
+    }
+
+    #[test]
+    fn single_run_curve_shape() {
+        let c = cache();
+        let setup = SpaceSetup::new(&c);
+        let mut opt = crate::optimizers::by_name("random").unwrap();
+        let curve = single_run(&c, &setup, opt.as_mut(), 5);
+        assert_eq!(curve.len(), setup.times.len());
+        // Random search tracks the baseline: scores hover near 0, within
+        // a broad band (it is one realization vs the expectation).
+        let m = crate::util::stats::mean(&curve);
+        assert!(m.abs() < 0.6, "mean {}", m);
+    }
+
+    #[test]
+    fn run_many_is_deterministic_and_parallel_safe() {
+        let c = cache();
+        let setup = SpaceSetup::new(&c);
+        let f = NamedFactory("sa".into());
+        let a = run_many(&c, &setup, &f, 8, 77);
+        let b = run_many(&c, &setup, &f, 8, 77);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn good_optimizer_scores_above_random() {
+        let c = cache();
+        let setup = SpaceSetup::new(&c);
+        let hv = run_many(&c, &setup, &NamedFactory("hybrid_vndx".into()), 10, 1);
+        let rs = run_many(&c, &setup, &NamedFactory("random".into()), 10, 1);
+        let mean_of = |curves: &Vec<Vec<f64>>| {
+            crate::util::stats::mean(&crate::util::stats::mean_curve(curves))
+        };
+        assert!(
+            mean_of(&hv) > mean_of(&rs) + 0.05,
+            "hybrid {} vs random {}",
+            mean_of(&hv),
+            mean_of(&rs)
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Aggregation of performance curves into the scalar score P (Eq. 3).
+//!
+//! Per space: mean over runs at each sample point. Across spaces: mean of
+//! the per-space curves at each point (all spaces share the same number of
+//! relative sample points, which is what makes them aggregable). The score
+//! is the mean of the aggregate curve over the sample points.
+
+use crate::util::stats;
+
+/// Aggregate result of evaluating one optimizer on a set of spaces.
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    /// Mean performance curve over spaces (length |T|).
+    pub curve: Vec<f64>,
+    /// 95% CI half-width per sample point, over per-run aggregate curves.
+    pub ci95: Vec<f64>,
+    /// The scalar performance score P (mean of `curve`).
+    pub score: f64,
+    /// Standard deviation of the per-space scores (Table 2's +- column).
+    pub score_std: f64,
+    /// Per-space scalar scores, in input order (Fig. 7 / Fig. 9 rows).
+    pub per_space_scores: Vec<f64>,
+}
+
+/// `curves_per_space[s][r]` = performance curve of run `r` on space `s`.
+pub fn aggregate(curves_per_space: &[Vec<Vec<f64>>]) -> Aggregate {
+    assert!(!curves_per_space.is_empty());
+    let n_points = curves_per_space[0][0].len();
+
+    // Per-space mean curves and scalar scores.
+    let space_curves: Vec<Vec<f64>> = curves_per_space
+        .iter()
+        .map(|runs| stats::mean_curve(runs))
+        .collect();
+    let per_space_scores: Vec<f64> = space_curves.iter().map(|c| stats::mean(c)).collect();
+
+    // Aggregate curve: mean over spaces.
+    let curve = stats::mean_curve(&space_curves);
+    let score = stats::mean(&curve);
+    let score_std = stats::std_dev(&per_space_scores);
+
+    // CI over per-run aggregate curves: pair run r across spaces (all
+    // spaces were run with the same run count).
+    let runs = curves_per_space.iter().map(|s| s.len()).min().unwrap();
+    let mut run_aggregates: Vec<Vec<f64>> = Vec::with_capacity(runs);
+    for r in 0..runs {
+        let rows: Vec<Vec<f64>> = curves_per_space
+            .iter()
+            .map(|s| s[r].clone())
+            .collect();
+        run_aggregates.push(stats::mean_curve(&rows));
+    }
+    let ci95 = stats::ci95_curve(&run_aggregates);
+
+    debug_assert_eq!(curve.len(), n_points);
+    Aggregate { curve, ci95, score, score_std, per_space_scores }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_of_constant_curves() {
+        // Two spaces, two runs each: constant 0.4 and 0.6.
+        let s1 = vec![vec![0.4; 5], vec![0.4; 5]];
+        let s2 = vec![vec![0.6; 5], vec![0.6; 5]];
+        let a = aggregate(&[s1, s2]);
+        assert!((a.score - 0.5).abs() < 1e-12);
+        assert!(a.curve.iter().all(|&x| (x - 0.5).abs() < 1e-12));
+        assert_eq!(a.per_space_scores, vec![0.4, 0.6]);
+        // Identical runs -> zero CI.
+        assert!(a.ci95.iter().all(|&w| w.abs() < 1e-12));
+    }
+
+    #[test]
+    fn ci_reflects_run_variance() {
+        let s1 = vec![vec![0.0; 3], vec![1.0; 3]];
+        let a = aggregate(&[s1]);
+        assert!((a.score - 0.5).abs() < 1e-12);
+        assert!(a.ci95.iter().all(|&w| w > 0.1));
+    }
+
+    #[test]
+    fn score_std_over_spaces() {
+        let s1 = vec![vec![0.2; 4]];
+        let s2 = vec![vec![0.8; 4]];
+        let a = aggregate(&[s1, s2]);
+        assert!(a.score_std > 0.3);
+    }
+}

@@ -1,0 +1,109 @@
+//! Basin hopping: local descent to a basin floor, Metropolis-accepted jumps
+//! between basins (Kernel Tuner ships a scipy-inspired variant).
+
+use super::components::{metropolis_accept, Cooling};
+use super::Optimizer;
+use crate::searchspace::NeighborKind;
+use crate::tuning::TuningContext;
+
+#[derive(Debug)]
+pub struct BasinHopping {
+    pub t0: f64,
+    pub alpha: f64,
+    pub jump_dims: usize,
+    pub descent_neighbor: NeighborKind,
+}
+
+impl Default for BasinHopping {
+    fn default() -> Self {
+        BasinHopping {
+            t0: 0.4,
+            alpha: 0.99,
+            jump_dims: 2,
+            descent_neighbor: NeighborKind::Adjacent,
+        }
+    }
+}
+
+impl BasinHopping {
+    fn descend(&self, ctx: &mut TuningContext, start: u32, f_start: f64) -> (u32, f64) {
+        let mut cur = start;
+        let mut f_cur = f_start;
+        loop {
+            if ctx.budget_exhausted() {
+                return (cur, f_cur);
+            }
+            let mut improved = false;
+            for n in ctx.space().neighbors(cur, self.descent_neighbor) {
+                if ctx.budget_exhausted() {
+                    return (cur, f_cur);
+                }
+                if let Some(f) = ctx.evaluate(n) {
+                    if f < f_cur {
+                        cur = n;
+                        f_cur = f;
+                        improved = true;
+                        break; // first improvement
+                    }
+                }
+            }
+            if !improved {
+                return (cur, f_cur);
+            }
+        }
+    }
+}
+
+impl Optimizer for BasinHopping {
+    fn name(&self) -> &str {
+        "basin_hopping"
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        let dims = ctx.space().dims();
+        let mut cooling = Cooling::new(self.t0, self.alpha, 1e-4);
+        let start = ctx.space().random_valid(&mut ctx.rng);
+        let f_start = ctx.evaluate(start).unwrap_or(f64::INFINITY);
+        let (mut basin, mut f_basin) = self.descend(ctx, start, f_start);
+
+        while !ctx.budget_exhausted() {
+            // Jump: perturb a few dimensions.
+            let mut probe = ctx.space().config(basin).to_vec();
+            for _ in 0..self.jump_dims {
+                let d = ctx.rng.below(dims);
+                probe[d] = ctx.rng.below(ctx.space().params.params[d].cardinality()) as u16;
+            }
+            let jumped = match ctx.space().index_of(&probe) {
+                Some(i) => i,
+                None => {
+                    let mut rng = ctx.rng.fork(0xBA51);
+                    ctx.space().repair(&probe, &mut rng)
+                }
+            };
+            let f_jumped = match ctx.evaluate(jumped) {
+                Some(v) => v,
+                None => continue,
+            };
+            let (new_basin, f_new) = self.descend(ctx, jumped, f_jumped);
+            if metropolis_accept(f_basin, f_new, cooling.temperature(), &mut ctx.rng) {
+                basin = new_basin;
+                f_basin = f_new;
+            }
+            cooling.step();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::testutil;
+
+    #[test]
+    fn hops_below_median() {
+        let cache = testutil::conv_cache();
+        let mut bh = BasinHopping::default();
+        let (best, _) = testutil::run_on(&mut bh, &cache, 600.0, 15);
+        assert!(best < cache.median_ms);
+    }
+}

@@ -1,0 +1,333 @@
+//! Shared metaheuristic components used by hand-written and generated
+//! optimizers alike: tabu lists, k-NN surrogate pre-screening, cooling
+//! schedules, and evaluation history. The LLaMEA genome interpreter
+//! (`crate::llamea::interpreter`) composes optimizers from exactly these
+//! parts, which is what makes "generated code" executable in Rust.
+
+use std::collections::{HashSet, VecDeque};
+
+/// Fixed-capacity tabu list over configuration indices.
+#[derive(Debug, Clone)]
+pub struct TabuList {
+    order: VecDeque<u32>,
+    members: HashSet<u32>,
+    capacity: usize,
+}
+
+impl TabuList {
+    pub fn new(capacity: usize) -> TabuList {
+        TabuList {
+            order: VecDeque::with_capacity(capacity + 1),
+            members: HashSet::with_capacity(capacity * 2),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn push(&mut self, i: u32) {
+        if self.members.insert(i) {
+            self.order.push_back(i);
+            if self.order.len() > self.capacity {
+                let old = self.order.pop_front().unwrap();
+                self.members.remove(&old);
+            }
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, i: u32) -> bool {
+        self.members.contains(&i)
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+/// Evaluation history: (config index, value) pairs plus the raw config
+/// vectors for Hamming-space queries.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub entries: Vec<(u32, f64)>,
+    configs: Vec<Vec<u16>>,
+}
+
+impl History {
+    pub fn push(&mut self, idx: u32, cfg: &[u16], value: f64) {
+        self.entries.push((idx, value));
+        self.configs.push(cfg.to_vec());
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Best (lowest-value) entry.
+    pub fn best(&self) -> Option<(u32, f64)> {
+        self.entries
+            .iter()
+            .copied()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+}
+
+/// Light k-NN surrogate over Hamming distance (HybridVNDX component (ii)).
+///
+/// Predicts a candidate's value as the mean of its `k` nearest evaluated
+/// configurations, scanning only the most recent `window` history entries —
+/// "light" in both senses the paper intends: cheap and recency-biased.
+#[derive(Debug, Clone)]
+pub struct KnnSurrogate {
+    pub k: usize,
+    pub window: usize,
+}
+
+impl Default for KnnSurrogate {
+    fn default() -> Self {
+        KnnSurrogate { k: 5, window: 512 }
+    }
+}
+
+impl KnnSurrogate {
+    pub fn new(k: usize, window: usize) -> Self {
+        KnnSurrogate { k: k.max(1), window: window.max(1) }
+    }
+
+    /// Predicted value of `cfg`, or None when the history is empty.
+    pub fn predict(&self, history: &History, cfg: &[u16]) -> Option<f64> {
+        if history.is_empty() {
+            return None;
+        }
+        let start = history.len().saturating_sub(self.window);
+        // (distance, value) of the k nearest in the window.
+        let mut nearest: Vec<(usize, f64)> = Vec::with_capacity(self.k + 1);
+        for j in start..history.len() {
+            let d = hamming(&history.configs[j], cfg);
+            let v = history.entries[j].1;
+            if nearest.len() < self.k {
+                nearest.push((d, v));
+                nearest.sort_by_key(|&(d, _)| d);
+            } else if d < nearest.last().unwrap().0 {
+                nearest.pop();
+                nearest.push((d, v));
+                nearest.sort_by_key(|&(d, _)| d);
+            }
+        }
+        let sum: f64 = nearest.iter().map(|&(_, v)| v).sum();
+        Some(sum / nearest.len() as f64)
+    }
+}
+
+#[inline]
+pub fn hamming(a: &[u16], b: &[u16]) -> usize {
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+/// Exponential cooling schedule with floor (shared by SA-flavoured accept
+/// rules): `T(step) = max(T_min, T0 * alpha^step)`.
+#[derive(Debug, Clone)]
+pub struct Cooling {
+    pub t0: f64,
+    pub alpha: f64,
+    pub t_min: f64,
+    t: f64,
+}
+
+impl Cooling {
+    pub fn new(t0: f64, alpha: f64, t_min: f64) -> Cooling {
+        Cooling { t0, alpha, t_min, t: t0 }
+    }
+
+    #[inline]
+    pub fn temperature(&self) -> f64 {
+        self.t.max(self.t_min)
+    }
+
+    #[inline]
+    pub fn step(&mut self) {
+        self.t *= self.alpha;
+    }
+
+    pub fn reset(&mut self) {
+        self.t = self.t0;
+    }
+
+    /// Budget-coupled temperature (AdaptiveTabuGreyWolf):
+    /// `max(T_min, T0 * exp(-lambda * b))` for budget fraction `b`.
+    pub fn at_budget(t0: f64, lambda: f64, t_min: f64, b: f64) -> f64 {
+        (t0 * (-lambda * b).exp()).max(t_min)
+    }
+}
+
+/// Metropolis acceptance on *relative* deltas: runtimes span orders of
+/// magnitude across spaces, so `delta` is normalized by the incumbent.
+#[inline]
+pub fn metropolis_accept(
+    current: f64,
+    candidate: f64,
+    temperature: f64,
+    rng: &mut crate::util::rng::Rng,
+) -> bool {
+    if candidate <= current {
+        return true;
+    }
+    let delta = (candidate - current) / current.max(1e-12);
+    rng.chance((-delta / temperature.max(1e-12)).exp())
+}
+
+/// Bounded elite archive (HybridVNDX component (iii)): keeps the best `cap`
+/// evaluated configurations for recombination.
+#[derive(Debug, Clone)]
+pub struct EliteArchive {
+    pub cap: usize,
+    /// Sorted ascending by value.
+    entries: Vec<(u32, f64)>,
+}
+
+impl EliteArchive {
+    pub fn new(cap: usize) -> EliteArchive {
+        EliteArchive { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, idx: u32, value: f64) {
+        if self.entries.iter().any(|&(i, _)| i == idx) {
+            return;
+        }
+        let pos = self
+            .entries
+            .partition_point(|&(_, v)| v <= value);
+        self.entries.insert(pos, (idx, value));
+        self.entries.truncate(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, rank: usize) -> Option<(u32, f64)> {
+        self.entries.get(rank).copied()
+    }
+
+    pub fn random(&self, rng: &mut crate::util::rng::Rng) -> Option<(u32, f64)> {
+        if self.entries.is_empty() {
+            None
+        } else {
+            Some(self.entries[rng.below(self.entries.len())])
+        }
+    }
+
+    /// Uniform crossover of two random elites, returning a raw genotype.
+    pub fn crossover_child(
+        &self,
+        space: &crate::searchspace::SearchSpace,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Option<Vec<u16>> {
+        if self.entries.len() < 2 {
+            return None;
+        }
+        let a = self.entries[rng.below(self.entries.len())].0;
+        let b = self.entries[rng.below(self.entries.len())].0;
+        let (ca, cb) = (space.config(a), space.config(b));
+        Some(
+            ca.iter()
+                .zip(cb)
+                .map(|(&x, &y)| if rng.chance(0.5) { x } else { y })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tabu_evicts_fifo() {
+        let mut t = TabuList::new(3);
+        for i in 0..5 {
+            t.push(i);
+        }
+        assert!(!t.contains(0));
+        assert!(!t.contains(1));
+        assert!(t.contains(2) && t.contains(3) && t.contains(4));
+        assert_eq!(t.len(), 3);
+        // Re-push of a member does not duplicate.
+        t.push(4);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn knn_predicts_nearest_mean() {
+        let mut h = History::default();
+        h.push(0, &[0, 0, 0], 10.0);
+        h.push(1, &[0, 0, 1], 20.0);
+        h.push(2, &[5, 5, 5], 1000.0);
+        let s = KnnSurrogate::new(2, 512);
+        // Nearest two of [0,0,0] are entries 0 and 1.
+        let p = s.predict(&h, &[0, 0, 0]).unwrap();
+        assert!((p - 15.0).abs() < 1e-9);
+        assert!(s.predict(&History::default(), &[0]).is_none());
+    }
+
+    #[test]
+    fn knn_window_limits_scan() {
+        let mut h = History::default();
+        for i in 0..100 {
+            h.push(i, &[i as u16], 1.0);
+        }
+        h.push(100, &[0], 99.0);
+        let s = KnnSurrogate::new(1, 1); // only sees the last entry
+        assert_eq!(s.predict(&h, &[0]).unwrap(), 99.0);
+    }
+
+    #[test]
+    fn cooling_monotone_with_floor() {
+        let mut c = Cooling::new(1.0, 0.5, 0.1);
+        let mut prev = c.temperature();
+        for _ in 0..10 {
+            c.step();
+            assert!(c.temperature() <= prev);
+            prev = c.temperature();
+        }
+        assert_eq!(c.temperature(), 0.1);
+        assert!(Cooling::at_budget(1.0, 5.0, 1e-4, 0.0) > Cooling::at_budget(1.0, 5.0, 1e-4, 0.5));
+    }
+
+    #[test]
+    fn metropolis_always_accepts_improvement() {
+        let mut rng = Rng::new(1);
+        assert!(metropolis_accept(10.0, 9.0, 1e-9, &mut rng));
+        // Huge worsening at tiny temperature: essentially never accepted.
+        let accepted = (0..1000)
+            .filter(|_| metropolis_accept(10.0, 100.0, 1e-6, &mut rng))
+            .count();
+        assert_eq!(accepted, 0);
+    }
+
+    #[test]
+    fn elite_archive_sorted_bounded() {
+        let mut e = EliteArchive::new(3);
+        for (i, v) in [(0u32, 5.0), (1, 1.0), (2, 3.0), (3, 0.5), (4, 9.0)] {
+            e.push(i, v);
+        }
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.get(0).unwrap().0, 3);
+        assert_eq!(e.get(1).unwrap().0, 1);
+        assert_eq!(e.get(2).unwrap().0, 2);
+        // Duplicate pushes ignored.
+        e.push(3, 0.5);
+        assert_eq!(e.len(), 3);
+    }
+}

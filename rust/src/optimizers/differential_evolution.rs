@@ -1,0 +1,120 @@
+//! Differential evolution — pyATF's best-performing optimizer (the paper's
+//! third human-designed baseline, used with pyATF 0.0.9 defaults).
+//!
+//! DE/rand/1/bin adapted to the discrete index grid: donor vectors are
+//! formed in value-index space, rounded and clamped to each dimension's
+//! cardinality, then constraint-repaired. pyATF exposes no hyperparameter
+//! tuning (the paper notes this), so the canonical NP=20, F=0.7, CR=0.9
+//! are used as-is.
+
+use super::Optimizer;
+use crate::tuning::TuningContext;
+
+#[derive(Debug)]
+pub struct DifferentialEvolution {
+    pub population_size: usize,
+    pub f: f64,
+    pub cr: f64,
+}
+
+impl Default for DifferentialEvolution {
+    fn default() -> Self {
+        DifferentialEvolution { population_size: 20, f: 0.7, cr: 0.9 }
+    }
+}
+
+impl Optimizer for DifferentialEvolution {
+    fn name(&self) -> &str {
+        "de"
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        let dims = ctx.space().dims();
+        let np = self.population_size.max(4);
+
+        let mut pop: Vec<u32> = ctx.space().random_sample(&mut ctx.rng, np);
+        let mut fit: Vec<f64> = Vec::with_capacity(np);
+        for &i in &pop {
+            if ctx.budget_exhausted() {
+                return;
+            }
+            fit.push(ctx.evaluate(i).unwrap_or(f64::INFINITY));
+        }
+
+        while !ctx.budget_exhausted() {
+            for t in 0..pop.len() {
+                if ctx.budget_exhausted() {
+                    return;
+                }
+                // Three distinct donors != target.
+                let (mut a, mut b, mut c) = (t, t, t);
+                while a == t {
+                    a = ctx.rng.below(pop.len());
+                }
+                while b == t || b == a {
+                    b = ctx.rng.below(pop.len());
+                }
+                while c == t || c == a || c == b {
+                    c = ctx.rng.below(pop.len());
+                }
+                let (xa, xb, xc) = (
+                    ctx.space().config(pop[a]).to_vec(),
+                    ctx.space().config(pop[b]).to_vec(),
+                    ctx.space().config(pop[c]).to_vec(),
+                );
+                let xt = ctx.space().config(pop[t]).to_vec();
+                // Mutation + binomial crossover in index space.
+                let j_rand = ctx.rng.below(dims);
+                let mut trial: Vec<u16> = Vec::with_capacity(dims);
+                for d in 0..dims {
+                    let card = ctx.space().params.params[d].cardinality() as f64;
+                    let v = if d == j_rand || ctx.rng.chance(self.cr) {
+                        let donor =
+                            xa[d] as f64 + self.f * (xb[d] as f64 - xc[d] as f64);
+                        donor.round().clamp(0.0, card - 1.0) as u16
+                    } else {
+                        xt[d]
+                    };
+                    trial.push(v);
+                }
+                let idx = match ctx.space().index_of(&trial) {
+                    Some(i) => i,
+                    None => {
+                        let mut rng = ctx.rng.fork(t as u64);
+                        ctx.space().repair(&trial, &mut rng)
+                    }
+                };
+                let f_trial = ctx.evaluate(idx).unwrap_or(f64::INFINITY);
+                if f_trial <= fit[t] {
+                    pop[t] = idx;
+                    fit[t] = f_trial;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::testutil;
+
+    #[test]
+    fn selection_is_greedy_never_regresses() {
+        let cache = testutil::conv_cache();
+        let mut ctx = crate::tuning::TuningContext::new(&cache, 400.0, 8);
+        DifferentialEvolution::default().run(&mut ctx);
+        assert!(ctx
+            .trajectory
+            .windows(2)
+            .all(|w| w[1].1 <= w[0].1));
+    }
+
+    #[test]
+    fn beats_median_with_budget() {
+        let cache = testutil::conv_cache();
+        let mut de = DifferentialEvolution::default();
+        let (best, _) = testutil::run_on(&mut de, &cache, 600.0, 9);
+        assert!(best < cache.median_ms);
+    }
+}

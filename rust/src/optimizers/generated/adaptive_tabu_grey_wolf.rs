@@ -1,0 +1,251 @@
+//! AdaptiveTabuGreyWolf — the paper's second-best generated optimizer
+//! (Algorithm 2; target application GEMM, generated *with* search-space
+//! information).
+//!
+//! A small population of valid configurations; each step, every non-leader
+//! proposes a candidate by mixing each parameter independently from the
+//! three current best solutions (alpha, beta, delta) or itself; a light
+//! "shaking" step perturbs the proposal (random coordinate jump from a
+//! fresh valid sample, or a one-step neighborhood move that is coarser
+//! early and stricter later); infeasible proposals are repaired; a tabu
+//! list blocks repeats; SA acceptance under a budget-decayed temperature
+//! (with mild reheating on stagnation); on stalls a fraction of the worst
+//! individuals is reinitialized. Defaults per the paper: p=8, L=3p, s=0.2,
+//! q=0.15, tau=80, rho=0.3, T0=1.0, lambda=5.0, Tmin=1e-4.
+
+use crate::optimizers::components::{metropolis_accept, Cooling, TabuList};
+use crate::optimizers::Optimizer;
+use crate::searchspace::NeighborKind;
+use crate::tuning::TuningContext;
+
+#[derive(Debug)]
+pub struct AdaptiveTabuGreyWolf {
+    pub population: usize,
+    pub tabu_factor: usize, // L = tabu_factor * population
+    pub shake_rate: f64,    // s
+    pub jump_rate: f64,     // q
+    pub stagnation_limit: u32, // tau
+    pub restart_ratio: f64, // rho
+    pub t0: f64,
+    pub lambda: f64,
+    pub t_min: f64,
+}
+
+impl Default for AdaptiveTabuGreyWolf {
+    fn default() -> Self {
+        AdaptiveTabuGreyWolf {
+            population: 8,
+            tabu_factor: 3,
+            shake_rate: 0.2,
+            jump_rate: 0.15,
+            stagnation_limit: 80,
+            restart_ratio: 0.3,
+            t0: 1.0,
+            lambda: 5.0,
+            t_min: 1e-4,
+        }
+    }
+}
+
+impl AdaptiveTabuGreyWolf {
+    /// Budget-coupled neighborhood schedule: coarse (Hamming) moves early,
+    /// strict (Adjacent) moves late — the paper's N_{m(b)}.
+    fn neighborhood_at(b: f64) -> NeighborKind {
+        if b < 0.5 {
+            NeighborKind::Hamming
+        } else {
+            NeighborKind::Adjacent
+        }
+    }
+}
+
+impl Optimizer for AdaptiveTabuGreyWolf {
+    fn name(&self) -> &str {
+        "atgw"
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        let p = self.population.max(4);
+        let dims = ctx.space().dims();
+        let mut tabu = TabuList::new(self.tabu_factor * p);
+
+        // P <- p random valid configs; evaluate.
+        let mut pop: Vec<u32> = ctx.space().random_sample(&mut ctx.rng, p);
+        let mut fit: Vec<f64> = Vec::with_capacity(p);
+        for &i in &pop {
+            if ctx.budget_exhausted() {
+                return;
+            }
+            fit.push(ctx.evaluate(i).unwrap_or(f64::INFINITY));
+            tabu.push(i);
+        }
+        let mut stagnation = 0u32;
+        let mut best_seen = fit.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut reheat = 0.0f64;
+
+        while !ctx.budget_exhausted() {
+            let b = ctx.budget_spent_fraction();
+            // Sort population; leaders are the best three.
+            let mut order: Vec<usize> = (0..pop.len()).collect();
+            order.sort_by(|&a, &c| fit[a].partial_cmp(&fit[c]).unwrap());
+            let (alpha, beta, delta) = (pop[order[0]], pop[order[1]], pop[order[2]]);
+            let leaders = [order[0], order[1], order[2]];
+
+            for oi in 3..order.len() {
+                if ctx.budget_exhausted() {
+                    return;
+                }
+                let t_idx = order[oi];
+                if leaders.contains(&t_idx) {
+                    continue;
+                }
+                let x = pop[t_idx];
+                let xa = ctx.space().config(alpha).to_vec();
+                let xb = ctx.space().config(beta).to_vec();
+                let xd = ctx.space().config(delta).to_vec();
+                let xx = ctx.space().config(x).to_vec();
+
+                // Leader-mixed proposal: each dim uniform over
+                // {alpha_i, beta_i, delta_i, x_i}.
+                let mut y: Vec<u16> = (0..dims)
+                    .map(|d| match ctx.rng.below(4) {
+                        0 => xa[d],
+                        1 => xb[d],
+                        2 => xd[d],
+                        _ => xx[d],
+                    })
+                    .collect();
+
+                // Shaking.
+                if ctx.rng.chance(self.shake_rate) {
+                    if ctx.rng.chance(self.jump_rate) {
+                        // Random-dim jump from a fresh valid sample.
+                        let fresh = ctx.space().random_valid(&mut ctx.rng);
+                        let d = ctx.rng.below(dims);
+                        y[d] = ctx.space().config(fresh)[d];
+                    } else {
+                        // One-step move in N_{m(b)} applied to y (post-
+                        // repair if needed below).
+                        let d = ctx.rng.below(dims);
+                        let card = ctx.space().params.params[d].cardinality() as i32;
+                        let delta_step = match Self::neighborhood_at(b) {
+                            NeighborKind::Hamming => {
+                                ctx.rng.range_inclusive(-(card as i64 - 1), card as i64 - 1) as i32
+                            }
+                            _ => {
+                                if ctx.rng.chance(0.5) {
+                                    1
+                                } else {
+                                    -1
+                                }
+                            }
+                        };
+                        let nv = (y[d] as i32 + delta_step).clamp(0, card - 1);
+                        y[d] = nv as u16;
+                    }
+                }
+
+                // Repair, tabu.
+                let mut idx = match ctx.space().index_of(&y) {
+                    Some(i) => i,
+                    None => ctx.space().repair(&y, &mut ctx.rng),
+                };
+                if tabu.contains(idx) {
+                    // Resample: small Hamming change or fresh sample.
+                    idx = if ctx.rng.chance(0.5) {
+                        ctx.space()
+                            .random_neighbor(idx, &mut ctx.rng, NeighborKind::Hamming)
+                            .unwrap_or_else(|| ctx.space().random_valid(&mut ctx.rng))
+                    } else {
+                        ctx.space().random_valid(&mut ctx.rng)
+                    };
+                }
+
+                // Evaluate and accept (SA under budget-decayed T).
+                let f_y = match ctx.evaluate(idx) {
+                    Some(v) => v,
+                    None => continue,
+                };
+                let temp = Cooling::at_budget(self.t0 + reheat, self.lambda, self.t_min, b);
+                if metropolis_accept(fit[t_idx], f_y, temp, &mut ctx.rng) {
+                    pop[t_idx] = idx;
+                    fit[t_idx] = f_y;
+                    tabu.push(idx);
+                }
+                if f_y < best_seen {
+                    best_seen = f_y;
+                    stagnation = 0;
+                    reheat = 0.0;
+                } else {
+                    stagnation += 1;
+                }
+            }
+
+            // Stagnation: reinit the worst rho*p individuals, mild reheat.
+            if stagnation > self.stagnation_limit {
+                let k = ((self.restart_ratio * p as f64).ceil() as usize).max(1);
+                let mut order: Vec<usize> = (0..pop.len()).collect();
+                order.sort_by(|&a, &c| fit[c].partial_cmp(&fit[a]).unwrap()); // worst first
+                for &t_idx in order.iter().take(k) {
+                    if ctx.budget_exhausted() {
+                        return;
+                    }
+                    let fresh = ctx.space().random_valid(&mut ctx.rng);
+                    pop[t_idx] = fresh;
+                    fit[t_idx] = ctx.evaluate(fresh).unwrap_or(f64::INFINITY);
+                }
+                reheat = 0.3;
+                stagnation = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::testutil;
+
+    #[test]
+    fn defaults_match_paper() {
+        let a = AdaptiveTabuGreyWolf::default();
+        assert_eq!(a.population, 8);
+        assert_eq!(a.tabu_factor * a.population, 24); // L = 3p
+        assert!((a.shake_rate - 0.2).abs() < 1e-12);
+        assert!((a.jump_rate - 0.15).abs() < 1e-12);
+        assert_eq!(a.stagnation_limit, 80);
+        assert!((a.restart_ratio - 0.3).abs() < 1e-12);
+        assert!((a.lambda - 5.0).abs() < 1e-12);
+        assert!((a.t_min - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strong_on_convolution() {
+        let cache = testutil::conv_cache();
+        let mut a = AdaptiveTabuGreyWolf::default();
+        let (best, _) = testutil::run_on(&mut a, &cache, 600.0, 30);
+        let sorted = cache.sorted_times();
+        let p10 = sorted[sorted.len() / 10];
+        assert!(best < p10, "best {} p10 {}", best, p10);
+    }
+
+    #[test]
+    fn neighborhood_schedule_coarse_to_strict() {
+        assert_eq!(
+            AdaptiveTabuGreyWolf::neighborhood_at(0.1),
+            NeighborKind::Hamming
+        );
+        assert_eq!(
+            AdaptiveTabuGreyWolf::neighborhood_at(0.9),
+            NeighborKind::Adjacent
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cache = testutil::conv_cache();
+        let a = testutil::run_on(&mut AdaptiveTabuGreyWolf::default(), &cache, 200.0, 31);
+        let b = testutil::run_on(&mut AdaptiveTabuGreyWolf::default(), &cache, 200.0, 31);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,222 @@
+//! HybridVNDX — the paper's best generated optimizer (Algorithm 1; target
+//! application dedispersion, generated *with* search-space information).
+//!
+//! Variable Neighborhood Descent combined with (i) dynamic neighborhood
+//! weighting, (ii) a light k-NN surrogate for candidate pre-screening,
+//! (iii) elite recombination, and (iv) tabu search + simulated-annealing
+//! acceptance. Faithful to the paper's pseudocode and default
+//! hyperparameters: k=5, pool size 8, restart after 100 non-improving
+//! steps, tabu size 300, elite size 5, T0=1.0, cooling 0.995.
+
+use crate::optimizers::components::{
+    metropolis_accept, Cooling, EliteArchive, History, KnnSurrogate, TabuList,
+};
+use crate::optimizers::Optimizer;
+use crate::searchspace::NeighborKind;
+use crate::tuning::TuningContext;
+
+/// The VND neighborhood set sampled by roulette over adaptive weights.
+const NEIGHBORHOODS: [NeighborKind; 3] = [
+    NeighborKind::Adjacent,
+    NeighborKind::StrictlyAdjacent,
+    NeighborKind::Hamming,
+];
+
+#[derive(Debug)]
+pub struct HybridVndx {
+    pub k: usize,
+    pub pool_size: usize,
+    pub restart_after: u32,
+    pub tabu_size: usize,
+    pub elite_size: usize,
+    pub t0: f64,
+    pub cooling: f64,
+    /// Score penalty added to tabu candidates during pre-screening.
+    pub tabu_penalty: f64,
+}
+
+impl Default for HybridVndx {
+    fn default() -> Self {
+        HybridVndx {
+            k: 5,
+            pool_size: 8,
+            restart_after: 100,
+            tabu_size: 300,
+            elite_size: 5,
+            t0: 1.0,
+            cooling: 0.995,
+            tabu_penalty: 0.25,
+        }
+    }
+}
+
+impl Optimizer for HybridVndx {
+    fn name(&self) -> &str {
+        "hybrid_vndx"
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        // Line 1: initialize x <- random_valid(), evaluate; maintain history
+        // H, elite heap E, tabu deque T; weights w[.] <- 1; T <- T0.
+        let mut history = History::default();
+        let mut elites = EliteArchive::new(self.elite_size);
+        let mut tabu = TabuList::new(self.tabu_size);
+        let surrogate = KnnSurrogate::new(self.k, 512);
+        let mut weights = [1.0f64; NEIGHBORHOODS.len()];
+        let mut cooling = Cooling::new(self.t0, self.cooling, 1e-6);
+
+        let mut x = ctx.space().random_valid(&mut ctx.rng);
+        let mut f_x = loop {
+            match ctx.evaluate(x) {
+                Some(v) => break v,
+                None => {
+                    if ctx.budget_exhausted() {
+                        return;
+                    }
+                    x = ctx.space().random_valid(&mut ctx.rng);
+                }
+            }
+        };
+        history.push(x, ctx.space().config(x), f_x);
+        elites.push(x, f_x);
+        let mut stagnation = 0u32;
+
+        // Line 2: while f.budget_spent_fraction < 1.
+        while !ctx.budget_exhausted() {
+            // Line 3: sample neighbourhood N by roulette over w.
+            let n_idx = ctx.rng.roulette(&weights);
+            let kind = NEIGHBORHOODS[n_idx];
+
+            // Line 4: build candidate pool: subset of N(x), 1 elite-
+            // crossover child, fill with random valid samples; repair.
+            let mut pool: Vec<u32> = Vec::with_capacity(self.pool_size);
+            let neigh = ctx.space().neighbors(x, kind);
+            let take = (self.pool_size.saturating_sub(2)).min(neigh.len());
+            for &j in ctx
+                .rng
+                .sample_indices(neigh.len(), take)
+                .iter()
+                .map(|&p| &neigh[p])
+            {
+                pool.push(j);
+            }
+            if let Some(child) = elites.crossover_child(ctx.space(), &mut ctx.rng) {
+                let idx = match ctx.space().index_of(&child) {
+                    Some(i) => i,
+                    None => ctx.space().repair(&child, &mut ctx.rng),
+                };
+                pool.push(idx);
+            }
+            while pool.len() < self.pool_size {
+                pool.push(ctx.space().random_valid(&mut ctx.rng));
+            }
+
+            // Line 5: score each candidate by k-NN prediction on H
+            // (Hamming), add tabu penalty; pick the arg-min score.
+            let mut best_c = pool[0];
+            let mut best_score = f64::INFINITY;
+            for &c in &pool {
+                let pred = surrogate
+                    .predict(&history, ctx.space().config(c))
+                    .unwrap_or(f_x);
+                let mut score = pred;
+                if tabu.contains(c) {
+                    score += self.tabu_penalty * f_x.abs().max(pred.abs());
+                }
+                if score < best_score {
+                    best_score = score;
+                    best_c = c;
+                }
+            }
+
+            // Line 6: evaluate; push to H and E.
+            let f_c = match ctx.evaluate(best_c) {
+                Some(v) => v,
+                None => {
+                    // Crashing candidate: treat as non-improving step.
+                    weights[n_idx] = (weights[n_idx] * 0.9).max(1e-3);
+                    stagnation += 1;
+                    cooling.step();
+                    continue;
+                }
+            };
+            history.push(best_c, ctx.space().config(best_c), f_c);
+            elites.push(best_c, f_c);
+
+            // Lines 7–9: SA acceptance; weight adaptation.
+            if metropolis_accept(f_x, f_c, cooling.temperature(), &mut ctx.rng) {
+                if f_c < f_x {
+                    stagnation = 0;
+                } else {
+                    stagnation += 1;
+                }
+                x = best_c;
+                f_x = f_c;
+                tabu.push(x);
+                weights[n_idx] = (weights[n_idx] * 1.1).min(1e3);
+            } else {
+                weights[n_idx] = (weights[n_idx] * 0.9).max(1e-3);
+                stagnation += 1;
+            }
+
+            // Line 10: cooling; restart on stagnation.
+            cooling.step();
+            if stagnation > self.restart_after {
+                x = ctx.space().random_valid(&mut ctx.rng);
+                if let Some(v) = ctx.evaluate(x) {
+                    f_x = v;
+                    history.push(x, ctx.space().config(x), f_x);
+                    elites.push(x, f_x);
+                }
+                cooling.reset();
+                stagnation = 0;
+            }
+        }
+        // Line 11: the best-so-far lives in the context's tracker.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::testutil;
+
+    #[test]
+    fn defaults_match_paper() {
+        let h = HybridVndx::default();
+        assert_eq!(h.k, 5);
+        assert_eq!(h.pool_size, 8);
+        assert_eq!(h.restart_after, 100);
+        assert_eq!(h.tabu_size, 300);
+        assert_eq!(h.elite_size, 5);
+        assert_eq!(h.t0, 1.0);
+        assert_eq!(h.cooling, 0.995);
+    }
+
+    #[test]
+    fn strong_on_convolution() {
+        let cache = testutil::conv_cache();
+        let mut h = HybridVndx::default();
+        let (best, _) = testutil::run_on(&mut h, &cache, 600.0, 20);
+        // Should land in the top decile of the space.
+        let sorted = cache.sorted_times();
+        let p10 = sorted[sorted.len() / 10];
+        assert!(best < p10, "best {} p10 {}", best, p10);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cache = testutil::conv_cache();
+        let a = testutil::run_on(&mut HybridVndx::default(), &cache, 200.0, 21);
+        let b = testutil::run_on(&mut HybridVndx::default(), &cache, 200.0, 21);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn restart_path_exercised() {
+        let cache = testutil::conv_cache();
+        let mut h = HybridVndx { restart_after: 3, ..Default::default() };
+        let (best, _) = testutil::run_on(&mut h, &cache, 300.0, 22);
+        assert!(best.is_finite());
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's two best LLM-generated optimizers, implemented faithfully
+//! from the published pseudocode (Algorithms 1 and 2) with the published
+//! default hyperparameters. These are the algorithms shipped back into
+//! Kernel Tuner according to the paper's §5.
+
+pub mod adaptive_tabu_grey_wolf;
+pub mod hybrid_vndx;
+
+pub use adaptive_tabu_grey_wolf::AdaptiveTabuGreyWolf;
+pub use hybrid_vndx::HybridVndx;

@@ -1,0 +1,134 @@
+//! Optimization algorithms ("strategies" in Kernel Tuner terms).
+//!
+//! Human-designed baselines: random search, genetic algorithm and simulated
+//! annealing (Kernel Tuner's two strongest, hyperparameter-tuned per
+//! Willemsen et al. 2025b), differential evolution (pyATF's best), particle
+//! swarm, greedy/iterated/multi-start local search and basin hopping.
+//!
+//! Generated algorithms (the paper's §4.3): [`generated::HybridVndx`]
+//! (Algorithm 1) and [`generated::AdaptiveTabuGreyWolf`] (Algorithm 2),
+//! plus the genome-interpreted optimizers produced by the LLaMEA loop
+//! (`crate::llamea`).
+
+pub mod basin_hopping;
+pub mod components;
+pub mod differential_evolution;
+pub mod generated;
+pub mod genetic_algorithm;
+pub mod local_search;
+pub mod particle_swarm;
+pub mod random_search;
+pub mod simulated_annealing;
+
+use crate::tuning::TuningContext;
+
+/// A budgeted optimization algorithm over a tuning context.
+///
+/// `run` must loop until `ctx.budget_exhausted()`; the context performs all
+/// wall-clock accounting, deduplication and best-tracking.
+pub trait Optimizer {
+    fn name(&self) -> &str;
+    fn run(&mut self, ctx: &mut TuningContext);
+}
+
+/// Instantiate a named optimizer with its tuned default hyperparameters.
+///
+/// Names: `random`, `ga`, `sa`, `de` (pyATF), `pso`, `greedy_ils`, `mls`,
+/// `basin_hopping`, `hybrid_vndx`, `atgw`.
+pub fn by_name(name: &str) -> Option<Box<dyn Optimizer>> {
+    Some(match name {
+        "random" => Box::new(random_search::RandomSearch::default()),
+        "ga" => Box::new(genetic_algorithm::GeneticAlgorithm::default()),
+        "sa" => Box::new(simulated_annealing::SimulatedAnnealing::default()),
+        "de" => Box::new(differential_evolution::DifferentialEvolution::default()),
+        "pso" => Box::new(particle_swarm::ParticleSwarm::default()),
+        "greedy_ils" => Box::new(local_search::GreedyIls::default()),
+        "mls" => Box::new(local_search::MultiStartLocalSearch::default()),
+        "basin_hopping" => Box::new(basin_hopping::BasinHopping::default()),
+        "hybrid_vndx" => Box::new(generated::hybrid_vndx::HybridVndx::default()),
+        "atgw" => Box::new(generated::adaptive_tabu_grey_wolf::AdaptiveTabuGreyWolf::default()),
+        _ => return None,
+    })
+}
+
+/// All registered optimizer names (stable order, used by the CLI).
+pub const ALL_NAMES: [&str; 10] = [
+    "random",
+    "ga",
+    "sa",
+    "de",
+    "pso",
+    "greedy_ils",
+    "mls",
+    "basin_hopping",
+    "hybrid_vndx",
+    "atgw",
+];
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::kernels::gpu::GpuSpec;
+    use crate::searchspace::Application;
+    use crate::tuning::Cache;
+
+    /// A small cache every optimizer test can share.
+    pub fn conv_cache() -> Cache {
+        Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap())
+    }
+
+    /// Run an optimizer on the cache and return (best_ms, unique_evals).
+    pub fn run_on(
+        opt: &mut dyn super::Optimizer,
+        cache: &Cache,
+        budget_s: f64,
+        seed: u64,
+    ) -> (f64, u64) {
+        let mut ctx = crate::tuning::TuningContext::new(cache, budget_s, seed);
+        opt.run(&mut ctx);
+        let best = ctx.best().map(|(_, v)| v).unwrap_or(f64::INFINITY);
+        (best, ctx.unique_evals())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for n in ALL_NAMES {
+            assert!(by_name(n).is_some(), "{}", n);
+        }
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn every_optimizer_terminates_and_improves_over_nothing() {
+        let cache = testutil::conv_cache();
+        for n in ALL_NAMES {
+            let mut opt = by_name(n).unwrap();
+            let (best, evals) = testutil::run_on(opt.as_mut(), &cache, 300.0, 42);
+            assert!(best.is_finite(), "{} found nothing", n);
+            assert!(evals > 3, "{} evaluated too little ({})", n, evals);
+        }
+    }
+
+    #[test]
+    fn optimizers_beat_random_on_average() {
+        // Sanity: the strong strategies should beat random search on the
+        // same budget for most seeds (not a statistical proof, a smoke bar).
+        let cache = testutil::conv_cache();
+        let budget = 400.0;
+        let mut rand_scores = Vec::new();
+        let mut smart_scores = Vec::new();
+        for seed in 0..5 {
+            let mut r = by_name("random").unwrap();
+            rand_scores.push(testutil::run_on(r.as_mut(), &cache, budget, seed).0);
+            let mut h = by_name("hybrid_vndx").unwrap();
+            smart_scores.push(testutil::run_on(h.as_mut(), &cache, budget, seed).0);
+        }
+        let rm = crate::util::stats::mean(&rand_scores);
+        let sm = crate::util::stats::mean(&smart_scores);
+        assert!(sm <= rm * 1.05, "hybrid_vndx {} vs random {}", sm, rm);
+    }
+}

@@ -1,0 +1,115 @@
+//! Particle swarm optimization over the value-index grid.
+//!
+//! Continuous-relaxation PSO (one of Kernel Tuner's classical strategies):
+//! particles hold float positions/velocities in index space; evaluation
+//! rounds, clamps and repairs. Standard constriction-style coefficients.
+
+use super::Optimizer;
+use crate::tuning::TuningContext;
+
+#[derive(Debug)]
+pub struct ParticleSwarm {
+    pub swarm_size: usize,
+    pub inertia: f64,
+    pub c_personal: f64,
+    pub c_global: f64,
+}
+
+impl Default for ParticleSwarm {
+    fn default() -> Self {
+        ParticleSwarm { swarm_size: 16, inertia: 0.72, c_personal: 1.49, c_global: 1.49 }
+    }
+}
+
+impl Optimizer for ParticleSwarm {
+    fn name(&self) -> &str {
+        "pso"
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        let dims = ctx.space().dims();
+        let cards: Vec<f64> = (0..dims)
+            .map(|d| ctx.space().params.params[d].cardinality() as f64)
+            .collect();
+
+        let starts = ctx.space().random_sample(&mut ctx.rng, self.swarm_size);
+        let mut pos: Vec<Vec<f64>> = starts
+            .iter()
+            .map(|&i| ctx.space().config(i).iter().map(|&v| v as f64).collect())
+            .collect();
+        let mut vel: Vec<Vec<f64>> = (0..pos.len())
+            .map(|_| (0..dims).map(|d| (ctx.rng.f64() - 0.5) * cards[d] * 0.2).collect())
+            .collect();
+        let mut p_best: Vec<(Vec<f64>, f64)> = Vec::with_capacity(pos.len());
+        let mut g_best: (Vec<f64>, f64) = (pos[0].clone(), f64::INFINITY);
+
+        for (p, &start) in pos.iter().zip(&starts) {
+            if ctx.budget_exhausted() {
+                return;
+            }
+            let f = ctx.evaluate(start).unwrap_or(f64::INFINITY);
+            p_best.push((p.clone(), f));
+            if f < g_best.1 {
+                g_best = (p.clone(), f);
+            }
+        }
+
+        while !ctx.budget_exhausted() {
+            for k in 0..pos.len() {
+                if ctx.budget_exhausted() {
+                    return;
+                }
+                for d in 0..dims {
+                    let r1 = ctx.rng.f64();
+                    let r2 = ctx.rng.f64();
+                    vel[k][d] = self.inertia * vel[k][d]
+                        + self.c_personal * r1 * (p_best[k].0[d] - pos[k][d])
+                        + self.c_global * r2 * (g_best.0[d] - pos[k][d]);
+                    // Velocity clamp keeps particles on the grid.
+                    let vmax = cards[d] * 0.5;
+                    vel[k][d] = vel[k][d].clamp(-vmax, vmax);
+                    pos[k][d] = (pos[k][d] + vel[k][d]).clamp(0.0, cards[d] - 1.0);
+                }
+                let probe: Vec<u16> = pos[k].iter().map(|&x| x.round() as u16).collect();
+                let idx = match ctx.space().index_of(&probe) {
+                    Some(i) => i,
+                    None => {
+                        let mut rng = ctx.rng.fork(k as u64);
+                        ctx.space().repair(&probe, &mut rng)
+                    }
+                };
+                let f = ctx.evaluate(idx).unwrap_or(f64::INFINITY);
+                let actual: Vec<f64> =
+                    ctx.space().config(idx).iter().map(|&v| v as f64).collect();
+                if f < p_best[k].1 {
+                    p_best[k] = (actual.clone(), f);
+                }
+                if f < g_best.1 {
+                    g_best = (actual, f);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::testutil;
+
+    #[test]
+    fn swarm_finds_below_median() {
+        let cache = testutil::conv_cache();
+        let mut pso = ParticleSwarm::default();
+        let (best, _) = testutil::run_on(&mut pso, &cache, 600.0, 10);
+        assert!(best < cache.median_ms);
+    }
+
+    #[test]
+    fn terminates_on_budget() {
+        let cache = testutil::conv_cache();
+        let mut pso = ParticleSwarm::default();
+        let (_, evals) = testutil::run_on(&mut pso, &cache, 30.0, 11);
+        assert!(evals >= 1);
+    }
+}

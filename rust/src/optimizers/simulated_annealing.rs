@@ -1,0 +1,120 @@
+//! Simulated annealing — Kernel Tuner's tuned SA baseline.
+//!
+//! Single-solution local search over the Hamming neighborhood with
+//! Metropolis acceptance on relative deltas, geometric cooling tied to
+//! restarts, and re-heating restarts on stagnation. Hyperparameters follow
+//! the 7-day tuning of Willemsen et al. 2025b in spirit: moderate initial
+//! temperature, slow cooling, generous stagnation window.
+
+use super::components::{metropolis_accept, Cooling};
+use super::Optimizer;
+use crate::searchspace::NeighborKind;
+use crate::tuning::TuningContext;
+
+#[derive(Debug)]
+pub struct SimulatedAnnealing {
+    pub t0: f64,
+    pub alpha: f64,
+    pub t_min: f64,
+    pub stagnation_limit: u32,
+    pub neighbor: NeighborKind,
+}
+
+impl Default for SimulatedAnnealing {
+    fn default() -> Self {
+        SimulatedAnnealing {
+            t0: 0.6,
+            alpha: 0.995,
+            t_min: 1e-4,
+            stagnation_limit: 150,
+            neighbor: NeighborKind::Hamming,
+        }
+    }
+}
+
+impl Optimizer for SimulatedAnnealing {
+    fn name(&self) -> &str {
+        "sa"
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        let mut cooling = Cooling::new(self.t0, self.alpha, self.t_min);
+        let mut current = ctx.space().random_valid(&mut ctx.rng);
+        let mut f_cur = loop {
+            match ctx.evaluate(current) {
+                Some(v) => break v,
+                None => {
+                    if ctx.budget_exhausted() {
+                        return;
+                    }
+                    current = ctx.space().random_valid(&mut ctx.rng);
+                }
+            }
+        };
+        let mut stagnation = 0u32;
+
+        while !ctx.budget_exhausted() {
+            let cand = match ctx
+                .space()
+                .random_neighbor(current, &mut ctx.rng, self.neighbor)
+            {
+                Some(c) => c,
+                None => ctx.space().random_valid(&mut ctx.rng),
+            };
+            match ctx.evaluate(cand) {
+                Some(f_cand) => {
+                    if metropolis_accept(f_cur, f_cand, cooling.temperature(), &mut ctx.rng) {
+                        if f_cand < f_cur {
+                            stagnation = 0;
+                        } else {
+                            stagnation += 1;
+                        }
+                        current = cand;
+                        f_cur = f_cand;
+                    } else {
+                        stagnation += 1;
+                    }
+                }
+                None => stagnation += 1,
+            }
+            cooling.step();
+            if stagnation > self.stagnation_limit {
+                // Restart with re-heating.
+                current = ctx.space().random_valid(&mut ctx.rng);
+                if let Some(v) = ctx.evaluate(current) {
+                    f_cur = v;
+                }
+                cooling.reset();
+                stagnation = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::testutil;
+
+    #[test]
+    fn improves_over_first_sample() {
+        let cache = testutil::conv_cache();
+        let mut sa = SimulatedAnnealing::default();
+        let (best, evals) = testutil::run_on(&mut sa, &cache, 500.0, 3);
+        assert!(best.is_finite());
+        assert!(evals > 20);
+        assert!(best < cache.median_ms, "best {} median {}", best, cache.median_ms);
+    }
+
+    #[test]
+    fn restart_path_is_exercised() {
+        // Tiny stagnation limit forces restarts within the budget.
+        let cache = testutil::conv_cache();
+        let mut sa = SimulatedAnnealing {
+            stagnation_limit: 2,
+            ..Default::default()
+        };
+        let (best, _) = testutil::run_on(&mut sa, &cache, 300.0, 4);
+        assert!(best.is_finite());
+    }
+}

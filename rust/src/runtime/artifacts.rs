@@ -1,0 +1,159 @@
+//! AOT artifact manifest parsing.
+//!
+//! `python/compile/aot.py` lowers every program variant to HLO text and
+//! writes `manifest.tsv`; this module is the Rust-side reader. Python never
+//! runs at tuning time — the manifest + HLO files are the entire interface
+//! between the build path and the serving path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Input tensor specification, e.g. `float32:256x256`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (dtype, dims_s) = s
+            .split_once(':')
+            .with_context(|| format!("bad tensor spec '{}'", s))?;
+        let dims = dims_s
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled program variant.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub kernel: String,
+    pub name: String,
+    pub path: PathBuf,
+    /// Tunable parameters of this variant, sorted by key.
+    pub params: BTreeMap<String, i64>,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+}
+
+/// The parsed artifact set of one `make artifacts` run.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactSet {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl ArtifactSet {
+    /// Load `<dir>/manifest.tsv` and resolve artifact paths against `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactSet> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                bail!("manifest line {}: expected 6 columns, got {}", lineno + 1, cols.len());
+            }
+            let mut params = BTreeMap::new();
+            if !cols[3].is_empty() {
+                for kv in cols[3].split(';') {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .with_context(|| format!("bad param '{}'", kv))?;
+                    params.insert(k.to_string(), v.parse::<i64>().context("bad param value")?);
+                }
+            }
+            let inputs = cols[4]
+                .split(';')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(Artifact {
+                kernel: cols[0].to_string(),
+                name: cols[1].to_string(),
+                path: dir.join(cols[2]),
+                params,
+                inputs,
+                n_outputs: cols[5].parse().context("bad n_outputs")?,
+            });
+        }
+        Ok(ArtifactSet { artifacts })
+    }
+
+    /// Variants of one kernel, in manifest order.
+    pub fn for_kernel(&self, kernel: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.kernel == kernel).collect()
+    }
+
+    /// Distinct kernel names present.
+    pub fn kernels(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .iter()
+            .map(|a| a.kernel.clone())
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_roundtrip() {
+        let t = TensorSpec::parse("float32:256x256").unwrap();
+        assert_eq!(t.dtype, "float32");
+        assert_eq!(t.dims, vec![256, 256]);
+        assert_eq!(t.element_count(), 65536);
+        assert!(TensorSpec::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("llamea_kt_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# header\n\
+             gemm\tgemm__block_m-64\tgemm__block_m-64.hlo.txt\tblock_k=32;block_m=64\tfloat32:256x256;float32:256x256\t1\n\
+             conv2d\tc1\tc1.hlo.txt\ttile_h=8\tfloat32:262x262;float32:7x7\t1\n",
+        )
+        .unwrap();
+        let set = ArtifactSet::load(&dir).unwrap();
+        assert_eq!(set.artifacts.len(), 2);
+        assert_eq!(set.kernels(), vec!["conv2d".to_string(), "gemm".to_string()]);
+        let g = &set.for_kernel("gemm")[0];
+        assert_eq!(g.params["block_m"], 64);
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.n_outputs, 1);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let set = ArtifactSet::load(&dir).unwrap();
+            assert!(set.artifacts.len() >= 50, "{}", set.artifacts.len());
+            for a in &set.artifacts {
+                assert!(a.path.exists(), "{}", a.path.display());
+            }
+            assert!(set.kernels().contains(&"gemm".to_string()));
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! The measured tuning path: turn a set of AOT-compiled program variants
+//! into a *real* pre-explored search space (a [`Cache`] whose entries are
+//! PJRT wall-clock measurements instead of model outputs), so the entire
+//! methodology and every optimizer run unchanged on real data — exactly
+//! how the paper replays its exhaustively-benchmarked cachefiles.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use super::artifacts::{Artifact, ArtifactSet};
+use super::pjrt::PjrtRuntime;
+use crate::searchspace::{Param, ParamSet, SearchSpace};
+use crate::tuning::Cache;
+
+/// Build the variant search space of one kernel from its artifacts: one
+/// tunable parameter per manifest param key, values = distinct values seen.
+/// Combinations not present in the manifest are hidden failures.
+pub fn variant_space(kernel: &str, set: &ArtifactSet) -> Result<SearchSpace> {
+    let artifacts = set.for_kernel(kernel);
+    if artifacts.is_empty() {
+        bail!("no artifacts for kernel '{}'", kernel);
+    }
+    let keys: Vec<String> = artifacts[0].params.keys().cloned().collect();
+    let mut params = Vec::new();
+    for key in &keys {
+        let values: BTreeSet<i64> = artifacts
+            .iter()
+            .map(|a| *a.params.get(key).expect("inconsistent manifest params"))
+            .collect();
+        params.push(Param::ints(key, &values.into_iter().collect::<Vec<_>>()));
+    }
+    SearchSpace::build(&format!("{}-measured", kernel), ParamSet::new(params), &[])
+        .map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Result of exhaustively measuring a kernel's variants.
+pub struct MeasuredSpace {
+    pub cache: Cache,
+    /// (artifact name, mean ms, compile s) per measured variant.
+    pub measurements: Vec<(String, f64, f64)>,
+}
+
+/// Exhaustively measure all variants of `kernel` and assemble a measured
+/// [`Cache`]. `warmup`/`reps` control per-variant timing.
+pub fn measure_kernel(
+    runtime: &PjrtRuntime,
+    set: &ArtifactSet,
+    kernel: &str,
+    warmup: usize,
+    reps: usize,
+    seed: u64,
+) -> Result<MeasuredSpace> {
+    let space = std::sync::Arc::new(variant_space(kernel, set)?);
+    let artifacts = set.for_kernel(kernel);
+
+    // Map each artifact to its config index in the variant space.
+    let mut mean_ms = vec![f32::INFINITY; space.len()];
+    let mut compile_s = vec![0.2f32; space.len()]; // nominal for absent combos
+    let mut measurements = Vec::with_capacity(artifacts.len());
+    for artifact in &artifacts {
+        let cfg: Vec<u16> = config_of(artifact, &space);
+        let idx = space
+            .index_of(&cfg)
+            .expect("artifact config missing from variant space");
+        let (variant, inputs) = runtime.prepare(artifact, seed)?;
+        let timing = variant.time(&inputs, warmup, reps)?;
+        mean_ms[idx as usize] = timing.mean_ms as f32;
+        compile_s[idx as usize] = variant.compile_s as f32;
+        measurements.push((artifact.name.clone(), timing.mean_ms, variant.compile_s));
+    }
+
+    let cache = Cache::from_measured(space, mean_ms, compile_s, seed);
+    Ok(MeasuredSpace { cache, measurements })
+}
+
+/// The value-index configuration of an artifact within the variant space.
+pub fn config_of(artifact: &Artifact, space: &SearchSpace) -> Vec<u16> {
+    space
+        .params
+        .params
+        .iter()
+        .map(|p| {
+            let v = artifact.params[&p.name];
+            p.values
+                .iter()
+                .position(|pv| pv.as_i64() == v)
+                .expect("value missing from param domain") as u16
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn fake_artifact(kernel: &str, params: &[(&str, i64)]) -> Artifact {
+        Artifact {
+            kernel: kernel.into(),
+            name: format!("{}-v", kernel),
+            path: PathBuf::from("/nonexistent"),
+            params: params.iter().map(|(k, v)| (k.to_string(), *v)).collect::<BTreeMap<_, _>>(),
+            inputs: vec![],
+            n_outputs: 1,
+        }
+    }
+
+    #[test]
+    fn variant_space_from_manifest_params() {
+        let set = ArtifactSet {
+            artifacts: vec![
+                fake_artifact("gemm", &[("block_m", 32), ("block_n", 32)]),
+                fake_artifact("gemm", &[("block_m", 64), ("block_n", 32)]),
+                fake_artifact("gemm", &[("block_m", 64), ("block_n", 64)]),
+            ],
+        };
+        let space = variant_space("gemm", &set).unwrap();
+        assert_eq!(space.dims(), 2);
+        assert_eq!(space.len(), 4); // full cartesian; (32,64) will be a failure entry
+        let cfg = config_of(&set.artifacts[1], &space);
+        assert_eq!(space.params.describe(&cfg), "block_m=64, block_n=32");
+        assert!(variant_space("missing", &set).is_err());
+    }
+}

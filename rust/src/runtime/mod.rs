@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT CPU execution of AOT artifacts (L3 <- L2/L1 bridge)
+//! and the measured-cache tuning path built on top of it.
+
+pub mod artifacts;
+pub mod measured;
+pub mod pjrt;
+
+pub use artifacts::{Artifact, ArtifactSet, TensorSpec};
+pub use measured::{measure_kernel, variant_space, MeasuredSpace};
+pub use pjrt::{gemm_reference, make_inputs, CompiledVariant, PjrtRuntime, Timing};

@@ -1,0 +1,201 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile on the CPU client,
+//! execute with timing. This is the *measured* evaluation path — the rust
+//! coordinator's equivalent of Kernel Tuner's compile-and-benchmark
+//! backends, with Python fully out of the loop.
+//!
+//! Interchange is HLO text (not serialized protos): jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{Artifact, TensorSpec};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// A PJRT CPU client wrapper.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled program variant ready to execute.
+pub struct CompiledVariant {
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall-clock seconds spent loading + compiling (the "compile cost" the
+    /// auto-tuner pays per configuration).
+    pub compile_s: f64,
+}
+
+/// Steady-state timing statistics of one variant.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub reps: usize,
+}
+
+impl PjrtRuntime {
+    pub fn new() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from `path` and compile it.
+    pub fn compile_file(&self, path: &Path) -> Result<CompiledVariant> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledVariant { exe, compile_s: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Compile an artifact and prepare its (deterministic) input literals.
+    pub fn prepare(&self, artifact: &Artifact, seed: u64) -> Result<(CompiledVariant, Vec<xla::Literal>)> {
+        let variant = self.compile_file(&artifact.path)?;
+        let inputs = make_inputs(&artifact.inputs, seed)?;
+        Ok((variant, inputs))
+    }
+}
+
+impl CompiledVariant {
+    /// Execute once; returns the flattened f32 contents of the first output
+    /// (tuple-unwrapped — aot.py lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute once without converting the output (timing path).
+    pub fn run_once(&self, inputs: &[xla::Literal]) -> Result<()> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        // Force completion by materializing the (tuple) output.
+        let _ = bufs[0][0].to_literal_sync()?;
+        Ok(())
+    }
+
+    /// Warmed-up repeated timing: `warmup` unmeasured runs, then `reps`
+    /// measured ones.
+    pub fn time(&self, inputs: &[xla::Literal], warmup: usize, reps: usize) -> Result<Timing> {
+        for _ in 0..warmup {
+            self.run_once(inputs)?;
+        }
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            self.run_once(inputs)?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok(Timing {
+            mean_ms: stats::mean(&samples),
+            std_ms: stats::std_dev(&samples),
+            min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            reps,
+        })
+    }
+}
+
+/// Deterministic input literals for a tensor-spec list.
+///
+/// f32 tensors get standard-normal-ish values; i32 tensors get small
+/// non-negative values (safe for the dedispersion delay operand, whose
+/// dynamic slices HLO clamps in-range regardless).
+pub fn make_inputs(specs: &[TensorSpec], seed: u64) -> Result<Vec<xla::Literal>> {
+    let mut rng = Rng::new(seed);
+    specs
+        .iter()
+        .map(|spec| {
+            let n = spec.element_count();
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            let lit = match spec.dtype.as_str() {
+                "float32" => {
+                    let data: Vec<f32> =
+                        (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+                    xla::Literal::vec1(&data).reshape(&dims)?
+                }
+                "int32" => {
+                    let data: Vec<i32> = (0..n).map(|_| rng.below(32) as i32).collect();
+                    xla::Literal::vec1(&data).reshape(&dims)?
+                }
+                other => anyhow::bail!("unsupported artifact dtype '{}'", other),
+            };
+            Ok(lit)
+        })
+        .collect()
+}
+
+/// Rust-side GEMM reference for the correctness gate of the measured path:
+/// `alpha * A @ B + beta * C` over row-major f32 (matches ref.py).
+pub fn gemm_reference(
+    a: &[f32],
+    b: &[f32],
+    c: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    beta: f32,
+) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for l in 0..k {
+                acc += a[i * k + l] * b[l * n + j];
+            }
+            out[i * n + j] = alpha * acc + beta * c[i * n + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inputs_are_deterministic_and_shaped() {
+        let specs = vec![
+            TensorSpec::parse("float32:4x4").unwrap(),
+            TensorSpec::parse("int32:2x3").unwrap(),
+        ];
+        let a = make_inputs(&specs, 7).unwrap();
+        let b = make_inputs(&specs, 7).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(
+            a[0].to_vec::<f32>().unwrap(),
+            b[0].to_vec::<f32>().unwrap()
+        );
+        assert!(make_inputs(&[TensorSpec::parse("bf16:2").unwrap()], 0).is_err());
+    }
+
+    #[test]
+    fn gemm_reference_identity() {
+        // A @ I = A.
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let eye = vec![1.0f32, 0.0, 0.0, 1.0];
+        let c = vec![0.0f32; 4];
+        let out = gemm_reference(&a, &eye, &c, 2, 2, 2, 1.0, 0.0);
+        assert_eq!(out, a);
+        // beta path.
+        let out2 = gemm_reference(&a, &eye, &a, 2, 2, 2, 1.0, 1.0);
+        assert_eq!(out2, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    // PJRT-backed tests live in rust/tests/integration_runtime.rs (they
+    // need the artifacts directory built by `make artifacts`).
+}

@@ -1,0 +1,454 @@
+//! Constraint (restriction) expression engine.
+//!
+//! Kernel Tuner expresses search-space restrictions as Python expressions
+//! over parameter names ("block_size_x*block_size_y >= 32"). We implement
+//! the same surface as a parsed infix expression language evaluated over a
+//! configuration's numeric values — shared by space construction (where
+//! early evaluation prunes the DFS) and by repair.
+//!
+//! Grammar (precedence climbing):
+//!   or:      and ('||' and)*            also accepts `or`
+//!   and:     cmp ('&&' cmp)*            also accepts `and`
+//!   cmp:     sum (('=='|'!='|'<='|'>='|'<'|'>') sum)?
+//!   sum:     prod (('+'|'-') prod)*
+//!   prod:    unary (('*'|'/'|'%') unary)*
+//!   unary:   '-' unary | '!' unary | atom
+//!   atom:    number | ident | '(' or ')' | 'min(' or ',' or ')' | 'max(...)'
+//!
+//! Booleans are 0.0 / 1.0; `/` is float division and `//` integer division.
+
+use std::fmt;
+
+use super::param::ParamSet;
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    IntDiv,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+/// Expression AST; parameters are resolved to dimension indices at parse
+/// time so evaluation is allocation-free.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    Num(f64),
+    Param(usize),
+    Bin(Op, Box<Expr>, Box<Expr>),
+    Neg(Box<Expr>),
+    Not(Box<Expr>),
+    Min(Box<Expr>, Box<Expr>),
+    Max(Box<Expr>, Box<Expr>),
+}
+
+/// A named constraint with its source text and the highest dimension it
+/// references (for early evaluation during DFS enumeration).
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub source: String,
+    pub expr: Expr,
+    pub max_dim: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub message: String,
+    pub position: usize,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at {}: {}", self.position, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Expr {
+    /// Evaluate over per-dimension numeric values.
+    pub fn eval(&self, values: &[f64]) -> f64 {
+        match self {
+            Expr::Num(x) => *x,
+            Expr::Param(d) => values[*d],
+            Expr::Neg(e) => -e.eval(values),
+            Expr::Not(e) => {
+                if e.eval(values) != 0.0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+            Expr::Min(a, b) => a.eval(values).min(b.eval(values)),
+            Expr::Max(a, b) => a.eval(values).max(b.eval(values)),
+            Expr::Bin(op, a, b) => {
+                let x = a.eval(values);
+                // Short-circuit the logical ops.
+                match op {
+                    Op::And => {
+                        return if x != 0.0 && b.eval(values) != 0.0 { 1.0 } else { 0.0 }
+                    }
+                    Op::Or => {
+                        return if x != 0.0 || b.eval(values) != 0.0 { 1.0 } else { 0.0 }
+                    }
+                    _ => {}
+                }
+                let y = b.eval(values);
+                match op {
+                    Op::Add => x + y,
+                    Op::Sub => x - y,
+                    Op::Mul => x * y,
+                    Op::Div => x / y,
+                    Op::IntDiv => (x / y).floor(),
+                    Op::Mod => {
+                        // Python-style modulo on the integer grid.
+                        let r = x % y;
+                        if r != 0.0 && (r < 0.0) != (y < 0.0) {
+                            r + y
+                        } else {
+                            r
+                        }
+                    }
+                    Op::Eq => (x == y) as u8 as f64,
+                    Op::Ne => (x != y) as u8 as f64,
+                    Op::Lt => (x < y) as u8 as f64,
+                    Op::Le => (x <= y) as u8 as f64,
+                    Op::Gt => (x > y) as u8 as f64,
+                    Op::Ge => (x >= y) as u8 as f64,
+                    Op::And | Op::Or => unreachable!(),
+                }
+            }
+        }
+    }
+
+    fn max_dim(&self) -> usize {
+        match self {
+            Expr::Num(_) => 0,
+            Expr::Param(d) => *d,
+            Expr::Neg(e) | Expr::Not(e) => e.max_dim(),
+            Expr::Bin(_, a, b) | Expr::Min(a, b) | Expr::Max(a, b) => {
+                a.max_dim().max(b.max_dim())
+            }
+        }
+    }
+}
+
+impl Constraint {
+    /// Parse `source` against the parameter set (names become dims).
+    pub fn parse(source: &str, params: &ParamSet) -> Result<Constraint, ParseError> {
+        let mut p = Parser {
+            src: source.as_bytes(),
+            pos: 0,
+            params,
+        };
+        let expr = p.parse_or()?;
+        p.skip_ws();
+        if p.pos != p.src.len() {
+            return Err(ParseError {
+                message: format!("trailing input: '{}'", &source[p.pos..]),
+                position: p.pos,
+            });
+        }
+        let max_dim = expr.max_dim();
+        Ok(Constraint {
+            source: source.to_string(),
+            expr,
+            max_dim,
+        })
+    }
+
+    /// True when the configuration satisfies the constraint.
+    #[inline]
+    pub fn holds(&self, values: &[f64]) -> bool {
+        self.expr.eval(values) != 0.0
+    }
+}
+
+struct Parser<'a> {
+    src: &'a [u8],
+    pos: usize,
+    params: &'a ParamSet,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.src.len() && self.src[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> u8 {
+        self.skip_ws();
+        if self.pos < self.src.len() {
+            self.src[self.pos]
+        } else {
+            0
+        }
+    }
+
+    fn eat(&mut self, tok: &str) -> bool {
+        self.skip_ws();
+        if self.src[self.pos..].starts_with(tok.as_bytes()) {
+            // Word tokens must not be glued to identifier chars.
+            if tok.chars().all(|c| c.is_ascii_alphabetic()) {
+                let after = self.pos + tok.len();
+                if after < self.src.len()
+                    && (self.src[after].is_ascii_alphanumeric() || self.src[after] == b'_')
+                {
+                    return false;
+                }
+            }
+            self.pos += tok.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn err(&self, message: impl Into<String>) -> ParseError {
+        ParseError {
+            message: message.into(),
+            position: self.pos,
+        }
+    }
+
+    fn parse_or(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_and()?;
+        loop {
+            if self.eat("||") || self.eat("or") {
+                let rhs = self.parse_and()?;
+                lhs = Expr::Bin(Op::Or, Box::new(lhs), Box::new(rhs));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn parse_and(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_cmp()?;
+        loop {
+            if self.eat("&&") || self.eat("and") {
+                let rhs = self.parse_cmp()?;
+                lhs = Expr::Bin(Op::And, Box::new(lhs), Box::new(rhs));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn parse_cmp(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.parse_sum()?;
+        let op = if self.eat("==") {
+            Op::Eq
+        } else if self.eat("!=") {
+            Op::Ne
+        } else if self.eat("<=") {
+            Op::Le
+        } else if self.eat(">=") {
+            Op::Ge
+        } else if self.eat("<") {
+            Op::Lt
+        } else if self.eat(">") {
+            Op::Gt
+        } else {
+            return Ok(lhs);
+        };
+        let rhs = self.parse_sum()?;
+        Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn parse_sum(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_prod()?;
+        loop {
+            if self.eat("+") {
+                let rhs = self.parse_prod()?;
+                lhs = Expr::Bin(Op::Add, Box::new(lhs), Box::new(rhs));
+            } else if self.peek() == b'-' && !self.src[self.pos..].starts_with(b"->") {
+                self.pos += 1;
+                let rhs = self.parse_prod()?;
+                lhs = Expr::Bin(Op::Sub, Box::new(lhs), Box::new(rhs));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn parse_prod(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_unary()?;
+        loop {
+            if self.eat("//") {
+                let rhs = self.parse_unary()?;
+                lhs = Expr::Bin(Op::IntDiv, Box::new(lhs), Box::new(rhs));
+            } else if self.eat("*") {
+                let rhs = self.parse_unary()?;
+                lhs = Expr::Bin(Op::Mul, Box::new(lhs), Box::new(rhs));
+            } else if self.eat("/") {
+                let rhs = self.parse_unary()?;
+                lhs = Expr::Bin(Op::Div, Box::new(lhs), Box::new(rhs));
+            } else if self.eat("%") {
+                let rhs = self.parse_unary()?;
+                lhs = Expr::Bin(Op::Mod, Box::new(lhs), Box::new(rhs));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn parse_unary(&mut self) -> Result<Expr, ParseError> {
+        if self.eat("-") {
+            return Ok(Expr::Neg(Box::new(self.parse_unary()?)));
+        }
+        if self.eat("!") {
+            return Ok(Expr::Not(Box::new(self.parse_unary()?)));
+        }
+        self.parse_atom()
+    }
+
+    fn parse_atom(&mut self) -> Result<Expr, ParseError> {
+        self.skip_ws();
+        if self.pos >= self.src.len() {
+            return Err(self.err("unexpected end of input"));
+        }
+        let c = self.src[self.pos];
+        if c == b'(' {
+            self.pos += 1;
+            let e = self.parse_or()?;
+            if !self.eat(")") {
+                return Err(self.err("expected ')'"));
+            }
+            return Ok(e);
+        }
+        if c.is_ascii_digit() || c == b'.' {
+            let start = self.pos;
+            while self.pos < self.src.len()
+                && (self.src[self.pos].is_ascii_digit() || self.src[self.pos] == b'.')
+            {
+                self.pos += 1;
+            }
+            let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+            return text
+                .parse::<f64>()
+                .map(Expr::Num)
+                .map_err(|e| self.err(format!("bad number '{}': {}", text, e)));
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = self.pos;
+            while self.pos < self.src.len()
+                && (self.src[self.pos].is_ascii_alphanumeric() || self.src[self.pos] == b'_')
+            {
+                self.pos += 1;
+            }
+            let name = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+            if name == "min" || name == "max" {
+                if !self.eat("(") {
+                    return Err(self.err(format!("expected '(' after {}", name)));
+                }
+                let a = self.parse_or()?;
+                if !self.eat(",") {
+                    return Err(self.err("expected ','"));
+                }
+                let b = self.parse_or()?;
+                if !self.eat(")") {
+                    return Err(self.err("expected ')'"));
+                }
+                return Ok(if name == "min" {
+                    Expr::Min(Box::new(a), Box::new(b))
+                } else {
+                    Expr::Max(Box::new(a), Box::new(b))
+                });
+            }
+            return match self.params.index_of(name) {
+                Some(d) => Ok(Expr::Param(d)),
+                None => Err(self.err(format!("unknown parameter '{}'", name))),
+            };
+        }
+        Err(self.err(format!("unexpected character '{}'", c as char)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::searchspace::param::Param;
+
+    fn ps() -> ParamSet {
+        ParamSet::new(vec![
+            Param::ints("bx", &[1, 2, 4, 8]),
+            Param::ints("by", &[8, 16]),
+            Param::ints("u", &[0, 1, 2, 4]),
+        ])
+    }
+
+    fn eval(src: &str, vals: &[f64]) -> f64 {
+        Constraint::parse(src, &ps()).unwrap().expr.eval(vals)
+    }
+
+    #[test]
+    fn arithmetic_and_comparison() {
+        assert_eq!(eval("bx * by >= 32", &[4.0, 16.0, 0.0]), 1.0);
+        assert_eq!(eval("bx * by >= 32", &[2.0, 8.0, 0.0]), 0.0);
+        assert_eq!(eval("bx + by - 2", &[4.0, 16.0, 0.0]), 18.0);
+        assert_eq!(eval("by // bx", &[4.0, 16.0, 0.0]), 4.0);
+        assert_eq!(eval("by % 3", &[0.0, 16.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn logical_ops_and_precedence() {
+        assert_eq!(eval("bx == 2 || bx == 4", &[4.0, 0.0, 0.0]), 1.0);
+        assert_eq!(eval("bx == 2 && by == 8", &[2.0, 8.0, 0.0]), 1.0);
+        assert_eq!(eval("bx == 2 and by == 8 or u == 4", &[1.0, 1.0, 4.0]), 1.0);
+        // * binds tighter than ==, == tighter than &&.
+        assert_eq!(eval("bx * by == 32 && u != 1", &[4.0, 8.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn unary_and_funcs() {
+        assert_eq!(eval("!(bx == 2)", &[2.0, 0.0, 0.0]), 0.0);
+        assert_eq!(eval("-bx + 5", &[2.0, 0.0, 0.0]), 3.0);
+        assert_eq!(eval("min(bx, by)", &[4.0, 16.0, 0.0]), 4.0);
+        assert_eq!(eval("max(bx, by)", &[4.0, 16.0, 0.0]), 16.0);
+    }
+
+    #[test]
+    fn modulo_divisibility_pattern() {
+        // The CLBlast-style pattern: "MWG % (MDIMC * VWM) == 0".
+        assert_eq!(eval("by % (bx * 2) == 0", &[4.0, 16.0, 0.0]), 1.0);
+        assert_eq!(eval("by % (bx * 2) == 0", &[4.0, 8.0, 0.0]), 1.0);
+        assert_eq!(eval("by % (bx * 3) == 0", &[4.0, 16.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn max_dim_tracks_last_param() {
+        let c = Constraint::parse("bx * by >= 32", &ps()).unwrap();
+        assert_eq!(c.max_dim, 1);
+        let c = Constraint::parse("u == 0 || bx > 1", &ps()).unwrap();
+        assert_eq!(c.max_dim, 2);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Constraint::parse("unknown_param == 1", &ps()).is_err());
+        assert!(Constraint::parse("bx ==", &ps()).is_err());
+        assert!(Constraint::parse("bx == 1 extra", &ps()).is_err());
+        assert!(Constraint::parse("(bx == 1", &ps()).is_err());
+    }
+
+    #[test]
+    fn word_ops_not_glued() {
+        // "or" must not match the prefix of an identifier.
+        let p = ParamSet::new(vec![Param::ints("order", &[0, 1])]);
+        let c = Constraint::parse("order == 1", &p).unwrap();
+        assert_eq!(c.expr.eval(&[1.0]), 1.0);
+    }
+}

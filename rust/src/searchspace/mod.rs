@@ -1,0 +1,12 @@
+//! Search-space substrate: tunable parameters, constraints, enumeration,
+//! neighbor operations, and the four benchmark space builders (Table 1).
+
+pub mod builder;
+pub mod constraint;
+pub mod param;
+pub mod space;
+
+pub use builder::Application;
+pub use constraint::{Constraint, Expr};
+pub use param::{Param, ParamSet, Value};
+pub use space::{NeighborKind, SearchSpace};

@@ -1,0 +1,171 @@
+//! Tunable parameters and their value domains.
+//!
+//! Mirrors Kernel Tuner's `tune_params`: an ordered dict of parameter name →
+//! list of allowed values. Configurations are stored as *value indices*
+//! (`u16` per dimension) for compactness — the hot loops of the simulator
+//! and optimizers never touch the actual values, only the constraint engine
+//! and performance models do.
+
+use std::fmt;
+
+/// A single tunable value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(&'static str),
+}
+
+impl Value {
+    /// Numeric view used by the constraint engine and performance models
+    /// (bools become 0/1; strings are hashed to a stable small integer).
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::Int(i) => *i as f64,
+            Value::Float(x) => *x,
+            Value::Bool(b) => {
+                if *b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Value::Str(s) => crate::util::rng::fnv1a(s.as_bytes()) as u32 as f64,
+        }
+    }
+
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            Value::Int(i) => *i,
+            Value::Float(x) => *x as i64,
+            Value::Bool(b) => *b as i64,
+            Value::Str(_) => self.as_f64() as i64,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{}", i),
+            Value::Float(x) => write!(f, "{}", x),
+            Value::Bool(b) => write!(f, "{}", *b as u8),
+            Value::Str(s) => write!(f, "{}", s),
+        }
+    }
+}
+
+/// A tunable parameter: a name and its ordered value domain.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub values: Vec<Value>,
+}
+
+impl Param {
+    pub fn ints(name: &str, values: &[i64]) -> Param {
+        Param {
+            name: name.to_string(),
+            values: values.iter().map(|&v| Value::Int(v)).collect(),
+        }
+    }
+
+    pub fn bools(name: &str) -> Param {
+        Param {
+            name: name.to_string(),
+            values: vec![Value::Bool(false), Value::Bool(true)],
+        }
+    }
+
+    /// Fixed (single-valued) parameter — BAT pins several CLBlast tunables.
+    pub fn fixed(name: &str, value: i64) -> Param {
+        Param::ints(name, &[value])
+    }
+
+    pub fn cardinality(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// An ordered parameter set; owns the name → dimension resolution.
+#[derive(Debug, Clone, Default)]
+pub struct ParamSet {
+    pub params: Vec<Param>,
+}
+
+impl ParamSet {
+    pub fn new(params: Vec<Param>) -> ParamSet {
+        ParamSet { params }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Cartesian (unconstrained) size of the space.
+    pub fn cartesian_size(&self) -> u64 {
+        self.params.iter().map(|p| p.cardinality() as u64).product()
+    }
+
+    /// Numeric value of dimension `dim` at value-index `vi`.
+    #[inline]
+    pub fn value_f64(&self, dim: usize, vi: u16) -> f64 {
+        self.params[dim].values[vi as usize].as_f64()
+    }
+
+    /// Render a config (value indices) as `name=value` pairs.
+    pub fn describe(&self, cfg: &[u16]) -> String {
+        cfg.iter()
+            .enumerate()
+            .map(|(d, &vi)| {
+                format!("{}={}", self.params[d].name, self.params[d].values[vi as usize])
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_size_is_product() {
+        let ps = ParamSet::new(vec![
+            Param::ints("a", &[1, 2, 3]),
+            Param::bools("b"),
+            Param::fixed("c", 32),
+        ]);
+        assert_eq!(ps.cartesian_size(), 6);
+        assert_eq!(ps.dims(), 3);
+    }
+
+    #[test]
+    fn name_resolution() {
+        let ps = ParamSet::new(vec![Param::ints("x", &[0]), Param::ints("y", &[0])]);
+        assert_eq!(ps.index_of("y"), Some(1));
+        assert_eq!(ps.index_of("z"), None);
+    }
+
+    #[test]
+    fn value_views() {
+        assert_eq!(Value::Int(7).as_f64(), 7.0);
+        assert_eq!(Value::Bool(true).as_f64(), 1.0);
+        assert_eq!(Value::Float(2.5).as_i64(), 2);
+        assert_eq!(format!("{}", Value::Bool(false)), "0");
+    }
+
+    #[test]
+    fn describe_config() {
+        let ps = ParamSet::new(vec![
+            Param::ints("a", &[8, 16]),
+            Param::bools("pad"),
+        ]);
+        assert_eq!(ps.describe(&[1, 0]), "a=16, pad=0");
+    }
+}

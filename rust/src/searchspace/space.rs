@@ -1,0 +1,497 @@
+//! Search space construction and navigation.
+//!
+//! The space is constructed once per (kernel, GPU) pair by depth-first
+//! enumeration of the Cartesian grid with *early constraint evaluation*: a
+//! constraint is checked as soon as its deepest referenced dimension is
+//! assigned, pruning entire subtrees (the approach of Willemsen et al. 2025a
+//! which the paper builds on). Valid configurations are stored in a flat
+//! arena (`u16` value indices) plus a hash index for O(1) membership tests —
+//! the primitive behind the neighbor operations that Kernel Tuner's
+//! `SearchSpace` object exposes to generated optimizers:
+//!   * `get_neighbors` (Hamming / adjacent / strictly-adjacent)
+//!   * `get_random_sample`
+//!   * `repair` of infeasible configurations
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use super::constraint::Constraint;
+use super::param::ParamSet;
+use crate::util::rng::Rng;
+
+/// FxHash-style hasher (no SipHash overhead on the hot membership path).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        const K: u64 = 0x517cc1b727220a95;
+        for &b in bytes {
+            self.hash = (self.hash.rotate_left(5) ^ b as u64).wrapping_mul(K);
+        }
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        const K: u64 = 0x517cc1b727220a95;
+        self.hash = (self.hash.rotate_left(5) ^ i as u64).wrapping_mul(K);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// Neighborhood definitions, mirroring Kernel Tuner's options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NeighborKind {
+    /// Differ in exactly one dimension, any other value of that dimension.
+    Hamming,
+    /// Differ in exactly one dimension by ±1 value-index step.
+    Adjacent,
+    /// Differ in any number of dimensions, each by at most ±1 value-index;
+    /// restricted here to single-dim ±1 plus diagonal two-dim moves kept
+    /// tractable (Kernel Tuner's "strictly-adjacent" cube, sampled).
+    StrictlyAdjacent,
+}
+
+/// A fully constructed, constraint-filtered search space.
+pub struct SearchSpace {
+    pub name: String,
+    pub params: ParamSet,
+    pub constraints: Vec<Constraint>,
+    /// Flat arena: config i occupies `[i*dims, (i+1)*dims)`.
+    data: Vec<u16>,
+    dims: usize,
+    index: HashMap<Box<[u16]>, u32, FxBuildHasher>,
+}
+
+impl SearchSpace {
+    /// Enumerate all valid configurations (DFS with early pruning).
+    pub fn build(name: &str, params: ParamSet, constraint_srcs: &[&str]) -> Result<SearchSpace, String> {
+        let constraints: Vec<Constraint> = constraint_srcs
+            .iter()
+            .map(|s| Constraint::parse(s, &params).map_err(|e| format!("{}: {}", s, e)))
+            .collect::<Result<_, _>>()?;
+        Ok(Self::build_parsed(name, params, constraints))
+    }
+
+    pub fn build_parsed(name: &str, params: ParamSet, constraints: Vec<Constraint>) -> SearchSpace {
+        let dims = params.dims();
+        // Bucket constraints by the dimension at which they become checkable.
+        let mut by_depth: Vec<Vec<&Constraint>> = vec![Vec::new(); dims];
+        for c in &constraints {
+            by_depth[c.max_dim].push(c);
+        }
+
+        let mut data: Vec<u16> = Vec::new();
+        let mut cfg: Vec<u16> = vec![0; dims];
+        let mut vals: Vec<f64> = vec![0.0; dims];
+
+        // Iterative DFS over dimensions.
+        fn dfs(
+            d: usize,
+            dims: usize,
+            params: &ParamSet,
+            by_depth: &[Vec<&Constraint>],
+            cfg: &mut [u16],
+            vals: &mut [f64],
+            data: &mut Vec<u16>,
+        ) {
+            if d == dims {
+                data.extend_from_slice(cfg);
+                return;
+            }
+            for vi in 0..params.params[d].cardinality() {
+                cfg[d] = vi as u16;
+                vals[d] = params.value_f64(d, vi as u16);
+                if by_depth[d].iter().all(|c| c.holds(vals)) {
+                    dfs(d + 1, dims, params, by_depth, cfg, vals, data);
+                }
+            }
+        }
+        dfs(0, dims, &params, &by_depth, &mut cfg, &mut vals, &mut data);
+
+        let n = data.len() / dims.max(1);
+        let mut index: HashMap<Box<[u16]>, u32, FxBuildHasher> =
+            HashMap::with_capacity_and_hasher(n, FxBuildHasher::default());
+        for i in 0..n {
+            index.insert(data[i * dims..(i + 1) * dims].into(), i as u32);
+        }
+
+        SearchSpace {
+            name: name.to_string(),
+            params,
+            constraints,
+            data,
+            dims,
+            index,
+        }
+    }
+
+    /// Number of valid configurations ("constrained size", Table 1).
+    #[inline]
+    pub fn len(&self) -> usize {
+        if self.dims == 0 {
+            0
+        } else {
+            self.data.len() / self.dims
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn cartesian_size(&self) -> u64 {
+        self.params.cartesian_size()
+    }
+
+    /// The configuration at a valid index.
+    #[inline]
+    pub fn config(&self, i: u32) -> &[u16] {
+        let i = i as usize;
+        &self.data[i * self.dims..(i + 1) * self.dims]
+    }
+
+    /// Index of a configuration if it is valid.
+    #[inline]
+    pub fn index_of(&self, cfg: &[u16]) -> Option<u32> {
+        self.index.get(cfg).copied()
+    }
+
+    /// Whether value-index assignment `cfg` satisfies all constraints
+    /// (independent of enumeration — used by property tests and repair).
+    pub fn satisfies_constraints(&self, cfg: &[u16]) -> bool {
+        let vals: Vec<f64> = cfg
+            .iter()
+            .enumerate()
+            .map(|(d, &vi)| self.params.value_f64(d, vi))
+            .collect();
+        self.constraints.iter().all(|c| c.holds(&vals))
+    }
+
+    /// Numeric parameter values of a valid config, by dimension.
+    pub fn values_f64(&self, i: u32) -> Vec<f64> {
+        self.config(i)
+            .iter()
+            .enumerate()
+            .map(|(d, &vi)| self.params.value_f64(d, vi))
+            .collect()
+    }
+
+    /// A uniformly random valid configuration index.
+    #[inline]
+    pub fn random_valid(&self, rng: &mut Rng) -> u32 {
+        rng.below(self.len()) as u32
+    }
+
+    /// Distinct random valid configuration indices (initial populations).
+    pub fn random_sample(&self, rng: &mut Rng, k: usize) -> Vec<u32> {
+        rng.sample_indices(self.len(), k)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Valid neighbors of configuration `i` under `kind`.
+    pub fn neighbors(&self, i: u32, kind: NeighborKind) -> Vec<u32> {
+        let base = self.config(i).to_vec();
+        let mut out = Vec::new();
+        let mut probe = base.clone();
+        match kind {
+            NeighborKind::Hamming => {
+                for d in 0..self.dims {
+                    let orig = base[d];
+                    for vi in 0..self.params.params[d].cardinality() as u16 {
+                        if vi == orig {
+                            continue;
+                        }
+                        probe[d] = vi;
+                        if let Some(j) = self.index_of(&probe) {
+                            out.push(j);
+                        }
+                    }
+                    probe[d] = orig;
+                }
+            }
+            NeighborKind::Adjacent => {
+                for d in 0..self.dims {
+                    let orig = base[d];
+                    let card = self.params.params[d].cardinality() as u16;
+                    if orig > 0 {
+                        probe[d] = orig - 1;
+                        if let Some(j) = self.index_of(&probe) {
+                            out.push(j);
+                        }
+                    }
+                    if orig + 1 < card {
+                        probe[d] = orig + 1;
+                        if let Some(j) = self.index_of(&probe) {
+                            out.push(j);
+                        }
+                    }
+                    probe[d] = orig;
+                }
+            }
+            NeighborKind::StrictlyAdjacent => {
+                // All single-dim ±1 moves plus two-dim diagonal ±1 moves.
+                out = self.neighbors(i, NeighborKind::Adjacent);
+                for d1 in 0..self.dims {
+                    for d2 in (d1 + 1)..self.dims {
+                        for s1 in [-1i32, 1] {
+                            for s2 in [-1i32, 1] {
+                                let v1 = base[d1] as i32 + s1;
+                                let v2 = base[d2] as i32 + s2;
+                                if v1 < 0
+                                    || v2 < 0
+                                    || v1 >= self.params.params[d1].cardinality() as i32
+                                    || v2 >= self.params.params[d2].cardinality() as i32
+                                {
+                                    continue;
+                                }
+                                probe[d1] = v1 as u16;
+                                probe[d2] = v2 as u16;
+                                if let Some(j) = self.index_of(&probe) {
+                                    out.push(j);
+                                }
+                                probe[d1] = base[d1];
+                                probe[d2] = base[d2];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// A uniformly random valid Hamming neighbor, if any (fast path used in
+    /// optimizer inner loops — avoids materializing the full neighbor list).
+    pub fn random_neighbor(&self, i: u32, rng: &mut Rng, kind: NeighborKind) -> Option<u32> {
+        // Try a few random single-dim perturbations before falling back to
+        // the exhaustive list.
+        let base = self.config(i).to_vec();
+        let mut probe = base.clone();
+        for _ in 0..8 {
+            let d = rng.below(self.dims);
+            let card = self.params.params[d].cardinality() as u16;
+            if card <= 1 {
+                continue;
+            }
+            let nv = match kind {
+                NeighborKind::Hamming => {
+                    let mut v = rng.below(card as usize) as u16;
+                    if v == base[d] {
+                        v = (v + 1) % card;
+                    }
+                    v
+                }
+                _ => {
+                    let delta: i32 = if rng.chance(0.5) { 1 } else { -1 };
+                    let v = base[d] as i32 + delta;
+                    if v < 0 || v >= card as i32 {
+                        continue;
+                    }
+                    v as u16
+                }
+            };
+            probe[d] = nv;
+            if let Some(j) = self.index_of(&probe) {
+                return Some(j);
+            }
+            probe[d] = base[d];
+        }
+        let all = self.neighbors(i, kind);
+        if all.is_empty() {
+            None
+        } else {
+            Some(*rng.choose(&all))
+        }
+    }
+
+    /// Repair an arbitrary value-index assignment to a valid configuration:
+    /// exact if already valid, otherwise the valid configuration found by
+    /// randomized coordinate snapping, falling back to a random valid config.
+    pub fn repair(&self, cfg: &[u16], rng: &mut Rng) -> u32 {
+        debug_assert_eq!(cfg.len(), self.dims);
+        let mut probe: Vec<u16> = cfg
+            .iter()
+            .enumerate()
+            .map(|(d, &vi)| vi.min(self.params.params[d].cardinality() as u16 - 1))
+            .collect();
+        if let Some(i) = self.index_of(&probe) {
+            return i;
+        }
+        // Randomized coordinate repair: re-sample one dimension at a time.
+        let mut order: Vec<usize> = (0..self.dims).collect();
+        rng.shuffle(&mut order);
+        for &d in &order {
+            let orig = probe[d];
+            let card = self.params.params[d].cardinality() as u16;
+            // Nearest-first sweep over the dimension's values.
+            for radius in 1..card {
+                for cand in [orig.wrapping_sub(radius), orig + radius] {
+                    if cand >= card {
+                        continue;
+                    }
+                    probe[d] = cand;
+                    if let Some(i) = self.index_of(&probe) {
+                        return i;
+                    }
+                }
+            }
+            probe[d] = orig;
+        }
+        // Two-dimension randomized repair.
+        for _ in 0..64 {
+            let d1 = rng.below(self.dims);
+            let d2 = rng.below(self.dims);
+            let (o1, o2) = (probe[d1], probe[d2]);
+            probe[d1] = rng.below(self.params.params[d1].cardinality()) as u16;
+            probe[d2] = rng.below(self.params.params[d2].cardinality()) as u16;
+            if let Some(i) = self.index_of(&probe) {
+                return i;
+            }
+            probe[d1] = o1;
+            probe[d2] = o2;
+        }
+        self.random_valid(rng)
+    }
+
+    /// Hamming distance between two valid configurations.
+    pub fn hamming(&self, a: u32, b: u32) -> usize {
+        self.config(a)
+            .iter()
+            .zip(self.config(b))
+            .filter(|(x, y)| x != y)
+            .count()
+    }
+
+    /// Iterate all valid configuration indices.
+    pub fn iter_indices(&self) -> impl Iterator<Item = u32> + '_ {
+        0..self.len() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::searchspace::param::{Param, ParamSet};
+
+    fn toy() -> SearchSpace {
+        let ps = ParamSet::new(vec![
+            Param::ints("bx", &[1, 2, 4, 8, 16, 32]),
+            Param::ints("by", &[8, 16, 32]),
+            Param::ints("pad", &[0, 1]),
+        ]);
+        SearchSpace::build(
+            "toy",
+            ps,
+            &["bx * by >= 32", "bx * by <= 256", "pad == 0 || bx > 1"],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn enumeration_matches_bruteforce() {
+        let s = toy();
+        // Brute force count.
+        let mut n = 0;
+        for bx in [1, 2, 4, 8, 16, 32] {
+            for by in [8, 16, 32] {
+                for pad in [0, 1] {
+                    if bx * by >= 32 && bx * by <= 256 && (pad == 0 || bx > 1) {
+                        n += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(s.len(), n);
+        assert_eq!(s.cartesian_size(), 36);
+    }
+
+    #[test]
+    fn all_enumerated_satisfy_constraints() {
+        let s = toy();
+        for i in s.iter_indices() {
+            assert!(s.satisfies_constraints(s.config(i)));
+        }
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let s = toy();
+        for i in s.iter_indices() {
+            assert_eq!(s.index_of(s.config(i)), Some(i));
+        }
+        assert_eq!(s.index_of(&[0, 0, 1]), None); // bx=1,by=8 violates >=32
+    }
+
+    #[test]
+    fn hamming_neighbors_differ_in_one_dim() {
+        let s = toy();
+        for i in s.iter_indices().take(10) {
+            for j in s.neighbors(i, NeighborKind::Hamming) {
+                assert_eq!(s.hamming(i, j), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_subset_of_hamming() {
+        let s = toy();
+        for i in s.iter_indices() {
+            let h: std::collections::HashSet<u32> =
+                s.neighbors(i, NeighborKind::Hamming).into_iter().collect();
+            for j in s.neighbors(i, NeighborKind::Adjacent) {
+                assert!(h.contains(&j));
+            }
+        }
+    }
+
+    #[test]
+    fn repair_returns_valid() {
+        let s = toy();
+        let mut rng = Rng::new(1);
+        // (bx=1, by=8, pad=1) is invalid two ways.
+        let i = s.repair(&[0, 0, 1], &mut rng);
+        assert!(s.satisfies_constraints(s.config(i)));
+        // Valid configs repair to themselves.
+        let j = s.index_of(&[2, 1, 0]).unwrap();
+        assert_eq!(s.repair(&[2, 1, 0], &mut rng), j);
+    }
+
+    #[test]
+    fn random_neighbor_is_neighbor() {
+        let s = toy();
+        let mut rng = Rng::new(2);
+        for i in s.iter_indices() {
+            if let Some(j) = s.random_neighbor(i, &mut rng, NeighborKind::Hamming) {
+                assert_eq!(s.hamming(i, j), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn strictly_adjacent_includes_diagonals() {
+        let s = toy();
+        let any_diag = s.iter_indices().any(|i| {
+            s.neighbors(i, NeighborKind::StrictlyAdjacent)
+                .iter()
+                .any(|&j| s.hamming(i, j) == 2)
+        });
+        assert!(any_diag);
+    }
+}

@@ -1,0 +1,307 @@
+//! Pre-exhaustively-explored search spaces ("simulation mode").
+//!
+//! The paper accelerates optimizer evaluation by replaying cachefiles of
+//! exhaustively benchmarked search spaces instead of recompiling/running
+//! kernels. `Cache` is our equivalent: the performance model is evaluated
+//! once for every valid configuration of a (kernel, GPU) pair; optimizers
+//! then see only (config -> noisy runtime) lookups plus simulated
+//! compile/run wall-clock accounting — exactly the interface the real
+//! system has.
+
+use std::sync::Arc;
+
+use crate::kernels::gpu::GpuSpec;
+use crate::kernels::{model_for, space_salt, KernelModel};
+use crate::searchspace::{Application, SearchSpace};
+use crate::util::rng::{hash_config, hash_normal};
+
+/// Exhaustive evaluation of one (application, GPU) search space.
+pub struct Cache {
+    pub space: Arc<SearchSpace>,
+    pub app: Application,
+    pub gpu: &'static GpuSpec,
+    /// Mean runtime per valid config, ms; +inf marks hidden-failure configs.
+    pub mean_ms: Vec<f32>,
+    /// Simulated compile time per config, seconds.
+    pub compile_s: Vec<f32>,
+    /// Global optimum of `mean_ms` (ms).
+    pub optimum_ms: f64,
+    /// Median of the successful configs (ms).
+    pub median_ms: f64,
+    /// Mean evaluation cost (compile + benchmark runs) over the space, s —
+    /// the expected cost of one random-search step.
+    pub mean_eval_cost_s: f64,
+    /// Salt keying the deterministic noise streams of this space.
+    pub salt: u64,
+}
+
+/// Number of benchmark repetitions Kernel Tuner performs per configuration.
+pub const RUNS_PER_EVAL: u32 = 7;
+/// Relative measurement noise per benchmark run (lognormal sigma).
+pub const MEASUREMENT_SIGMA: f64 = 0.04;
+/// Wall-clock cost charged for a failed (crashing) configuration, seconds.
+pub const FAILURE_COST_S: f64 = 1.0;
+
+impl Cache {
+    /// Build by exhaustively evaluating the model over the space.
+    pub fn build(app: Application, gpu: &'static GpuSpec) -> Cache {
+        let space = Arc::new(app.build_space());
+        Self::build_with_space(app, gpu, space)
+    }
+
+    /// Build against an existing (shared) space — the space enumeration is
+    /// the expensive part for hotspot, so callers batch-share it.
+    pub fn build_with_space(
+        app: Application,
+        gpu: &'static GpuSpec,
+        space: Arc<SearchSpace>,
+    ) -> Cache {
+        let model: Box<dyn KernelModel> = model_for(app, &space.params);
+        let salt = space_salt(app, gpu);
+        let n = space.len();
+        let mut mean_ms = Vec::with_capacity(n);
+        let mut compile_s = Vec::with_capacity(n);
+        let mut vals = vec![0.0f64; space.dims()];
+        for i in space.iter_indices() {
+            let cfg = space.config(i);
+            for (d, &vi) in cfg.iter().enumerate() {
+                vals[d] = space.params.value_f64(d, vi);
+            }
+            let t = model.runtime_ms(&vals, gpu, salt);
+            mean_ms.push(t.map(|t| t as f32).unwrap_or(f32::INFINITY));
+            // Compile time: deterministic lognormal around the device mean,
+            // inflated by unrolling-heavy configurations (more code).
+            let h = hash_config(salt ^ 0xC0817E, cfg);
+            let z = hash_normal(h);
+            compile_s.push((gpu.compile_time_s * (0.35 * z).exp()) as f32);
+        }
+
+        let mut ok: Vec<f64> = mean_ms
+            .iter()
+            .filter(|t| t.is_finite())
+            .map(|&t| t as f64)
+            .collect();
+        ok.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(!ok.is_empty(), "no runnable configuration in {}", space.name);
+        let optimum_ms = ok[0];
+        let median_ms = ok[ok.len() / 2];
+        let mean_eval_cost_s = {
+            let mut total = 0.0;
+            for i in 0..n {
+                total += compile_s[i] as f64
+                    + if mean_ms[i].is_finite() {
+                        RUNS_PER_EVAL as f64 * mean_ms[i] as f64 * 1e-3
+                    } else {
+                        FAILURE_COST_S
+                    };
+            }
+            total / n as f64
+        };
+
+        Cache {
+            space,
+            app,
+            gpu,
+            mean_ms,
+            compile_s,
+            optimum_ms,
+            median_ms,
+            mean_eval_cost_s,
+            salt,
+        }
+    }
+
+    /// Assemble a cache from *real* measurements (the PJRT measured-tuning
+    /// path, `crate::runtime::measured`): entries are wall-clock means; the
+    /// application tag is taken from the space name's prefix when it
+    /// matches a known application, defaulting to GEMM.
+    pub fn from_measured(
+        space: Arc<SearchSpace>,
+        mean_ms: Vec<f32>,
+        compile_s: Vec<f32>,
+        salt: u64,
+    ) -> Cache {
+        assert_eq!(mean_ms.len(), space.len());
+        assert_eq!(compile_s.len(), space.len());
+        let app = Application::ALL
+            .iter()
+            .copied()
+            .find(|a| space.name.starts_with(a.name()))
+            .unwrap_or(Application::Gemm);
+        let mut ok: Vec<f64> = mean_ms
+            .iter()
+            .filter(|t| t.is_finite())
+            .map(|&t| t as f64)
+            .collect();
+        ok.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(!ok.is_empty(), "no successful measurement");
+        let optimum_ms = ok[0];
+        let median_ms = ok[ok.len() / 2];
+        let n = mean_ms.len();
+        let mean_eval_cost_s = (0..n)
+            .map(|i| {
+                compile_s[i] as f64
+                    + if mean_ms[i].is_finite() {
+                        RUNS_PER_EVAL as f64 * mean_ms[i] as f64 * 1e-3
+                    } else {
+                        FAILURE_COST_S
+                    }
+            })
+            .sum::<f64>()
+            / n as f64;
+        Cache {
+            space,
+            app,
+            gpu: &crate::kernels::gpu::CPU_HOST,
+            mean_ms,
+            compile_s,
+            optimum_ms,
+            median_ms,
+            mean_eval_cost_s,
+            salt,
+        }
+    }
+
+    /// Human-readable space identifier, e.g. `gemm@A100`.
+    pub fn id(&self) -> String {
+        format!("{}@{}", self.app.name(), self.gpu.name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.mean_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean_ms.is_empty()
+    }
+
+    /// True mean runtime of config `i` (ms), or None for failure configs.
+    #[inline]
+    pub fn true_mean_ms(&self, i: u32) -> Option<f64> {
+        let t = self.mean_ms[i as usize];
+        t.is_finite().then_some(t as f64)
+    }
+
+    /// One noisy benchmark observation of config `i` (ms). `draw` indexes
+    /// the observation so repeated measurements differ deterministically.
+    #[inline]
+    pub fn observe_ms(&self, i: u32, draw: u64) -> Option<f64> {
+        let t = self.mean_ms[i as usize];
+        if !t.is_finite() {
+            return None;
+        }
+        let h = hash_config(self.salt ^ draw.wrapping_mul(0x9E3779B97F4A7C15), self.space.config(i));
+        Some(t as f64 * (MEASUREMENT_SIGMA * hash_normal(h)).exp())
+    }
+
+    /// Simulated wall-clock cost of evaluating config `i` once (compile +
+    /// benchmark repetitions), seconds.
+    #[inline]
+    pub fn eval_cost_s(&self, i: u32) -> f64 {
+        let compile = self.compile_s[i as usize] as f64;
+        let t = self.mean_ms[i as usize];
+        if t.is_finite() {
+            compile + RUNS_PER_EVAL as f64 * t as f64 * 1e-3
+        } else {
+            compile + FAILURE_COST_S
+        }
+    }
+
+    /// Sorted successful runtimes (ascending, ms) — the objective-value
+    /// distribution used by the calculated random-search baseline.
+    pub fn sorted_times(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self
+            .mean_ms
+            .iter()
+            .filter(|t| t.is_finite())
+            .map(|&t| t as f64)
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+}
+
+/// Build the full 24-cache evaluation set (4 applications x 6 GPUs),
+/// sharing each application's space across its 6 GPU caches.
+pub fn build_all_caches() -> Vec<Cache> {
+    use crate::kernels::gpu::ALL_GPUS;
+    let mut out = Vec::with_capacity(24);
+    for app in Application::ALL {
+        let space = Arc::new(app.build_space());
+        for gpu in ALL_GPUS.iter() {
+            out.push(Cache::build_with_space(app, gpu, Arc::clone(&space)));
+        }
+    }
+    out
+}
+
+/// Caches for the training set (generation phase) or test set.
+pub fn build_caches_for(gpu_names: &[&str]) -> Vec<Cache> {
+    use crate::kernels::gpu::GpuSpec;
+    let mut out = Vec::new();
+    for app in Application::ALL {
+        let space = Arc::new(app.build_space());
+        for name in gpu_names {
+            let gpu = GpuSpec::by_name(name).expect("unknown GPU");
+            out.push(Cache::build_with_space(app, gpu, Arc::clone(&space)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gpu::GpuSpec;
+
+    fn small_cache() -> Cache {
+        Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap())
+    }
+
+    #[test]
+    fn cache_covers_space() {
+        let c = small_cache();
+        assert_eq!(c.len(), c.space.len());
+        assert!(c.optimum_ms > 0.0);
+        assert!(c.median_ms > c.optimum_ms);
+    }
+
+    #[test]
+    fn observations_are_noisy_but_deterministic() {
+        let c = small_cache();
+        let i = 10u32;
+        if let Some(t) = c.true_mean_ms(i) {
+            let a = c.observe_ms(i, 0).unwrap();
+            let b = c.observe_ms(i, 1).unwrap();
+            assert_ne!(a, b);
+            assert_eq!(a, c.observe_ms(i, 0).unwrap());
+            assert!((a / t - 1.0).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn eval_cost_includes_compile_and_runs() {
+        let c = small_cache();
+        for i in 0..20u32 {
+            let cost = c.eval_cost_s(i);
+            assert!(cost > 0.5, "cost {}", cost); // at least compile time
+        }
+        assert!(c.mean_eval_cost_s > 0.5);
+    }
+
+    #[test]
+    fn failures_present_but_rare() {
+        let c = small_cache();
+        let failures = c.mean_ms.iter().filter(|t| !t.is_finite()).count();
+        let rate = failures as f64 / c.len() as f64;
+        assert!(rate > 0.0 && rate < 0.12, "failure rate {}", rate);
+    }
+
+    #[test]
+    fn sorted_times_ascending() {
+        let c = small_cache();
+        let s = c.sorted_times();
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(s[0], c.optimum_ms);
+    }
+}

@@ -1,0 +1,207 @@
+//! The evaluation context handed to optimization algorithms.
+//!
+//! `TuningContext` plays the role of Kernel Tuner's runner + cost function:
+//! it owns the simulated wall clock (compile + benchmark time per unique
+//! configuration, near-zero for cache hits), deduplicates repeated
+//! evaluations, tracks the best-found trajectory over time (the input to
+//! the methodology's performance curves), and exposes the time budget that
+//! generated algorithms consult via `budget_spent_fraction` — mirroring
+//! `f.budget_spent_fraction` in the paper's Algorithm 1.
+
+use std::collections::HashMap;
+
+use super::cache::{Cache, RUNS_PER_EVAL};
+use crate::searchspace::space::FxBuildHasher;
+use crate::searchspace::SearchSpace;
+use crate::util::rng::Rng;
+
+/// Wall-clock charged for a strategy step that hits the evaluation cache
+/// (config already measured): bookkeeping only, but non-zero so degenerate
+/// strategies cannot spin forever inside a fixed budget.
+pub const CACHED_EVAL_COST_S: f64 = 0.05;
+
+/// Hard safety cap on evaluate() calls per run (simulation guard).
+pub const MAX_EVAL_CALLS: u64 = 2_000_000;
+
+/// One tuning run's evaluation state.
+pub struct TuningContext<'a> {
+    pub cache: &'a Cache,
+    pub rng: Rng,
+    clock_s: f64,
+    budget_s: f64,
+    eval_calls: u64,
+    unique_evals: u64,
+    seen: HashMap<u32, Option<f64>, FxBuildHasher>,
+    best_ms: f64,
+    best_idx: Option<u32>,
+    /// (wall-clock seconds, best-so-far ms) at each improvement.
+    pub trajectory: Vec<(f64, f64)>,
+}
+
+impl<'a> TuningContext<'a> {
+    pub fn new(cache: &'a Cache, budget_s: f64, seed: u64) -> TuningContext<'a> {
+        TuningContext {
+            cache,
+            rng: Rng::new(seed),
+            clock_s: 0.0,
+            budget_s,
+            eval_calls: 0,
+            unique_evals: 0,
+            seen: HashMap::with_hasher(FxBuildHasher::default()),
+            best_ms: f64::INFINITY,
+            best_idx: None,
+            trajectory: Vec::new(),
+        }
+    }
+
+    /// The search space (borrowed at the cache's lifetime, so callers can
+    /// hold it while mutably using `self.rng` / `evaluate`).
+    #[inline]
+    pub fn space(&self) -> &'a SearchSpace {
+        &self.cache.space
+    }
+
+    /// Evaluate configuration `i`; returns the observed mean runtime in ms
+    /// (`None` for crashing configurations). Charges simulated wall-clock:
+    /// full compile+benchmark cost for new configurations, a bookkeeping
+    /// epsilon for repeats.
+    pub fn evaluate(&mut self, i: u32) -> Option<f64> {
+        self.eval_calls += 1;
+        if let Some(&v) = self.seen.get(&i) {
+            self.clock_s += CACHED_EVAL_COST_S;
+            return v;
+        }
+        self.clock_s += self.cache.eval_cost_s(i);
+        self.unique_evals += 1;
+        // Observed value: mean over the benchmark repetitions.
+        let value = self.cache.true_mean_ms(i).map(|_| {
+            let mut sum = 0.0;
+            let base = self.unique_evals.wrapping_mul(RUNS_PER_EVAL as u64 + 1);
+            for r in 0..RUNS_PER_EVAL as u64 {
+                sum += self.cache.observe_ms(i, base + r).unwrap();
+            }
+            sum / RUNS_PER_EVAL as f64
+        });
+        self.seen.insert(i, value);
+        if let Some(v) = value {
+            if v < self.best_ms {
+                self.best_ms = v;
+                self.best_idx = Some(i);
+                self.trajectory.push((self.clock_s, v));
+            }
+        }
+        value
+    }
+
+    /// True when the time budget (or the call-count safety cap) is spent.
+    #[inline]
+    pub fn budget_exhausted(&self) -> bool {
+        self.clock_s >= self.budget_s || self.eval_calls >= MAX_EVAL_CALLS
+    }
+
+    /// Fraction of the time budget consumed, clamped to [0, 1].
+    #[inline]
+    pub fn budget_spent_fraction(&self) -> f64 {
+        (self.clock_s / self.budget_s).min(1.0)
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    pub fn budget_s(&self) -> f64 {
+        self.budget_s
+    }
+
+    /// Best configuration found so far with its observed runtime.
+    pub fn best(&self) -> Option<(u32, f64)> {
+        self.best_idx.map(|i| (i, self.best_ms))
+    }
+
+    pub fn unique_evals(&self) -> u64 {
+        self.unique_evals
+    }
+
+    pub fn eval_calls(&self) -> u64 {
+        self.eval_calls
+    }
+
+    /// Whether `i` has been evaluated already (tabu-style checks).
+    pub fn already_evaluated(&self, i: u32) -> bool {
+        self.seen.contains_key(&i)
+    }
+
+    /// Observed value of an already-evaluated config (no time charged).
+    pub fn peek(&self, i: u32) -> Option<Option<f64>> {
+        self.seen.get(&i).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::searchspace::Application;
+
+    fn ctx_cache() -> Cache {
+        Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap())
+    }
+
+    #[test]
+    fn clock_advances_and_dedup_is_cheap() {
+        let cache = ctx_cache();
+        let mut ctx = TuningContext::new(&cache, 1e9, 1);
+        let t0 = ctx.elapsed_s();
+        ctx.evaluate(0);
+        let t1 = ctx.elapsed_s();
+        assert!(t1 > t0 + 0.1); // compile time at least
+        ctx.evaluate(0);
+        let t2 = ctx.elapsed_s();
+        assert!(t2 - t1 < CACHED_EVAL_COST_S + 1e-9); // cached
+        assert_eq!(ctx.unique_evals(), 1);
+        assert_eq!(ctx.eval_calls(), 2);
+    }
+
+    #[test]
+    fn best_tracks_improvements_only() {
+        let cache = ctx_cache();
+        let mut ctx = TuningContext::new(&cache, 1e9, 2);
+        for i in 0..100u32 {
+            ctx.evaluate(i);
+        }
+        let (best_i, best_v) = ctx.best().unwrap();
+        // Trajectory is strictly decreasing in value, increasing in time.
+        let tr = &ctx.trajectory;
+        assert!(tr.windows(2).all(|w| w[1].1 < w[0].1 && w[1].0 >= w[0].0));
+        assert_eq!(tr.last().unwrap().1, best_v);
+        assert!(ctx.peek(best_i).unwrap().unwrap() == best_v);
+    }
+
+    #[test]
+    fn budget_exhaustion() {
+        let cache = ctx_cache();
+        let mut ctx = TuningContext::new(&cache, 10.0, 3);
+        let mut n = 0;
+        while !ctx.budget_exhausted() {
+            ctx.evaluate(n);
+            n += 1;
+        }
+        assert!(ctx.elapsed_s() >= 10.0);
+        assert!(ctx.budget_spent_fraction() >= 1.0 - 1e-12);
+        assert!(n < 100, "budget should bound evals, got {}", n);
+    }
+
+    #[test]
+    fn observed_values_reproducible_per_seed() {
+        let cache = ctx_cache();
+        let a = {
+            let mut ctx = TuningContext::new(&cache, 1e9, 7);
+            (0..20u32).filter_map(|i| ctx.evaluate(i)).sum::<f64>()
+        };
+        let b = {
+            let mut ctx = TuningContext::new(&cache, 1e9, 7);
+            (0..20u32).filter_map(|i| ctx.evaluate(i)).sum::<f64>()
+        };
+        assert_eq!(a, b);
+    }
+}

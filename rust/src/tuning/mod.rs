@@ -1,0 +1,8 @@
+//! Tuning substrate: the pre-explored evaluation caches ("simulation mode")
+//! and the budgeted evaluation context handed to optimization algorithms.
+
+pub mod cache;
+pub mod evaluator;
+
+pub use cache::{build_all_caches, build_caches_for, Cache};
+pub use evaluator::TuningContext;

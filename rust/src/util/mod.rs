@@ -1,0 +1,10 @@
+//! Shared utilities: PRNG, statistics, JSON/table rendering, property tests.
+//!
+//! The offline build environment provides no `rand`, `serde`, `criterion` or
+//! `proptest`; these modules are small, tested substitutes (see DESIGN.md §3).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,80 @@
+//! Mini property-based testing framework (offline `proptest` substitute).
+//!
+//! Usage:
+//! ```ignore
+//! check("neighbors are symmetric", 256, |rng| {
+//!     let i = rng.below(space.len());
+//!     ... assertions ...
+//! });
+//! ```
+//! Each case gets a deterministic per-case RNG; on failure the panic message
+//! includes the reproducing case seed so `check_one(seed, ...)` replays it.
+
+use super::rng::Rng;
+
+/// Run `cases` randomized cases of `property`. Panics (with the failing
+/// case seed) on the first assertion failure inside `property`.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u64, property: F) {
+    check_seeded(name, 0xC0FFEE, cases, property)
+}
+
+/// As [`check`] but with an explicit base seed.
+pub fn check_seeded<F: Fn(&mut Rng)>(name: &str, base_seed: u64, cases: u64, property: F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            property(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{}' failed at case {}/{} (replay: check_one({:#x})): {}",
+                name, case, cases, seed, msg
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its seed.
+pub fn check_one<F: Fn(&mut Rng)>(seed: u64, property: F) {
+    let mut rng = Rng::new(seed);
+    property(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0u64;
+        check("count", 10, |_| {});
+        // `check` takes Fn, so count via a Cell instead.
+        let counter = std::cell::Cell::new(0u64);
+        check("count2", 10, |_| counter.set(counter.get() + 1));
+        n += counter.get();
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |rng| {
+            assert!(rng.f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        let a = std::cell::Cell::new(0u64);
+        check("det", 5, |rng| a.set(a.get() ^ rng.next_u64()));
+        let b = std::cell::Cell::new(0u64);
+        check("det", 5, |rng| b.set(b.get() ^ rng.next_u64()));
+        assert_eq!(a.get(), b.get());
+    }
+}

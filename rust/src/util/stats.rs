@@ -1,0 +1,157 @@
+//! Descriptive statistics used by the evaluation methodology and reports.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0.0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile of *unsorted* data, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Linear-interpolated percentile of pre-sorted ascending data.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median of unsorted data.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Half-width of the 95% normal-approximation confidence interval of the
+/// mean (1.96 * sigma / sqrt(n)); the shaded bands of Figs 6 and 8.
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.959964 * std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Index of the minimum (first on ties); None for empty input.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+}
+
+/// Running minimum (prefix-min) of a sequence.
+pub fn running_min(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut best = f64::INFINITY;
+    for &x in xs {
+        best = best.min(x);
+        out.push(best);
+    }
+    out
+}
+
+/// Mean of per-position values across equal-length rows (curve aggregation,
+/// Eq. (3) inner sum). Panics if rows have differing lengths.
+pub fn mean_curve(rows: &[Vec<f64>]) -> Vec<f64> {
+    if rows.is_empty() {
+        return Vec::new();
+    }
+    let n = rows[0].len();
+    let mut out = vec![0.0; n];
+    for row in rows {
+        assert_eq!(row.len(), n, "curve length mismatch");
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    for o in &mut out {
+        *o /= rows.len() as f64;
+    }
+    out
+}
+
+/// Per-position 95% CI half-widths across rows.
+pub fn ci95_curve(rows: &[Vec<f64>]) -> Vec<f64> {
+    if rows.is_empty() {
+        return Vec::new();
+    }
+    let n = rows[0].len();
+    (0..n)
+        .map(|i| {
+            let col: Vec<f64> = rows.iter().map(|r| r[i]).collect();
+            ci95_half_width(&col)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_min_monotone() {
+        let r = running_min(&[5.0, 3.0, 4.0, 1.0, 2.0]);
+        assert_eq!(r, vec![5.0, 3.0, 3.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn curve_aggregation() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(mean_curve(&rows), vec![2.0, 3.0]);
+        assert_eq!(ci95_curve(&rows).len(), 2);
+    }
+
+    #[test]
+    fn argmin_handles_nan() {
+        assert_eq!(argmin(&[f64::NAN, 2.0, 1.0]), Some(2));
+        assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        assert!(ci95_half_width(&b) < ci95_half_width(&a));
+    }
+}

@@ -1,0 +1,53 @@
+//! Integration: the full LLaMEA loop produces optimizers that work on
+//! held-out spaces, and the with-info condition helps on average.
+
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::llamea::{evolve, EvolutionConfig, GenomeOptimizer, MockLlm, SpaceInfo};
+use llamea_kt::methodology::{run_many, FnFactory, SpaceSetup};
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::Cache;
+use llamea_kt::util::stats;
+
+#[test]
+fn evolved_optimizer_transfers_to_unseen_gpu() {
+    let app = Application::Convolution;
+    let space = std::sync::Arc::new(app.build_space());
+    let train: Vec<Cache> = ["A100", "A4000"]
+        .iter()
+        .map(|g| Cache::build_with_space(app, GpuSpec::by_name(g).unwrap(), space.clone()))
+        .collect();
+    let setups: Vec<SpaceSetup> = train.iter().map(SpaceSetup::new).collect();
+    let info = SpaceInfo::from_cache(&train[0], &setups[0]);
+    let mut config = EvolutionConfig::paper_defaults(app.name(), Some(info));
+    config.llm_call_budget = 24;
+    config.eval_runs = 3;
+    let result = evolve(&config, &mut MockLlm::new(3), &train, 3);
+    assert!(result.best.fitness > 0.0, "train fitness {}", result.best.fitness);
+
+    // Held-out: unseen AMD GPU.
+    let test = Cache::build_with_space(app, GpuSpec::by_name("W7800").unwrap(), space);
+    let setup = SpaceSetup::new(&test);
+    let genome = result.best.genome.clone();
+    let factory = FnFactory {
+        f: move || Box::new(GenomeOptimizer::new(genome.clone()))
+            as Box<dyn llamea_kt::optimizers::Optimizer>,
+        name: "evolved".into(),
+    };
+    let curves = run_many(&test, &setup, &factory, 20, 17);
+    let score = stats::mean(&stats::mean_curve(&curves));
+    assert!(score > 0.0, "held-out score {:+.3}", score);
+}
+
+#[test]
+fn token_accounting_is_complete() {
+    let app = Application::Dedispersion;
+    let caches = vec![Cache::build(app, GpuSpec::by_name("A4000").unwrap())];
+    let mut config = EvolutionConfig::paper_defaults(app.name(), None);
+    config.llm_call_budget = 15;
+    config.eval_runs = 2;
+    let result = evolve(&config, &mut MockLlm::new(9), &caches, 1);
+    assert_eq!(result.llm_calls, 15);
+    // Every call contributes prompt tokens; totals must dominate call count.
+    assert!(result.tokens.prompt_tokens >= 15 * 50);
+    assert!(result.tokens.completion_tokens > 0);
+}

@@ -1,0 +1,75 @@
+//! Integration: the methodology end-to-end — budgets, curves, aggregation
+//! — behaves per the paper's definitions on real caches.
+
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::methodology::{aggregate, run_many, Baseline, NamedFactory, SpaceSetup};
+use llamea_kt::optimizers::Optimizer;
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::Cache;
+
+#[test]
+fn random_search_scores_near_zero_on_average() {
+    // Definitional property: the baseline IS expected random search, so
+    // random search must aggregate to ~0 over enough runs.
+    let cache = Cache::build(Application::Hotspot, GpuSpec::by_name("A100").unwrap());
+    let setup = SpaceSetup::new(&cache);
+    let curves = run_many(&cache, &setup, &NamedFactory("random".into()), 60, 5);
+    let agg = aggregate(&[curves]);
+    assert!(agg.score.abs() < 0.15, "random scored {:+.3}", agg.score);
+}
+
+#[test]
+fn budgets_scale_with_eval_cost() {
+    // A GPU with slower kernels (W6600) must get a longer absolute budget
+    // for the same application than a fast one when per-eval cost grows.
+    let a100 = Cache::build(Application::Convolution, GpuSpec::by_name("A100").unwrap());
+    let w6600 = Cache::build(Application::Convolution, GpuSpec::by_name("W6600").unwrap());
+    assert!(w6600.mean_eval_cost_s > a100.mean_eval_cost_s);
+}
+
+#[test]
+fn curves_are_bounded_and_scores_finite() {
+    let cache = Cache::build(Application::Gemm, GpuSpec::by_name("A4000").unwrap());
+    let setup = SpaceSetup::new(&cache);
+    for name in ["ga", "hybrid_vndx", "sa"] {
+        let curves = run_many(&cache, &setup, &NamedFactory(name.into()), 10, 1);
+        for c in &curves {
+            assert_eq!(c.len(), setup.times.len());
+            assert!(c.iter().all(|&x| (-1.0..=1.0).contains(&x)), "{}", name);
+        }
+        let agg = aggregate(&[curves]);
+        assert!(agg.score.is_finite());
+        assert_eq!(agg.ci95.len(), setup.times.len());
+    }
+}
+
+#[test]
+fn perfect_knowledge_scores_one() {
+    // An "oracle" that immediately evaluates the optimum config scores ~1.
+    struct Oracle(u32);
+    impl llamea_kt::optimizers::Optimizer for Oracle {
+        fn name(&self) -> &str { "oracle" }
+        fn run(&mut self, ctx: &mut llamea_kt::tuning::TuningContext) {
+            ctx.evaluate(self.0);
+            while !ctx.budget_exhausted() { ctx.evaluate(self.0); }
+        }
+    }
+    let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A100").unwrap());
+    let best_idx = cache
+        .mean_ms
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.is_finite())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as u32;
+    let setup = SpaceSetup::new(&cache);
+    let baseline = Baseline::from_cache(&cache);
+    let mut ctx = llamea_kt::tuning::TuningContext::new(&cache, setup.budget_s, 1);
+    Oracle(best_idx).run(&mut ctx);
+    let (_, best) = ctx.best().unwrap();
+    // Observed value is noisy around the optimum; P at the end ~ 1.
+    let p_end = (baseline.value_at(setup.budget_s) - best)
+        / (baseline.value_at(setup.budget_s) - baseline.optimum());
+    assert!(p_end > 0.8, "oracle P {}", p_end);
+}

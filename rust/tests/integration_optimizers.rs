@@ -1,0 +1,46 @@
+//! Integration: every registered optimizer, on every application, behaves
+//! within the API contract and produces finite results.
+
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::methodology::SpaceSetup;
+use llamea_kt::optimizers::{by_name, ALL_NAMES};
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::{Cache, TuningContext};
+
+#[test]
+fn all_optimizers_on_all_apps_terminate_with_finite_best() {
+    for app in [Application::Dedispersion, Application::Convolution, Application::Gemm] {
+        let cache = Cache::build(app, GpuSpec::by_name("A4000").unwrap());
+        let setup = SpaceSetup::new(&cache);
+        let budget = setup.budget_s.min(500.0);
+        for name in ALL_NAMES {
+            let mut opt = by_name(name).unwrap();
+            let mut ctx = TuningContext::new(&cache, budget, 11);
+            opt.run(&mut ctx);
+            let (_, best) = ctx.best().unwrap_or((0, f64::NAN));
+            assert!(best.is_finite(), "{} on {}", name, app.name());
+            assert!(ctx.elapsed_s() >= budget * 0.95, "{} quit early", name);
+        }
+    }
+}
+
+#[test]
+fn generated_algorithms_beat_human_baselines_on_aggregate() {
+    // The paper's headline claim, on a reduced slice: 2 generated vs 3
+    // human-designed over 8 spaces x 15 runs.
+    use llamea_kt::methodology::{evaluate_all, NamedFactory, OptimizerFactory};
+    let caches = llamea_kt::tuning::build_caches_for(&["A4000", "W6600"]);
+    let names = ["hybrid_vndx", "atgw", "ga", "sa", "de"];
+    let factories: Vec<NamedFactory> = names.iter().map(|n| NamedFactory(n.to_string())).collect();
+    let refs: Vec<&dyn OptimizerFactory> = factories.iter().map(|f| f as _).collect();
+    let results = evaluate_all(&caches, &refs, 15, 77);
+    let score = |n: &str| results.iter().find(|(l, _)| l == n).unwrap().1.score;
+    let avg_gen = (score("hybrid_vndx") + score("atgw")) / 2.0;
+    let avg_human = (score("ga") + score("sa") + score("de")) / 3.0;
+    assert!(
+        avg_gen > avg_human,
+        "generated {:.3} vs human {:.3}",
+        avg_gen,
+        avg_human
+    );
+}

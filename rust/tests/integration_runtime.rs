@@ -1,0 +1,126 @@
+//! Integration tests for the PJRT measured path. These need the artifacts
+//! directory produced by `make artifacts`; they are skipped (with a note)
+//! when it is absent so `cargo test` works on a fresh checkout.
+
+use std::path::Path;
+
+use llamea_kt::runtime::{
+    gemm_reference, measure_kernel, variant_space, ArtifactSet, PjrtRuntime,
+};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+#[test]
+fn gemm_variant_executes_and_matches_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let set = ArtifactSet::load(&dir).unwrap();
+    let runtime = PjrtRuntime::new().unwrap();
+    let artifact = set
+        .for_kernel("gemm")
+        .into_iter()
+        .find(|a| a.params["block_m"] == 64 && a.params["block_n"] == 64)
+        .expect("gemm 64x64 variant");
+    let (variant, inputs) = runtime.prepare(artifact, 42).unwrap();
+    let out = variant.run_f32(&inputs).unwrap();
+
+    // Reference: alpha=1.5, beta=0.5 baked in python/compile/model.py.
+    let a = inputs[0].to_vec::<f32>().unwrap();
+    let b = inputs[1].to_vec::<f32>().unwrap();
+    let c = inputs[2].to_vec::<f32>().unwrap();
+    let want = gemm_reference(&a, &b, &c, 256, 256, 256, 1.5, 0.5);
+    assert_eq!(out.len(), want.len());
+    let max_err = out
+        .iter()
+        .zip(&want)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0f64, f64::max);
+    assert!(max_err < 1e-2, "max err {}", max_err);
+}
+
+#[test]
+fn all_gemm_variants_agree_with_each_other() {
+    // The auto-tuning premise: every configuration is functionally
+    // equivalent. Verify a sample of variants produce identical results.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let set = ArtifactSet::load(&dir).unwrap();
+    let runtime = PjrtRuntime::new().unwrap();
+    let gemms = set.for_kernel("gemm");
+    let mut reference: Option<Vec<f32>> = None;
+    for artifact in gemms.iter().step_by(7) {
+        let (variant, inputs) = runtime.prepare(artifact, 9).unwrap();
+        let out = variant.run_f32(&inputs).unwrap();
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => {
+                let max_err = out
+                    .iter()
+                    .zip(r)
+                    .map(|(x, y)| (x - y).abs() as f64)
+                    .fold(0.0f64, f64::max);
+                assert!(max_err < 1e-2, "{}: max err {}", artifact.name, max_err);
+            }
+        }
+    }
+    assert!(reference.is_some());
+}
+
+#[test]
+fn timing_is_positive_and_stable() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let set = ArtifactSet::load(&dir).unwrap();
+    let runtime = PjrtRuntime::new().unwrap();
+    let artifact = set.for_kernel("gemm")[0];
+    let (variant, inputs) = runtime.prepare(artifact, 1).unwrap();
+    let t = variant.time(&inputs, 1, 5).unwrap();
+    assert!(t.mean_ms > 0.0);
+    assert!(t.min_ms <= t.mean_ms);
+    assert_eq!(t.reps, 5);
+    assert!(variant.compile_s > 0.0);
+}
+
+#[test]
+fn measured_cache_over_dedispersion_variants() {
+    // Dedispersion has the smallest variant grid -> fastest full measure.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let set = ArtifactSet::load(&dir).unwrap();
+    let runtime = PjrtRuntime::new().unwrap();
+    let measured = measure_kernel(&runtime, &set, "dedispersion", 1, 3, 7).unwrap();
+    assert_eq!(measured.measurements.len(), set.for_kernel("dedispersion").len());
+    let cache = &measured.cache;
+    assert!(cache.optimum_ms > 0.0);
+    assert!(cache.median_ms >= cache.optimum_ms);
+    // The methodology runs end-to-end on the measured cache.
+    let setup = llamea_kt::methodology::SpaceSetup::new(cache);
+    assert!(setup.budget_s > 0.0);
+}
+
+#[test]
+fn variant_space_covers_all_artifacts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let set = ArtifactSet::load(&dir).unwrap();
+    for kernel in set.kernels() {
+        let space = variant_space(&kernel, &set).unwrap();
+        for a in set.for_kernel(&kernel) {
+            let cfg = llamea_kt::runtime::measured::config_of(a, &space);
+            assert!(space.index_of(&cfg).is_some(), "{}", a.name);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Integration: the 24-cache evaluation set has the cross-space properties
+//! the paper's experiments rely on.
+
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::build_caches_for;
+
+#[test]
+fn full_training_set_builds_with_sane_statistics() {
+    let caches = build_caches_for(&["A100", "A4000", "MI250X"]);
+    assert_eq!(caches.len(), 12);
+    for c in &caches {
+        assert!(c.optimum_ms > 0.0, "{}", c.id());
+        // Tuning must matter on every space.
+        assert!(c.median_ms / c.optimum_ms > 1.3, "{}: spread too small", c.id());
+        // Failures exist but are bounded.
+        let failures = c.mean_ms.iter().filter(|t| !t.is_finite()).count();
+        let rate = failures as f64 / c.len() as f64;
+        assert!(rate < 0.15, "{}: failure rate {}", c.id(), rate);
+    }
+}
+
+#[test]
+fn optima_differ_across_gpus_for_same_kernel() {
+    let caches = build_caches_for(&["A100", "W6600"]);
+    for app in Application::ALL {
+        let per_app: Vec<_> = caches.iter().filter(|c| c.app == app).collect();
+        assert_eq!(per_app.len(), 2);
+        let argmin = |c: &llamea_kt::tuning::Cache| -> usize {
+            c.mean_ms
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.is_finite())
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        // Different hardware, same kernel: the optimum usually moves. We
+        // require it for at least one runtime-scale difference instead of
+        // exact config identity (which can coincide).
+        let (a, b) = (per_app[0], per_app[1]);
+        assert!(argmin(a) != argmin(b) || (a.optimum_ms / b.optimum_ms - 1.0).abs() > 0.05,
+            "{}: suspiciously identical optima", app.name());
+    }
+}
+
+#[test]
+fn bandwidth_vs_compute_character() {
+    // Paper §4.1.1: dedispersion/hotspot bandwidth-bound, conv/gemm
+    // compute-bound. Check via the A100 vs A6000 ratio: A6000 has ~2x the
+    // fp32 but half the bandwidth of A100, so compute-bound kernels should
+    // do *relatively* better on A6000 than bandwidth-bound ones.
+    let caches = build_caches_for(&["A100", "A6000"]);
+    let optimum = |app: Application, gpu: &str| -> f64 {
+        caches
+            .iter()
+            .find(|c| c.app == app && c.gpu.name == gpu)
+            .unwrap()
+            .optimum_ms
+    };
+    let rel = |app: Application| optimum(app, "A6000") / optimum(app, "A100");
+    // Lower = A6000 relatively better.
+    assert!(rel(Application::Gemm) < rel(Application::Dedispersion),
+        "gemm {} dedisp {}", rel(Application::Gemm), rel(Application::Dedispersion));
+}

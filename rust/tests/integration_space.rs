@@ -1,0 +1,56 @@
+//! Integration: search-space construction against Table 1 and the
+//! neighbor/repair API contracts used by optimizers.
+
+use llamea_kt::searchspace::{Application, NeighborKind};
+use llamea_kt::util::rng::Rng;
+
+#[test]
+fn table1_constrained_sizes_within_25pct_of_paper() {
+    for app in Application::ALL {
+        let (_, paper_constrained, _) = app.paper_table1();
+        let space = app.build_space();
+        let rel = (space.len() as f64 - paper_constrained as f64).abs()
+            / paper_constrained as f64;
+        assert!(
+            rel < 0.25,
+            "{}: ours {} vs paper {} ({:.1}%)",
+            app.name(),
+            space.len(),
+            paper_constrained,
+            rel * 100.0
+        );
+    }
+}
+
+#[test]
+fn neighbor_api_contract_all_apps() {
+    let mut rng = Rng::new(3);
+    for app in Application::ALL {
+        let space = app.build_space();
+        for _ in 0..25 {
+            let i = space.random_valid(&mut rng);
+            for kind in [NeighborKind::Hamming, NeighborKind::Adjacent] {
+                for j in space.neighbors(i, kind) {
+                    assert_eq!(space.hamming(i, j), 1, "{}", app.name());
+                    assert!(space.satisfies_constraints(space.config(j)));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repair_always_returns_valid_all_apps() {
+    let mut rng = Rng::new(5);
+    for app in Application::ALL {
+        let space = app.build_space();
+        for _ in 0..50 {
+            // Arbitrary (likely invalid) raw assignment.
+            let cfg: Vec<u16> = (0..space.dims())
+                .map(|d| rng.below(space.params.params[d].cardinality()) as u16)
+                .collect();
+            let i = space.repair(&cfg, &mut rng);
+            assert!(space.satisfies_constraints(space.config(i)), "{}", app.name());
+        }
+    }
+}

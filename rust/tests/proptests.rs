@@ -1,0 +1,150 @@
+//! Property-based tests over coordinator invariants (routing of configs
+//! through the space API, constraint evaluation, methodology math), using
+//! the in-repo mini-proptest framework (offline `proptest` substitute).
+
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::methodology::Baseline;
+use llamea_kt::searchspace::{Application, NeighborKind};
+use llamea_kt::tuning::Cache;
+use llamea_kt::util::proptest::check;
+use llamea_kt::util::rng::Rng;
+use llamea_kt::util::stats;
+
+fn conv_space() -> llamea_kt::searchspace::SearchSpace {
+    Application::Convolution.build_space()
+}
+
+#[test]
+fn prop_index_roundtrip() {
+    let space = conv_space();
+    check("index_of(config(i)) == i", 512, |rng: &mut Rng| {
+        let i = rng.below(space.len()) as u32;
+        assert_eq!(space.index_of(space.config(i)), Some(i));
+    });
+}
+
+#[test]
+fn prop_neighbors_symmetric() {
+    let space = conv_space();
+    check("hamming neighborhood is symmetric", 128, |rng: &mut Rng| {
+        let i = rng.below(space.len()) as u32;
+        for j in space.neighbors(i, NeighborKind::Hamming) {
+            let back = space.neighbors(j, NeighborKind::Hamming);
+            assert!(back.contains(&i), "{} -> {} not symmetric", i, j);
+        }
+    });
+}
+
+#[test]
+fn prop_repair_idempotent_on_valid() {
+    let space = conv_space();
+    check("repair(valid) == identity", 256, |rng: &mut Rng| {
+        let i = rng.below(space.len()) as u32;
+        let cfg = space.config(i).to_vec();
+        assert_eq!(space.repair(&cfg, rng), i);
+    });
+}
+
+#[test]
+fn prop_constraint_eval_matches_membership() {
+    // For arbitrary raw assignments: membership in the enumerated space
+    // must equal direct constraint evaluation.
+    let space = conv_space();
+    check("membership == constraints", 512, |rng: &mut Rng| {
+        let cfg: Vec<u16> = (0..space.dims())
+            .map(|d| rng.below(space.params.params[d].cardinality()) as u16)
+            .collect();
+        let member = space.index_of(&cfg).is_some();
+        let satisfies = space.satisfies_constraints(&cfg);
+        assert_eq!(member, satisfies, "cfg {:?}", cfg);
+    });
+}
+
+#[test]
+fn prop_expected_best_monotone_in_draws() {
+    let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+    let baseline = Baseline::from_cache(&cache);
+    check("E[best|n] monotone non-increasing", 128, |rng: &mut Rng| {
+        let n1 = 1 + rng.below(5000) as u64;
+        let n2 = n1 + 1 + rng.below(5000) as u64;
+        assert!(baseline.expected_best_after(n2) <= baseline.expected_best_after(n1) + 1e-9);
+    });
+}
+
+#[test]
+fn prop_running_min_invariants() {
+    check("running_min is monotone lower envelope", 256, |rng: &mut Rng| {
+        let xs: Vec<f64> = (0..1 + rng.below(40)).map(|_| rng.f64() * 100.0).collect();
+        let rm = stats::running_min(&xs);
+        assert_eq!(rm.len(), xs.len());
+        for k in 0..xs.len() {
+            assert!(rm[k] <= xs[k]);
+            if k > 0 {
+                assert!(rm[k] <= rm[k - 1]);
+            }
+            let true_min = xs[..=k].iter().cloned().fold(f64::INFINITY, f64::min);
+            assert_eq!(rm[k], true_min);
+        }
+    });
+}
+
+#[test]
+fn prop_percentile_bounds_and_order() {
+    check("percentiles ordered and bounded", 256, |rng: &mut Rng| {
+        let xs: Vec<f64> = (0..2 + rng.below(50)).map(|_| rng.normal() * 10.0).collect();
+        let q1 = rng.f64() * 100.0;
+        let q2 = rng.f64() * 100.0;
+        let (lo, hi) = if q1 <= q2 { (q1, q2) } else { (q2, q1) };
+        let p_lo = stats::percentile(&xs, lo);
+        let p_hi = stats::percentile(&xs, hi);
+        assert!(p_lo <= p_hi + 1e-12);
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(p_lo >= min - 1e-12 && p_hi <= max + 1e-12);
+    });
+}
+
+#[test]
+fn prop_tuning_context_accounting() {
+    // State-machine property: for any random sequence of evaluate calls,
+    // unique <= calls, clock is non-decreasing, best is the min over
+    // successful observations.
+    let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+    check("context accounting", 64, |rng: &mut Rng| {
+        let mut ctx = llamea_kt::tuning::TuningContext::new(&cache, 1e9, rng.next_u64());
+        let mut best = f64::INFINITY;
+        let mut prev_clock = 0.0;
+        for _ in 0..rng.below(200) {
+            let i = rng.below(cache.len()) as u32;
+            if let Some(v) = ctx.evaluate(i) {
+                best = best.min(v);
+            }
+            assert!(ctx.elapsed_s() >= prev_clock);
+            prev_clock = ctx.elapsed_s();
+        }
+        assert!(ctx.unique_evals() <= ctx.eval_calls());
+        if best.is_finite() {
+            assert_eq!(ctx.best().unwrap().1, best);
+        }
+    });
+}
+
+#[test]
+fn prop_genome_mutation_closure() {
+    // Any chain of mock-LLM mutations keeps genomes valid (the closure
+    // property the evolution loop relies on).
+    use llamea_kt::llamea::{Generation, Genome, LlmClient, MockLlm, MutationPrompt, Prompt};
+    check("mutation closure", 64, |rng: &mut Rng| {
+        let mut llm = MockLlm::new(rng.next_u64());
+        llm.failure_rate = 0.0;
+        let mut g = Genome::hybrid_vndx_like();
+        for _ in 0..rng.below(8) {
+            let op = *rng.choose(&MutationPrompt::ALL);
+            let p = Prompt::task("gemm").mutate(g.clone(), op);
+            if let (Generation::Code(next), _) = llm.generate(&p) {
+                assert!(next.is_valid(), "{:?}", next);
+                g = next;
+            }
+        }
+    });
+}
