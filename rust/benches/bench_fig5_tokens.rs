@@ -4,7 +4,7 @@ use llamea_kt::harness::{fig5, generate_all, ExpOptions};
 
 fn main() {
     common::section("Fig 5: generation-stage token accounting (trimmed)");
-    let opts = ExpOptions { runs: 5, gen_runs: 2, llm_calls: 24, seed: 5 };
+    let opts = ExpOptions { runs: 5, gen_runs: 2, llm_calls: 24, seed: 5, ..ExpOptions::default() };
     let t0 = std::time::Instant::now();
     let generated = generate_all(&opts, false);
     println!("generation of 8 conditions took {:?}", t0.elapsed());

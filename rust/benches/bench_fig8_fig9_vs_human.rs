@@ -4,7 +4,8 @@ use llamea_kt::harness::{fig8_fig9, ExpOptions};
 
 fn main() {
     common::section("Fig 8 + Fig 9: generated vs human-designed (trimmed)");
-    let opts = ExpOptions { runs: 10, gen_runs: 1, llm_calls: 10, seed: 8 };
+    let opts =
+        ExpOptions { runs: 10, gen_runs: 1, llm_calls: 10, seed: 8, ..ExpOptions::default() };
     let t0 = std::time::Instant::now();
     let (f8, _) = fig8_fig9(&opts, std::path::Path::new("results"));
     println!("full 5-algorithm x 24-space comparison took {:?}", t0.elapsed());

@@ -4,7 +4,8 @@ use llamea_kt::harness::{evaluate_generated, generate_all, ExpOptions};
 
 fn main() {
     common::section("Table 2 + Fig 6: with/without-info pipeline (trimmed)");
-    let opts = ExpOptions { runs: 10, gen_runs: 1, llm_calls: 16, seed: 6 };
+    let opts =
+        ExpOptions { runs: 10, gen_runs: 1, llm_calls: 16, seed: 6, ..ExpOptions::default() };
     let t0 = std::time::Instant::now();
     let generated = generate_all(&opts, false);
     let (t2, _, _) = evaluate_generated(&generated, &opts, std::path::Path::new("results"));

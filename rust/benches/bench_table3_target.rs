@@ -5,7 +5,7 @@ use llamea_kt::harness::{evaluate_generated, generate_all, ExpOptions};
 
 fn main() {
     common::section("Table 3: target vs non-target (trimmed)");
-    let opts = ExpOptions { runs: 8, gen_runs: 1, llm_calls: 16, seed: 7 };
+    let opts = ExpOptions { runs: 8, gen_runs: 1, llm_calls: 16, seed: 7, ..ExpOptions::default() };
     let generated = generate_all(&opts, false);
     let t0 = std::time::Instant::now();
     let (_, _, t3) = evaluate_generated(&generated, &opts, std::path::Path::new("results"));

@@ -1,0 +1,118 @@
+//! Tuning jobs: the unit of work the L3 scheduler executes.
+//!
+//! A [`TuningJob`] is one seeded tuning run — a (pre-explored space,
+//! optimizer factory, fully-derived seed) triple. Batches of jobs are what
+//! the coordinator parallelizes over: every figure/table of the paper's
+//! evaluation is a cross product of spaces × optimizers × seeds, and
+//! [`grid_jobs`] expands that product into a flat, order-independent list.
+//!
+//! Determinism contract: a job's result depends only on its `(cache, setup,
+//! factory, seed)` fields, never on which worker ran it or when. Seeds are
+//! derived with [`job_seed`] from the experiment base seed and the job's
+//! coordinates in the grid, so the same grid yields bit-identical results
+//! regardless of thread count, execution order, or how the batch was split.
+
+use std::sync::Arc;
+
+use super::registry::SpaceEntry;
+use crate::methodology::{runner::single_run, OptimizerFactory, SpaceSetup};
+use crate::tuning::Cache;
+use crate::util::rng::fnv1a;
+
+/// One seeded tuning run against a pre-explored search space.
+pub struct TuningJob<'a> {
+    /// The space the run executes on.
+    pub cache: &'a Cache,
+    /// Precomputed baseline/budget/sample-times of that space.
+    pub setup: &'a SpaceSetup,
+    /// Fresh-instance factory for the optimizer under test.
+    pub factory: &'a dyn OptimizerFactory,
+    /// Fully-derived seed; determines the run bit-for-bit.
+    pub seed: u64,
+    /// Caller-assigned reassembly group (see [`super::report::collate`]).
+    pub group: usize,
+}
+
+impl TuningJob<'_> {
+    /// Execute the run and return its performance curve.
+    pub fn execute(&self) -> Vec<f64> {
+        let mut opt = self.factory.build();
+        single_run(self.cache, self.setup, opt.as_mut(), self.seed)
+    }
+}
+
+/// Derive the seed of one job from the experiment base seed and the job's
+/// grid coordinates (space identity, optimizer label, run index).
+///
+/// Mixes each coordinate through FNV-1a and finishes with the SplitMix64
+/// avalanche, so structurally close jobs (same space, adjacent run indices)
+/// get statistically independent seeds, and permuting the grid or adding
+/// optimizers/spaces never changes any other job's seed.
+pub fn job_seed(base: u64, space_id: &str, opt_label: &str, run: u64) -> u64 {
+    let mut h = base ^ 0x9E3779B97F4A7C15;
+    h = h.wrapping_mul(0x100000001B3) ^ fnv1a(space_id.as_bytes());
+    h = h.wrapping_mul(0x100000001B3) ^ fnv1a(opt_label.as_bytes());
+    h = h.wrapping_mul(0x100000001B3) ^ run;
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+    h ^ (h >> 31)
+}
+
+/// Expand the (optimizer × space × seed) cross product into a flat job
+/// batch. Jobs are grouped factory-major: job `(fi, si, r)` gets group
+/// `fi * entries.len() + si`, so [`super::report::collate`] with
+/// `factories.len() * entries.len()` groups reassembles per-(optimizer,
+/// space) run lists in input order.
+///
+/// Seeds are derived from `factory.label()` — not the tuple's display
+/// label — so a factory submitted in a grid gets the exact seeds
+/// `run_many` would give it on each space (the display label may differ,
+/// e.g. `gemm-info` for a genome whose own name seeds the runs).
+pub fn grid_jobs<'a>(
+    entries: &'a [Arc<SpaceEntry>],
+    factories: &'a [(String, &'a dyn OptimizerFactory)],
+    runs: usize,
+    base_seed: u64,
+) -> Vec<TuningJob<'a>> {
+    let mut jobs = Vec::with_capacity(entries.len() * factories.len() * runs);
+    for (fi, (_, factory)) in factories.iter().enumerate() {
+        let seed_label = factory.label();
+        for (si, e) in entries.iter().enumerate() {
+            let space_id = e.cache.id();
+            for r in 0..runs {
+                jobs.push(TuningJob {
+                    cache: &e.cache,
+                    setup: &e.setup,
+                    factory: *factory,
+                    seed: job_seed(base_seed, &space_id, &seed_label, r as u64),
+                    group: fi * entries.len() + si,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_are_deterministic_and_coordinate_sensitive() {
+        let s = job_seed(1, "gemm@A100", "ga", 0);
+        assert_eq!(s, job_seed(1, "gemm@A100", "ga", 0));
+        assert_ne!(s, job_seed(2, "gemm@A100", "ga", 0));
+        assert_ne!(s, job_seed(1, "gemm@A4000", "ga", 0));
+        assert_ne!(s, job_seed(1, "gemm@A100", "sa", 0));
+        assert_ne!(s, job_seed(1, "gemm@A100", "ga", 1));
+    }
+
+    #[test]
+    fn adjacent_runs_get_unrelated_seeds() {
+        // Consecutive run indices must not map to nearby seeds (optimizer
+        // RNG streams would correlate).
+        let a = job_seed(7, "hotspot@W6600", "de", 10);
+        let b = job_seed(7, "hotspot@W6600", "de", 11);
+        assert!(a.abs_diff(b) > 1 << 20, "seeds too close: {} vs {}", a, b);
+    }
+}

@@ -1,1 +1,40 @@
-// paper's L3 coordination contribution
+//! The L3 coordinator: job-graph scheduling of tuning runs over shared,
+//! memoized search spaces (the paper's three-level view of auto-tuning at
+//! scale — L1 kernel measurement, L2 per-space optimization, L3
+//! cross-experiment orchestration).
+//!
+//! The paper's evaluation is a large cross product — optimizers ×
+//! applications × GPUs × seeds — and every harness entry point is some
+//! slice of it. The coordinator decomposes that product into its three
+//! orthogonal concerns:
+//!
+//! - [`registry`]: a process-wide [`registry::CacheRegistry`] that lazily
+//!   builds and memoizes each (application, GPU) exhaustive cache and its
+//!   methodology setup exactly once, sharing `Arc`s across the generation
+//!   stage, Tables 2–3, Fig. 7 and Figs. 8–9.
+//! - [`job`]: a [`job::TuningJob`] is one seeded run; [`job::grid_jobs`]
+//!   expands a (spaces × optimizers × seeds) grid into a flat batch with
+//!   per-job seeds derived by [`job::job_seed`] from the job's grid
+//!   coordinates — never from execution order.
+//! - [`scheduler`]: a [`scheduler::Scheduler`] worker pool that drains a
+//!   batch via an atomic cursor, parallelizing across every axis at once
+//!   while keeping results byte-identical for any thread count.
+//! - [`report`]: reassembles flat results into per-(optimizer, space)
+//!   groups, aggregates them with the methodology's score, and renders the
+//!   `coordinate` subcommand's tables.
+//!
+//! `methodology::run_many` is a thin single-space wrapper over the
+//! scheduler, and `harness::experiments` expresses each figure/table as a
+//! job batch against the shared registry, so new execution backends
+//! (sharding, async, distributed) only need to reimplement this module's
+//! seam.
+
+pub mod job;
+pub mod registry;
+pub mod report;
+pub mod scheduler;
+
+pub use job::{grid_jobs, job_seed, TuningJob};
+pub use registry::{CacheKey, CacheRegistry, SpaceEntry};
+pub use report::{collate, grid_aggregates, score_table};
+pub use scheduler::Scheduler;

@@ -1,0 +1,193 @@
+//! The shared cache registry: one build of every (application, GPU) space,
+//! memoized behind `Arc`s, shared by every experiment stage.
+//!
+//! Building a `Cache` exhaustively evaluates the performance model over the
+//! whole constrained space — by far the most expensive setup step. The seed
+//! code rebuilt all 24 caches inside *each* harness entry point; the
+//! registry builds each exactly once per process (lazily, on first use) and
+//! hands out `Arc<SpaceEntry>` clones, so the generation stage, Table 2/3,
+//! Fig. 7 and Figs. 8–9 all share one copy.
+//!
+//! Concurrency: the per-key `OnceLock` guarantees at-most-once construction
+//! even when many scheduler workers request the same key simultaneously;
+//! distinct keys build in parallel (the map mutex is only held to look up
+//! the key's cell, never during a build). `builds()` exposes the
+//! construction counter so tests can assert the exactly-once property.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::kernels::gpu::{GpuSpec, ALL_GPUS};
+use crate::methodology::SpaceSetup;
+use crate::searchspace::{Application, SearchSpace};
+use crate::tuning::Cache;
+
+/// Identity of one pre-explored search space: (application, GPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub app: Application,
+    /// Canonical GPU name (the `GpuSpec::name` of a testbed device).
+    pub gpu: &'static str,
+}
+
+impl CacheKey {
+    pub fn new(app: Application, gpu: &'static GpuSpec) -> CacheKey {
+        CacheKey { app, gpu: gpu.name }
+    }
+
+    /// Parse an `application@gpu` spec (the CLI's `--space` syntax).
+    pub fn parse(spec: &str) -> Option<CacheKey> {
+        let (app_s, gpu_s) = spec.split_once('@')?;
+        let app = Application::from_name(app_s)?;
+        let gpu = GpuSpec::by_name(gpu_s)?;
+        Some(CacheKey::new(app, gpu))
+    }
+
+    /// Human-readable identifier, e.g. `gemm@A100` (matches `Cache::id`).
+    pub fn id(&self) -> String {
+        format!("{}@{}", self.app.name(), self.gpu)
+    }
+}
+
+/// A memoized space: the exhaustive cache plus its methodology setup
+/// (baseline, budget, sample times), computed once and shared.
+pub struct SpaceEntry {
+    pub key: CacheKey,
+    pub cache: Cache,
+    pub setup: SpaceSetup,
+}
+
+type Cell<T> = Arc<OnceLock<T>>;
+
+/// Lazily-built, memoized registry of caches and search spaces.
+pub struct CacheRegistry {
+    /// Per-application enumerated spaces (shared across that app's GPUs).
+    spaces: Mutex<HashMap<Application, Cell<Arc<SearchSpace>>>>,
+    /// Per-(application, GPU) cache + setup.
+    entries: Mutex<HashMap<CacheKey, Cell<Arc<SpaceEntry>>>>,
+    cache_builds: AtomicUsize,
+    space_builds: AtomicUsize,
+}
+
+impl CacheRegistry {
+    pub fn new() -> CacheRegistry {
+        CacheRegistry {
+            spaces: Mutex::new(HashMap::new()),
+            entries: Mutex::new(HashMap::new()),
+            cache_builds: AtomicUsize::new(0),
+            space_builds: AtomicUsize::new(0),
+        }
+    }
+
+    /// The process-wide registry every harness entry point shares.
+    pub fn global() -> &'static CacheRegistry {
+        static GLOBAL: OnceLock<CacheRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(CacheRegistry::new)
+    }
+
+    /// The application's enumerated search space, built at most once.
+    pub fn space(&self, app: Application) -> Arc<SearchSpace> {
+        let cell = self.spaces.lock().unwrap().entry(app).or_default().clone();
+        cell.get_or_init(|| {
+            self.space_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(app.build_space())
+        })
+        .clone()
+    }
+
+    /// The key's cache + setup, built at most once; concurrent callers of
+    /// the same key block on one build, distinct keys build in parallel.
+    pub fn entry(&self, key: CacheKey) -> Arc<SpaceEntry> {
+        let cell = self.entries.lock().unwrap().entry(key).or_default().clone();
+        cell.get_or_init(|| {
+            let gpu = GpuSpec::by_name(key.gpu).expect("unknown GPU in cache key");
+            let cache = Cache::build_with_space(key.app, gpu, self.space(key.app));
+            let setup = SpaceSetup::new(&cache);
+            self.cache_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(SpaceEntry { key, cache, setup })
+        })
+        .clone()
+    }
+
+    /// Number of caches constructed so far (tests assert exactly-once).
+    pub fn builds(&self) -> usize {
+        self.cache_builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of search-space enumerations so far.
+    pub fn space_builds(&self) -> usize {
+        self.space_builds.load(Ordering::Relaxed)
+    }
+
+    /// The full 4×6 evaluation grid in stable application-major order
+    /// (matching `tuning::build_all_caches`).
+    pub fn all_entries(&self) -> Vec<Arc<SpaceEntry>> {
+        let names: Vec<&str> = ALL_GPUS.iter().map(|g| g.name).collect();
+        self.entries_for(&names)
+    }
+
+    /// Entries for a GPU subset (e.g. the train or test split), all
+    /// applications, application-major order.
+    pub fn entries_for(&self, gpu_names: &[&str]) -> Vec<Arc<SpaceEntry>> {
+        let mut out = Vec::with_capacity(Application::ALL.len() * gpu_names.len());
+        for app in Application::ALL {
+            for name in gpu_names {
+                let gpu = GpuSpec::by_name(name).expect("unknown GPU");
+                out.push(self.entry(CacheKey::new(app, gpu)));
+            }
+        }
+        out
+    }
+}
+
+impl Default for CacheRegistry {
+    fn default() -> Self {
+        CacheRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_is_memoized_and_shares_the_space() {
+        let reg = CacheRegistry::new();
+        let key = CacheKey::parse("convolution@A4000").unwrap();
+        let a = reg.entry(key);
+        let b = reg.entry(key);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.builds(), 1);
+        // A second GPU of the same application reuses the enumerated space.
+        let c = reg.entry(CacheKey::parse("convolution@A100").unwrap());
+        assert_eq!(reg.builds(), 2);
+        assert_eq!(reg.space_builds(), 1);
+        assert!(Arc::ptr_eq(&a.cache.space, &c.cache.space));
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_once() {
+        let reg = CacheRegistry::new();
+        let key = CacheKey::parse("convolution@A4000").unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    let e = reg.entry(key);
+                    assert_eq!(e.key, key);
+                    assert!(e.cache.len() > 0);
+                });
+            }
+        });
+        assert_eq!(reg.builds(), 1, "concurrent access must build once");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_specs() {
+        assert!(CacheKey::parse("gemm@A100").is_some());
+        assert!(CacheKey::parse("gemm").is_none());
+        assert!(CacheKey::parse("gemm@H100").is_none());
+        assert!(CacheKey::parse("nope@A100").is_none());
+        assert_eq!(CacheKey::parse("gemm@A100").unwrap().id(), "gemm@A100");
+    }
+}

@@ -1,0 +1,83 @@
+//! Reassembly of flat scheduler output into per-(optimizer, space) curve
+//! groups, aggregate scores, and rendered tables.
+
+use super::job::TuningJob;
+use crate::methodology::{aggregate, Aggregate};
+use crate::util::table::{f, Table};
+
+/// Regroup a flat batch result by each job's `group` index. Job order is
+/// preserved within a group, so a group's curves are in run order — exactly
+/// what [`aggregate`] expects per space.
+pub fn collate(n_groups: usize, jobs: &[TuningJob], curves: Vec<Vec<f64>>) -> Vec<Vec<Vec<f64>>> {
+    assert_eq!(jobs.len(), curves.len(), "one curve per job");
+    let mut out = vec![Vec::new(); n_groups];
+    for (job, curve) in jobs.iter().zip(curves) {
+        out[job.group].push(curve);
+    }
+    out
+}
+
+/// Aggregate a factory-major collated grid (as produced by
+/// [`super::job::grid_jobs`] + [`collate`]) into one [`Aggregate`] per
+/// optimizer label, over its `n_spaces` spaces.
+pub fn grid_aggregates(
+    labels: &[String],
+    n_spaces: usize,
+    grouped: Vec<Vec<Vec<f64>>>,
+) -> Vec<(String, Aggregate)> {
+    assert_eq!(grouped.len(), labels.len() * n_spaces, "grid shape mismatch");
+    let mut it = grouped.into_iter();
+    labels
+        .iter()
+        .map(|label| {
+            let per_space: Vec<Vec<Vec<f64>>> = it.by_ref().take(n_spaces).collect();
+            (label.clone(), aggregate(&per_space))
+        })
+        .collect()
+}
+
+/// Render per-optimizer aggregate scores as a table (the `coordinate`
+/// subcommand's report).
+pub fn score_table(title: &str, results: &[(String, Aggregate)]) -> Table {
+    let mut t = Table::new(title, &["Optimizer", "Score P", "± std over spaces"]);
+    for (label, agg) in results {
+        t.row(vec![label.clone(), f(agg.score, 3), f(agg.score_std, 3)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::{CacheKey, CacheRegistry};
+    use crate::coordinator::{grid_jobs, Scheduler};
+    use crate::methodology::{NamedFactory, OptimizerFactory};
+
+    #[test]
+    fn grid_roundtrip_collates_in_order() {
+        let reg = CacheRegistry::new();
+        let entries = vec![reg.entry(CacheKey::parse("convolution@A4000").unwrap())];
+        let named: Vec<(String, NamedFactory)> = ["random", "sa"]
+            .iter()
+            .map(|n| (n.to_string(), NamedFactory(n.to_string())))
+            .collect();
+        let factories: Vec<(String, &dyn OptimizerFactory)> = named
+            .iter()
+            .map(|(l, fac)| (l.clone(), fac as &dyn OptimizerFactory))
+            .collect();
+        let runs = 3;
+        let jobs = grid_jobs(&entries, &factories, runs, 9);
+        assert_eq!(jobs.len(), 2 * runs);
+        let curves = Scheduler::new(2).run(&jobs);
+        let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+        assert_eq!(grouped.len(), 2);
+        assert!(grouped.iter().all(|g| g.len() == runs));
+        let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+        let results = grid_aggregates(&labels, entries.len(), grouped);
+        assert_eq!(results[0].0, "random");
+        assert_eq!(results[1].0, "sa");
+        assert!(results.iter().all(|(_, a)| a.score.is_finite()));
+        let table = score_table("test", &results);
+        assert!(table.to_text().contains("random"));
+    }
+}

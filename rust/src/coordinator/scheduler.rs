@@ -1,0 +1,139 @@
+//! The work-stealing worker pool that executes tuning-job batches.
+//!
+//! One shared atomic cursor hands jobs to whichever worker is free, so the
+//! pool parallelizes across spaces *and* optimizers *and* seeds — not just
+//! the innermost seed loop. Results land in per-job slots indexed by batch
+//! position, and every job's seed is pre-derived ([`super::job::job_seed`]),
+//! so output is byte-identical for any thread count or execution order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use super::job::TuningJob;
+
+/// A fixed-width worker pool over tuning jobs.
+pub struct Scheduler {
+    threads: usize,
+}
+
+/// Process-wide default width consulted by [`Scheduler::auto`]
+/// (0 = size to the machine). Set once by the CLI's `--threads`.
+static DEFAULT_WIDTH: AtomicUsize = AtomicUsize::new(0);
+
+impl Scheduler {
+    /// Pool with exactly `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Scheduler {
+        Scheduler { threads: threads.max(1) }
+    }
+
+    /// Pool sized to the process default, falling back to the machine.
+    pub fn auto() -> Scheduler {
+        match DEFAULT_WIDTH.load(Ordering::Relaxed) {
+            0 => Scheduler::new(
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            ),
+            n => Scheduler::new(n),
+        }
+    }
+
+    /// Set the process-wide default `auto()` width (`None` restores
+    /// machine-sized). This is how `--threads` reaches the `run_many`
+    /// paths (LLaMEA fitness evaluation, train/test split) that spawn
+    /// pools internally; width never affects results, only concurrency.
+    pub fn set_default_width(threads: Option<usize>) {
+        DEFAULT_WIDTH.store(threads.unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// `Some(n)` for an explicit width (the CLI's `--threads`/`--jobs`),
+    /// `None` for machine-sized.
+    pub fn with_threads(threads: Option<usize>) -> Scheduler {
+        threads.map(Scheduler::new).unwrap_or_else(Scheduler::auto)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every job and return the performance curves in batch order.
+    pub fn run(&self, jobs: &[TuningJob]) -> Vec<Vec<f64>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.threads.min(n);
+        if threads <= 1 {
+            return jobs.iter().map(TuningJob::execute).collect();
+        }
+        let slots: Vec<OnceLock<Vec<f64>>> = (0..n).map(|_| OnceLock::new()).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let j = next.fetch_add(1, Ordering::Relaxed);
+                    if j >= n {
+                        break;
+                    }
+                    let curve = jobs[j].execute();
+                    slots[j].set(curve).expect("job slot written twice");
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("scheduler finished with a missing result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::job_seed;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::methodology::{NamedFactory, SpaceSetup};
+    use crate::searchspace::Application;
+    use crate::tuning::Cache;
+
+    fn curves_with(threads: usize, runs: usize) -> Vec<Vec<f64>> {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let setup = SpaceSetup::new(&cache);
+        let factory = NamedFactory("sa".into());
+        let space_id = cache.id();
+        let jobs: Vec<TuningJob> = (0..runs)
+            .map(|r| TuningJob {
+                cache: &cache,
+                setup: &setup,
+                factory: &factory,
+                seed: job_seed(42, &space_id, "sa", r as u64),
+                group: 0,
+            })
+            .collect();
+        Scheduler::new(threads).run(&jobs)
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        assert!(Scheduler::new(4).run(&[]).is_empty());
+    }
+
+    #[test]
+    fn output_is_identical_across_thread_counts() {
+        let single = curves_with(1, 6);
+        let pooled = curves_with(8, 6);
+        assert_eq!(single.len(), 6);
+        assert_eq!(single, pooled, "scheduler output must not depend on thread count");
+    }
+
+    #[test]
+    fn width_is_clamped_and_default_is_settable() {
+        assert_eq!(Scheduler::new(0).threads(), 1);
+        assert_eq!(Scheduler::with_threads(Some(3)).threads(), 3);
+        assert!(Scheduler::with_threads(None).threads() >= 1);
+        // The process default reaches auto() (and never affects results —
+        // see output_is_identical_across_thread_counts).
+        Scheduler::set_default_width(Some(2));
+        assert_eq!(Scheduler::auto().threads(), 2);
+        Scheduler::set_default_width(None);
+        assert!(Scheduler::auto().threads() >= 1);
+    }
+}

@@ -6,13 +6,11 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::kernels::gpu::{ALL_GPUS, TEST_GPUS, TRAIN_GPUS};
-use crate::llamea::{
-    evolve_best_of_runs, EvolutionConfig, Genome, GenomeOptimizer, MockLlm, SpaceInfo,
-};
-use crate::methodology::{
-    aggregate, run_many, Aggregate, NamedFactory, OptimizerFactory, SpaceSetup,
-};
+use crate::coordinator::{collate, grid_aggregates, grid_jobs, CacheKey, CacheRegistry, Scheduler};
+use crate::kernels::gpu::{GpuSpec, ALL_GPUS, TEST_GPUS, TRAIN_GPUS};
+use crate::llamea::{evolve_best_of_runs, EvolutionConfig, Genome, MockLlm, SpaceInfo};
+use crate::methodology::{run_many, Aggregate, OptimizerFactory};
+use crate::optimizers::OptimizerSpec;
 use crate::searchspace::Application;
 use crate::tuning::Cache;
 use crate::util::json::Json;
@@ -29,11 +27,13 @@ pub struct ExpOptions {
     /// LLM calls per LLaMEA run (paper: 100).
     pub llm_calls: u64,
     pub seed: u64,
+    /// Scheduler worker count; `None` sizes the pool to the machine.
+    pub threads: Option<usize>,
 }
 
 impl Default for ExpOptions {
     fn default() -> Self {
-        ExpOptions { runs: 100, gen_runs: 5, llm_calls: 100, seed: 2026 }
+        ExpOptions { runs: 100, gen_runs: 5, llm_calls: 100, seed: 2026, threads: None }
     }
 }
 
@@ -99,37 +99,22 @@ impl GeneratedAlgo {
     }
 }
 
-struct GenomeFactory(Genome);
-
-impl OptimizerFactory for GenomeFactory {
-    fn build(&self) -> Box<dyn crate::optimizers::Optimizer> {
-        Box::new(GenomeOptimizer::new(self.0.clone()))
-    }
-    fn label(&self) -> String {
-        self.0.name.clone()
-    }
-}
-
 /// Run the generation stage: 4 applications x {with, without info}
 /// (paper §4.2), each the best of `gen_runs` independent LLaMEA runs
-/// trained on the target application's three training-GPU spaces.
+/// trained on the target application's three training-GPU spaces (shared
+/// with the evaluation stages via the coordinator registry).
 pub fn generate_all(opts: &ExpOptions, progress: bool) -> Vec<GeneratedAlgo> {
+    let registry = CacheRegistry::global();
     let mut out = Vec::new();
     for app in Application::ALL {
-        let space = std::sync::Arc::new(app.build_space());
-        let caches: Vec<Cache> = TRAIN_GPUS
+        let entries: Vec<_> = TRAIN_GPUS
             .iter()
-            .map(|g| {
-                Cache::build_with_space(
-                    app,
-                    crate::kernels::gpu::GpuSpec::by_name(g).unwrap(),
-                    std::sync::Arc::clone(&space),
-                )
-            })
+            .map(|g| registry.entry(CacheKey::new(app, GpuSpec::by_name(g).unwrap())))
             .collect();
-        let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+        let caches: Vec<&Cache> = entries.iter().map(|e| &e.cache).collect();
         for with_info in [false, true] {
-            let info = with_info.then(|| SpaceInfo::from_cache(&caches[0], &setups[0]));
+            let info =
+                with_info.then(|| SpaceInfo::from_cache(&entries[0].cache, &entries[0].setup));
             let mut config = EvolutionConfig::paper_defaults(app.name(), info);
             config.llm_call_budget = opts.llm_calls;
             let mut make = |seed: u64| -> Box<dyn crate::llamea::LlmClient> {
@@ -185,28 +170,28 @@ pub fn fig5(generated: &[GeneratedAlgo], out_dir: &Path) -> Table {
     t
 }
 
-/// Evaluation of a set of labeled optimizers over all 24 spaces.
+/// Evaluation of a set of labeled optimizers over all 24 spaces, as one
+/// flat job batch on the shared registry: the scheduler parallelizes
+/// across optimizers × spaces × seeds at once, and repeated calls (fig6,
+/// fig8, ...) reuse the same caches instead of rebuilding them.
 /// Returns (label, per-space aggregate) plus writes curve CSVs.
 pub fn evaluate_on_all_spaces(
     factories: &[(String, &dyn OptimizerFactory)],
-    runs: usize,
+    opts: &ExpOptions,
     seed: u64,
     out_dir: &Path,
     file_prefix: &str,
 ) -> Vec<(String, Aggregate, Vec<String>)> {
-    let caches = crate::tuning::build_all_caches();
-    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
-    let space_ids: Vec<String> = caches.iter().map(|c| c.id()).collect();
+    let entries = CacheRegistry::global().all_entries();
+    let space_ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+    let jobs = grid_jobs(&entries, factories, opts.runs, seed);
+    let curves = Scheduler::with_threads(opts.threads).run(&jobs);
+    let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
 
     let mut curves_csv = String::from("algorithm,t_frac,mean,ci95\n");
     let mut out = Vec::new();
-    for (label, factory) in factories {
-        let per_space: Vec<Vec<Vec<f64>>> = caches
-            .iter()
-            .zip(&setups)
-            .map(|(c, s)| run_many(c, s, *factory, runs, seed))
-            .collect();
-        let agg = aggregate(&per_space);
+    for (label, agg) in grid_aggregates(&labels, entries.len(), grouped) {
         let n = agg.curve.len();
         for (j, (&m, &ci)) in agg.curve.iter().zip(&agg.ci95).enumerate() {
             curves_csv.push_str(&format!(
@@ -217,7 +202,7 @@ pub fn evaluate_on_all_spaces(
                 ci
             ));
         }
-        out.push((label.clone(), agg, space_ids.clone()));
+        out.push((label, agg, space_ids.clone()));
     }
     write(out_dir, &format!("{}_curves.csv", file_prefix), &curves_csv);
     out
@@ -230,15 +215,15 @@ pub fn evaluate_generated(
     opts: &ExpOptions,
     out_dir: &Path,
 ) -> (Table, Table, Table) {
-    let factories: Vec<(String, GenomeFactory)> = generated
+    let factories: Vec<(String, OptimizerSpec)> = generated
         .iter()
-        .map(|g| (g.label(), GenomeFactory(g.genome.clone())))
+        .map(|g| (g.label(), OptimizerSpec::genome(g.genome.clone())))
         .collect();
     let refs: Vec<(String, &dyn OptimizerFactory)> = factories
         .iter()
-        .map(|(l, f)| (l.clone(), f as &dyn OptimizerFactory))
+        .map(|(l, spec)| (l.clone(), spec as &dyn OptimizerFactory))
         .collect();
-    let results = evaluate_on_all_spaces(&refs, opts.runs, opts.seed, out_dir, "fig6");
+    let results = evaluate_on_all_spaces(&refs, opts, opts.seed, out_dir, "fig6");
 
     // ---- Table 2: per-application with/without info ----
     let mut t2 = Table::new(
@@ -363,15 +348,15 @@ pub fn evaluate_generated(
 /// human-designed baselines GA + SA (Kernel Tuner) and DE (pyATF).
 pub fn fig8_fig9(opts: &ExpOptions, out_dir: &Path) -> (Table, Table) {
     let names = ["hybrid_vndx", "atgw", "ga", "sa", "de"];
-    let factories: Vec<(String, NamedFactory)> = names
+    let factories: Vec<(String, OptimizerSpec)> = names
         .iter()
-        .map(|n| (n.to_string(), NamedFactory(n.to_string())))
+        .map(|n| (n.to_string(), OptimizerSpec::named(*n)))
         .collect();
     let refs: Vec<(String, &dyn OptimizerFactory)> = factories
         .iter()
-        .map(|(l, f)| (l.clone(), f as &dyn OptimizerFactory))
+        .map(|(l, spec)| (l.clone(), spec as &dyn OptimizerFactory))
         .collect();
-    let results = evaluate_on_all_spaces(&refs, opts.runs, opts.seed ^ 0x89, out_dir, "fig8");
+    let results = evaluate_on_all_spaces(&refs, opts, opts.seed ^ 0x89, out_dir, "fig8");
 
     let mut f8 = Table::new(
         "Fig 8: aggregate performance, generated vs human-designed",
@@ -442,18 +427,17 @@ pub fn train_test_split(
         "Generalization: mean score on training GPUs vs held-out GPUs",
         &["Algorithm", "Train-GPU score", "Test-GPU score"],
     );
-    let caches = crate::tuning::build_all_caches();
-    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    let entries = CacheRegistry::global().all_entries();
     for g in generated {
-        let factory = GenomeFactory(g.genome.clone());
+        let spec = OptimizerSpec::genome(g.genome.clone());
         let mut train_scores = Vec::new();
         let mut test_scores = Vec::new();
-        for (c, s) in caches.iter().zip(&setups) {
-            let curves = run_many(c, s, &factory, opts.runs.min(30), opts.seed ^ 0x77);
+        for e in entries.iter() {
+            let curves = run_many(&e.cache, &e.setup, &spec, opts.runs.min(30), opts.seed ^ 0x77);
             let score = stats::mean(&stats::mean_curve(&curves));
-            if TRAIN_GPUS.contains(&c.gpu.name) {
+            if TRAIN_GPUS.contains(&e.cache.gpu.name) {
                 train_scores.push(score);
-            } else if TEST_GPUS.contains(&c.gpu.name) {
+            } else if TEST_GPUS.contains(&e.cache.gpu.name) {
                 test_scores.push(score);
             }
         }

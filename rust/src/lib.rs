@@ -1,5 +1,6 @@
 //! llamea-kt — reproduction of "Automated Algorithm Design for Auto-Tuning
 //! Optimizers" (Willemsen, van Stein, van Werkhoven).
+pub mod coordinator;
 pub mod harness;
 pub mod kernels;
 pub mod llamea;

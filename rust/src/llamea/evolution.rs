@@ -5,11 +5,13 @@
 //! discarding, and stack-trace repair when a whole generation fails.
 //! A run stops after `llm_call_budget` LLM calls (paper: 100).
 
+use std::borrow::Borrow;
+
 use super::genome::Genome;
 use super::llm::{Generation, LlmClient, TokenUsage};
 use super::prompt::{MutationPrompt, Prompt, SpaceInfo};
-use crate::llamea::interpreter::GenomeOptimizer;
-use crate::methodology::{aggregate, run_many, OptimizerFactory, SpaceSetup};
+use crate::methodology::{aggregate, run_many, SpaceSetup};
+use crate::optimizers::OptimizerSpec;
 use crate::tuning::Cache;
 use crate::util::rng::Rng;
 
@@ -62,45 +64,35 @@ pub struct EvolutionResult {
     pub fitness_history: Vec<f64>,
 }
 
-struct GenomeFactory {
-    genome: Genome,
-}
-
-impl OptimizerFactory for GenomeFactory {
-    fn build(&self) -> Box<dyn crate::optimizers::Optimizer> {
-        Box::new(GenomeOptimizer::new(self.genome.clone()))
-    }
-    fn label(&self) -> String {
-        self.genome.name.clone()
-    }
-}
-
 /// Fitness: aggregate performance score of the genome on the training set.
-pub fn fitness_of(
+/// Generic over `Cache` ownership so callers can pass owned caches or the
+/// coordinator registry's shared references.
+pub fn fitness_of<C: Borrow<Cache>>(
     genome: &Genome,
-    caches: &[Cache],
+    caches: &[C],
     setups: &[SpaceSetup],
     runs: usize,
     seed: u64,
 ) -> f64 {
-    let factory = GenomeFactory { genome: genome.clone() };
+    let spec = OptimizerSpec::genome(genome.clone());
     let per_space: Vec<Vec<Vec<f64>>> = caches
         .iter()
         .zip(setups)
-        .map(|(c, s)| run_many(c, s, &factory, runs, seed))
+        .map(|(c, s)| run_many(Borrow::borrow(c), s, &spec, runs, seed))
         .collect();
     aggregate(&per_space).score
 }
 
 /// Run one LLaMEA evolution (one of the paper's 5 independent runs).
-pub fn evolve(
+pub fn evolve<C: Borrow<Cache>>(
     config: &EvolutionConfig,
     llm: &mut dyn LlmClient,
-    caches: &[Cache],
+    caches: &[C],
     seed: u64,
 ) -> EvolutionResult {
     let mut rng = Rng::new(seed ^ 0x11AEA);
-    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+    let setups: Vec<SpaceSetup> =
+        caches.iter().map(|c| SpaceSetup::new(Borrow::borrow(c))).collect();
     let mut tokens = TokenUsage::default();
     let mut llm_calls = 0u64;
     let mut failures = 0u64;
@@ -206,10 +198,10 @@ pub fn evolve(
 
 /// The paper's protocol: 5 independent runs, keep the best-performing
 /// algorithm. Returns (best result, per-run token totals).
-pub fn evolve_best_of_runs(
+pub fn evolve_best_of_runs<C: Borrow<Cache>>(
     config: &EvolutionConfig,
     make_llm: &mut dyn FnMut(u64) -> Box<dyn LlmClient>,
-    caches: &[Cache],
+    caches: &[C],
     n_runs: usize,
     base_seed: u64,
 ) -> (EvolutionResult, Vec<u64>) {

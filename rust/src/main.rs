@@ -1,4 +1,12 @@
-//! llamea-kt CLI — the L3 coordinator entrypoint.
+//! llamea-kt CLI — front end of the L3 coordinator.
+//!
+//! Every evaluation subcommand is a job graph handed to the coordinator
+//! (`llamea_kt::coordinator`): tuning runs become `TuningJob`s (space ×
+//! optimizer spec × derived seed) drained by a work-stealing worker pool,
+//! and all (application, GPU) caches are built once in a process-wide
+//! registry and shared across stages. `--threads N` fixes the pool width
+//! (results are byte-identical for any width); `coordinate` exposes the
+//! job-graph layer directly for ad-hoc grids.
 //!
 //! Subcommands:
 //!   spaces                         print Table-1 style space statistics
@@ -8,14 +16,21 @@
 //!   real-tune [--kernel K]         measured PJRT tuning over AOT variants
 //!   experiment <id|all> [--out D]  regenerate paper tables/figures
 //!       ids: table1 fig5 fig6 table2 fig7 table3 fig8 fig9 all
-//!   options: --runs N --gen-runs N --llm-calls N --seed S
+//!   coordinate [--opts a,b:k=v,..] [--spaces app@gpu,..] [--runs N]
+//!              [--jobs N]          run an ad-hoc optimizer × space × seed
+//!                                  grid and report aggregate scores
+//!   options: --runs N --gen-runs N --llm-calls N --seed S --threads N
 
 use std::path::{Path, PathBuf};
 
+use llamea_kt::coordinator::{
+    collate, grid_aggregates, grid_jobs, score_table, CacheKey, CacheRegistry, Scheduler,
+};
 use llamea_kt::harness::{self, ExpOptions};
 use llamea_kt::kernels::gpu::GpuSpec;
 use llamea_kt::llamea::{evolve, EvolutionConfig, MockLlm, SpaceInfo};
-use llamea_kt::methodology::SpaceSetup;
+use llamea_kt::methodology::{OptimizerFactory, SpaceSetup};
+use llamea_kt::optimizers::OptimizerSpec;
 use llamea_kt::searchspace::Application;
 use llamea_kt::tuning::{Cache, TuningContext};
 
@@ -42,6 +57,12 @@ fn options(args: &[String]) -> ExpOptions {
     }
     if let Some(v) = flag_value(args, "--seed") {
         o.seed = v.parse().expect("--seed");
+    }
+    if let Some(v) = flag_value(args, "--threads") {
+        o.threads = Some(v.parse().expect("--threads"));
+        // Also govern the run_many-based paths (generation-stage fitness
+        // evaluation, train/test split) that size their pools via auto().
+        Scheduler::set_default_width(o.threads);
     }
     o
 }
@@ -90,15 +111,13 @@ fn cmd_evolve(args: &[String]) {
     let app = Application::from_name(&app_s).expect("unknown application");
     let with_info = has_flag(args, "--info");
     let opts = options(args);
-    let space = std::sync::Arc::new(app.build_space());
-    let caches: Vec<Cache> = llamea_kt::kernels::gpu::TRAIN_GPUS
+    let registry = CacheRegistry::global();
+    let entries: Vec<_> = llamea_kt::kernels::gpu::TRAIN_GPUS
         .iter()
-        .map(|g| {
-            Cache::build_with_space(app, GpuSpec::by_name(g).unwrap(), std::sync::Arc::clone(&space))
-        })
+        .map(|g| registry.entry(CacheKey::new(app, GpuSpec::by_name(g).unwrap())))
         .collect();
-    let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
-    let info = with_info.then(|| SpaceInfo::from_cache(&caches[0], &setups[0]));
+    let caches: Vec<&Cache> = entries.iter().map(|e| &e.cache).collect();
+    let info = with_info.then(|| SpaceInfo::from_cache(&entries[0].cache, &entries[0].setup));
     let mut config = EvolutionConfig::paper_defaults(app.name(), info);
     config.llm_call_budget = opts.llm_calls;
     let mut llm = MockLlm::new(opts.seed);
@@ -137,6 +156,67 @@ fn cmd_real_tune(args: &[String]) {
         println!("  {:50} {:8.3} ms  (compile {:.2}s)", name, ms, compile);
     }
     println!("  ... optimum {:.3} ms, median {:.3} ms", cache.optimum_ms, cache.median_ms);
+}
+
+/// Run an ad-hoc (optimizer × space × seed) grid through the coordinator
+/// and report aggregate scores. `--jobs N` (alias of `--threads`) fixes the
+/// worker-pool width; output is identical for any width.
+fn cmd_coordinate(args: &[String]) {
+    let opts = options(args);
+    let threads = flag_value(args, "--jobs")
+        .map(|v| v.parse().expect("--jobs"))
+        .or(opts.threads);
+    Scheduler::set_default_width(threads);
+    let runs: usize = flag_value(args, "--runs")
+        .map(|v| v.parse().expect("--runs"))
+        .unwrap_or(10);
+    let specs: Vec<OptimizerSpec> = match flag_value(args, "--opts").as_deref() {
+        None | Some("all") => llamea_kt::optimizers::all_names()
+            .map(OptimizerSpec::named)
+            .collect(),
+        Some(list) => OptimizerSpec::parse_list(list)
+            .unwrap_or_else(|| panic!("bad --opts list '{}'", list)),
+    };
+    let registry = CacheRegistry::global();
+    let entries = match flag_value(args, "--spaces").as_deref() {
+        None | Some("all") => registry.all_entries(),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                registry.entry(
+                    CacheKey::parse(s).unwrap_or_else(|| panic!("bad --spaces entry '{}'", s)),
+                )
+            })
+            .collect(),
+    };
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+    let jobs = grid_jobs(&entries, &factories, runs, opts.seed);
+    let sched = Scheduler::with_threads(threads);
+    eprintln!(
+        "coordinating {} jobs ({} optimizers x {} spaces x {} seeds) on {} workers",
+        jobs.len(),
+        specs.len(),
+        entries.len(),
+        runs,
+        sched.threads()
+    );
+    let t0 = std::time::Instant::now();
+    let curves = sched.run(&jobs);
+    let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+    let results = grid_aggregates(&labels, entries.len(), grouped);
+    println!(
+        "{}",
+        score_table("Coordinator: aggregate score P per optimizer", &results).to_text()
+    );
+    eprintln!(
+        "{} jobs over {} caches ({} built this process) in {:?}",
+        jobs.len(),
+        entries.len(),
+        registry.builds(),
+        t0.elapsed()
+    );
 }
 
 fn cmd_experiment(args: &[String]) {
@@ -199,9 +279,10 @@ fn main() {
         Some("evolve") => cmd_evolve(&args[1..]),
         Some("real-tune") => cmd_real_tune(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
+        Some("coordinate") => cmd_coordinate(&args[1..]),
         _ => {
             eprintln!(
-                "usage: llamea-kt <spaces|testbed|tune|evolve|real-tune|experiment> [options]\n\
+                "usage: llamea-kt <spaces|testbed|tune|evolve|real-tune|experiment|coordinate> [options]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);

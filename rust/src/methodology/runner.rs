@@ -1,6 +1,7 @@
 //! Run optimizers on spaces under the methodology's budget and produce
-//! per-run performance curves. Runs are embarrassingly parallel and spread
-//! over `std::thread` workers.
+//! per-run performance curves. Multi-run execution is delegated to the L3
+//! coordinator's scheduler (`crate::coordinator`), which parallelizes
+//! whole job batches; [`run_many`] is its single-space convenience wrapper.
 
 use super::baseline::Baseline;
 use super::curve::{performance_curve, resample_trajectory, sample_times, DEFAULT_T_POINTS};
@@ -80,6 +81,10 @@ pub fn single_run(
 
 /// Run `runs` independent seeds of the factory's optimizer on one space,
 /// in parallel; returns `runs` performance curves.
+///
+/// Thin wrapper over the L3 scheduler: one job per seed, with per-job
+/// seeds derived from (space id, optimizer label, run index) so results
+/// are identical to the same grid executed inside a larger batch.
 pub fn run_many(
     cache: &Cache,
     setup: &SpaceSetup,
@@ -87,33 +92,19 @@ pub fn run_many(
     runs: usize,
     base_seed: u64,
 ) -> Vec<Vec<f64>> {
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(runs.max(1));
-    let mut curves: Vec<Option<Vec<f64>>> = vec![None; runs];
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let slots: Vec<std::sync::Mutex<&mut Option<Vec<f64>>>> =
-        curves.iter_mut().map(std::sync::Mutex::new).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let r = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if r >= runs {
-                    break;
-                }
-                let mut opt = factory.build();
-                let curve = single_run(
-                    cache,
-                    setup,
-                    opt.as_mut(),
-                    base_seed.wrapping_add(r as u64 * 0x9E3779B97F4A7C15),
-                );
-                **slots[r].lock().unwrap() = Some(curve);
-            });
-        }
-    });
-    curves.into_iter().map(|c| c.unwrap()).collect()
+    use crate::coordinator::{job_seed, Scheduler, TuningJob};
+    let space_id = cache.id();
+    let label = factory.label();
+    let jobs: Vec<TuningJob> = (0..runs)
+        .map(|r| TuningJob {
+            cache,
+            setup,
+            factory,
+            seed: job_seed(base_seed, &space_id, &label, r as u64),
+            group: 0,
+        })
+        .collect();
+    Scheduler::auto().run(&jobs)
 }
 
 #[cfg(test)]

@@ -51,7 +51,28 @@ impl Optimizer for GeneticAlgorithm {
         "ga"
     }
 
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "population_size" => self.population_size = value as usize,
+            "tournament_k" => self.tournament_k = value as usize,
+            "crossover_rate" => self.crossover_rate = value,
+            "mutation_rate_factor" => self.mutation_rate_factor = value,
+            "elites" => self.elites = value as usize,
+            _ => return false,
+        }
+        true
+    }
+
     fn run(&mut self, ctx: &mut TuningContext) {
+        // Degenerate hyperparameters (settable via the public fields or
+        // spec overrides) must not hang the budget loop — an empty
+        // population would spin forever without ever charging the clock.
+        self.population_size = self.population_size.max(2);
+        self.tournament_k = self.tournament_k.max(1);
+        self.elites = self.elites.min(self.population_size - 1);
         let dims = ctx.space().dims();
         let mutation_rate = self.mutation_rate_factor / dims as f64;
 

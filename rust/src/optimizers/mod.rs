@@ -29,41 +29,192 @@ use crate::tuning::TuningContext;
 pub trait Optimizer {
     fn name(&self) -> &str;
     fn run(&mut self, ctx: &mut TuningContext);
+
+    /// Override a named hyperparameter before `run` (the seam
+    /// [`OptimizerSpec`] overrides flow through). Returns `false` for keys
+    /// the optimizer does not expose; the default exposes none.
+    fn set_hyperparam(&mut self, _key: &str, _value: f64) -> bool {
+        false
+    }
 }
 
-/// Instantiate a named optimizer with its tuned default hyperparameters.
+/// One registered optimizer: its canonical name and default constructor.
+pub struct RegistryEntry {
+    pub name: &'static str,
+    /// Construct with tuned default hyperparameters.
+    pub build: fn() -> Box<dyn Optimizer>,
+}
+
+/// The single registration table every optimizer goes through — `by_name`,
+/// `all_names` and the CLI are all derived from it, so an optimizer cannot
+/// be registered in one place and forgotten in another.
 ///
 /// Names: `random`, `ga`, `sa`, `de` (pyATF), `pso`, `greedy_ils`, `mls`,
 /// `basin_hopping`, `hybrid_vndx`, `atgw`.
+pub static REGISTRY: [RegistryEntry; 10] = [
+    RegistryEntry { name: "random", build: || Box::new(random_search::RandomSearch::default()) },
+    RegistryEntry {
+        name: "ga",
+        build: || Box::new(genetic_algorithm::GeneticAlgorithm::default()),
+    },
+    RegistryEntry {
+        name: "sa",
+        build: || Box::new(simulated_annealing::SimulatedAnnealing::default()),
+    },
+    RegistryEntry {
+        name: "de",
+        build: || Box::new(differential_evolution::DifferentialEvolution::default()),
+    },
+    RegistryEntry { name: "pso", build: || Box::new(particle_swarm::ParticleSwarm::default()) },
+    RegistryEntry { name: "greedy_ils", build: || Box::new(local_search::GreedyIls::default()) },
+    RegistryEntry {
+        name: "mls",
+        build: || Box::new(local_search::MultiStartLocalSearch::default()),
+    },
+    RegistryEntry {
+        name: "basin_hopping",
+        build: || Box::new(basin_hopping::BasinHopping::default()),
+    },
+    RegistryEntry {
+        name: "hybrid_vndx",
+        build: || Box::new(generated::hybrid_vndx::HybridVndx::default()),
+    },
+    RegistryEntry {
+        name: "atgw",
+        build: || Box::new(generated::adaptive_tabu_grey_wolf::AdaptiveTabuGreyWolf::default()),
+    },
+];
+
+/// Instantiate a named optimizer with its tuned default hyperparameters.
 pub fn by_name(name: &str) -> Option<Box<dyn Optimizer>> {
-    Some(match name {
-        "random" => Box::new(random_search::RandomSearch::default()),
-        "ga" => Box::new(genetic_algorithm::GeneticAlgorithm::default()),
-        "sa" => Box::new(simulated_annealing::SimulatedAnnealing::default()),
-        "de" => Box::new(differential_evolution::DifferentialEvolution::default()),
-        "pso" => Box::new(particle_swarm::ParticleSwarm::default()),
-        "greedy_ils" => Box::new(local_search::GreedyIls::default()),
-        "mls" => Box::new(local_search::MultiStartLocalSearch::default()),
-        "basin_hopping" => Box::new(basin_hopping::BasinHopping::default()),
-        "hybrid_vndx" => Box::new(generated::hybrid_vndx::HybridVndx::default()),
-        "atgw" => Box::new(generated::adaptive_tabu_grey_wolf::AdaptiveTabuGreyWolf::default()),
-        _ => return None,
-    })
+    REGISTRY.iter().find(|e| e.name == name).map(|e| (e.build)())
 }
 
-/// All registered optimizer names (stable order, used by the CLI).
-pub const ALL_NAMES: [&str; 10] = [
-    "random",
-    "ga",
-    "sa",
-    "de",
-    "pso",
-    "greedy_ils",
-    "mls",
-    "basin_hopping",
-    "hybrid_vndx",
-    "atgw",
-];
+/// All registered optimizer names (stable registry order, used by the CLI).
+pub fn all_names() -> impl Iterator<Item = &'static str> {
+    REGISTRY.iter().map(|e| e.name)
+}
+
+/// A serializable description of an optimizer instance: either a registry
+/// name plus hyperparameter overrides, or a genome from the LLaMEA loop.
+/// This is what tuning jobs carry — it is `Clone`, comparable, printable,
+/// and (for the named form) round-trips through [`OptimizerSpec::parse`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptimizerSpec {
+    /// A registry optimizer, e.g. `ga` or `ga:population_size=40,elites=3`.
+    Named { name: String, overrides: Vec<(String, f64)> },
+    /// A genome-interpreted optimizer produced by `crate::llamea`.
+    Genome(crate::llamea::Genome),
+}
+
+impl OptimizerSpec {
+    pub fn named(name: impl Into<String>) -> OptimizerSpec {
+        OptimizerSpec::Named { name: name.into(), overrides: Vec::new() }
+    }
+
+    pub fn genome(genome: crate::llamea::Genome) -> OptimizerSpec {
+        OptimizerSpec::Genome(genome)
+    }
+
+    /// Add a hyperparameter override (named specs only).
+    pub fn with_override(mut self, key: impl Into<String>, value: f64) -> OptimizerSpec {
+        match &mut self {
+            OptimizerSpec::Named { overrides, .. } => overrides.push((key.into(), value)),
+            OptimizerSpec::Genome(_) => panic!("genome specs take no hyperparameter overrides"),
+        }
+        self
+    }
+
+    /// Parse the CLI form `name` or `name:key=val,key=val`. Returns `None`
+    /// for unknown names or malformed overrides.
+    pub fn parse(s: &str) -> Option<OptimizerSpec> {
+        let (name, rest) = match s.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (s, None),
+        };
+        by_name(name)?;
+        let mut spec = OptimizerSpec::named(name);
+        if let Some(rest) = rest {
+            for kv in rest.split(',').filter(|kv| !kv.is_empty()) {
+                let (k, v) = kv.split_once('=')?;
+                spec = spec.with_override(k, v.parse::<f64>().ok()?);
+            }
+        }
+        Some(spec)
+    }
+
+    /// Parse a comma-separated list of specs (the CLI's `--opts` value).
+    /// Override lists also use commas (`ga:a=1,b=2`), so a segment that
+    /// contains `=` but no `:` continues the previous spec's overrides:
+    /// `ga:a=1,b=2,sa` parses as `[ga:a=1,b=2, sa]`.
+    pub fn parse_list(s: &str) -> Option<Vec<OptimizerSpec>> {
+        let mut raw: Vec<String> = Vec::new();
+        for seg in s.split(',').filter(|seg| !seg.is_empty()) {
+            if seg.contains('=') && !seg.contains(':') {
+                let prev = raw.last_mut()?;
+                prev.push(',');
+                prev.push_str(seg);
+            } else {
+                raw.push(seg.to_string());
+            }
+        }
+        raw.iter().map(|spec| OptimizerSpec::parse(spec)).collect()
+    }
+
+    /// Display label (registry name, or the genome's name).
+    pub fn label(&self) -> String {
+        match self {
+            OptimizerSpec::Named { name, .. } => name.clone(),
+            OptimizerSpec::Genome(g) => g.name.clone(),
+        }
+    }
+
+    /// Instantiate a fresh optimizer. Panics on unknown names or override
+    /// keys — a spec is validated configuration, not user input.
+    pub fn build(&self) -> Box<dyn Optimizer> {
+        match self {
+            OptimizerSpec::Named { name, overrides } => {
+                let mut opt =
+                    by_name(name).unwrap_or_else(|| panic!("unknown optimizer '{}'", name));
+                for (k, v) in overrides {
+                    assert!(
+                        opt.set_hyperparam(k, *v),
+                        "optimizer '{}' has no hyperparameter '{}'",
+                        name,
+                        k
+                    );
+                }
+                opt
+            }
+            OptimizerSpec::Genome(g) => Box::new(crate::llamea::GenomeOptimizer::new(g.clone())),
+        }
+    }
+}
+
+impl std::fmt::Display for OptimizerSpec {
+    fn fmt(&self, fmt: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OptimizerSpec::Named { name, overrides } => {
+                write!(fmt, "{}", name)?;
+                for (i, (k, v)) in overrides.iter().enumerate() {
+                    write!(fmt, "{}{}={}", if i == 0 { ':' } else { ',' }, k, v)?;
+                }
+                Ok(())
+            }
+            OptimizerSpec::Genome(g) => write!(fmt, "genome:{}", g.name),
+        }
+    }
+}
+
+/// Specs double as thread-safe factories for the runner/scheduler.
+impl crate::methodology::OptimizerFactory for OptimizerSpec {
+    fn build(&self) -> Box<dyn Optimizer> {
+        OptimizerSpec::build(self)
+    }
+    fn label(&self) -> String {
+        OptimizerSpec::label(self)
+    }
+}
 
 #[cfg(test)]
 pub(crate) mod testutil {
@@ -95,17 +246,68 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_resolves_all_names() {
-        for n in ALL_NAMES {
-            assert!(by_name(n).is_some(), "{}", n);
+    fn registry_roundtrip_is_table_driven() {
+        // Every table entry resolves, reports its own registry name, and
+        // round-trips through the spec syntax — a new optimizer added to
+        // the table is automatically covered.
+        for e in REGISTRY.iter() {
+            let opt = by_name(e.name).unwrap_or_else(|| panic!("{} missing", e.name));
+            assert_eq!(opt.name(), e.name, "constructor/name mismatch");
+            let spec = OptimizerSpec::parse(e.name).unwrap();
+            assert_eq!(spec.label(), e.name);
+            assert_eq!(OptimizerSpec::parse(&spec.to_string()), Some(spec));
         }
+        assert_eq!(all_names().count(), REGISTRY.len());
         assert!(by_name("nonexistent").is_none());
+        assert!(OptimizerSpec::parse("nonexistent").is_none());
+    }
+
+    #[test]
+    fn spec_overrides_parse_display_and_apply() {
+        let spec = OptimizerSpec::parse("ga:population_size=40,elites=3").unwrap();
+        assert_eq!(spec.to_string(), "ga:population_size=40,elites=3");
+        assert_eq!(spec.label(), "ga");
+        // Applying the overrides must succeed (set_hyperparam returns true).
+        let _ = spec.build();
+        assert!(OptimizerSpec::parse("ga:population_size").is_none(), "missing value");
+        assert!(OptimizerSpec::parse("ga:population_size=abc").is_none(), "bad value");
+
+        let mut ga = genetic_algorithm::GeneticAlgorithm::default();
+        assert!(ga.set_hyperparam("population_size", 40.0));
+        assert_eq!(ga.population_size, 40);
+        assert!(!ga.set_hyperparam("no_such_knob", 1.0));
+        assert!(!ga.set_hyperparam("crossover_rate", f64::NAN));
+    }
+
+    #[test]
+    fn spec_list_parsing_keeps_override_commas() {
+        let specs = OptimizerSpec::parse_list("ga:population_size=40,elites=3,sa,random").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].to_string(), "ga:population_size=40,elites=3");
+        assert_eq!(specs[1].label(), "sa");
+        assert_eq!(specs[2].label(), "random");
+        assert!(OptimizerSpec::parse_list("population_size=40").is_none(), "dangling override");
+        assert!(OptimizerSpec::parse_list("ga,nope").is_none());
+        assert_eq!(OptimizerSpec::parse_list("").unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn degenerate_hyperparams_cannot_hang_ga() {
+        // population_size 0 used to spin the generation loop forever
+        // without charging the budget clock.
+        let cache = testutil::conv_cache();
+        let spec = OptimizerSpec::named("ga")
+            .with_override("population_size", 0.0)
+            .with_override("tournament_k", 0.0);
+        let mut opt = spec.build();
+        let (best, _) = testutil::run_on(opt.as_mut(), &cache, 200.0, 1);
+        assert!(best.is_finite());
     }
 
     #[test]
     fn every_optimizer_terminates_and_improves_over_nothing() {
         let cache = testutil::conv_cache();
-        for n in ALL_NAMES {
+        for n in all_names() {
             let mut opt = by_name(n).unwrap();
             let (best, evals) = testutil::run_on(opt.as_mut(), &cache, 300.0, 42);
             assert!(best.is_finite(), "{} found nothing", n);

@@ -37,6 +37,20 @@ impl Optimizer for SimulatedAnnealing {
         "sa"
     }
 
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "t0" => self.t0 = value,
+            "alpha" => self.alpha = value,
+            "t_min" => self.t_min = value,
+            "stagnation_limit" => self.stagnation_limit = value as u32,
+            _ => return false,
+        }
+        true
+    }
+
     fn run(&mut self, ctx: &mut TuningContext) {
         let mut cooling = Cooling::new(self.t0, self.alpha, self.t_min);
         let mut current = ctx.space().random_valid(&mut ctx.rng);

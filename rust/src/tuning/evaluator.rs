@@ -99,9 +99,15 @@ impl<'a> TuningContext<'a> {
         self.clock_s >= self.budget_s || self.eval_calls >= MAX_EVAL_CALLS
     }
 
-    /// Fraction of the time budget consumed, clamped to [0, 1].
+    /// Fraction of the time budget consumed, clamped to [0, 1]. A
+    /// non-positive budget reports 1.0 (fully spent) rather than NaN —
+    /// generated-optimizer schedules branch on this value, and NaN would
+    /// silently disable every `fraction < x` phase switch.
     #[inline]
     pub fn budget_spent_fraction(&self) -> f64 {
+        if self.budget_s <= 0.0 {
+            return 1.0;
+        }
         (self.clock_s / self.budget_s).min(1.0)
     }
 
@@ -189,6 +195,16 @@ mod tests {
         assert!(ctx.elapsed_s() >= 10.0);
         assert!(ctx.budget_spent_fraction() >= 1.0 - 1e-12);
         assert!(n < 100, "budget should bound evals, got {}", n);
+    }
+
+    #[test]
+    fn zero_budget_reports_fully_spent_not_nan() {
+        let cache = ctx_cache();
+        let ctx = TuningContext::new(&cache, 0.0, 4);
+        assert_eq!(ctx.budget_spent_fraction(), 1.0);
+        assert!(ctx.budget_exhausted());
+        let neg = TuningContext::new(&cache, -5.0, 4);
+        assert_eq!(neg.budget_spent_fraction(), 1.0);
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Integration: the L3 coordinator — shared cache registry, job-graph
+//! scheduler determinism, and per-job seed derivation.
+
+use std::collections::HashSet;
+
+use llamea_kt::coordinator::{
+    collate, grid_aggregates, grid_jobs, job_seed, CacheKey, CacheRegistry, Scheduler,
+};
+use llamea_kt::methodology::{run_many, OptimizerFactory};
+use llamea_kt::optimizers::OptimizerSpec;
+
+fn test_factories(names: &[&str]) -> Vec<(String, OptimizerSpec)> {
+    names.iter().map(|n| (n.to_string(), OptimizerSpec::named(*n))).collect()
+}
+
+fn as_refs(owned: &[(String, OptimizerSpec)]) -> Vec<(String, &dyn OptimizerFactory)> {
+    owned.iter().map(|(l, s)| (l.clone(), s as &dyn OptimizerFactory)).collect()
+}
+
+/// The acceptance property: scheduler output is byte-identical across
+/// thread counts, on a grid spanning spaces AND optimizers AND seeds.
+#[test]
+fn grid_output_identical_across_thread_counts() {
+    let reg = CacheRegistry::new();
+    let entries = vec![
+        reg.entry(CacheKey::parse("convolution@A4000").unwrap()),
+        reg.entry(CacheKey::parse("convolution@W6600").unwrap()),
+    ];
+    let owned = test_factories(&["random", "sa"]);
+    let factories = as_refs(&owned);
+    let jobs = grid_jobs(&entries, &factories, 4, 2026);
+    assert_eq!(jobs.len(), 2 * 2 * 4);
+    let single = Scheduler::new(1).run(&jobs);
+    let wide = Scheduler::new(8).run(&jobs);
+    assert_eq!(single, wide, "thread count changed results");
+
+    // And the aggregates reassemble per (optimizer, space) without loss.
+    let grouped = collate(factories.len() * entries.len(), &jobs, wide);
+    assert!(grouped.iter().all(|g| g.len() == 4));
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+    let results = grid_aggregates(&labels, entries.len(), grouped);
+    assert_eq!(results.len(), 2);
+    assert!(results.iter().all(|(_, a)| a.score.is_finite() && a.per_space_scores.len() == 2));
+}
+
+/// `run_many` (the single-space wrapper) must agree bit-for-bit with the
+/// same runs executed inside a larger flat batch — the property that lets
+/// the harness swap per-experiment loops for one job graph.
+#[test]
+fn run_many_matches_flat_batch_execution() {
+    let reg = CacheRegistry::new();
+    let e = reg.entry(CacheKey::parse("convolution@A4000").unwrap());
+    let owned = test_factories(&["sa", "random"]);
+    let factories = as_refs(&owned);
+    let entries = vec![e.clone()];
+    let jobs = grid_jobs(&entries, &factories, 5, 99);
+    let grouped = collate(factories.len(), &jobs, Scheduler::auto().run(&jobs));
+    let via_wrapper_sa = run_many(&e.cache, &e.setup, &owned[0].1, 5, 99);
+    let via_wrapper_random = run_many(&e.cache, &e.setup, &owned[1].1, 5, 99);
+    assert_eq!(grouped[0], via_wrapper_sa);
+    assert_eq!(grouped[1], via_wrapper_random);
+}
+
+/// The registry builds each (application, GPU) cache at most once under
+/// concurrent access from many scheduler-like workers.
+#[test]
+fn registry_builds_once_under_concurrent_grid_access() {
+    let reg = CacheRegistry::new();
+    let keys = [
+        CacheKey::parse("convolution@A4000").unwrap(),
+        CacheKey::parse("convolution@W6600").unwrap(),
+    ];
+    std::thread::scope(|scope| {
+        for t in 0..8 {
+            let keys = &keys;
+            let reg = &reg;
+            scope.spawn(move || {
+                for _ in 0..4 {
+                    let e = reg.entry(keys[t % keys.len()]);
+                    assert!(e.cache.len() > 0);
+                    assert!(e.setup.budget_s > 0.0);
+                }
+            });
+        }
+    });
+    assert_eq!(reg.builds(), keys.len(), "each key must build exactly once");
+    // One application, two GPUs: the enumerated space is also shared.
+    assert_eq!(reg.space_builds(), 1);
+}
+
+/// The acceptance property for `experiment all`: every harness entry point
+/// shares the process-wide registry, so re-running an evaluation builds
+/// zero new caches.
+#[test]
+fn global_registry_is_shared_across_harness_calls() {
+    let out = std::env::temp_dir().join("llamea_kt_coord_test");
+    let opts = llamea_kt::harness::ExpOptions {
+        runs: 1,
+        gen_runs: 1,
+        llm_calls: 4,
+        seed: 3,
+        threads: None,
+    };
+    let owned = test_factories(&["random"]);
+    let factories = as_refs(&owned);
+    let first =
+        llamea_kt::harness::experiments::evaluate_on_all_spaces(&factories, &opts, 3, &out, "t1");
+    assert_eq!(first[0].2.len(), 24, "4 applications x 6 GPUs");
+    let after_first = CacheRegistry::global().builds();
+    assert!(after_first <= 24, "at most one build per (app, GPU): {}", after_first);
+    let second =
+        llamea_kt::harness::experiments::evaluate_on_all_spaces(&factories, &opts, 3, &out, "t2");
+    assert_eq!(
+        CacheRegistry::global().builds(),
+        after_first,
+        "second harness call must not rebuild caches"
+    );
+    // Same seeds, same registry: identical scores.
+    assert_eq!(first[0].1.per_space_scores, second[0].1.per_space_scores);
+}
+
+/// Property (mini-proptest): per-job seed derivation has no collisions
+/// across a full 10k-job experiment grid, for arbitrary base seeds.
+#[test]
+fn job_seed_collision_free_over_10k_grid() {
+    let apps = ["gemm", "convolution", "hotspot", "dedispersion"];
+    let gpus = ["MI250X", "A100", "A4000", "W6600", "W7800", "A6000"];
+    let opts: Vec<&str> = llamea_kt::optimizers::all_names().collect();
+    llamea_kt::util::proptest::check("job seeds collision-free", 4, |rng| {
+        let base = rng.next_u64();
+        let mut seen = HashSet::new();
+        let mut jobs = 0u64;
+        for app in apps {
+            for gpu in gpus {
+                let sid = format!("{}@{}", app, gpu);
+                for opt in &opts {
+                    for run in 0..42u64 {
+                        jobs += 1;
+                        assert!(
+                            seen.insert(job_seed(base, &sid, opt, run)),
+                            "seed collision at {}/{}/run{} (base {:#x})",
+                            sid,
+                            opt,
+                            run,
+                            base
+                        );
+                    }
+                }
+            }
+        }
+        assert!(jobs > 10_000, "grid too small: {}", jobs);
+    });
+}

@@ -3,7 +3,7 @@
 
 use llamea_kt::kernels::gpu::GpuSpec;
 use llamea_kt::methodology::SpaceSetup;
-use llamea_kt::optimizers::{by_name, ALL_NAMES};
+use llamea_kt::optimizers::{all_names, by_name};
 use llamea_kt::searchspace::Application;
 use llamea_kt::tuning::{Cache, TuningContext};
 
@@ -13,7 +13,7 @@ fn all_optimizers_on_all_apps_terminate_with_finite_best() {
         let cache = Cache::build(app, GpuSpec::by_name("A4000").unwrap());
         let setup = SpaceSetup::new(&cache);
         let budget = setup.budget_s.min(500.0);
-        for name in ALL_NAMES {
+        for name in all_names() {
             let mut opt = by_name(name).unwrap();
             let mut ctx = TuningContext::new(&cache, budget, 11);
             opt.run(&mut ctx);
