@@ -1,28 +1,33 @@
 //! Tuning jobs: the unit of work the L3 scheduler executes.
 //!
-//! A [`TuningJob`] is one seeded tuning run — a (pre-explored space,
-//! optimizer factory, fully-derived seed) triple. Batches of jobs are what
-//! the coordinator parallelizes over: every figure/table of the paper's
-//! evaluation is a cross product of spaces × optimizers × seeds, and
-//! [`grid_jobs`] expands that product into a flat, order-independent list.
+//! A [`TuningJob`] is one seeded tuning run — a (backend source, optimizer
+//! factory, fully-derived seed) triple. The source mints one fresh
+//! [`EvalBackend`](crate::tuning::EvalBackend) per run: a shared cached
+//! space in simulation mode, or a shared measured-variant source on the
+//! real-tune path — either way the job graph is identical. Batches of
+//! jobs are what the coordinator parallelizes over: every figure/table of
+//! the paper's evaluation is a cross product of spaces × optimizers ×
+//! seeds, and [`grid_jobs`] expands that product into a flat,
+//! order-independent list.
 //!
-//! Determinism contract: a job's result depends only on its `(cache, setup,
-//! factory, seed)` fields, never on which worker ran it or when. Seeds are
-//! derived with [`job_seed`] from the experiment base seed and the job's
-//! coordinates in the grid, so the same grid yields bit-identical results
-//! regardless of thread count, execution order, or how the batch was split.
+//! Determinism contract: a job's result depends only on its `(source,
+//! setup, factory, seed)` fields, never on which worker ran it or when.
+//! Seeds are derived with [`job_seed`] from the experiment base seed and
+//! the job's coordinates in the grid, so the same grid yields
+//! bit-identical results regardless of thread count, execution order, or
+//! how the batch was split.
 
 use std::sync::Arc;
 
 use super::registry::SpaceEntry;
 use crate::methodology::{runner::single_run, OptimizerFactory, SpaceSetup};
-use crate::tuning::Cache;
+use crate::tuning::BackendSource;
 use crate::util::rng::fnv1a;
 
-/// One seeded tuning run against a pre-explored search space.
+/// One seeded tuning run against an evaluation-backend source.
 pub struct TuningJob<'a> {
-    /// The space the run executes on.
-    pub cache: &'a Cache,
+    /// Mints the run's evaluation backend (shared across the batch).
+    pub source: &'a dyn BackendSource,
     /// Precomputed baseline/budget/sample-times of that space.
     pub setup: &'a SpaceSetup,
     /// Fresh-instance factory for the optimizer under test.
@@ -37,7 +42,7 @@ impl TuningJob<'_> {
     /// Execute the run and return its performance curve.
     pub fn execute(&self) -> Vec<f64> {
         let mut opt = self.factory.build();
-        single_run(self.cache, self.setup, opt.as_mut(), self.seed)
+        single_run(self.source, self.setup, opt.as_mut(), self.seed)
     }
 }
 
@@ -78,14 +83,43 @@ pub fn grid_jobs<'a>(
     for (fi, (_, factory)) in factories.iter().enumerate() {
         let seed_label = factory.label();
         for (si, e) in entries.iter().enumerate() {
-            let space_id = e.cache.id();
+            let space_id = e.cache.space_id();
             for r in 0..runs {
                 jobs.push(TuningJob {
-                    cache: &e.cache,
+                    source: &e.cache,
                     setup: &e.setup,
                     factory: *factory,
                     seed: job_seed(base_seed, &space_id, &seed_label, r as u64),
                     group: fi * entries.len() + si,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+/// Expand an (optimizer × source × seed) grid over arbitrary backend
+/// sources — the measured-path twin of [`grid_jobs`], used when the
+/// spaces under test are not registry caches (e.g. lazily measured
+/// variant spaces sharing one measurement store).
+pub fn source_jobs<'a>(
+    sources: &'a [(&'a dyn BackendSource, SpaceSetup)],
+    factories: &'a [(String, &'a dyn OptimizerFactory)],
+    runs: usize,
+    base_seed: u64,
+) -> Vec<TuningJob<'a>> {
+    let mut jobs = Vec::with_capacity(sources.len() * factories.len() * runs);
+    for (fi, (_, factory)) in factories.iter().enumerate() {
+        let seed_label = factory.label();
+        for (si, (source, setup)) in sources.iter().enumerate() {
+            let space_id = source.space_id();
+            for r in 0..runs {
+                jobs.push(TuningJob {
+                    source: *source,
+                    setup,
+                    factory: *factory,
+                    seed: job_seed(base_seed, &space_id, &seed_label, r as u64),
+                    group: fi * sources.len() + si,
                 });
             }
         }

@@ -12,10 +12,13 @@
 //!   builds and memoizes each (application, GPU) exhaustive cache and its
 //!   methodology setup exactly once, sharing `Arc`s across the generation
 //!   stage, Tables 2–3, Fig. 7 and Figs. 8–9.
-//! - [`job`]: a [`job::TuningJob`] is one seeded run; [`job::grid_jobs`]
-//!   expands a (spaces × optimizers × seeds) grid into a flat batch with
-//!   per-job seeds derived by [`job::job_seed`] from the job's grid
-//!   coordinates — never from execution order.
+//! - [`job`]: a [`job::TuningJob`] is one seeded run over any
+//!   `BackendSource` (a registry cache, or a measured-variant source on
+//!   the real-tune path); [`job::grid_jobs`] expands a (spaces ×
+//!   optimizers × seeds) grid into a flat batch with per-job seeds derived
+//!   by [`job::job_seed`] from the job's grid coordinates — never from
+//!   execution order. [`job::source_jobs`] is the same expansion over
+//!   arbitrary backend sources.
 //! - [`scheduler`]: a [`scheduler::Scheduler`] worker pool that drains a
 //!   batch via an atomic cursor, parallelizing across every axis at once
 //!   while keeping results byte-identical for any thread count.
@@ -34,7 +37,7 @@ pub mod registry;
 pub mod report;
 pub mod scheduler;
 
-pub use job::{grid_jobs, job_seed, TuningJob};
+pub use job::{grid_jobs, job_seed, source_jobs, TuningJob};
 pub use registry::{CacheKey, CacheRegistry, SpaceEntry};
 pub use report::{collate, grid_aggregates, score_table};
 pub use scheduler::Scheduler;

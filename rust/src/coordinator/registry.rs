@@ -110,6 +110,21 @@ impl CacheRegistry {
         .clone()
     }
 
+    /// Register an externally-built cache — e.g. a *measured* space
+    /// assembled by `runtime::measure_kernel` — under `key`, making it
+    /// schedulable through the same job graph as the simulated spaces.
+    /// Like every registry cell, the first registration wins; the entry
+    /// (new or pre-existing) is returned.
+    pub fn insert(&self, key: CacheKey, cache: Cache) -> Arc<SpaceEntry> {
+        let cell = self.entries.lock().unwrap().entry(key).or_default().clone();
+        cell.get_or_init(move || {
+            let setup = SpaceSetup::new(&cache);
+            self.cache_builds.fetch_add(1, Ordering::Relaxed);
+            Arc::new(SpaceEntry { key, cache, setup })
+        })
+        .clone()
+    }
+
     /// Number of caches constructed so far (tests assert exactly-once).
     pub fn builds(&self) -> usize {
         self.cache_builds.load(Ordering::Relaxed)
@@ -180,6 +195,30 @@ mod tests {
             }
         });
         assert_eq!(reg.builds(), 1, "concurrent access must build once");
+    }
+
+    #[test]
+    fn external_caches_can_join_the_registry() {
+        use crate::kernels::gpu::CPU_HOST;
+        let reg = CacheRegistry::new();
+        let cache = Cache::build(
+            crate::searchspace::Application::Convolution,
+            GpuSpec::by_name("A4000").unwrap(),
+        );
+        let key = CacheKey::new(cache.app, &CPU_HOST);
+        let a = reg.insert(key, cache);
+        assert_eq!(reg.builds(), 1);
+        assert!(a.setup.budget_s > 0.0);
+        // First insert wins; a second insert returns the existing entry.
+        let cache2 = Cache::build(
+            crate::searchspace::Application::Convolution,
+            GpuSpec::by_name("A4000").unwrap(),
+        );
+        let b = reg.insert(key, cache2);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.builds(), 1);
+        // And the entry is visible through the normal lookup.
+        assert!(Arc::ptr_eq(&a, &reg.entry(key)));
     }
 
     #[test]

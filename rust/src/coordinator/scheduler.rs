@@ -101,7 +101,7 @@ mod tests {
         let space_id = cache.id();
         let jobs: Vec<TuningJob> = (0..runs)
             .map(|r| TuningJob {
-                cache: &cache,
+                source: &cache,
                 setup: &setup,
                 factory: &factory,
                 seed: job_seed(42, &space_id, "sa", r as u64),

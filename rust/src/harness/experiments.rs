@@ -17,6 +17,27 @@ use crate::util::json::Json;
 use crate::util::stats;
 use crate::util::table::{delta, f, Table};
 
+/// Which evaluation backend a grid runs against (the CLI's `--backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pre-explored simulated caches (the paper's replayed-cachefile mode).
+    #[default]
+    Cached,
+    /// Lazily measured AOT variants over PJRT (`coordinate`/`real-tune`
+    /// only — the paper's figures are defined over the simulated testbed).
+    Measured,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "cached" => Some(BackendKind::Cached),
+            "measured" => Some(BackendKind::Measured),
+            _ => None,
+        }
+    }
+}
+
 /// Shared experiment options.
 #[derive(Debug, Clone)]
 pub struct ExpOptions {
@@ -29,17 +50,37 @@ pub struct ExpOptions {
     pub seed: u64,
     /// Scheduler worker count; `None` sizes the pool to the machine.
     pub threads: Option<usize>,
+    /// Evaluation backend the grid runs against.
+    pub backend: BackendKind,
 }
 
 impl Default for ExpOptions {
     fn default() -> Self {
-        ExpOptions { runs: 100, gen_runs: 5, llm_calls: 100, seed: 2026, threads: None }
+        ExpOptions {
+            runs: 100,
+            gen_runs: 5,
+            llm_calls: 100,
+            seed: 2026,
+            threads: None,
+            backend: BackendKind::Cached,
+        }
     }
 }
 
 fn write(out_dir: &Path, name: &str, content: &str) {
     std::fs::create_dir_all(out_dir).ok();
     std::fs::write(out_dir.join(name), content).expect("writing result file");
+}
+
+/// The paper's experiment grids are defined over the simulated testbed;
+/// validate the option where it is consumed, so library callers cannot
+/// silently run cached when they asked for measured.
+fn require_cached_backend(opts: &ExpOptions) {
+    assert!(
+        opts.backend == BackendKind::Cached,
+        "experiment grids replay the paper's simulated testbed; \
+         --backend measured applies to `coordinate` and `real-tune`"
+    );
 }
 
 // ---------------------------------------------------------------- Table 1
@@ -104,6 +145,7 @@ impl GeneratedAlgo {
 /// trained on the target application's three training-GPU spaces (shared
 /// with the evaluation stages via the coordinator registry).
 pub fn generate_all(opts: &ExpOptions, progress: bool) -> Vec<GeneratedAlgo> {
+    require_cached_backend(opts);
     let registry = CacheRegistry::global();
     let mut out = Vec::new();
     for app in Application::ALL {
@@ -182,6 +224,7 @@ pub fn evaluate_on_all_spaces(
     out_dir: &Path,
     file_prefix: &str,
 ) -> Vec<(String, Aggregate, Vec<String>)> {
+    require_cached_backend(opts);
     let entries = CacheRegistry::global().all_entries();
     let space_ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
     let jobs = grid_jobs(&entries, factories, opts.runs, seed);
@@ -423,6 +466,7 @@ pub fn train_test_split(
     opts: &ExpOptions,
     out_dir: &Path,
 ) -> Table {
+    require_cached_backend(opts);
     let mut t = Table::new(
         "Generalization: mean score on training GPUs vs held-out GPUs",
         &["Algorithm", "Train-GPU score", "Test-GPU score"],

@@ -4,5 +4,5 @@ pub mod experiments;
 
 pub use experiments::{
     dump_genomes, evaluate_generated, fig5, fig8_fig9, generate_all, table1,
-    testbed_summary, train_test_split, ExpOptions, GeneratedAlgo,
+    testbed_summary, train_test_split, BackendKind, ExpOptions, GeneratedAlgo,
 };

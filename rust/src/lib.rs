@@ -1,5 +1,18 @@
 //! llamea-kt — reproduction of "Automated Algorithm Design for Auto-Tuning
 //! Optimizers" (Willemsen, van Stein, van Werkhoven).
+
+// Deliberate style choices of this codebase (CI runs `clippy -D warnings`):
+// index loops over parallel slices, wide-but-flat argument lists in the
+// numeric reference kernels, result tuples in the harness, and the
+// genome-carrying spec variant are all clearer than their lint-suggested
+// rewrites here.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::large_enum_variant
+)]
+
 pub mod coordinator;
 pub mod harness;
 pub mod kernels;

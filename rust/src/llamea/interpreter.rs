@@ -45,14 +45,20 @@ impl GenomeOptimizer {
         }
     }
 
-    fn initial(&self, ctx: &mut TuningContext) -> Option<(u32, f64)> {
+    fn initial(
+        &self,
+        ctx: &mut TuningContext,
+        space: &crate::searchspace::SearchSpace,
+    ) -> Option<(u32, f64)> {
         match self.genome.init {
             Init::Random => {
+                // Sequential by necessity: how many draws happen depends
+                // on each evaluation's outcome (retry on failures).
                 for _ in 0..16 {
                     if ctx.budget_exhausted() {
                         return None;
                     }
-                    let i = ctx.space().random_valid(&mut ctx.rng);
+                    let i = space.random_valid(&mut ctx.rng);
                     if let Some(v) = ctx.evaluate(i) {
                         return Some((i, v));
                     }
@@ -60,12 +66,13 @@ impl GenomeOptimizer {
                 None
             }
             Init::BestOfSample(k) => {
+                // The sample is drawn up front, so the whole probe goes to
+                // the backend as one batch (bit-identical to the
+                // sequential loop; skipped entries come back as None).
+                let sample = space.random_sample(&mut ctx.rng, k);
                 let mut best: Option<(u32, f64)> = None;
-                for i in ctx.space().random_sample(&mut ctx.rng, k) {
-                    if ctx.budget_exhausted() {
-                        break;
-                    }
-                    if let Some(v) = ctx.evaluate(i) {
+                for (&i, v) in sample.iter().zip(ctx.evaluate_batch(&sample)) {
+                    if let Some(v) = v {
                         if best.map(|(_, bv)| v < bv).unwrap_or(true) {
                             best = Some((i, v));
                         }
@@ -78,6 +85,7 @@ impl GenomeOptimizer {
 
     fn run_single(&self, ctx: &mut TuningContext) {
         let g = &self.genome;
+        let space = ctx.space_handle();
         let mut history = History::default();
         let mut elites = g.elites.map(|e| EliteArchive::new(e.size));
         let mut tabu = g.tabu_size.map(TabuList::new);
@@ -89,8 +97,8 @@ impl GenomeOptimizer {
         };
         let mut cooling = Cooling::new(t0, cooling_rate, 1e-6);
 
-        let Some((mut x, mut f_x)) = self.initial(ctx) else { return };
-        history.push(x, ctx.space().config(x), f_x);
+        let Some((mut x, mut f_x)) = self.initial(ctx, &space) else { return };
+        history.push(x, space.config(x), f_x);
         if let Some(e) = elites.as_mut() {
             e.push(x, f_x);
         }
@@ -108,7 +116,7 @@ impl GenomeOptimizer {
                 idle_steps += 1;
                 if idle_steps > 300 {
                     if g.restart.is_some() {
-                        if let Some((nx, nf)) = self.initial(ctx) {
+                        if let Some((nx, nf)) = self.initial(ctx, &space) {
                             x = nx;
                             f_x = nf;
                         }
@@ -135,7 +143,7 @@ impl GenomeOptimizer {
                 .map(|&(mx, mk, _)| mx != x || mk != n_idx)
                 .unwrap_or(true)
             {
-                memo = Some((x, n_idx, ctx.space().neighbors(x, kind)));
+                memo = Some((x, n_idx, space.neighbors(x, kind)));
             }
             let neigh = &memo.as_ref().unwrap().2;
             let mut pool: Vec<u32> = Vec::with_capacity(g.pool_size);
@@ -146,17 +154,17 @@ impl GenomeOptimizer {
             }
             if let Some(e) = elites.as_ref() {
                 if ctx.rng.chance(g.elites.unwrap().crossover_prob.max(0.05)) {
-                    if let Some(child) = e.crossover_child(ctx.space(), &mut ctx.rng) {
-                        let idx = match ctx.space().index_of(&child) {
+                    if let Some(child) = e.crossover_child(&space, &mut ctx.rng) {
+                        let idx = match space.index_of(&child) {
                             Some(i) => i,
-                            None => ctx.space().repair(&child, &mut ctx.rng),
+                            None => space.repair(&child, &mut ctx.rng),
                         };
                         pool.push(idx);
                     }
                 }
             }
             while pool.len() < g.pool_size {
-                pool.push(ctx.space().random_valid(&mut ctx.rng));
+                pool.push(space.random_valid(&mut ctx.rng));
             }
 
             // Pre-screen.
@@ -165,7 +173,7 @@ impl GenomeOptimizer {
                 let mut best_score = f64::INFINITY;
                 for &c in &pool {
                     let mut score =
-                        s.predict(&history, ctx.space().config(c)).unwrap_or(f_x);
+                        s.predict(&history, space.config(c)).unwrap_or(f_x);
                     if tabu.as_ref().map(|t| t.contains(c)).unwrap_or(false) {
                         score += 0.25 * f_x.abs().max(score.abs());
                     }
@@ -187,7 +195,7 @@ impl GenomeOptimizer {
                 stagnation += 1;
                 continue;
             };
-            history.push(chosen, ctx.space().config(chosen), f_c);
+            history.push(chosen, space.config(chosen), f_c);
             if let Some(e) = elites.as_mut() {
                 e.push(chosen, f_c);
             }
@@ -216,10 +224,10 @@ impl GenomeOptimizer {
 
             if let Some(r) = g.restart {
                 if stagnation > r.stagnation {
-                    if let Some((nx, nf)) = self.initial(ctx) {
+                    if let Some((nx, nf)) = self.initial(ctx, &space) {
                         x = nx;
                         f_x = nf;
-                        history.push(x, ctx.space().config(x), f_x);
+                        history.push(x, space.config(x), f_x);
                     }
                     cooling.reset();
                     stagnation = 0;
@@ -230,6 +238,7 @@ impl GenomeOptimizer {
 
     fn run_population(&self, ctx: &mut TuningContext) {
         let g = &self.genome;
+        let space = ctx.space_handle();
         let p = g.population.size.max(4);
         let mut tabu = g.tabu_size.map(TabuList::new);
         let mut cooling = match g.acceptance {
@@ -237,20 +246,23 @@ impl GenomeOptimizer {
             _ => Cooling::new(1.0, 1.0, 1e-6),
         };
 
-        let mut pop: Vec<u32> = ctx.space().random_sample(&mut ctx.rng, p);
+        // Initial population as one backend batch (stream-preservation
+        // argument: see TuningContext::evaluate_random_sample). The
+        // steady-state generation loop below stays sequential —
+        // Metropolis acceptance draws RNG per member between evaluations,
+        // so batching it would change the stream.
+        let mut pop: Vec<u32> = Vec::with_capacity(p);
         let mut fit: Vec<f64> = Vec::with_capacity(p);
-        for &i in &pop {
-            if ctx.budget_exhausted() {
-                return;
-            }
-            fit.push(ctx.evaluate(i).unwrap_or(f64::INFINITY));
+        for (i, f) in ctx.evaluate_random_sample(p) {
+            pop.push(i);
+            fit.push(f.unwrap_or(f64::INFINITY));
             if let Some(t) = tabu.as_mut() {
                 t.push(i);
             }
         }
         let mut best_seen = fit.iter().cloned().fold(f64::INFINITY, f64::min);
         let mut stagnation = 0u32;
-        let dims = ctx.space().dims();
+        let dims = space.dims();
         let mut idle_loops = 0u32;
         let mut last_unique = ctx.unique_evals();
 
@@ -276,11 +288,11 @@ impl GenomeOptimizer {
                 }
                 let x = pop[t_idx];
                 let (xa, xb, xd) = (
-                    ctx.space().config(leaders[0]).to_vec(),
-                    ctx.space().config(leaders[1]).to_vec(),
-                    ctx.space().config(leaders[2]).to_vec(),
+                    space.config(leaders[0]).to_vec(),
+                    space.config(leaders[1]).to_vec(),
+                    space.config(leaders[2]).to_vec(),
                 );
-                let xx = ctx.space().config(x).to_vec();
+                let xx = space.config(x).to_vec();
                 let mut y: Vec<u16> = (0..dims)
                     .map(|d| match ctx.rng.below(4) {
                         0 => xa[d],
@@ -292,23 +304,22 @@ impl GenomeOptimizer {
                 if ctx.rng.chance(g.population.shake_rate) {
                     let d = ctx.rng.below(dims);
                     if ctx.rng.chance(g.population.jump_rate) {
-                        let fresh = ctx.space().random_valid(&mut ctx.rng);
-                        y[d] = ctx.space().config(fresh)[d];
+                        let fresh = space.random_valid(&mut ctx.rng);
+                        y[d] = space.config(fresh)[d];
                     } else {
-                        let card = ctx.space().params.params[d].cardinality() as i32;
+                        let card = space.params.params[d].cardinality() as i32;
                         let step = if ctx.rng.chance(0.5) { 1 } else { -1 };
                         y[d] = (y[d] as i32 + step).clamp(0, card - 1) as u16;
                     }
                 }
-                let mut idx = match ctx.space().index_of(&y) {
+                let mut idx = match space.index_of(&y) {
                     Some(i) => i,
-                    None => ctx.space().repair(&y, &mut ctx.rng),
+                    None => space.repair(&y, &mut ctx.rng),
                 };
                 if tabu.as_ref().map(|t| t.contains(idx)).unwrap_or(false) {
-                    idx = ctx
-                        .space()
+                    idx = space
                         .random_neighbor(idx, &mut ctx.rng, g.neighborhoods[0])
-                        .unwrap_or_else(|| ctx.space().random_valid(&mut ctx.rng));
+                        .unwrap_or_else(|| space.random_valid(&mut ctx.rng));
                 }
                 let Some(f_y) = ctx.evaluate(idx) else { continue };
                 if self.accept(&g.acceptance, &mut cooling, fit[t_idx], f_y, b, &mut ctx.rng) {
@@ -331,13 +342,14 @@ impl GenomeOptimizer {
                     let k = ((r.reinit_ratio * p as f64).ceil() as usize).clamp(1, p);
                     let mut order: Vec<usize> = (0..pop.len()).collect();
                     order.sort_by(|&a, &c| fit[c].partial_cmp(&fit[a]).unwrap());
-                    for &w in order.iter().take(k) {
-                        if ctx.budget_exhausted() {
-                            return;
-                        }
-                        let fresh = ctx.space().random_valid(&mut ctx.rng);
-                        pop[w] = fresh;
-                        fit[w] = ctx.evaluate(fresh).unwrap_or(f64::INFINITY);
+                    // Reinit the worst k as one batch (stream-preservation
+                    // argument: see TuningContext::evaluate_random_draws).
+                    let targets: Vec<usize> = order.iter().take(k).copied().collect();
+                    for (&w, (f_idx, f)) in
+                        targets.iter().zip(ctx.evaluate_random_draws(targets.len()))
+                    {
+                        pop[w] = f_idx;
+                        fit[w] = f.unwrap_or(f64::INFINITY);
                     }
                     stagnation = 0;
                 }

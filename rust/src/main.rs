@@ -11,28 +11,42 @@
 //! Subcommands:
 //!   spaces                         print Table-1 style space statistics
 //!   testbed                        print the six-GPU testbed
+//!   optimizers                     list the registry with exposed
+//!                                  hyperparameter keys (--opts name:key=val)
 //!   tune --space A@G --opt NAME    one tuning run on a simulated space
 //!   evolve --app NAME [--info]     one LLaMEA generation run
-//!   real-tune [--kernel K]         measured PJRT tuning over AOT variants
+//!   real-tune [--kernel K]         measured PJRT tuning over AOT variants;
+//!       [--opts a,b --runs N]      route the measured cache through the
+//!                                  coordinator job graph
+//!       [--lazy --budget-s B]      measure on demand through the
+//!                                  MeasuredBackend instead of exhaustively
 //!   experiment <id|all> [--out D]  regenerate paper tables/figures
 //!       ids: table1 fig5 fig6 table2 fig7 table3 fig8 fig9 all
 //!   coordinate [--opts a,b:k=v,..] [--spaces app@gpu,..] [--runs N]
 //!              [--jobs N]          run an ad-hoc optimizer × space × seed
 //!                                  grid and report aggregate scores
+//!       [--backend measured        tune lazily-measured AOT variant spaces
+//!        --artifacts DIR]          instead of simulated caches
 //!   options: --runs N --gen-runs N --llm-calls N --seed S --threads N
+//!            --backend cached|measured
+
+#![allow(clippy::type_complexity)]
 
 use std::path::{Path, PathBuf};
 
 use llamea_kt::coordinator::{
-    collate, grid_aggregates, grid_jobs, score_table, CacheKey, CacheRegistry, Scheduler,
+    collate, grid_aggregates, grid_jobs, score_table, source_jobs, CacheKey, CacheRegistry,
+    Scheduler,
 };
-use llamea_kt::harness::{self, ExpOptions};
-use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::harness::{self, BackendKind, ExpOptions};
+use llamea_kt::kernels::gpu::{GpuSpec, CPU_HOST};
 use llamea_kt::llamea::{evolve, EvolutionConfig, MockLlm, SpaceInfo};
 use llamea_kt::methodology::{OptimizerFactory, SpaceSetup};
 use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::runtime::{measured::NOMINAL_EVAL_COST_S, MeasuredSource, PjrtRuntime};
 use llamea_kt::searchspace::Application;
-use llamea_kt::tuning::{Cache, TuningContext};
+use llamea_kt::tuning::{BackendSource, Cache, TuningContext};
+use llamea_kt::util::table::Table;
 
 fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter()
@@ -63,6 +77,10 @@ fn options(args: &[String]) -> ExpOptions {
         // Also govern the run_many-based paths (generation-stage fitness
         // evaluation, train/test split) that size their pools via auto().
         Scheduler::set_default_width(o.threads);
+    }
+    if let Some(v) = flag_value(args, "--backend") {
+        o.backend = BackendKind::parse(&v)
+            .unwrap_or_else(|| panic!("--backend must be 'cached' or 'measured', got '{}'", v));
     }
     o
 }
@@ -134,12 +152,88 @@ fn cmd_evolve(args: &[String]) {
     println!("fitness history: {:?}", result.fitness_history);
 }
 
+/// List the optimizer registry with each optimizer's exposed
+/// hyperparameter keys (the `--opts name:key=val` surface).
+fn cmd_optimizers() {
+    let mut t = Table::new(
+        "Registered optimizers (override via --opts name:key=val,...)",
+        &["Name", "Hyperparameters"],
+    );
+    for name in llamea_kt::optimizers::all_names() {
+        let opt = llamea_kt::optimizers::by_name(name).unwrap();
+        let keys = opt.hyperparams();
+        let keys = if keys.is_empty() { "(none exposed)".to_string() } else { keys.join(", ") };
+        t.row(vec![name.to_string(), keys]);
+    }
+    println!("{}", t.to_text());
+}
+
+/// Parse `--opts` into specs (default: the given fallback list).
+fn opt_specs(args: &[String], fallback: &[&str]) -> Vec<OptimizerSpec> {
+    match flag_value(args, "--opts").as_deref() {
+        None => fallback.iter().map(|n| OptimizerSpec::named(*n)).collect(),
+        Some("all") => llamea_kt::optimizers::all_names().map(OptimizerSpec::named).collect(),
+        Some(list) => OptimizerSpec::parse_list(list)
+            .unwrap_or_else(|| panic!("bad --opts list '{}'", list)),
+    }
+}
+
+fn pjrt_runtime_or_exit() -> PjrtRuntime {
+    match PjrtRuntime::new() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("measured path unavailable: {}", e);
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_real_tune(args: &[String]) {
     let kernel = flag_value(args, "--kernel").unwrap_or_else(|| "gemm".into());
     let dir = PathBuf::from(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
     let set = llamea_kt::runtime::ArtifactSet::load(&dir).expect("loading manifest");
-    let runtime = llamea_kt::runtime::PjrtRuntime::new().expect("PJRT client");
+    let runtime = pjrt_runtime_or_exit();
     println!("platform: {}", runtime.platform());
+    let opts = options(args);
+    let runs: usize = flag_value(args, "--runs").map(|v| v.parse().expect("--runs")).unwrap_or(3);
+
+    if has_flag(args, "--lazy") {
+        // Lazy mode: optimizers drive the MeasuredBackend directly; only
+        // visited variants are compiled and timed, and the shared source
+        // store dedups measurements across all seeds and optimizers.
+        let budget_s: f64 =
+            flag_value(args, "--budget-s").map(|v| v.parse().expect("--budget-s")).unwrap_or(60.0);
+        let source = MeasuredSource::new(&runtime, &set, &kernel, 2, 7, opts.seed)
+            .expect("building variant space");
+        let specs = opt_specs(args, &["hybrid_vndx"]);
+        let factories: Vec<(String, &dyn OptimizerFactory)> =
+            specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+        let sources: Vec<(&dyn BackendSource, SpaceSetup)> = vec![(
+            &source as &dyn BackendSource,
+            SpaceSetup::uncalibrated(budget_s, NOMINAL_EVAL_COST_S),
+        )];
+        let jobs = source_jobs(&sources, &factories, runs, opts.seed);
+        let t0 = std::time::Instant::now();
+        Scheduler::with_threads(opts.threads).run(&jobs);
+        let space_len = source.space().len();
+        println!(
+            "lazily measured {}/{} variants of {} in {:?} ({} jobs, budget {:.0}s each)",
+            source.measured_count(),
+            space_len,
+            kernel,
+            t0.elapsed(),
+            jobs.len(),
+            budget_s
+        );
+        for (name, ms, cost) in source.results().iter().take(5) {
+            println!("  {:50} {:8.3} ms  (eval cost {:.2}s)", name, ms, cost);
+        }
+        for e in source.errors() {
+            eprintln!("  measurement error: {}", e);
+        }
+        return;
+    }
+
     let t0 = std::time::Instant::now();
     let measured =
         llamea_kt::runtime::measure_kernel(&runtime, &set, &kernel, 2, 7, 42).expect("measuring");
@@ -149,18 +243,54 @@ fn cmd_real_tune(args: &[String]) {
         kernel,
         t0.elapsed()
     );
-    let cache = &measured.cache;
     let mut sorted = measured.measurements.clone();
     sorted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
     for (name, ms, compile) in sorted.iter().take(5) {
         println!("  {:50} {:8.3} ms  (compile {:.2}s)", name, ms, compile);
     }
+    let cache = measured.cache;
     println!("  ... optimum {:.3} ms, median {:.3} ms", cache.optimum_ms, cache.median_ms);
+
+    if flag_value(args, "--opts").is_some() {
+        // Route the measured cache through the same registry/job-graph as
+        // the simulated spaces: optimizers tune real measurements.
+        let specs = opt_specs(args, &[]);
+        let registry = CacheRegistry::global();
+        let space_name = cache.space.name.clone();
+        let entry = registry.insert(CacheKey::new(cache.app, &CPU_HOST), cache);
+        // Kernels that don't map onto a known application all key as
+        // (Gemm, CPU-PJRT); first registration wins, so a collision would
+        // silently report another kernel's measurements. Refuse instead.
+        if entry.cache.space.name != space_name {
+            eprintln!(
+                "registry key {} already holds measured space '{}' (this run measured '{}'); \
+                 re-run in a fresh process",
+                entry.key.id(),
+                entry.cache.space.name,
+                space_name
+            );
+            std::process::exit(2);
+        }
+        let entries = vec![entry];
+        let factories: Vec<(String, &dyn OptimizerFactory)> =
+            specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+        let jobs = grid_jobs(&entries, &factories, runs, opts.seed);
+        let curves = Scheduler::with_threads(opts.threads).run(&jobs);
+        let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+        let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+        let results = grid_aggregates(&labels, entries.len(), grouped);
+        println!(
+            "{}",
+            score_table("Measured space: aggregate score P per optimizer", &results).to_text()
+        );
+    }
 }
 
 /// Run an ad-hoc (optimizer × space × seed) grid through the coordinator
 /// and report aggregate scores. `--jobs N` (alias of `--threads`) fixes the
-/// worker-pool width; output is identical for any width.
+/// worker-pool width; output is identical for any width. With `--backend
+/// measured`, the grid runs over lazily-measured AOT variant spaces from
+/// `--artifacts` instead of simulated caches.
 fn cmd_coordinate(args: &[String]) {
     let opts = options(args);
     let threads = flag_value(args, "--jobs")
@@ -170,13 +300,12 @@ fn cmd_coordinate(args: &[String]) {
     let runs: usize = flag_value(args, "--runs")
         .map(|v| v.parse().expect("--runs"))
         .unwrap_or(10);
-    let specs: Vec<OptimizerSpec> = match flag_value(args, "--opts").as_deref() {
-        None | Some("all") => llamea_kt::optimizers::all_names()
-            .map(OptimizerSpec::named)
-            .collect(),
-        Some(list) => OptimizerSpec::parse_list(list)
-            .unwrap_or_else(|| panic!("bad --opts list '{}'", list)),
-    };
+    let all_names: Vec<&str> = llamea_kt::optimizers::all_names().collect();
+    let specs: Vec<OptimizerSpec> = opt_specs(args, &all_names);
+    if opts.backend == BackendKind::Measured {
+        coordinate_measured(args, &opts, &specs, threads, runs);
+        return;
+    }
     let registry = CacheRegistry::global();
     let entries = match flag_value(args, "--spaces").as_deref() {
         None | Some("all") => registry.all_entries(),
@@ -219,10 +348,89 @@ fn cmd_coordinate(args: &[String]) {
     );
 }
 
+/// The `--backend measured` arm of `coordinate`: one lazily-measured
+/// variant space per kernel in the artifact manifest, tuned through the
+/// same job graph. Each space shares one measurement store, so the whole
+/// grid compiles/times every variant at most once.
+fn coordinate_measured(
+    args: &[String],
+    opts: &ExpOptions,
+    specs: &[OptimizerSpec],
+    threads: Option<usize>,
+    runs: usize,
+) {
+    if flag_value(args, "--spaces").is_some() {
+        eprintln!(
+            "--backend measured selects kernels from the artifact manifest; \
+             use --kernel K instead of --spaces"
+        );
+        std::process::exit(2);
+    }
+    let dir = PathBuf::from(flag_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+    let set = llamea_kt::runtime::ArtifactSet::load(&dir).expect("loading manifest");
+    let runtime = pjrt_runtime_or_exit();
+    let budget_s: f64 =
+        flag_value(args, "--budget-s").map(|v| v.parse().expect("--budget-s")).unwrap_or(60.0);
+    let kernels = match flag_value(args, "--kernel") {
+        Some(k) => vec![k],
+        None => set.kernels(),
+    };
+    let owned: Vec<MeasuredSource> = kernels
+        .iter()
+        .map(|k| {
+            MeasuredSource::new(&runtime, &set, k, 2, 7, opts.seed)
+                .unwrap_or_else(|e| panic!("variant space for '{}': {}", k, e))
+        })
+        .collect();
+    let sources: Vec<(&dyn BackendSource, SpaceSetup)> = owned
+        .iter()
+        .map(|s| (s as &dyn BackendSource, SpaceSetup::uncalibrated(budget_s, NOMINAL_EVAL_COST_S)))
+        .collect();
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+    let jobs = source_jobs(&sources, &factories, runs, opts.seed);
+    let sched = Scheduler::with_threads(threads);
+    eprintln!(
+        "coordinating {} measured jobs ({} optimizers x {} kernels x {} seeds) on {} workers",
+        jobs.len(),
+        factories.len(),
+        sources.len(),
+        runs,
+        sched.threads()
+    );
+    let t0 = std::time::Instant::now();
+    sched.run(&jobs);
+    // No methodology score table here: uncalibrated spaces have no
+    // random-search reference, so curve-based scores would be
+    // meaningless. The deliverables are the measured optima.
+    for source in &owned {
+        println!(
+            "{}: measured {}/{} variants",
+            source.space_id(),
+            source.measured_count(),
+            source.space().len()
+        );
+        for (name, ms, cost) in source.results().iter().take(3) {
+            println!("  {:50} {:8.3} ms  (eval cost {:.2}s)", name, ms, cost);
+        }
+        for e in source.errors() {
+            eprintln!("  measurement error: {}", e);
+        }
+    }
+    eprintln!("{} jobs in {:?}", jobs.len(), t0.elapsed());
+}
+
 fn cmd_experiment(args: &[String]) {
     let id = args.first().map(|s| s.as_str()).unwrap_or("all");
     let rest = &args[args.len().min(1)..];
     let opts = options(rest);
+    if opts.backend == BackendKind::Measured {
+        eprintln!(
+            "experiment grids replay the paper's simulated testbed; \
+             --backend measured applies to `coordinate` and `real-tune`"
+        );
+        std::process::exit(2);
+    }
     let out = out_dir(rest);
     std::fs::create_dir_all(&out).ok();
     let t0 = std::time::Instant::now();
@@ -275,6 +483,7 @@ fn main() {
     match args.first().map(|s| s.as_str()) {
         Some("spaces") => cmd_spaces(),
         Some("testbed") => println!("{}", harness::testbed_summary().to_text()),
+        Some("optimizers") => cmd_optimizers(),
         Some("tune") => cmd_tune(&args[1..]),
         Some("evolve") => cmd_evolve(&args[1..]),
         Some("real-tune") => cmd_real_tune(&args[1..]),
@@ -282,7 +491,7 @@ fn main() {
         Some("coordinate") => cmd_coordinate(&args[1..]),
         _ => {
             eprintln!(
-                "usage: llamea-kt <spaces|testbed|tune|evolve|real-tune|experiment|coordinate> [options]\n\
+                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate> [options]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);

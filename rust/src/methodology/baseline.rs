@@ -31,6 +31,17 @@ impl Baseline {
         }
     }
 
+    /// Degenerate flat baseline for spaces with no pre-explored value
+    /// distribution (lazy measured backends): the expected best is a
+    /// constant. Performance scores computed against it are meaningless
+    /// (baseline == optimum, so `performance_curve` hits its
+    /// zero-denominator branch) — uncalibrated runs report trajectories
+    /// and best configs, never score tables. See
+    /// `SpaceSetup::uncalibrated`.
+    pub fn flat(mean_eval_cost_s: f64) -> Baseline {
+        Baseline { values: vec![1.0], n_total: 1, mean_eval_cost_s: mean_eval_cost_s.max(1e-9) }
+    }
+
     /// Expected best objective value after `n` uniform draws (ms).
     ///
     /// For n = 0 (before any evaluation) returns the worst successful value

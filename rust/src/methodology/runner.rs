@@ -1,12 +1,18 @@
-//! Run optimizers on spaces under the methodology's budget and produce
-//! per-run performance curves. Multi-run execution is delegated to the L3
-//! coordinator's scheduler (`crate::coordinator`), which parallelizes
-//! whole job batches; [`run_many`] is its single-space convenience wrapper.
+//! Run optimizers against evaluation backends under the methodology's
+//! budget and produce per-run performance curves. Multi-run execution is
+//! delegated to the L3 coordinator's scheduler (`crate::coordinator`),
+//! which parallelizes whole job batches; [`run_many`] is its single-space
+//! convenience wrapper.
+//!
+//! Runs are expressed over [`BackendSource`] (anything that mints per-run
+//! [`EvalBackend`](crate::tuning::EvalBackend)s): a shared `Cache` in
+//! simulation mode, or a `MeasuredSource` timing real variants — the
+//! runner never touches a `Cache` directly.
 
 use super::baseline::Baseline;
 use super::curve::{performance_curve, resample_trajectory, sample_times, DEFAULT_T_POINTS};
 use crate::optimizers::Optimizer;
-use crate::tuning::{Cache, TuningContext};
+use crate::tuning::{BackendSource, Cache, TuningContext};
 
 /// The methodology's cutoff percentile (paper: ~95%).
 pub const DEFAULT_CUTOFF: f64 = 0.95;
@@ -27,6 +33,18 @@ impl SpaceSetup {
         let baseline = Baseline::from_cache(cache);
         let budget_s = baseline.budget_s(cutoff);
         let times = sample_times(budget_s, n_points);
+        SpaceSetup { baseline, budget_s, times }
+    }
+
+    /// Setup for spaces with no pre-explored value distribution (lazy
+    /// measured backends): a fixed wall-clock budget and a flat baseline.
+    /// The baseline is degenerate, so performance *scores* derived from it
+    /// are meaningless placeholders — consume the context's trajectory and
+    /// best-config outputs instead (the measured CLI paths do exactly
+    /// that and print no score table).
+    pub fn uncalibrated(budget_s: f64, mean_eval_cost_s: f64) -> SpaceSetup {
+        let baseline = Baseline::flat(mean_eval_cost_s);
+        let times = sample_times(budget_s, DEFAULT_T_POINTS);
         SpaceSetup { baseline, budget_s, times }
     }
 }
@@ -65,14 +83,16 @@ impl OptimizerFactory for NamedFactory {
     }
 }
 
-/// Execute one tuning run and return its performance curve.
+/// Execute one tuning run over a fresh backend from `source` and return
+/// its performance curve.
 pub fn single_run(
-    cache: &Cache,
+    source: &dyn BackendSource,
     setup: &SpaceSetup,
     opt: &mut dyn Optimizer,
     seed: u64,
 ) -> Vec<f64> {
-    let mut ctx = TuningContext::new(cache, setup.budget_s, seed);
+    let mut backend = source.backend();
+    let mut ctx = TuningContext::with_backend(backend.as_mut(), setup.budget_s, seed);
     opt.run(&mut ctx);
     let no_value = setup.baseline.expected_best_after(0);
     let best = resample_trajectory(&ctx.trajectory, &setup.times, no_value);
@@ -86,18 +106,18 @@ pub fn single_run(
 /// seeds derived from (space id, optimizer label, run index) so results
 /// are identical to the same grid executed inside a larger batch.
 pub fn run_many(
-    cache: &Cache,
+    source: &dyn BackendSource,
     setup: &SpaceSetup,
     factory: &dyn OptimizerFactory,
     runs: usize,
     base_seed: u64,
 ) -> Vec<Vec<f64>> {
     use crate::coordinator::{job_seed, Scheduler, TuningJob};
-    let space_id = cache.id();
+    let space_id = source.space_id();
     let label = factory.label();
     let jobs: Vec<TuningJob> = (0..runs)
         .map(|r| TuningJob {
-            cache,
+            source,
             setup,
             factory,
             seed: job_seed(base_seed, &space_id, &label, r as u64),
@@ -156,5 +176,13 @@ mod tests {
             mean_of(&hv),
             mean_of(&rs)
         );
+    }
+
+    #[test]
+    fn uncalibrated_setup_has_flat_baseline() {
+        let setup = SpaceSetup::uncalibrated(30.0, 0.5);
+        assert_eq!(setup.budget_s, 30.0);
+        assert!(!setup.times.is_empty());
+        assert_eq!(setup.baseline.expected_best_after(0), setup.baseline.expected_best_after(100));
     }
 }

@@ -60,24 +60,25 @@ impl Optimizer for BasinHopping {
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {
-        let dims = ctx.space().dims();
+        let space = ctx.space_handle();
+        let dims = space.dims();
         let mut cooling = Cooling::new(self.t0, self.alpha, 1e-4);
-        let start = ctx.space().random_valid(&mut ctx.rng);
+        let start = space.random_valid(&mut ctx.rng);
         let f_start = ctx.evaluate(start).unwrap_or(f64::INFINITY);
         let (mut basin, mut f_basin) = self.descend(ctx, start, f_start);
 
         while !ctx.budget_exhausted() {
             // Jump: perturb a few dimensions.
-            let mut probe = ctx.space().config(basin).to_vec();
+            let mut probe = space.config(basin).to_vec();
             for _ in 0..self.jump_dims {
                 let d = ctx.rng.below(dims);
-                probe[d] = ctx.rng.below(ctx.space().params.params[d].cardinality()) as u16;
+                probe[d] = ctx.rng.below(space.params.params[d].cardinality()) as u16;
             }
-            let jumped = match ctx.space().index_of(&probe) {
+            let jumped = match space.index_of(&probe) {
                 Some(i) => i,
                 None => {
                     let mut rng = ctx.rng.fork(0xBA51);
-                    ctx.space().repair(&probe, &mut rng)
+                    space.repair(&probe, &mut rng)
                 }
             };
             let f_jumped = match ctx.evaluate(jumped) {

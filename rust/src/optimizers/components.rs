@@ -3,6 +3,12 @@
 //! schedules, and evaluation history. The LLaMEA genome interpreter
 //! (`crate::llamea::interpreter`) composes optimizers from exactly these
 //! parts, which is what makes "generated code" executable in Rust.
+//!
+//! All components are evaluation-agnostic: they never touch the
+//! [`TuningContext`](crate::tuning::TuningContext) or its backend, only
+//! indices, configs and observed values — so they compose identically
+//! under sequential (`evaluate`) and ask/tell batch (`evaluate_batch`)
+//! execution.
 
 use std::collections::{HashSet, VecDeque};
 

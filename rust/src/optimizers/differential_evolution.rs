@@ -6,8 +6,18 @@
 //! cardinality, then constraint-repaired. pyATF exposes no hyperparameter
 //! tuning (the paper notes this), so the canonical NP=20, F=0.7, CR=0.9
 //! are used as-is.
+//!
+//! `run` keeps pyATF's *asynchronous* update rule (each selection feeds
+//! the next donor draw), which is inherently sequential — only the initial
+//! population is batch-evaluated (bit-identical: sampling happens up front
+//! and evaluation draws no randomness). The ask/tell `suggest`/`observe`
+//! path additionally offers a *synchronous* generation variant — all
+//! trials bred from the frozen population, submitted as one batch — for
+//! drivers that fan generations out; it is deterministic but a different
+//! (standard) DE flavor, so `run` does not use it.
 
 use super::Optimizer;
+use crate::searchspace::SearchSpace;
 use crate::tuning::TuningContext;
 
 #[derive(Debug)]
@@ -15,11 +25,73 @@ pub struct DifferentialEvolution {
     pub population_size: usize,
     pub f: f64,
     pub cr: f64,
+    state: State,
 }
 
 impl Default for DifferentialEvolution {
     fn default() -> Self {
-        DifferentialEvolution { population_size: 20, f: 0.7, cr: 0.9 }
+        DifferentialEvolution { population_size: 20, f: 0.7, cr: 0.9, state: State::Fresh }
+    }
+}
+
+/// Ask/tell phase (synchronous-generation variant).
+#[derive(Debug, Default)]
+enum State {
+    #[default]
+    Fresh,
+    AwaitInit,
+    Ready {
+        pop: Vec<u32>,
+        fit: Vec<f64>,
+    },
+    AwaitGeneration {
+        pop: Vec<u32>,
+        fit: Vec<f64>,
+    },
+}
+
+impl DifferentialEvolution {
+    /// Breed one trial for target `t` from the given (frozen or live)
+    /// population — the shared production step of both execution styles.
+    fn trial(&self, space: &SearchSpace, pop: &[u32], t: usize, ctx: &mut TuningContext) -> u32 {
+        let dims = space.dims();
+        // Three distinct donors != target.
+        let (mut a, mut b, mut c) = (t, t, t);
+        while a == t {
+            a = ctx.rng.below(pop.len());
+        }
+        while b == t || b == a {
+            b = ctx.rng.below(pop.len());
+        }
+        while c == t || c == a || c == b {
+            c = ctx.rng.below(pop.len());
+        }
+        let (xa, xb, xc) = (
+            space.config(pop[a]).to_vec(),
+            space.config(pop[b]).to_vec(),
+            space.config(pop[c]).to_vec(),
+        );
+        let xt = space.config(pop[t]).to_vec();
+        // Mutation + binomial crossover in index space.
+        let j_rand = ctx.rng.below(dims);
+        let mut trial: Vec<u16> = Vec::with_capacity(dims);
+        for d in 0..dims {
+            let card = space.params.params[d].cardinality() as f64;
+            let v = if d == j_rand || ctx.rng.chance(self.cr) {
+                let donor = xa[d] as f64 + self.f * (xb[d] as f64 - xc[d] as f64);
+                donor.round().clamp(0.0, card - 1.0) as u16
+            } else {
+                xt[d]
+            };
+            trial.push(v);
+        }
+        match space.index_of(&trial) {
+            Some(i) => i,
+            None => {
+                let mut rng = ctx.rng.fork(t as u64);
+                space.repair(&trial, &mut rng)
+            }
+        }
     }
 }
 
@@ -29,16 +101,16 @@ impl Optimizer for DifferentialEvolution {
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {
-        let dims = ctx.space().dims();
+        let space = ctx.space_handle();
         let np = self.population_size.max(4);
 
-        let mut pop: Vec<u32> = ctx.space().random_sample(&mut ctx.rng, np);
+        // Initial population in one batch (stream-preservation argument:
+        // see TuningContext::evaluate_random_sample).
+        let mut pop: Vec<u32> = Vec::with_capacity(np);
         let mut fit: Vec<f64> = Vec::with_capacity(np);
-        for &i in &pop {
-            if ctx.budget_exhausted() {
-                return;
-            }
-            fit.push(ctx.evaluate(i).unwrap_or(f64::INFINITY));
+        for (i, f) in ctx.evaluate_random_sample(np) {
+            pop.push(i);
+            fit.push(f.unwrap_or(f64::INFINITY));
         }
 
         while !ctx.budget_exhausted() {
@@ -46,44 +118,7 @@ impl Optimizer for DifferentialEvolution {
                 if ctx.budget_exhausted() {
                     return;
                 }
-                // Three distinct donors != target.
-                let (mut a, mut b, mut c) = (t, t, t);
-                while a == t {
-                    a = ctx.rng.below(pop.len());
-                }
-                while b == t || b == a {
-                    b = ctx.rng.below(pop.len());
-                }
-                while c == t || c == a || c == b {
-                    c = ctx.rng.below(pop.len());
-                }
-                let (xa, xb, xc) = (
-                    ctx.space().config(pop[a]).to_vec(),
-                    ctx.space().config(pop[b]).to_vec(),
-                    ctx.space().config(pop[c]).to_vec(),
-                );
-                let xt = ctx.space().config(pop[t]).to_vec();
-                // Mutation + binomial crossover in index space.
-                let j_rand = ctx.rng.below(dims);
-                let mut trial: Vec<u16> = Vec::with_capacity(dims);
-                for d in 0..dims {
-                    let card = ctx.space().params.params[d].cardinality() as f64;
-                    let v = if d == j_rand || ctx.rng.chance(self.cr) {
-                        let donor =
-                            xa[d] as f64 + self.f * (xb[d] as f64 - xc[d] as f64);
-                        donor.round().clamp(0.0, card - 1.0) as u16
-                    } else {
-                        xt[d]
-                    };
-                    trial.push(v);
-                }
-                let idx = match ctx.space().index_of(&trial) {
-                    Some(i) => i,
-                    None => {
-                        let mut rng = ctx.rng.fork(t as u64);
-                        ctx.space().repair(&trial, &mut rng)
-                    }
-                };
+                let idx = self.trial(&space, &pop, t, ctx);
                 let f_trial = ctx.evaluate(idx).unwrap_or(f64::INFINITY);
                 if f_trial <= fit[t] {
                     pop[t] = idx;
@@ -92,12 +127,56 @@ impl Optimizer for DifferentialEvolution {
             }
         }
     }
+
+    fn suggest(&mut self, ctx: &mut TuningContext, _limit: usize) -> Option<Vec<u32>> {
+        let space = ctx.space_handle();
+        match std::mem::take(&mut self.state) {
+            State::Fresh => {
+                self.state = State::AwaitInit;
+                Some(space.random_sample(&mut ctx.rng, self.population_size.max(4)))
+            }
+            State::Ready { pop, fit } => {
+                let trials: Vec<u32> =
+                    (0..pop.len()).map(|t| self.trial(&space, &pop, t, ctx)).collect();
+                self.state = State::AwaitGeneration { pop, fit };
+                Some(trials)
+            }
+            awaiting => {
+                // suggest() twice without an observe(): keep the phase.
+                self.state = awaiting;
+                Some(Vec::new())
+            }
+        }
+    }
+
+    fn observe(&mut self, _ctx: &mut TuningContext, batch: &[u32], results: &[Option<f64>]) {
+        match std::mem::take(&mut self.state) {
+            State::AwaitInit => {
+                self.state = State::Ready {
+                    pop: batch.to_vec(),
+                    fit: results.iter().map(|v| v.unwrap_or(f64::INFINITY)).collect(),
+                };
+            }
+            State::AwaitGeneration { mut pop, mut fit } => {
+                // Synchronous greedy selection against the frozen parents.
+                for (t, (&idx, r)) in batch.iter().zip(results).enumerate() {
+                    let f_trial = r.unwrap_or(f64::INFINITY);
+                    if f_trial <= fit[t] {
+                        pop[t] = idx;
+                        fit[t] = f_trial;
+                    }
+                }
+                self.state = State::Ready { pop, fit };
+            }
+            state => self.state = state,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optimizers::testutil;
+    use crate::optimizers::{run_ask_tell, testutil};
 
     #[test]
     fn selection_is_greedy_never_regresses() {
@@ -116,5 +195,28 @@ mod tests {
         let mut de = DifferentialEvolution::default();
         let (best, _) = testutil::run_on(&mut de, &cache, 600.0, 9);
         assert!(best < cache.median_ms);
+    }
+
+    #[test]
+    fn init_population_goes_through_batch_path() {
+        let cache = testutil::conv_cache();
+        let mut ctx = crate::tuning::TuningContext::new(&cache, 300.0, 10);
+        DifferentialEvolution::default().run(&mut ctx);
+        assert!(ctx.batch_calls() >= 1);
+        assert_eq!(ctx.largest_batch(), 20, "NP=20 init in one batch");
+    }
+
+    #[test]
+    fn synchronous_ask_tell_variant_is_deterministic() {
+        let cache = testutil::conv_cache();
+        let run = |seed: u64| {
+            let mut ctx = crate::tuning::TuningContext::new(&cache, 300.0, seed);
+            let mut de = DifferentialEvolution::default();
+            assert!(run_ask_tell(&mut de, &mut ctx), "DE must support ask/tell");
+            (ctx.trajectory.clone(), ctx.unique_evals())
+        };
+        assert_eq!(run(3), run(3));
+        let (tr, evals) = run(4);
+        assert!(!tr.is_empty() && evals > 20);
     }
 }

@@ -65,18 +65,18 @@ impl Optimizer for AdaptiveTabuGreyWolf {
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {
+        let space = ctx.space_handle();
         let p = self.population.max(4);
-        let dims = ctx.space().dims();
+        let dims = space.dims();
         let mut tabu = TabuList::new(self.tabu_factor * p);
 
-        // P <- p random valid configs; evaluate.
-        let mut pop: Vec<u32> = ctx.space().random_sample(&mut ctx.rng, p);
+        // P <- p random valid configs; evaluated as one batch (stream-
+        // preservation argument: see TuningContext::evaluate_random_sample).
+        let mut pop: Vec<u32> = Vec::with_capacity(p);
         let mut fit: Vec<f64> = Vec::with_capacity(p);
-        for &i in &pop {
-            if ctx.budget_exhausted() {
-                return;
-            }
-            fit.push(ctx.evaluate(i).unwrap_or(f64::INFINITY));
+        for (i, f) in ctx.evaluate_random_sample(p) {
+            pop.push(i);
+            fit.push(f.unwrap_or(f64::INFINITY));
             tabu.push(i);
         }
         let mut stagnation = 0u32;
@@ -100,10 +100,10 @@ impl Optimizer for AdaptiveTabuGreyWolf {
                     continue;
                 }
                 let x = pop[t_idx];
-                let xa = ctx.space().config(alpha).to_vec();
-                let xb = ctx.space().config(beta).to_vec();
-                let xd = ctx.space().config(delta).to_vec();
-                let xx = ctx.space().config(x).to_vec();
+                let xa = space.config(alpha).to_vec();
+                let xb = space.config(beta).to_vec();
+                let xd = space.config(delta).to_vec();
+                let xx = space.config(x).to_vec();
 
                 // Leader-mixed proposal: each dim uniform over
                 // {alpha_i, beta_i, delta_i, x_i}.
@@ -120,14 +120,14 @@ impl Optimizer for AdaptiveTabuGreyWolf {
                 if ctx.rng.chance(self.shake_rate) {
                     if ctx.rng.chance(self.jump_rate) {
                         // Random-dim jump from a fresh valid sample.
-                        let fresh = ctx.space().random_valid(&mut ctx.rng);
+                        let fresh = space.random_valid(&mut ctx.rng);
                         let d = ctx.rng.below(dims);
-                        y[d] = ctx.space().config(fresh)[d];
+                        y[d] = space.config(fresh)[d];
                     } else {
                         // One-step move in N_{m(b)} applied to y (post-
                         // repair if needed below).
                         let d = ctx.rng.below(dims);
-                        let card = ctx.space().params.params[d].cardinality() as i32;
+                        let card = space.params.params[d].cardinality() as i32;
                         let delta_step = match Self::neighborhood_at(b) {
                             NeighborKind::Hamming => {
                                 ctx.rng.range_inclusive(-(card as i64 - 1), card as i64 - 1) as i32
@@ -146,18 +146,18 @@ impl Optimizer for AdaptiveTabuGreyWolf {
                 }
 
                 // Repair, tabu.
-                let mut idx = match ctx.space().index_of(&y) {
+                let mut idx = match space.index_of(&y) {
                     Some(i) => i,
-                    None => ctx.space().repair(&y, &mut ctx.rng),
+                    None => space.repair(&y, &mut ctx.rng),
                 };
                 if tabu.contains(idx) {
                     // Resample: small Hamming change or fresh sample.
                     idx = if ctx.rng.chance(0.5) {
-                        ctx.space()
+                        space
                             .random_neighbor(idx, &mut ctx.rng, NeighborKind::Hamming)
-                            .unwrap_or_else(|| ctx.space().random_valid(&mut ctx.rng))
+                            .unwrap_or_else(|| space.random_valid(&mut ctx.rng))
                     } else {
-                        ctx.space().random_valid(&mut ctx.rng)
+                        space.random_valid(&mut ctx.rng)
                     };
                 }
 
@@ -186,13 +186,14 @@ impl Optimizer for AdaptiveTabuGreyWolf {
                 let k = ((self.restart_ratio * p as f64).ceil() as usize).max(1);
                 let mut order: Vec<usize> = (0..pop.len()).collect();
                 order.sort_by(|&a, &c| fit[c].partial_cmp(&fit[a]).unwrap()); // worst first
-                for &t_idx in order.iter().take(k) {
-                    if ctx.budget_exhausted() {
-                        return;
-                    }
-                    let fresh = ctx.space().random_valid(&mut ctx.rng);
-                    pop[t_idx] = fresh;
-                    fit[t_idx] = ctx.evaluate(fresh).unwrap_or(f64::INFINITY);
+                // Reinit as one batch (stream-preservation argument: see
+                // TuningContext::evaluate_random_draws).
+                let targets: Vec<usize> = order.iter().take(k).copied().collect();
+                for (&t_idx, (f_idx, f)) in
+                    targets.iter().zip(ctx.evaluate_random_draws(targets.len()))
+                {
+                    pop[t_idx] = f_idx;
+                    fit[t_idx] = f.unwrap_or(f64::INFINITY);
                 }
                 reheat = 0.3;
                 stagnation = 0;

@@ -58,6 +58,7 @@ impl Optimizer for HybridVndx {
     fn run(&mut self, ctx: &mut TuningContext) {
         // Line 1: initialize x <- random_valid(), evaluate; maintain history
         // H, elite heap E, tabu deque T; weights w[.] <- 1; T <- T0.
+        let space = ctx.space_handle();
         let mut history = History::default();
         let mut elites = EliteArchive::new(self.elite_size);
         let mut tabu = TabuList::new(self.tabu_size);
@@ -65,7 +66,7 @@ impl Optimizer for HybridVndx {
         let mut weights = [1.0f64; NEIGHBORHOODS.len()];
         let mut cooling = Cooling::new(self.t0, self.cooling, 1e-6);
 
-        let mut x = ctx.space().random_valid(&mut ctx.rng);
+        let mut x = space.random_valid(&mut ctx.rng);
         let mut f_x = loop {
             match ctx.evaluate(x) {
                 Some(v) => break v,
@@ -73,11 +74,11 @@ impl Optimizer for HybridVndx {
                     if ctx.budget_exhausted() {
                         return;
                     }
-                    x = ctx.space().random_valid(&mut ctx.rng);
+                    x = space.random_valid(&mut ctx.rng);
                 }
             }
         };
-        history.push(x, ctx.space().config(x), f_x);
+        history.push(x, space.config(x), f_x);
         elites.push(x, f_x);
         let mut stagnation = 0u32;
 
@@ -90,7 +91,7 @@ impl Optimizer for HybridVndx {
             // Line 4: build candidate pool: subset of N(x), 1 elite-
             // crossover child, fill with random valid samples; repair.
             let mut pool: Vec<u32> = Vec::with_capacity(self.pool_size);
-            let neigh = ctx.space().neighbors(x, kind);
+            let neigh = space.neighbors(x, kind);
             let take = (self.pool_size.saturating_sub(2)).min(neigh.len());
             for &j in ctx
                 .rng
@@ -100,15 +101,15 @@ impl Optimizer for HybridVndx {
             {
                 pool.push(j);
             }
-            if let Some(child) = elites.crossover_child(ctx.space(), &mut ctx.rng) {
-                let idx = match ctx.space().index_of(&child) {
+            if let Some(child) = elites.crossover_child(&space, &mut ctx.rng) {
+                let idx = match space.index_of(&child) {
                     Some(i) => i,
-                    None => ctx.space().repair(&child, &mut ctx.rng),
+                    None => space.repair(&child, &mut ctx.rng),
                 };
                 pool.push(idx);
             }
             while pool.len() < self.pool_size {
-                pool.push(ctx.space().random_valid(&mut ctx.rng));
+                pool.push(space.random_valid(&mut ctx.rng));
             }
 
             // Line 5: score each candidate by k-NN prediction on H
@@ -117,7 +118,7 @@ impl Optimizer for HybridVndx {
             let mut best_score = f64::INFINITY;
             for &c in &pool {
                 let pred = surrogate
-                    .predict(&history, ctx.space().config(c))
+                    .predict(&history, space.config(c))
                     .unwrap_or(f_x);
                 let mut score = pred;
                 if tabu.contains(c) {
@@ -140,7 +141,7 @@ impl Optimizer for HybridVndx {
                     continue;
                 }
             };
-            history.push(best_c, ctx.space().config(best_c), f_c);
+            history.push(best_c, space.config(best_c), f_c);
             elites.push(best_c, f_c);
 
             // Lines 7–9: SA acceptance; weight adaptation.
@@ -162,10 +163,10 @@ impl Optimizer for HybridVndx {
             // Line 10: cooling; restart on stagnation.
             cooling.step();
             if stagnation > self.restart_after {
-                x = ctx.space().random_valid(&mut ctx.rng);
+                x = space.random_valid(&mut ctx.rng);
                 if let Some(v) = ctx.evaluate(x) {
                     f_x = v;
-                    history.push(x, ctx.space().config(x), f_x);
+                    history.push(x, space.config(x), f_x);
                     elites.push(x, f_x);
                 }
                 cooling.reset();

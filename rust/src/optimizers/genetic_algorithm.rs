@@ -3,6 +3,16 @@
 //!
 //! Generational GA over genotypes of value indices: tournament selection,
 //! uniform crossover, per-gene mutation, constraint repair, and elitism.
+//!
+//! Runs natively on the ask/tell batch path: each `suggest` produces a
+//! whole generation (the initial sample, then children bred from the
+//! current population), evaluated through `TuningContext::evaluate_batch`
+//! in one backend call. This is bit-identical to the classic sequential
+//! loop — child production draws randomness only from the parent
+//! population and the RNG, never from sibling evaluations, and the
+//! context applies budget cuts per config exactly as a checking caller
+//! would — while giving batch-capable backends whole generations to fan
+//! out.
 
 use super::Optimizer;
 use crate::tuning::TuningContext;
@@ -14,6 +24,7 @@ pub struct GeneticAlgorithm {
     pub crossover_rate: f64,
     pub mutation_rate_factor: f64, // per-gene rate = factor / dims
     pub elites: usize,
+    state: State,
 }
 
 impl Default for GeneticAlgorithm {
@@ -24,10 +35,26 @@ impl Default for GeneticAlgorithm {
             crossover_rate: 0.9,
             mutation_rate_factor: 1.2,
             elites: 2,
+            state: State::Fresh,
         }
     }
 }
 
+/// Ask/tell phase: what the next `suggest`/`observe` pair means.
+#[derive(Debug, Default)]
+enum State {
+    /// Next suggest samples the initial population.
+    #[default]
+    Fresh,
+    /// Initial sample suggested; observe seeds the population.
+    AwaitInit,
+    /// Population scored; next suggest breeds a generation of children.
+    Ready(Vec<Individual>),
+    /// Children suggested; payload is the carried elites.
+    AwaitGeneration(Vec<Individual>),
+}
+
+#[derive(Debug, Clone)]
 struct Individual {
     idx: u32,
     fitness: f64, // +inf for failures
@@ -66,65 +93,92 @@ impl Optimizer for GeneticAlgorithm {
         true
     }
 
+    fn hyperparams(&self) -> &'static [&'static str] {
+        &["population_size", "tournament_k", "crossover_rate", "mutation_rate_factor", "elites"]
+    }
+
     fn run(&mut self, ctx: &mut TuningContext) {
-        // Degenerate hyperparameters (settable via the public fields or
-        // spec overrides) must not hang the budget loop — an empty
-        // population would spin forever without ever charging the clock.
-        self.population_size = self.population_size.max(2);
-        self.tournament_k = self.tournament_k.max(1);
-        self.elites = self.elites.min(self.population_size - 1);
-        let dims = ctx.space().dims();
-        let mutation_rate = self.mutation_rate_factor / dims as f64;
+        self.state = State::Fresh;
+        super::run_ask_tell(self, ctx);
+    }
 
-        // Initial population.
-        let mut pop: Vec<Individual> = Vec::with_capacity(self.population_size);
-        for i in ctx.space().random_sample(&mut ctx.rng, self.population_size) {
-            if ctx.budget_exhausted() {
-                return;
+    fn suggest(&mut self, ctx: &mut TuningContext, _limit: usize) -> Option<Vec<u32>> {
+        let space = ctx.space_handle();
+        match std::mem::take(&mut self.state) {
+            State::Fresh => {
+                // Degenerate hyperparameters (settable via the public
+                // fields or spec overrides) must not hang the budget loop —
+                // an empty population would spin forever without ever
+                // charging the clock.
+                self.population_size = self.population_size.max(2);
+                self.tournament_k = self.tournament_k.max(1);
+                self.elites = self.elites.min(self.population_size - 1);
+                self.state = State::AwaitInit;
+                Some(space.random_sample(&mut ctx.rng, self.population_size))
             }
-            let fitness = ctx.evaluate(i).unwrap_or(f64::INFINITY);
-            pop.push(Individual { idx: i, fitness });
-        }
-
-        while !ctx.budget_exhausted() {
-            pop.sort_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap());
-            let mut next: Vec<Individual> = Vec::with_capacity(self.population_size);
-            // Elitism: carry the best through unchanged (no re-eval cost —
-            // the context dedups).
-            for e in pop.iter().take(self.elites) {
-                next.push(Individual { idx: e.idx, fitness: e.fitness });
-            }
-            while next.len() < self.population_size && !ctx.budget_exhausted() {
-                let p1 = self.tournament(&pop, ctx);
-                let p2 = self.tournament(&pop, ctx);
-                let (c1, c2) = (ctx.space().config(p1).to_vec(), ctx.space().config(p2).to_vec());
-                // Uniform crossover.
-                let mut child: Vec<u16> = if ctx.rng.chance(self.crossover_rate) {
-                    c1.iter()
-                        .zip(&c2)
-                        .map(|(&a, &b)| if ctx.rng.chance(0.5) { a } else { b })
-                        .collect()
-                } else {
-                    c1.clone()
-                };
-                // Mutation: resample a gene uniformly from its domain.
-                for d in 0..dims {
-                    if ctx.rng.chance(mutation_rate) {
-                        child[d] =
-                            ctx.rng.below(ctx.space().params.params[d].cardinality()) as u16;
+            State::Ready(mut pop) => {
+                let dims = space.dims();
+                let mutation_rate = self.mutation_rate_factor / dims as f64;
+                pop.sort_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap());
+                // Elitism: carry the best through unchanged (no re-eval —
+                // they keep their recorded fitness in `observe`).
+                let elites: Vec<Individual> = pop.iter().take(self.elites).cloned().collect();
+                let mut children: Vec<u32> = Vec::new();
+                while elites.len() + children.len() < self.population_size {
+                    let p1 = self.tournament(&pop, ctx);
+                    let p2 = self.tournament(&pop, ctx);
+                    let (c1, c2) = (space.config(p1).to_vec(), space.config(p2).to_vec());
+                    // Uniform crossover.
+                    let mut child: Vec<u16> = if ctx.rng.chance(self.crossover_rate) {
+                        c1.iter()
+                            .zip(&c2)
+                            .map(|(&a, &b)| if ctx.rng.chance(0.5) { a } else { b })
+                            .collect()
+                    } else {
+                        c1
+                    };
+                    // Mutation: resample a gene uniformly from its domain.
+                    for (d, gene) in child.iter_mut().enumerate() {
+                        if ctx.rng.chance(mutation_rate) {
+                            *gene = ctx.rng.below(space.params.params[d].cardinality()) as u16;
+                        }
                     }
+                    let idx = match space.index_of(&child) {
+                        Some(i) => i,
+                        None => {
+                            let mut rng = ctx.rng.fork((elites.len() + children.len()) as u64);
+                            space.repair(&child, &mut rng)
+                        }
+                    };
+                    children.push(idx);
                 }
-                let idx = match ctx.space().index_of(&child) {
-                    Some(i) => i,
-                    None => {
-                        let mut rng = ctx.rng.fork(next.len() as u64);
-                        ctx.space().repair(&child, &mut rng)
-                    }
-                };
-                let fitness = ctx.evaluate(idx).unwrap_or(f64::INFINITY);
-                next.push(Individual { idx, fitness });
+                self.state = State::AwaitGeneration(elites);
+                Some(children)
             }
-            pop = next;
+            awaiting => {
+                // suggest() twice without an observe(): not a legal driver
+                // sequence — keep the phase and report convergence.
+                self.state = awaiting;
+                Some(Vec::new())
+            }
+        }
+    }
+
+    fn observe(&mut self, _ctx: &mut TuningContext, batch: &[u32], results: &[Option<f64>]) {
+        let scored = |(&idx, r): (&u32, &Option<f64>)| Individual {
+            idx,
+            fitness: r.unwrap_or(f64::INFINITY),
+        };
+        match std::mem::take(&mut self.state) {
+            State::AwaitInit => {
+                let pop: Vec<Individual> = batch.iter().zip(results).map(scored).collect();
+                self.state = State::Ready(pop);
+            }
+            State::AwaitGeneration(mut next) => {
+                next.extend(batch.iter().zip(results).map(scored));
+                self.state = State::Ready(next);
+            }
+            state => self.state = state,
         }
     }
 }
@@ -159,5 +213,94 @@ mod tests {
         let mut ga = GeneticAlgorithm::default();
         let (_, evals) = testutil::run_on(&mut ga, &cache, 15.0, 7);
         assert!(evals >= 1);
+    }
+
+    #[test]
+    fn generations_go_through_the_batch_path() {
+        // The acceptance hook: GA must demonstrably evaluate via
+        // evaluate_batch, in generation-sized submissions.
+        let cache = testutil::conv_cache();
+        let mut ctx = crate::tuning::TuningContext::new(&cache, 400.0, 8);
+        GeneticAlgorithm::default().run(&mut ctx);
+        assert!(ctx.batch_calls() >= 2, "init + at least one generation");
+        assert!(ctx.batched_evals() > 0);
+        assert_eq!(ctx.largest_batch(), 20, "the full initial population in one batch");
+    }
+
+    /// The pre-redesign sequential GA, verbatim: produce a child, evaluate
+    /// it, check the budget, repeat. Used as the golden reference for the
+    /// batch-path equivalence below.
+    fn reference_sequential_run(ga: &mut GeneticAlgorithm, ctx: &mut TuningContext) {
+        ga.population_size = ga.population_size.max(2);
+        ga.tournament_k = ga.tournament_k.max(1);
+        ga.elites = ga.elites.min(ga.population_size - 1);
+        let space = ctx.space_handle();
+        let dims = space.dims();
+        let mutation_rate = ga.mutation_rate_factor / dims as f64;
+
+        let mut pop: Vec<Individual> = Vec::with_capacity(ga.population_size);
+        for i in space.random_sample(&mut ctx.rng, ga.population_size) {
+            if ctx.budget_exhausted() {
+                return;
+            }
+            let fitness = ctx.evaluate(i).unwrap_or(f64::INFINITY);
+            pop.push(Individual { idx: i, fitness });
+        }
+        while !ctx.budget_exhausted() {
+            pop.sort_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap());
+            let mut next: Vec<Individual> = Vec::with_capacity(ga.population_size);
+            for e in pop.iter().take(ga.elites) {
+                next.push(Individual { idx: e.idx, fitness: e.fitness });
+            }
+            while next.len() < ga.population_size && !ctx.budget_exhausted() {
+                let p1 = ga.tournament(&pop, ctx);
+                let p2 = ga.tournament(&pop, ctx);
+                let (c1, c2) = (space.config(p1).to_vec(), space.config(p2).to_vec());
+                let mut child: Vec<u16> = if ctx.rng.chance(ga.crossover_rate) {
+                    c1.iter()
+                        .zip(&c2)
+                        .map(|(&a, &b)| if ctx.rng.chance(0.5) { a } else { b })
+                        .collect()
+                } else {
+                    c1
+                };
+                for (d, gene) in child.iter_mut().enumerate() {
+                    if ctx.rng.chance(mutation_rate) {
+                        *gene = ctx.rng.below(space.params.params[d].cardinality()) as u16;
+                    }
+                }
+                let idx = match space.index_of(&child) {
+                    Some(i) => i,
+                    None => {
+                        let mut rng = ctx.rng.fork(next.len() as u64);
+                        space.repair(&child, &mut rng)
+                    }
+                };
+                let fitness = ctx.evaluate(idx).unwrap_or(f64::INFINITY);
+                next.push(Individual { idx, fitness });
+            }
+            pop = next;
+        }
+    }
+
+    #[test]
+    fn batch_path_is_bit_identical_to_sequential_reference() {
+        let cache = testutil::conv_cache();
+        for seed in [1u64, 9, 42] {
+            for budget in [120.0, 400.0] {
+                let mut seq_ctx = crate::tuning::TuningContext::new(&cache, budget, seed);
+                reference_sequential_run(&mut GeneticAlgorithm::default(), &mut seq_ctx);
+                let mut bat_ctx = crate::tuning::TuningContext::new(&cache, budget, seed);
+                GeneticAlgorithm::default().run(&mut bat_ctx);
+                assert_eq!(
+                    seq_ctx.trajectory, bat_ctx.trajectory,
+                    "seed {} budget {}",
+                    seed, budget
+                );
+                assert_eq!(seq_ctx.elapsed_s(), bat_ctx.elapsed_s());
+                assert_eq!(seq_ctx.unique_evals(), bat_ctx.unique_evals());
+                assert_eq!(seq_ctx.best(), bat_ctx.best());
+            }
+        }
     }
 }

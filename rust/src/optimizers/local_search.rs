@@ -58,8 +58,9 @@ impl Optimizer for GreedyIls {
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {
-        let dims = ctx.space().dims();
-        let mut cur = ctx.space().random_valid(&mut ctx.rng);
+        let space = ctx.space_handle();
+        let dims = space.dims();
+        let mut cur = space.random_valid(&mut ctx.rng);
         let mut f_cur = match ctx.evaluate(cur) {
             Some(v) => v,
             None => f64::INFINITY,
@@ -67,16 +68,16 @@ impl Optimizer for GreedyIls {
         while !ctx.budget_exhausted() {
             let (lo, f_lo) = self.descend(ctx, cur, f_cur);
             // Kick: perturb `kick_strength` random dimensions, repair.
-            let mut probe = ctx.space().config(lo).to_vec();
+            let mut probe = space.config(lo).to_vec();
             for _ in 0..self.kick_strength {
                 let d = ctx.rng.below(dims);
-                probe[d] = ctx.rng.below(ctx.space().params.params[d].cardinality()) as u16;
+                probe[d] = ctx.rng.below(space.params.params[d].cardinality()) as u16;
             }
-            let kicked = match ctx.space().index_of(&probe) {
+            let kicked = match space.index_of(&probe) {
                 Some(i) => i,
                 None => {
                     let mut rng = ctx.rng.fork(0xB00);
-                    ctx.space().repair(&probe, &mut rng)
+                    space.repair(&probe, &mut rng)
                 }
             };
             let f_kicked = ctx.evaluate(kicked).unwrap_or(f64::INFINITY);
@@ -112,8 +113,9 @@ impl Optimizer for MultiStartLocalSearch {
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {
+        let space = ctx.space_handle();
         while !ctx.budget_exhausted() {
-            let start = ctx.space().random_valid(&mut ctx.rng);
+            let start = space.random_valid(&mut ctx.rng);
             let mut cur = start;
             let mut f_cur = match ctx.evaluate(cur) {
                 Some(v) => v,
@@ -124,7 +126,7 @@ impl Optimizer for MultiStartLocalSearch {
                 if ctx.budget_exhausted() {
                     return;
                 }
-                let mut neigh = ctx.space().neighbors(cur, self.neighbor);
+                let mut neigh = space.neighbors(cur, self.neighbor);
                 let mut rng = ctx.rng.fork(cur as u64);
                 rng.shuffle(&mut neigh);
                 for n in neigh {

@@ -9,6 +9,25 @@
 //! (Algorithm 1) and [`generated::AdaptiveTabuGreyWolf`] (Algorithm 2),
 //! plus the genome-interpreted optimizers produced by the LLaMEA loop
 //! (`crate::llamea`).
+//!
+//! ## Evaluation interface
+//!
+//! Every optimizer drives a [`TuningContext`] over a pluggable evaluation
+//! backend (`crate::tuning::backend`). Two styles coexist:
+//!
+//! - **Sequential**: `run` calls `ctx.evaluate(i)` point by point — the
+//!   natural shape for single-solution methods (SA, local search, basin
+//!   hopping) whose next move depends on the last observation.
+//! - **Ask/tell batches**: population methods implement
+//!   [`Optimizer::suggest`] / [`Optimizer::observe`] and submit whole
+//!   generations through `ctx.evaluate_batch`, which forwards them to the
+//!   backend in one call — the seam a fan-out scheduler or a measured
+//!   backend exploits. [`run_ask_tell`] is the generic driver loop. The
+//!   genetic algorithm runs natively on this path (its generation
+//!   production draws no randomness from evaluation results, so batched
+//!   and sequential execution are bit-identical); DE and PSO expose
+//!   *synchronous* ask/tell variants while their `run` keeps the classic
+//!   asynchronous update rule.
 
 pub mod basin_hopping;
 pub mod components;
@@ -36,6 +55,49 @@ pub trait Optimizer {
     fn set_hyperparam(&mut self, _key: &str, _value: f64) -> bool {
         false
     }
+
+    /// The hyperparameter keys [`Optimizer::set_hyperparam`] accepts
+    /// (discoverability for the CLI's `optimizers` listing and for
+    /// hyperparameter-tuning grids). Must stay consistent with
+    /// `set_hyperparam`; the registry test pins the contract.
+    fn hyperparams(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Ask/tell: propose the next batch of configurations to evaluate.
+    ///
+    /// Returns `None` when the optimizer has no batch path (the default),
+    /// and an empty batch when it has converged. `limit` is a hint from
+    /// the driver; population optimizers may exceed it where generation
+    /// atomicity requires (a generation is produced as one unit).
+    ///
+    /// The contract with [`Optimizer::observe`]: every suggested batch is
+    /// evaluated through `ctx.evaluate_batch` and handed back exactly
+    /// once, in order. Entries the context skipped on budget exhaustion
+    /// come back as `None`.
+    fn suggest(&mut self, _ctx: &mut TuningContext, _limit: usize) -> Option<Vec<u32>> {
+        None
+    }
+
+    /// Ask/tell: receive the evaluation results of a suggested batch.
+    fn observe(&mut self, _ctx: &mut TuningContext, _batch: &[u32], _results: &[Option<f64>]) {}
+}
+
+/// Generic ask/tell driver: suggest → batch-evaluate → observe until the
+/// budget is exhausted or the optimizer converges. Returns `false` when
+/// the optimizer has no batch path (callers fall back to `run`).
+pub fn run_ask_tell(opt: &mut dyn Optimizer, ctx: &mut TuningContext) -> bool {
+    while !ctx.budget_exhausted() {
+        let Some(batch) = opt.suggest(ctx, usize::MAX) else {
+            return false;
+        };
+        if batch.is_empty() {
+            return true; // converged
+        }
+        let results = ctx.evaluate_batch(&batch);
+        opt.observe(ctx, &batch, &results);
+    }
+    true
 }
 
 /// One registered optimizer: its canonical name and default constructor.
@@ -116,28 +178,63 @@ impl OptimizerSpec {
         OptimizerSpec::Genome(genome)
     }
 
-    /// Add a hyperparameter override (named specs only).
-    pub fn with_override(mut self, key: impl Into<String>, value: f64) -> OptimizerSpec {
+    /// Add a hyperparameter override. Genome specs carry their parameters
+    /// inside the genome and accept none: the override is rejected.
+    /// Spec-building code paths (hyperparameter-tuning grids) use this to
+    /// reject instead of crash.
+    pub fn try_with_override(
+        mut self,
+        key: impl Into<String>,
+        value: f64,
+    ) -> Result<OptimizerSpec, &'static str> {
         match &mut self {
-            OptimizerSpec::Named { overrides, .. } => overrides.push((key.into(), value)),
-            OptimizerSpec::Genome(_) => panic!("genome specs take no hyperparameter overrides"),
+            OptimizerSpec::Named { overrides, .. } => {
+                overrides.push((key.into(), value));
+                Ok(self)
+            }
+            OptimizerSpec::Genome(_) => Err("genome specs take no hyperparameter overrides"),
         }
-        self
+    }
+
+    /// Chaining form of [`Self::try_with_override`] for statically-known
+    /// named specs. On a genome spec this is a programming error: it
+    /// debug-asserts, and in release builds leaves the spec unchanged.
+    pub fn with_override(self, key: impl Into<String>, value: f64) -> OptimizerSpec {
+        match self.try_with_override(key, value) {
+            Ok(spec) => spec,
+            Err(e) => {
+                debug_assert!(false, "{}", e);
+                self
+            }
+        }
     }
 
     /// Parse the CLI form `name` or `name:key=val,key=val`. Returns `None`
-    /// for unknown names or malformed overrides.
+    /// for unknown names, malformed overrides, and override keys (or
+    /// non-finite values) the named optimizer rejects — validated here
+    /// against a probe instance so a typo fails at parse time instead of
+    /// panicking inside a scheduler worker at job-build time.
+    ///
+    /// Explicitly partial with respect to [`std::fmt::Display`]: genome
+    /// specs print as `genome:<name>` for reports, but genomes are not
+    /// registry members and cannot be reconstructed from a name, so the
+    /// genome form does not parse back (pinned by a test). Named specs
+    /// round-trip exactly.
     pub fn parse(s: &str) -> Option<OptimizerSpec> {
         let (name, rest) = match s.split_once(':') {
             Some((n, r)) => (n, Some(r)),
             None => (s, None),
         };
-        by_name(name)?;
+        let mut probe = by_name(name)?;
         let mut spec = OptimizerSpec::named(name);
         if let Some(rest) = rest {
             for kv in rest.split(',').filter(|kv| !kv.is_empty()) {
                 let (k, v) = kv.split_once('=')?;
-                spec = spec.with_override(k, v.parse::<f64>().ok()?);
+                let v = v.parse::<f64>().ok()?;
+                if !probe.set_hyperparam(k, v) {
+                    return None;
+                }
+                spec = spec.try_with_override(k, v).ok()?;
             }
         }
         Some(spec)
@@ -263,6 +360,30 @@ mod tests {
     }
 
     #[test]
+    fn advertised_hyperparams_are_settable() {
+        // The hyperparams() listing and set_hyperparam() must agree, for
+        // every registry optimizer: every advertised key is accepted with
+        // a benign value, and made-up keys are rejected.
+        for e in REGISTRY.iter() {
+            let mut opt = by_name(e.name).unwrap();
+            let keys = opt.hyperparams();
+            for key in keys {
+                assert!(
+                    opt.set_hyperparam(key, 1.0),
+                    "{} advertises '{}' but rejects it",
+                    e.name,
+                    key
+                );
+            }
+            assert!(
+                !opt.set_hyperparam("definitely_not_a_knob", 1.0),
+                "{} accepted an unknown key",
+                e.name
+            );
+        }
+    }
+
+    #[test]
     fn spec_overrides_parse_display_and_apply() {
         let spec = OptimizerSpec::parse("ga:population_size=40,elites=3").unwrap();
         assert_eq!(spec.to_string(), "ga:population_size=40,elites=3");
@@ -271,12 +392,37 @@ mod tests {
         let _ = spec.build();
         assert!(OptimizerSpec::parse("ga:population_size").is_none(), "missing value");
         assert!(OptimizerSpec::parse("ga:population_size=abc").is_none(), "bad value");
+        assert!(OptimizerSpec::parse("ga:no_such_knob=1").is_none(), "unknown key");
+        assert!(OptimizerSpec::parse("de:f=0.5").is_none(), "DE exposes no knobs");
+        assert!(OptimizerSpec::parse("ga:elites=NaN").is_none(), "non-finite value");
 
         let mut ga = genetic_algorithm::GeneticAlgorithm::default();
         assert!(ga.set_hyperparam("population_size", 40.0));
         assert_eq!(ga.population_size, 40);
         assert!(!ga.set_hyperparam("no_such_knob", 1.0));
         assert!(!ga.set_hyperparam("crossover_rate", f64::NAN));
+    }
+
+    #[test]
+    fn genome_display_is_explicitly_partial() {
+        // The Display/parse contract: named specs round-trip; the genome
+        // form `genome:<name>` is a report label only and does not parse
+        // back (genomes are not registry members).
+        let g = OptimizerSpec::genome(crate::llamea::Genome::hybrid_vndx_like());
+        let shown = g.to_string();
+        assert!(shown.starts_with("genome:"), "{}", shown);
+        assert_eq!(OptimizerSpec::parse(&shown), None);
+        // And via parse_list, which must reject rather than mis-parse.
+        assert!(OptimizerSpec::parse_list(&shown).is_none());
+    }
+
+    #[test]
+    fn genome_overrides_reject_instead_of_crash() {
+        let g = OptimizerSpec::genome(crate::llamea::Genome::hybrid_vndx_like());
+        assert!(g.clone().try_with_override("k", 3.0).is_err());
+        // Named specs accept.
+        let named = OptimizerSpec::named("ga").try_with_override("elites", 3.0).unwrap();
+        assert_eq!(named.to_string(), "ga:elites=3");
     }
 
     #[test]

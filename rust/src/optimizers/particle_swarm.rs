@@ -3,8 +3,17 @@
 //! Continuous-relaxation PSO (one of Kernel Tuner's classical strategies):
 //! particles hold float positions/velocities in index space; evaluation
 //! rounds, clamps and repairs. Standard constriction-style coefficients.
+//!
+//! `run` keeps the classic *asynchronous* update (each particle sees
+//! neighbors' fresh global best), batching only the initial swarm
+//! evaluation (bit-identical: sampling happens up front, evaluation draws
+//! no randomness). The ask/tell `suggest`/`observe` path offers the
+//! *synchronous* textbook variant — every particle moves against the
+//! frozen bests, the whole sweep submitted as one batch — for drivers
+//! that fan iterations out.
 
 use super::Optimizer;
+use crate::searchspace::SearchSpace;
 use crate::tuning::TuningContext;
 
 #[derive(Debug)]
@@ -13,11 +22,88 @@ pub struct ParticleSwarm {
     pub inertia: f64,
     pub c_personal: f64,
     pub c_global: f64,
+    state: State,
 }
 
 impl Default for ParticleSwarm {
     fn default() -> Self {
-        ParticleSwarm { swarm_size: 16, inertia: 0.72, c_personal: 1.49, c_global: 1.49 }
+        ParticleSwarm {
+            swarm_size: 16,
+            inertia: 0.72,
+            c_personal: 1.49,
+            c_global: 1.49,
+            state: State::Fresh,
+        }
+    }
+}
+
+/// The swarm of the synchronous ask/tell variant.
+#[derive(Debug)]
+struct Swarm {
+    cards: Vec<f64>,
+    pos: Vec<Vec<f64>>,
+    vel: Vec<Vec<f64>>,
+    p_best: Vec<(Vec<f64>, f64)>,
+    g_best: (Vec<f64>, f64),
+}
+
+#[derive(Debug, Default)]
+enum State {
+    #[default]
+    Fresh,
+    AwaitInit(Swarm),
+    Ready(Swarm),
+    AwaitStep(Swarm),
+}
+
+impl ParticleSwarm {
+    /// One velocity/position update for particle `k` against the given
+    /// bests; returns the (repaired) config index to probe.
+    fn advance(
+        &self,
+        space: &SearchSpace,
+        swarm: &mut Swarm,
+        k: usize,
+        ctx: &mut TuningContext,
+    ) -> u32 {
+        let dims = space.dims();
+        for d in 0..dims {
+            let r1 = ctx.rng.f64();
+            let r2 = ctx.rng.f64();
+            swarm.vel[k][d] = self.inertia * swarm.vel[k][d]
+                + self.c_personal * r1 * (swarm.p_best[k].0[d] - swarm.pos[k][d])
+                + self.c_global * r2 * (swarm.g_best.0[d] - swarm.pos[k][d]);
+            // Velocity clamp keeps particles on the grid.
+            let vmax = swarm.cards[d] * 0.5;
+            swarm.vel[k][d] = swarm.vel[k][d].clamp(-vmax, vmax);
+            swarm.pos[k][d] = (swarm.pos[k][d] + swarm.vel[k][d]).clamp(0.0, swarm.cards[d] - 1.0);
+        }
+        let probe: Vec<u16> = swarm.pos[k].iter().map(|&x| x.round() as u16).collect();
+        match space.index_of(&probe) {
+            Some(i) => i,
+            None => {
+                let mut rng = ctx.rng.fork(k as u64);
+                space.repair(&probe, &mut rng)
+            }
+        }
+    }
+
+    /// Fresh swarm: sampled starts, random velocities, empty bests.
+    fn spawn(&self, space: &SearchSpace, ctx: &mut TuningContext) -> (Swarm, Vec<u32>) {
+        let dims = space.dims();
+        let cards: Vec<f64> =
+            (0..dims).map(|d| space.params.params[d].cardinality() as f64).collect();
+        let starts = space.random_sample(&mut ctx.rng, self.swarm_size);
+        let pos: Vec<Vec<f64>> = starts
+            .iter()
+            .map(|&i| space.config(i).iter().map(|&v| v as f64).collect())
+            .collect();
+        let vel: Vec<Vec<f64>> = (0..pos.len())
+            .map(|_| (0..dims).map(|d| (ctx.rng.f64() - 0.5) * cards[d] * 0.2).collect())
+            .collect();
+        let g_best = (pos[0].clone(), f64::INFINITY);
+        let swarm = Swarm { cards, pos, vel, p_best: Vec::new(), g_best };
+        (swarm, starts)
     }
 }
 
@@ -26,68 +112,109 @@ impl Optimizer for ParticleSwarm {
         "pso"
     }
 
+    fn hyperparams(&self) -> &'static [&'static str] {
+        &["swarm_size", "inertia", "c_personal", "c_global"]
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "swarm_size" => self.swarm_size = (value as usize).max(2),
+            "inertia" => self.inertia = value,
+            "c_personal" => self.c_personal = value,
+            "c_global" => self.c_global = value,
+            _ => return false,
+        }
+        true
+    }
+
     fn run(&mut self, ctx: &mut TuningContext) {
-        let dims = ctx.space().dims();
-        let cards: Vec<f64> = (0..dims)
-            .map(|d| ctx.space().params.params[d].cardinality() as f64)
-            .collect();
+        let space = ctx.space_handle();
+        let (mut swarm, starts) = self.spawn(&space, ctx);
 
-        let starts = ctx.space().random_sample(&mut ctx.rng, self.swarm_size);
-        let mut pos: Vec<Vec<f64>> = starts
-            .iter()
-            .map(|&i| ctx.space().config(i).iter().map(|&v| v as f64).collect())
-            .collect();
-        let mut vel: Vec<Vec<f64>> = (0..pos.len())
-            .map(|_| (0..dims).map(|d| (ctx.rng.f64() - 0.5) * cards[d] * 0.2).collect())
-            .collect();
-        let mut p_best: Vec<(Vec<f64>, f64)> = Vec::with_capacity(pos.len());
-        let mut g_best: (Vec<f64>, f64) = (pos[0].clone(), f64::INFINITY);
-
-        for (p, &start) in pos.iter().zip(&starts) {
-            if ctx.budget_exhausted() {
-                return;
-            }
-            let f = ctx.evaluate(start).unwrap_or(f64::INFINITY);
-            p_best.push((p.clone(), f));
-            if f < g_best.1 {
-                g_best = (p.clone(), f);
+        // Initial swarm as one batch (bit-identical to the sequential
+        // loop; the context cuts at budget exhaustion).
+        let fits = ctx.evaluate_batch(&starts);
+        for (k, f) in fits.into_iter().enumerate() {
+            let f = f.unwrap_or(f64::INFINITY);
+            swarm.p_best.push((swarm.pos[k].clone(), f));
+            if f < swarm.g_best.1 {
+                swarm.g_best = (swarm.pos[k].clone(), f);
             }
         }
 
         while !ctx.budget_exhausted() {
-            for k in 0..pos.len() {
+            for k in 0..swarm.pos.len() {
                 if ctx.budget_exhausted() {
                     return;
                 }
-                for d in 0..dims {
-                    let r1 = ctx.rng.f64();
-                    let r2 = ctx.rng.f64();
-                    vel[k][d] = self.inertia * vel[k][d]
-                        + self.c_personal * r1 * (p_best[k].0[d] - pos[k][d])
-                        + self.c_global * r2 * (g_best.0[d] - pos[k][d]);
-                    // Velocity clamp keeps particles on the grid.
-                    let vmax = cards[d] * 0.5;
-                    vel[k][d] = vel[k][d].clamp(-vmax, vmax);
-                    pos[k][d] = (pos[k][d] + vel[k][d]).clamp(0.0, cards[d] - 1.0);
-                }
-                let probe: Vec<u16> = pos[k].iter().map(|&x| x.round() as u16).collect();
-                let idx = match ctx.space().index_of(&probe) {
-                    Some(i) => i,
-                    None => {
-                        let mut rng = ctx.rng.fork(k as u64);
-                        ctx.space().repair(&probe, &mut rng)
-                    }
-                };
+                let idx = self.advance(&space, &mut swarm, k, ctx);
                 let f = ctx.evaluate(idx).unwrap_or(f64::INFINITY);
-                let actual: Vec<f64> =
-                    ctx.space().config(idx).iter().map(|&v| v as f64).collect();
-                if f < p_best[k].1 {
-                    p_best[k] = (actual.clone(), f);
+                let actual: Vec<f64> = space.config(idx).iter().map(|&v| v as f64).collect();
+                if f < swarm.p_best[k].1 {
+                    swarm.p_best[k] = (actual.clone(), f);
                 }
-                if f < g_best.1 {
-                    g_best = (actual, f);
+                if f < swarm.g_best.1 {
+                    swarm.g_best = (actual, f);
                 }
             }
+        }
+    }
+
+    fn suggest(&mut self, ctx: &mut TuningContext, _limit: usize) -> Option<Vec<u32>> {
+        let space = ctx.space_handle();
+        match std::mem::take(&mut self.state) {
+            State::Fresh => {
+                let (swarm, starts) = self.spawn(&space, ctx);
+                self.state = State::AwaitInit(swarm);
+                Some(starts)
+            }
+            State::Ready(mut swarm) => {
+                let probes: Vec<u32> = (0..swarm.pos.len())
+                    .map(|k| self.advance(&space, &mut swarm, k, ctx))
+                    .collect();
+                self.state = State::AwaitStep(swarm);
+                Some(probes)
+            }
+            awaiting => {
+                // suggest() twice without an observe(): keep the phase.
+                self.state = awaiting;
+                Some(Vec::new())
+            }
+        }
+    }
+
+    fn observe(&mut self, ctx: &mut TuningContext, batch: &[u32], results: &[Option<f64>]) {
+        let space = ctx.space_handle();
+        match std::mem::take(&mut self.state) {
+            State::AwaitInit(mut swarm) => {
+                for (k, r) in results.iter().enumerate() {
+                    let f = r.unwrap_or(f64::INFINITY);
+                    swarm.p_best.push((swarm.pos[k].clone(), f));
+                    if f < swarm.g_best.1 {
+                        swarm.g_best = (swarm.pos[k].clone(), f);
+                    }
+                }
+                self.state = State::Ready(swarm);
+            }
+            State::AwaitStep(mut swarm) => {
+                // Synchronous update: all particles scored against the
+                // bests they moved with.
+                for (k, (&idx, r)) in batch.iter().zip(results).enumerate() {
+                    let f = r.unwrap_or(f64::INFINITY);
+                    let actual: Vec<f64> = space.config(idx).iter().map(|&v| v as f64).collect();
+                    if f < swarm.p_best[k].1 {
+                        swarm.p_best[k] = (actual.clone(), f);
+                    }
+                    if f < swarm.g_best.1 {
+                        swarm.g_best = (actual, f);
+                    }
+                }
+                self.state = State::Ready(swarm);
+            }
+            state => self.state = state,
         }
     }
 }
@@ -95,7 +222,7 @@ impl Optimizer for ParticleSwarm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optimizers::testutil;
+    use crate::optimizers::{run_ask_tell, testutil};
 
     #[test]
     fn swarm_finds_below_median() {
@@ -111,5 +238,28 @@ mod tests {
         let mut pso = ParticleSwarm::default();
         let (_, evals) = testutil::run_on(&mut pso, &cache, 30.0, 11);
         assert!(evals >= 1);
+    }
+
+    #[test]
+    fn init_swarm_goes_through_batch_path() {
+        let cache = testutil::conv_cache();
+        let mut ctx = crate::tuning::TuningContext::new(&cache, 300.0, 12);
+        ParticleSwarm::default().run(&mut ctx);
+        assert!(ctx.batch_calls() >= 1);
+        assert_eq!(ctx.largest_batch(), 16, "full swarm in one batch");
+    }
+
+    #[test]
+    fn synchronous_ask_tell_variant_is_deterministic() {
+        let cache = testutil::conv_cache();
+        let run = |seed: u64| {
+            let mut ctx = crate::tuning::TuningContext::new(&cache, 300.0, seed);
+            let mut pso = ParticleSwarm::default();
+            assert!(run_ask_tell(&mut pso, &mut ctx), "PSO must support ask/tell");
+            (ctx.trajectory.clone(), ctx.unique_evals())
+        };
+        assert_eq!(run(5), run(5));
+        let (tr, _) = run(6);
+        assert!(!tr.is_empty());
     }
 }

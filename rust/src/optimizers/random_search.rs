@@ -3,9 +3,17 @@
 //! Samples valid configurations uniformly without replacement (matching the
 //! calculated baseline's with-replacement assumption closely for the first
 //! few thousand draws while avoiding wasted duplicate evaluations).
+//!
+//! `run` keeps the classic draw-evaluate loop (bit-identical to the
+//! pre-backend behavior); `suggest`/`observe` additionally expose an
+//! ask/tell path that proposes whole blocks of fresh draws for
+//! batch-capable backends.
 
 use super::Optimizer;
 use crate::tuning::TuningContext;
+
+/// Batch size `suggest` proposes when the driver places no tighter limit.
+const DEFAULT_BATCH: usize = 64;
 
 #[derive(Debug, Default)]
 pub struct RandomSearch;
@@ -29,6 +37,22 @@ impl Optimizer for RandomSearch {
             }
             ctx.evaluate(i);
         }
+    }
+
+    fn suggest(&mut self, ctx: &mut TuningContext, limit: usize) -> Option<Vec<u32>> {
+        let n = ctx.space().len();
+        let want = limit.min(DEFAULT_BATCH).max(1);
+        let mut batch: Vec<u32> = Vec::with_capacity(want);
+        while batch.len() < want {
+            let mut i = ctx.rng.below(n) as u32;
+            let mut tries = 0;
+            while (ctx.already_evaluated(i) || batch.contains(&i)) && tries < 16 {
+                i = ctx.rng.below(n) as u32;
+                tries += 1;
+            }
+            batch.push(i);
+        }
+        Some(batch)
     }
 }
 

@@ -51,9 +51,14 @@ impl Optimizer for SimulatedAnnealing {
         true
     }
 
+    fn hyperparams(&self) -> &'static [&'static str] {
+        &["t0", "alpha", "t_min", "stagnation_limit"]
+    }
+
     fn run(&mut self, ctx: &mut TuningContext) {
+        let space = ctx.space_handle();
         let mut cooling = Cooling::new(self.t0, self.alpha, self.t_min);
-        let mut current = ctx.space().random_valid(&mut ctx.rng);
+        let mut current = space.random_valid(&mut ctx.rng);
         let mut f_cur = loop {
             match ctx.evaluate(current) {
                 Some(v) => break v,
@@ -61,19 +66,16 @@ impl Optimizer for SimulatedAnnealing {
                     if ctx.budget_exhausted() {
                         return;
                     }
-                    current = ctx.space().random_valid(&mut ctx.rng);
+                    current = space.random_valid(&mut ctx.rng);
                 }
             }
         };
         let mut stagnation = 0u32;
 
         while !ctx.budget_exhausted() {
-            let cand = match ctx
-                .space()
-                .random_neighbor(current, &mut ctx.rng, self.neighbor)
-            {
+            let cand = match space.random_neighbor(current, &mut ctx.rng, self.neighbor) {
                 Some(c) => c,
-                None => ctx.space().random_valid(&mut ctx.rng),
+                None => space.random_valid(&mut ctx.rng),
             };
             match ctx.evaluate(cand) {
                 Some(f_cand) => {
@@ -94,7 +96,7 @@ impl Optimizer for SimulatedAnnealing {
             cooling.step();
             if stagnation > self.stagnation_limit {
                 // Restart with re-heating.
-                current = ctx.space().random_valid(&mut ctx.rng);
+                current = space.random_valid(&mut ctx.rng);
                 if let Some(v) = ctx.evaluate(current) {
                     f_cur = v;
                 }

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Input tensor specification, e.g. `float32:256x256`.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -1,17 +1,68 @@
-//! The measured tuning path: turn a set of AOT-compiled program variants
-//! into a *real* pre-explored search space (a [`Cache`] whose entries are
-//! PJRT wall-clock measurements instead of model outputs), so the entire
-//! methodology and every optimizer run unchanged on real data — exactly
-//! how the paper replays its exhaustively-benchmarked cachefiles.
+//! The measured tuning path: real program variants as evaluation backends.
+//!
+//! Two ways to tune on real measurements, both over `runtime/{artifacts,
+//! pjrt}`:
+//!
+//! - [`measure_kernel`] exhaustively times every variant and assembles a
+//!   *measured* [`Cache`] — the paper's replayed-cachefile mode, which
+//!   then flows through the registry/job-graph like any simulated space.
+//! - [`MeasuredSource`] / [`MeasuredBackend`] implement the tuning
+//!   [`EvalBackend`](crate::tuning::EvalBackend) seam *lazily*: an
+//!   optimizer driving a `TuningContext` only compiles and times the
+//!   variants it actually visits. The source memoizes measurements behind
+//!   a mutex, so a job-graph fan-out of seeds over the same source
+//!   measures each variant at most once (and hardware timing stays
+//!   serialized, which keeps measurements clean).
+//!
+//! Measurement itself goes through the [`VariantRunner`] trait so tests
+//! (and future non-PJRT runtimes) can substitute a deterministic runner.
 
-use std::collections::BTreeSet;
-
-use anyhow::{bail, Result};
+use std::collections::{BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
 
 use super::artifacts::{Artifact, ArtifactSet};
 use super::pjrt::PjrtRuntime;
 use crate::searchspace::{Param, ParamSet, SearchSpace};
-use crate::tuning::Cache;
+use crate::tuning::cache::FAILURE_COST_S;
+use crate::tuning::{Cache, EvalBackend};
+use crate::util::error::{bail, Context, Result};
+
+/// Cost estimate charged for a variant that has not been measured yet
+/// (the budget planner needs *some* projection before the first compile).
+pub const NOMINAL_EVAL_COST_S: f64 = 0.5;
+
+/// Compiles and times one program variant: `(mean_ms, compile_s)`.
+///
+/// [`PjrtRuntime`] is the production implementation; tests plug in
+/// deterministic fakes so the measured seam is exercised without PJRT.
+pub trait VariantRunner: Sync {
+    fn platform(&self) -> String;
+    fn measure(
+        &self,
+        artifact: &Artifact,
+        warmup: usize,
+        reps: usize,
+        seed: u64,
+    ) -> Result<(f64, f64)>;
+}
+
+impl VariantRunner for PjrtRuntime {
+    fn platform(&self) -> String {
+        PjrtRuntime::platform(self)
+    }
+
+    fn measure(
+        &self,
+        artifact: &Artifact,
+        warmup: usize,
+        reps: usize,
+        seed: u64,
+    ) -> Result<(f64, f64)> {
+        let (variant, inputs) = self.prepare(artifact, seed)?;
+        let timing = variant.time(&inputs, warmup, reps)?;
+        Ok((timing.mean_ms, variant.compile_s))
+    }
+}
 
 /// Build the variant search space of one kernel from its artifacts: one
 /// tunable parameter per manifest param key, values = distinct values seen.
@@ -31,7 +82,170 @@ pub fn variant_space(kernel: &str, set: &ArtifactSet) -> Result<SearchSpace> {
         params.push(Param::ints(key, &values.into_iter().collect::<Vec<_>>()));
     }
     SearchSpace::build(&format!("{}-measured", kernel), ParamSet::new(params), &[])
-        .map_err(|e| anyhow::anyhow!(e))
+        .map_err(crate::util::error::Error::msg)
+}
+
+/// One lazily-measured variant: observed value + actual evaluation cost.
+#[derive(Debug, Clone, Copy)]
+struct Measurement {
+    value: Option<f64>,
+    cost_s: f64,
+}
+
+/// A shareable source of measured evaluations for one kernel's variant
+/// space: implements [`BackendSource`](crate::tuning::BackendSource), so
+/// tuning jobs carry it exactly like a cached space. All backends minted
+/// from one source share its measurement store.
+pub struct MeasuredSource<'r> {
+    runner: &'r dyn VariantRunner,
+    space: Arc<SearchSpace>,
+    /// Artifact per present config index; absent combos are hidden failures.
+    by_index: HashMap<u32, Artifact>,
+    warmup: usize,
+    reps: usize,
+    seed: u64,
+    store: Mutex<HashMap<u32, Measurement>>,
+    errors: Mutex<Vec<String>>,
+}
+
+impl<'r> MeasuredSource<'r> {
+    pub fn new(
+        runner: &'r dyn VariantRunner,
+        set: &ArtifactSet,
+        kernel: &str,
+        warmup: usize,
+        reps: usize,
+        seed: u64,
+    ) -> Result<MeasuredSource<'r>> {
+        let space = Arc::new(variant_space(kernel, set)?);
+        let mut by_index = HashMap::new();
+        for artifact in set.for_kernel(kernel) {
+            let cfg = config_of(artifact, &space);
+            let idx = space
+                .index_of(&cfg)
+                .context("artifact config missing from variant space")?;
+            by_index.insert(idx, artifact.clone());
+        }
+        Ok(MeasuredSource {
+            runner,
+            space,
+            by_index,
+            warmup,
+            reps,
+            seed,
+            store: Mutex::new(HashMap::new()),
+            errors: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn space(&self) -> &Arc<SearchSpace> {
+        &self.space
+    }
+
+    /// Measure `i` (memoized). The store lock is held across the
+    /// measurement on purpose: concurrent workers timing variants in
+    /// parallel would contaminate each other's wall-clock samples.
+    fn measure_config(&self, i: u32) -> Measurement {
+        let mut store = self.store.lock().unwrap();
+        if let Some(m) = store.get(&i) {
+            return *m;
+        }
+        let m = match self.by_index.get(&i) {
+            // A parameter combination no artifact covers: hidden failure.
+            None => Measurement { value: None, cost_s: FAILURE_COST_S },
+            Some(artifact) => {
+                match self.runner.measure(artifact, self.warmup, self.reps, self.seed) {
+                    Ok((mean_ms, compile_s)) => Measurement {
+                        value: Some(mean_ms),
+                        cost_s: compile_s + self.reps as f64 * mean_ms * 1e-3,
+                    },
+                    Err(e) => {
+                        let mut errors = self.errors.lock().unwrap();
+                        if errors.len() < 32 {
+                            errors.push(format!("{}: {}", artifact.name, e));
+                        }
+                        Measurement { value: None, cost_s: FAILURE_COST_S }
+                    }
+                }
+            }
+        };
+        store.insert(i, m);
+        m
+    }
+
+    /// Number of variants measured (or failed) so far.
+    pub fn measured_count(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    /// Measurement errors recorded so far (capped).
+    pub fn errors(&self) -> Vec<String> {
+        self.errors.lock().unwrap().clone()
+    }
+
+    /// Snapshot of measured variants: (artifact name, mean ms, cost s),
+    /// successful measurements only, sorted ascending by runtime.
+    pub fn results(&self) -> Vec<(String, f64, f64)> {
+        let store = self.store.lock().unwrap();
+        let mut out: Vec<(String, f64, f64)> = store
+            .iter()
+            .filter_map(|(i, m)| {
+                let name = self.by_index.get(i)?.name.clone();
+                m.value.map(|v| (name, v, m.cost_s))
+            })
+            .collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        out
+    }
+}
+
+impl crate::tuning::BackendSource for MeasuredSource<'_> {
+    fn backend(&self) -> Box<dyn EvalBackend + '_> {
+        Box::new(MeasuredBackend { source: self })
+    }
+
+    fn space_id(&self) -> String {
+        self.space.name.clone()
+    }
+}
+
+/// Per-run view over a [`MeasuredSource`]: the lazy measured
+/// [`EvalBackend`]. Stateless itself — measurements and costs live in the
+/// shared source store, so repeated runs reuse every compile.
+pub struct MeasuredBackend<'s> {
+    source: &'s MeasuredSource<'s>,
+}
+
+impl<'s> MeasuredBackend<'s> {
+    pub fn new(source: &'s MeasuredSource<'s>) -> MeasuredBackend<'s> {
+        MeasuredBackend { source }
+    }
+}
+
+impl EvalBackend for MeasuredBackend<'_> {
+    fn space(&self) -> &Arc<SearchSpace> {
+        &self.source.space
+    }
+
+    fn id(&self) -> String {
+        self.source.space.name.clone()
+    }
+
+    fn eval_cost_s(&self, i: u32) -> f64 {
+        match self.source.store.lock().unwrap().get(&i) {
+            Some(m) => m.cost_s,
+            None if self.source.by_index.contains_key(&i) => NOMINAL_EVAL_COST_S,
+            None => FAILURE_COST_S,
+        }
+    }
+
+    fn cost_model_exact(&self) -> bool {
+        false
+    }
+
+    fn evaluate_batch(&mut self, configs: &[u32]) -> Vec<Option<f64>> {
+        configs.iter().map(|&i| self.source.measure_config(i).value).collect()
+    }
 }
 
 /// Result of exhaustively measuring a kernel's variants.
@@ -63,11 +277,10 @@ pub fn measure_kernel(
         let idx = space
             .index_of(&cfg)
             .expect("artifact config missing from variant space");
-        let (variant, inputs) = runtime.prepare(artifact, seed)?;
-        let timing = variant.time(&inputs, warmup, reps)?;
-        mean_ms[idx as usize] = timing.mean_ms as f32;
-        compile_s[idx as usize] = variant.compile_s as f32;
-        measurements.push((artifact.name.clone(), timing.mean_ms, variant.compile_s));
+        let (mean, compile) = VariantRunner::measure(runtime, artifact, warmup, reps, seed)?;
+        mean_ms[idx as usize] = mean as f32;
+        compile_s[idx as usize] = compile as f32;
+        measurements.push((artifact.name.clone(), mean, compile));
     }
 
     let cache = Cache::from_measured(space, mean_ms, compile_s, seed);
@@ -90,16 +303,57 @@ pub fn config_of(artifact: &Artifact, space: &SearchSpace) -> Vec<u16> {
         .collect()
 }
 
-#[cfg(test)]
-mod tests {
+/// Deterministic test doubles for the measured seam, shared by the unit
+/// tests below and the integration suite (`rust/tests/`), which links the
+/// library without `cfg(test)` — hence a regular public module.
+pub mod testing {
     use super::*;
     use std::collections::BTreeMap;
     use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
-    fn fake_artifact(kernel: &str, params: &[(&str, i64)]) -> Artifact {
+    /// Deterministic [`VariantRunner`]: runtime is a hash of the variant
+    /// name, compile cost is fixed; counts `measure` calls so tests can
+    /// assert measure-once memoization.
+    #[derive(Default)]
+    pub struct FakeRunner {
+        calls: AtomicUsize,
+    }
+
+    impl FakeRunner {
+        pub fn calls(&self) -> usize {
+            self.calls.load(Ordering::Relaxed)
+        }
+    }
+
+    impl VariantRunner for FakeRunner {
+        fn platform(&self) -> String {
+            "fake".into()
+        }
+
+        fn measure(
+            &self,
+            artifact: &Artifact,
+            _warmup: usize,
+            _reps: usize,
+            _seed: u64,
+        ) -> Result<(f64, f64)> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let h = crate::util::rng::fnv1a(artifact.name.as_bytes());
+            Ok((0.5 + (h % 64) as f64 / 16.0, 0.35))
+        }
+    }
+
+    /// A manifest-less artifact for variant-space tests.
+    pub fn fake_artifact(kernel: &str, params: &[(&str, i64)]) -> Artifact {
+        let name = params
+            .iter()
+            .map(|(k, v)| format!("{}-{}", k, v))
+            .collect::<Vec<_>>()
+            .join("_");
         Artifact {
             kernel: kernel.into(),
-            name: format!("{}-v", kernel),
+            name: format!("{}__{}", kernel, name),
             path: PathBuf::from("/nonexistent"),
             params: params.iter().map(|(k, v)| (k.to_string(), *v)).collect::<BTreeMap<_, _>>(),
             inputs: vec![],
@@ -107,20 +361,101 @@ mod tests {
         }
     }
 
-    #[test]
-    fn variant_space_from_manifest_params() {
-        let set = ArtifactSet {
+    /// Three gemm artifacts over a 2×2 cartesian grid: the (32, 64)
+    /// combination is an intentional gap (hidden failure).
+    pub fn gemm_set_with_gap() -> ArtifactSet {
+        ArtifactSet {
             artifacts: vec![
                 fake_artifact("gemm", &[("block_m", 32), ("block_n", 32)]),
                 fake_artifact("gemm", &[("block_m", 64), ("block_n", 32)]),
                 fake_artifact("gemm", &[("block_m", 64), ("block_n", 64)]),
             ],
-        };
+        }
+    }
+
+    /// A fully-covered gemm variant grid over the given parameter values.
+    pub fn gemm_grid(block_ms: &[i64], block_ns: &[i64]) -> ArtifactSet {
+        let mut artifacts = Vec::new();
+        for &m in block_ms {
+            for &n in block_ns {
+                artifacts.push(fake_artifact("gemm", &[("block_m", m), ("block_n", n)]));
+            }
+        }
+        ArtifactSet { artifacts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::{gemm_set_with_gap, FakeRunner};
+    use super::*;
+    use crate::tuning::{BackendSource, TuningContext};
+
+    #[test]
+    fn variant_space_from_manifest_params() {
+        let set = gemm_set_with_gap();
         let space = variant_space("gemm", &set).unwrap();
         assert_eq!(space.dims(), 2);
         assert_eq!(space.len(), 4); // full cartesian; (32,64) will be a failure entry
         let cfg = config_of(&set.artifacts[1], &space);
         assert_eq!(space.params.describe(&cfg), "block_m=64, block_n=32");
         assert!(variant_space("missing", &set).is_err());
+    }
+
+    #[test]
+    fn measured_source_is_lazy_and_memoized() {
+        let set = gemm_set_with_gap();
+        let runner = FakeRunner::default();
+        let source = MeasuredSource::new(&runner, &set, "gemm", 1, 3, 42).unwrap();
+        assert_eq!(source.space_id(), "gemm-measured");
+        assert_eq!(source.measured_count(), 0, "nothing measured up front");
+
+        let mut backend = source.backend();
+        let i = *source.by_index.keys().next().unwrap();
+        assert_eq!(backend.eval_cost_s(i), NOMINAL_EVAL_COST_S, "estimate before measuring");
+        let v = backend.evaluate_one(i);
+        assert!(v.is_some());
+        assert!(
+            backend.eval_cost_s(i) < NOMINAL_EVAL_COST_S,
+            "actual (cheap fake) cost replaces the estimate after measuring"
+        );
+        // A second run over the same source reuses the measurement.
+        let mut second = source.backend();
+        assert_eq!(second.evaluate_one(i), v);
+        assert_eq!(runner.calls(), 1, "memoized across runs");
+        assert!(source.errors().is_empty());
+    }
+
+    #[test]
+    fn absent_combo_is_hidden_failure() {
+        let set = gemm_set_with_gap();
+        let runner = FakeRunner::default();
+        let source = MeasuredSource::new(&runner, &set, "gemm", 1, 3, 42).unwrap();
+        let space = Arc::clone(source.space());
+        let absent: Vec<u32> = space
+            .iter_indices()
+            .filter(|i| !source.by_index.contains_key(i))
+            .collect();
+        assert_eq!(absent.len(), 1, "(32, 64) has no artifact");
+        let mut backend = source.backend();
+        assert_eq!(backend.evaluate_one(absent[0]), None);
+        assert_eq!(backend.eval_cost_s(absent[0]), FAILURE_COST_S);
+        assert_eq!(runner.calls(), 0);
+    }
+
+    #[test]
+    fn tuning_context_drives_measured_backend() {
+        let set = gemm_set_with_gap();
+        let runner = FakeRunner::default();
+        let source = MeasuredSource::new(&runner, &set, "gemm", 1, 3, 7).unwrap();
+        let mut backend = source.backend();
+        let mut ctx = TuningContext::with_backend(backend.as_mut(), 1e6, 1);
+        let all: Vec<u32> = ctx.space().iter_indices().collect();
+        let values = ctx.evaluate_batch(&all);
+        assert_eq!(values.iter().filter(|v| v.is_some()).count(), 3);
+        let (_, best) = ctx.best().unwrap();
+        let min = source.results().first().unwrap().1;
+        assert_eq!(best, min, "context best equals cheapest measured variant");
+        assert_eq!(runner.calls(), 3, "one compile per variant");
     }
 }

@@ -1,10 +1,19 @@
 //! Runtime layer: PJRT CPU execution of AOT artifacts (L3 <- L2/L1 bridge)
-//! and the measured-cache tuning path built on top of it.
+//! and the measured tuning paths built on top of it — both the exhaustive
+//! measured-cache path and the lazy [`MeasuredBackend`] evaluation backend
+//! (see `crate::tuning::backend`). Builds without the `pjrt` feature use
+//! an API-compatible stub for the `xla` bindings ([`xla_stub`]): data
+//! plumbing works, execution reports a clean "no PJRT support" error.
 
 pub mod artifacts;
 pub mod measured;
 pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
 
 pub use artifacts::{Artifact, ArtifactSet, TensorSpec};
-pub use measured::{measure_kernel, variant_space, MeasuredSpace};
+pub use measured::{
+    measure_kernel, variant_space, MeasuredBackend, MeasuredSource, MeasuredSpace, VariantRunner,
+};
+pub use measured::testing as measured_testing;
 pub use pjrt::{gemm_reference, make_inputs, CompiledVariant, PjrtRuntime, Timing};

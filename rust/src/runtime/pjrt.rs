@@ -10,11 +10,17 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use super::artifacts::{Artifact, TensorSpec};
+use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 use crate::util::stats;
+
+// Without the `pjrt` feature the API-compatible stub stands in for the
+// real bindings (the offline environment has no `xla` crate); execution
+// entry points then fail at runtime with a clear message. Enabling `pjrt`
+// resolves `xla::` against the vendored bindings instead.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
 
 /// A PJRT CPU client wrapper.
 pub struct PjrtRuntime {
@@ -131,7 +137,7 @@ pub fn make_inputs(specs: &[TensorSpec], seed: u64) -> Result<Vec<xla::Literal>>
                     let data: Vec<i32> = (0..n).map(|_| rng.below(32) as i32).collect();
                     xla::Literal::vec1(&data).reshape(&dims)?
                 }
-                other => anyhow::bail!("unsupported artifact dtype '{}'", other),
+                other => crate::bail!("unsupported artifact dtype '{}'", other),
             };
             Ok(lit)
         })

@@ -1,0 +1,181 @@
+//! API-compatible stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build environment ships no `xla-rs`/`xla_extension`
+//! bindings, so this module mirrors the exact surface `runtime::pjrt`
+//! consumes. Data types ([`Literal`]) are real — `make_inputs` and the
+//! tests that exercise it work unchanged — while execution entry points
+//! ([`PjRtClient::cpu`]) report that the build has no PJRT support. A
+//! build with the `pjrt` feature enabled (plus the vendored `xla` crate)
+//! swaps this module out for the real bindings; see `runtime::pjrt`.
+
+use crate::util::error::{Error, Result};
+
+fn unavailable(what: &str) -> Error {
+    Error::msg(format!(
+        "{}: built without PJRT support (enable the `pjrt` feature with the vendored `xla` bindings)",
+        what
+    ))
+}
+
+/// Element types [`Literal`] can hold (the subset the artifacts use).
+/// Public only because the [`NativeType`] conversion trait names it in
+/// its method signatures; not part of the mirrored `xla` surface.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Elements {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: typed element storage plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    elements: Elements,
+    dims: Vec<i64>,
+}
+
+/// Sealed-ish conversion trait backing `Literal::{vec1, to_vec}`.
+pub trait NativeType: Sized {
+    fn wrap(data: &[Self]) -> Elements;
+    fn unwrap(elements: &Elements) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[f32]) -> Elements {
+        Elements::F32(data.to_vec())
+    }
+    fn unwrap(elements: &Elements) -> Option<Vec<f32>> {
+        match elements {
+            Elements::F32(v) => Some(v.clone()),
+            Elements::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[i32]) -> Elements {
+        Elements::I32(data.to_vec())
+    }
+    fn unwrap(elements: &Elements) -> Option<Vec<i32>> {
+        match elements {
+            Elements::I32(v) => Some(v.clone()),
+            Elements::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { elements: T::wrap(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if n != have {
+            return Err(Error::msg(format!(
+                "reshape to {:?} ({} elements) from {} elements",
+                dims, n, have
+            )));
+        }
+        Ok(Literal { elements: self.elements.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.elements {
+            Elements::F32(v) => v.len(),
+            Elements::I32(v) => v.len(),
+        }
+    }
+
+    /// Unwrap a 1-tuple output (identity here: the stub never produces
+    /// tuples because it never executes).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    /// Typed element retrieval.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.elements).ok_or_else(|| Error::msg("literal holds a different dtype"))
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("parsing HLO text"))
+    }
+}
+
+/// Computation handle (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("reading device buffer"))
+    }
+}
+
+/// Loaded executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing"))
+    }
+}
+
+/// PJRT client handle. `cpu()` fails in stub builds, so every measured
+/// entry point degrades to a clean runtime error instead of a link error.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(l.to_vec::<i32>().is_err(), "dtype mismatch must error");
+        let i = Literal::vec1(&[1i32, 2]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn execution_paths_report_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("without PJRT support"), "{}", e);
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Pluggable evaluation backends: the seam between optimization algorithms
+//! and whatever actually produces objective values.
+//!
+//! [`EvalBackend`] is the cost-function interface the whole system programs
+//! against. [`TuningContext`](super::TuningContext) sits on top of any
+//! backend and keeps the run-level semantics (dedup, simulated wall clock,
+//! best-so-far trajectory, `budget_spent_fraction`); the backend below it
+//! answers "what does configuration `i` cost and score". Two backends ship:
+//!
+//! - [`CachedBackend`] replays a pre-explored [`Cache`] ("simulation
+//!   mode"), byte-identical to the pre-backend evaluator: the k-th unique
+//!   evaluation of a run draws the same deterministic noise stream whether
+//!   it arrives alone or inside a batch.
+//! - `MeasuredBackend` (`crate::runtime::measured`) compiles and times AOT
+//!   program variants on demand over PJRT — the real-system path.
+//!
+//! [`BackendSource`] mints a fresh backend per tuning run, which is what a
+//! `TuningJob` carries: per-run backends keep noise/measurement state
+//! run-local while the source (a shared `Cache`, a shared measurement
+//! store) is safely shared across scheduler workers.
+
+use std::sync::Arc;
+
+use super::cache::{Cache, RUNS_PER_EVAL};
+use crate::searchspace::SearchSpace;
+
+/// A batch-capable, budget-accounted evaluation backend for one search
+/// space.
+///
+/// Backends are stateful per run (deterministic noise streams, lazy
+/// measurement stores), so callers must submit only configurations they
+/// will actually consume, in evaluation order. The `TuningContext`
+/// guarantees this: deduplication and budget cuts happen above this seam,
+/// and each unique configuration reaches the backend exactly once.
+pub trait EvalBackend {
+    /// Handle to the search space being tuned.
+    fn space(&self) -> &Arc<SearchSpace>;
+
+    /// Stable space identifier, e.g. `gemm@A100` or `gemm-measured`.
+    fn id(&self) -> String;
+
+    /// Wall-clock seconds one evaluation of `i` costs (compile + benchmark
+    /// repetitions). Simulated backends know this a priori; measured
+    /// backends return an estimate before `i` has been measured and the
+    /// actual recorded cost afterwards.
+    fn eval_cost_s(&self, i: u32) -> f64;
+
+    /// Whether [`Self::eval_cost_s`] is exact before evaluation (true for
+    /// simulated backends) or an estimate until measured. The
+    /// `TuningContext` plans whole-batch submissions only for exact-cost
+    /// backends; estimating backends are driven config-by-config so a
+    /// batch cannot overrun the budget by more than one evaluation.
+    fn cost_model_exact(&self) -> bool {
+        true
+    }
+
+    /// Evaluate configurations in order; one observed mean runtime (ms) per
+    /// entry, `None` for crashing configurations. The returned vector has
+    /// exactly `configs.len()` entries.
+    fn evaluate_batch(&mut self, configs: &[u32]) -> Vec<Option<f64>>;
+
+    /// Single-configuration path, semantically `evaluate_batch(&[i])[0]`.
+    /// Backends override this to skip the per-call allocation on the
+    /// sequential hot path.
+    fn evaluate_one(&mut self, i: u32) -> Option<f64> {
+        self.evaluate_batch(std::slice::from_ref(&i))
+            .pop()
+            .expect("evaluate_batch returned an empty batch")
+    }
+}
+
+/// Simulation-mode backend: replays a pre-explored [`Cache`].
+///
+/// Holds the run's unique-evaluation counter, which keys the deterministic
+/// measurement-noise stream: the k-th unique evaluation draws observation
+/// indices `k*(RUNS_PER_EVAL+1) .. +RUNS_PER_EVAL`, exactly as the
+/// pre-backend `TuningContext` did — so cached-backend runs reproduce
+/// pre-redesign results bit-for-bit, batched or not.
+pub struct CachedBackend<'c> {
+    cache: &'c Cache,
+    evals: u64,
+}
+
+impl<'c> CachedBackend<'c> {
+    pub fn new(cache: &'c Cache) -> CachedBackend<'c> {
+        CachedBackend { cache, evals: 0 }
+    }
+
+    /// The underlying cache (baseline/statistics access for reports).
+    pub fn cache(&self) -> &'c Cache {
+        self.cache
+    }
+}
+
+impl EvalBackend for CachedBackend<'_> {
+    fn space(&self) -> &Arc<SearchSpace> {
+        &self.cache.space
+    }
+
+    fn id(&self) -> String {
+        self.cache.id()
+    }
+
+    fn eval_cost_s(&self, i: u32) -> f64 {
+        self.cache.eval_cost_s(i)
+    }
+
+    fn evaluate_batch(&mut self, configs: &[u32]) -> Vec<Option<f64>> {
+        configs.iter().map(|&i| self.evaluate_one(i)).collect()
+    }
+
+    fn evaluate_one(&mut self, i: u32) -> Option<f64> {
+        self.evals += 1;
+        // Observed value: mean over the benchmark repetitions, drawn from
+        // the noise stream keyed by this run's unique-evaluation ordinal.
+        let base = self.evals.wrapping_mul(RUNS_PER_EVAL as u64 + 1);
+        self.cache.true_mean_ms(i).map(|_| {
+            let mut sum = 0.0;
+            for r in 0..RUNS_PER_EVAL as u64 {
+                sum += self.cache.observe_ms(i, base + r).unwrap();
+            }
+            sum / RUNS_PER_EVAL as f64
+        })
+    }
+}
+
+/// Mints a fresh [`EvalBackend`] per tuning run.
+///
+/// This is what jobs and the runner carry: the source is shared (and
+/// `Sync`) across scheduler workers, while each run gets its own backend
+/// so per-run state (noise ordinals, budget-relevant cost recording) never
+/// leaks between seeds.
+pub trait BackendSource: Sync {
+    /// A fresh backend for one run.
+    fn backend(&self) -> Box<dyn EvalBackend + '_>;
+
+    /// Stable space identifier (used for seed derivation and reports);
+    /// matches the id of every backend this source mints.
+    fn space_id(&self) -> String;
+}
+
+impl BackendSource for Cache {
+    fn backend(&self) -> Box<dyn EvalBackend + '_> {
+        Box::new(CachedBackend::new(self))
+    }
+
+    fn space_id(&self) -> String {
+        self.id()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::searchspace::Application;
+
+    fn small_cache() -> Cache {
+        Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap())
+    }
+
+    #[test]
+    fn batch_and_single_draw_the_same_noise_stream() {
+        let cache = small_cache();
+        let seq: Vec<Option<f64>> = {
+            let mut b = CachedBackend::new(&cache);
+            (0..40u32).map(|i| b.evaluate_one(i)).collect()
+        };
+        let batched = {
+            let mut b = CachedBackend::new(&cache);
+            let configs: Vec<u32> = (0..40).collect();
+            b.evaluate_batch(&configs)
+        };
+        assert_eq!(seq, batched);
+    }
+
+    #[test]
+    fn noise_ordinal_is_run_local() {
+        // Two fresh backends over the same cache replay identical streams;
+        // evaluation order changes observed values (ordinal-keyed noise),
+        // exactly as the pre-backend evaluator behaved.
+        let cache = small_cache();
+        let mut a = CachedBackend::new(&cache);
+        let mut b = CachedBackend::new(&cache);
+        assert_eq!(a.evaluate_one(3), b.evaluate_one(3));
+        let mut c = CachedBackend::new(&cache);
+        c.evaluate_one(9); // shifts the ordinal
+        let shifted = c.evaluate_one(3);
+        if let (Some(x), Some(y)) = (a.evaluate_one(5), shifted) {
+            assert!(x.is_finite() && y.is_finite());
+        }
+    }
+
+    #[test]
+    fn source_mints_fresh_backends() {
+        let cache = small_cache();
+        let source: &dyn BackendSource = &cache;
+        assert_eq!(source.space_id(), cache.id());
+        let first = source.backend().evaluate_one(0);
+        let again = source.backend().evaluate_one(0);
+        assert_eq!(first, again, "each run must restart the noise stream");
+    }
+
+    #[test]
+    fn costs_match_cache_accounting() {
+        let cache = small_cache();
+        let b = CachedBackend::new(&cache);
+        for i in 0..10u32 {
+            assert_eq!(b.eval_cost_s(i), cache.eval_cost_s(i));
+        }
+        assert_eq!(b.id(), cache.id());
+        assert_eq!(b.space().len(), cache.len());
+    }
+}

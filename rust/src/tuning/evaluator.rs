@@ -1,16 +1,33 @@
 //! The evaluation context handed to optimization algorithms.
 //!
 //! `TuningContext` plays the role of Kernel Tuner's runner + cost function:
-//! it owns the simulated wall clock (compile + benchmark time per unique
+//! it owns the wall clock (compile + benchmark time per unique
 //! configuration, near-zero for cache hits), deduplicates repeated
 //! evaluations, tracks the best-found trajectory over time (the input to
 //! the methodology's performance curves), and exposes the time budget that
 //! generated algorithms consult via `budget_spent_fraction` — mirroring
 //! `f.budget_spent_fraction` in the paper's Algorithm 1.
+//!
+//! Objective values come from a pluggable [`EvalBackend`]
+//! (`super::backend`): a replayed [`Cache`] in simulation mode, or a
+//! measured backend timing real program variants. The context adds the
+//! run-level semantics on top — so every optimizer works unchanged against
+//! either — and offers two submission paths:
+//!
+//! - [`TuningContext::evaluate`]: one configuration, charged immediately
+//!   (the classic sequential path).
+//! - [`TuningContext::evaluate_batch`]: a whole batch (an ask/tell
+//!   generation) forwarded to the backend in one call, with per-config
+//!   dedup, budget cuts and trajectory stamps applied in submission order
+//!   so a batch is observationally identical to the same configurations
+//!   submitted one at a time by a caller that checks `budget_exhausted`
+//!   between evaluations.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use super::cache::{Cache, RUNS_PER_EVAL};
+use super::backend::{CachedBackend, EvalBackend};
+use super::cache::Cache;
 use crate::searchspace::space::FxBuildHasher;
 use crate::searchspace::SearchSpace;
 use crate::util::rng::Rng;
@@ -23,9 +40,44 @@ pub const CACHED_EVAL_COST_S: f64 = 0.05;
 /// Hard safety cap on evaluate() calls per run (simulation guard).
 pub const MAX_EVAL_CALLS: u64 = 2_000_000;
 
+/// The backend a context drives: an owned cached backend (the common,
+/// statically-dispatched simulation path) or any caller-provided backend.
+enum ContextBackend<'a> {
+    Cached(CachedBackend<'a>),
+    External(&'a mut (dyn EvalBackend + 'a)),
+}
+
+impl ContextBackend<'_> {
+    fn as_dyn(&mut self) -> &mut dyn EvalBackend {
+        match self {
+            ContextBackend::Cached(b) => b,
+            ContextBackend::External(b) => &mut **b,
+        }
+    }
+
+    fn as_dyn_ref(&self) -> &dyn EvalBackend {
+        match self {
+            ContextBackend::Cached(b) => b,
+            ContextBackend::External(b) => &**b,
+        }
+    }
+}
+
+/// Per-config decision of a batch plan (see [`TuningContext::evaluate_batch`]).
+#[derive(Clone, Copy)]
+enum Step {
+    /// Budget/call-cap exhausted before this config: not evaluated.
+    Skip,
+    /// Already evaluated (earlier in the run or earlier in this batch).
+    Repeat,
+    /// Fresh evaluation; payload is the slot in the backend batch.
+    Fresh(usize),
+}
+
 /// One tuning run's evaluation state.
 pub struct TuningContext<'a> {
-    pub cache: &'a Cache,
+    backend: ContextBackend<'a>,
+    space: Arc<SearchSpace>,
     pub rng: Rng,
     clock_s: f64,
     budget_s: f64,
@@ -36,12 +88,32 @@ pub struct TuningContext<'a> {
     best_idx: Option<u32>,
     /// (wall-clock seconds, best-so-far ms) at each improvement.
     pub trajectory: Vec<(f64, f64)>,
+    batch_calls: u64,
+    batched_evals: u64,
+    largest_batch: usize,
 }
 
 impl<'a> TuningContext<'a> {
+    /// Context over a pre-explored cache (simulation mode).
     pub fn new(cache: &'a Cache, budget_s: f64, seed: u64) -> TuningContext<'a> {
+        Self::build(ContextBackend::Cached(CachedBackend::new(cache)), budget_s, seed)
+    }
+
+    /// Context over any evaluation backend (the general path: measured
+    /// backends, test doubles, future remote evaluators).
+    pub fn with_backend(
+        backend: &'a mut (dyn EvalBackend + 'a),
+        budget_s: f64,
+        seed: u64,
+    ) -> TuningContext<'a> {
+        Self::build(ContextBackend::External(backend), budget_s, seed)
+    }
+
+    fn build(backend: ContextBackend<'a>, budget_s: f64, seed: u64) -> TuningContext<'a> {
+        let space = Arc::clone(backend.as_dyn_ref().space());
         TuningContext {
-            cache,
+            backend,
+            space,
             rng: Rng::new(seed),
             clock_s: 0.0,
             budget_s,
@@ -51,37 +123,167 @@ impl<'a> TuningContext<'a> {
             best_ms: f64::INFINITY,
             best_idx: None,
             trajectory: Vec::new(),
+            batch_calls: 0,
+            batched_evals: 0,
+            largest_batch: 0,
         }
     }
 
-    /// The search space (borrowed at the cache's lifetime, so callers can
-    /// hold it while mutably using `self.rng` / `evaluate`).
+    /// The search space under tuning.
     #[inline]
-    pub fn space(&self) -> &'a SearchSpace {
-        &self.cache.space
+    pub fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    /// Owned handle to the search space. Optimizers hoist this at the top
+    /// of `run`/`suggest` so space queries never borrow the context (the
+    /// context's `rng` stays mutably available).
+    #[inline]
+    pub fn space_handle(&self) -> Arc<SearchSpace> {
+        Arc::clone(&self.space)
+    }
+
+    /// The backend's space identifier, e.g. `gemm@A100`.
+    pub fn backend_id(&self) -> String {
+        self.backend.as_dyn_ref().id()
     }
 
     /// Evaluate configuration `i`; returns the observed mean runtime in ms
-    /// (`None` for crashing configurations). Charges simulated wall-clock:
-    /// full compile+benchmark cost for new configurations, a bookkeeping
-    /// epsilon for repeats.
+    /// (`None` for crashing configurations). Charges wall-clock: full
+    /// compile+benchmark cost for new configurations, a bookkeeping
+    /// epsilon for repeats. Never skips — budget discipline is the
+    /// caller's job on this path (check [`Self::budget_exhausted`]).
     pub fn evaluate(&mut self, i: u32) -> Option<f64> {
         self.eval_calls += 1;
         if let Some(&v) = self.seen.get(&i) {
             self.clock_s += CACHED_EVAL_COST_S;
             return v;
         }
-        self.clock_s += self.cache.eval_cost_s(i);
         self.unique_evals += 1;
-        // Observed value: mean over the benchmark repetitions.
-        let value = self.cache.true_mean_ms(i).map(|_| {
-            let mut sum = 0.0;
-            let base = self.unique_evals.wrapping_mul(RUNS_PER_EVAL as u64 + 1);
-            for r in 0..RUNS_PER_EVAL as u64 {
-                sum += self.cache.observe_ms(i, base + r).unwrap();
+        let value = self.backend.as_dyn().evaluate_one(i);
+        self.clock_s += self.backend.as_dyn_ref().eval_cost_s(i);
+        self.record(i, value);
+        value
+    }
+
+    /// Evaluate a batch of configurations in one backend call (the ask/tell
+    /// path). Per-config semantics match a sequential caller that checks
+    /// `budget_exhausted()` before each `evaluate`: repeats are charged the
+    /// bookkeeping epsilon, fresh configs full cost, and once the budget
+    /// (or call cap) is exhausted the remaining configs are skipped and
+    /// reported as `None` without being evaluated or charged. Within-batch
+    /// duplicates count as repeats of the first occurrence.
+    pub fn evaluate_batch(&mut self, configs: &[u32]) -> Vec<Option<f64>> {
+        self.batch_calls += 1;
+        self.largest_batch = self.largest_batch.max(configs.len());
+
+        // Backends whose costs are only estimates before evaluation
+        // (measured backends) are driven config-by-config with the actual
+        // clock re-checked between evaluations — a whole-batch plan at
+        // estimated costs could overrun the budget by the entire batch.
+        // (Measured evaluation is serialized behind the source store
+        // anyway, so nothing is lost by not handing it one big batch.)
+        if !self.backend.as_dyn_ref().cost_model_exact() {
+            return configs
+                .iter()
+                .map(|&i| if self.budget_exhausted() { None } else { self.evaluate(i) })
+                .collect();
+        }
+
+        // Plan: decide each config's step and the backend batch up front,
+        // with budget cuts projected from the exact per-config costs.
+        let mut steps: Vec<Step> = Vec::with_capacity(configs.len());
+        let mut to_eval: Vec<u32> = Vec::new();
+        let mut planned_clock = self.clock_s;
+        let mut planned_calls = self.eval_calls;
+        {
+            let backend = self.backend.as_dyn_ref();
+            let mut fresh: std::collections::HashSet<u32, FxBuildHasher> =
+                std::collections::HashSet::with_hasher(FxBuildHasher::default());
+            for &i in configs {
+                if planned_clock >= self.budget_s || planned_calls >= MAX_EVAL_CALLS {
+                    steps.push(Step::Skip);
+                    continue;
+                }
+                planned_calls += 1;
+                if self.seen.contains_key(&i) || fresh.contains(&i) {
+                    planned_clock += CACHED_EVAL_COST_S;
+                    steps.push(Step::Repeat);
+                } else {
+                    planned_clock += backend.eval_cost_s(i);
+                    fresh.insert(i);
+                    steps.push(Step::Fresh(to_eval.len()));
+                    to_eval.push(i);
+                }
             }
-            sum / RUNS_PER_EVAL as f64
-        });
+        }
+
+        let values = if to_eval.is_empty() {
+            Vec::new()
+        } else {
+            self.batched_evals += to_eval.len() as u64;
+            let values = self.backend.as_dyn().evaluate_batch(&to_eval);
+            assert_eq!(values.len(), to_eval.len(), "backend batch size mismatch");
+            values
+        };
+
+        // Commit: charge the clock and stamp the trajectory in submission
+        // order, exactly as sequential evaluation would have.
+        let mut out = Vec::with_capacity(configs.len());
+        for (&i, step) in configs.iter().zip(&steps) {
+            match *step {
+                Step::Skip => out.push(None),
+                Step::Repeat => {
+                    self.eval_calls += 1;
+                    self.clock_s += CACHED_EVAL_COST_S;
+                    let v = self
+                        .seen
+                        .get(&i)
+                        .copied()
+                        .expect("repeat step for a never-evaluated config");
+                    out.push(v);
+                }
+                Step::Fresh(slot) => {
+                    self.eval_calls += 1;
+                    self.unique_evals += 1;
+                    self.clock_s += self.backend.as_dyn_ref().eval_cost_s(i);
+                    let v = values[slot];
+                    self.record(i, v);
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Draw a distinct random sample of `k` configurations and evaluate it
+    /// as one batch — the population-init idiom shared by DE, ATGW and the
+    /// genome interpreter. Stream-preservation argument (stated once,
+    /// here): every RNG draw happens before the batch is submitted and
+    /// evaluation consumes no RNG, so this is bit-identical to the classic
+    /// draw-one-evaluate-one loop of a budget-checking caller; entries the
+    /// budget cut off come back as `None`, exactly where that caller would
+    /// have stopped.
+    pub fn evaluate_random_sample(&mut self, k: usize) -> Vec<(u32, Option<f64>)> {
+        let space = self.space_handle();
+        let sample = space.random_sample(&mut self.rng, k);
+        let values = self.evaluate_batch(&sample);
+        sample.into_iter().zip(values).collect()
+    }
+
+    /// Draw `k` independent random valid configurations (repeats possible)
+    /// and evaluate them as one batch — the restart/reinit twin of
+    /// [`Self::evaluate_random_sample`], same stream-preservation
+    /// argument.
+    pub fn evaluate_random_draws(&mut self, k: usize) -> Vec<(u32, Option<f64>)> {
+        let space = self.space_handle();
+        let draws: Vec<u32> = (0..k).map(|_| space.random_valid(&mut self.rng)).collect();
+        let values = self.evaluate_batch(&draws);
+        draws.into_iter().zip(values).collect()
+    }
+
+    /// Record a freshly evaluated config: dedup map + best/trajectory.
+    fn record(&mut self, i: u32, value: Option<f64>) {
         self.seen.insert(i, value);
         if let Some(v) = value {
             if v < self.best_ms {
@@ -90,7 +292,6 @@ impl<'a> TuningContext<'a> {
                 self.trajectory.push((self.clock_s, v));
             }
         }
-        value
     }
 
     /// True when the time budget (or the call-count safety cap) is spent.
@@ -130,6 +331,22 @@ impl<'a> TuningContext<'a> {
 
     pub fn eval_calls(&self) -> u64 {
         self.eval_calls
+    }
+
+    /// Number of [`Self::evaluate_batch`] submissions so far.
+    pub fn batch_calls(&self) -> u64 {
+        self.batch_calls
+    }
+
+    /// Fresh evaluations that reached the backend through the batch path.
+    pub fn batched_evals(&self) -> u64 {
+        self.batched_evals
+    }
+
+    /// Largest batch submitted so far (tests assert population optimizers
+    /// really send whole generations).
+    pub fn largest_batch(&self) -> usize {
+        self.largest_batch
     }
 
     /// Whether `i` has been evaluated already (tabu-style checks).
@@ -219,5 +436,61 @@ mod tests {
             (0..20u32).filter_map(|i| ctx.evaluate(i)).sum::<f64>()
         };
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_matches_sequential_exactly() {
+        let cache = ctx_cache();
+        // Mixed sequence with repeats and within-batch duplicates.
+        let configs: Vec<u32> = vec![5, 9, 5, 13, 9, 21, 5, 34];
+        let mut seq = TuningContext::new(&cache, 1e9, 11);
+        let seq_vals: Vec<Option<f64>> = configs.iter().map(|&i| seq.evaluate(i)).collect();
+        let mut bat = TuningContext::new(&cache, 1e9, 11);
+        let bat_vals = bat.evaluate_batch(&configs);
+        assert_eq!(seq_vals, bat_vals);
+        assert_eq!(seq.elapsed_s(), bat.elapsed_s());
+        assert_eq!(seq.trajectory, bat.trajectory);
+        assert_eq!(seq.unique_evals(), bat.unique_evals());
+        assert_eq!(seq.eval_calls(), bat.eval_calls());
+        assert_eq!(bat.batched_evals(), 5, "five distinct configs");
+        assert_eq!(bat.largest_batch(), configs.len());
+    }
+
+    #[test]
+    fn batch_cuts_at_budget_like_a_checking_caller() {
+        let cache = ctx_cache();
+        let configs: Vec<u32> = (0..200).collect();
+        // Sequential caller that checks the budget before each evaluation.
+        let mut seq = TuningContext::new(&cache, 25.0, 5);
+        let mut seq_vals = Vec::new();
+        for &i in &configs {
+            if seq.budget_exhausted() {
+                seq_vals.push(None);
+                continue;
+            }
+            seq_vals.push(seq.evaluate(i));
+        }
+        let mut bat = TuningContext::new(&cache, 25.0, 5);
+        let bat_vals = bat.evaluate_batch(&configs);
+        assert_eq!(seq_vals, bat_vals);
+        assert_eq!(seq.elapsed_s(), bat.elapsed_s());
+        assert_eq!(seq.trajectory, bat.trajectory);
+        assert!(bat.unique_evals() < 200, "budget must cut the batch");
+    }
+
+    #[test]
+    fn external_backend_drives_identically() {
+        let cache = ctx_cache();
+        let inline = {
+            let mut ctx = TuningContext::new(&cache, 1e9, 9);
+            (0..30u32).filter_map(|i| ctx.evaluate(i)).sum::<f64>()
+        };
+        let external = {
+            let mut backend = CachedBackend::new(&cache);
+            let mut ctx = TuningContext::with_backend(&mut backend, 1e9, 9);
+            assert_eq!(ctx.backend_id(), cache.id());
+            (0..30u32).filter_map(|i| ctx.evaluate(i)).sum::<f64>()
+        };
+        assert_eq!(inline, external);
     }
 }

@@ -1,8 +1,20 @@
-//! Tuning substrate: the pre-explored evaluation caches ("simulation mode")
-//! and the budgeted evaluation context handed to optimization algorithms.
+//! Tuning substrate: pluggable evaluation backends behind the budgeted
+//! evaluation context handed to optimization algorithms.
+//!
+//! - [`backend`]: the [`EvalBackend`] trait (batch evaluation + per-config
+//!   cost accounting + a space handle) and [`CachedBackend`], the
+//!   simulation-mode implementation over a pre-explored [`Cache`].
+//!   [`BackendSource`] mints per-run backends for the job graph.
+//! - [`cache`]: the pre-explored evaluation caches ("simulation mode").
+//! - [`evaluator`]: [`TuningContext`], the run-level layer (dedup, wall
+//!   clock, trajectory, budget) every optimizer runs against, with both
+//!   single-point (`evaluate`) and ask/tell batch (`evaluate_batch`)
+//!   submission paths.
 
+pub mod backend;
 pub mod cache;
 pub mod evaluator;
 
+pub use backend::{BackendSource, CachedBackend, EvalBackend};
 pub use cache::{build_all_caches, build_caches_for, Cache};
 pub use evaluator::TuningContext;

@@ -1,0 +1,136 @@
+//! Minimal error-context plumbing for the runtime layer.
+//!
+//! The offline build environment ships no registry, so the `anyhow` crate
+//! the measured path originally leaned on is unavailable; this module is a
+//! drop-in subset: a string-backed [`Error`], a [`Result`] alias, the
+//! [`Context`] extension trait for `Result`/`Option`, and the `bail!` /
+//! `format_err!` macros. Like the rest of `util`, it is dependency-free.
+
+use std::fmt;
+
+/// A chain-formatted error: the context message plus its source, rendered
+/// as `context: source` (one level is enough for the runtime layer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error(msg.to_string())
+    }
+
+    fn wrap(self, context: impl fmt::Display) -> Error {
+        Error(format!("{}: {}", context, self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style message attachment for fallible values.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(msg))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! format_err {
+    ($e:expr) => { $crate::util::error::Error::msg($e) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::util::error::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::format_err!($($arg)*)) };
+}
+
+pub use crate::{bail, format_err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("bad value {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        assert_eq!(fails().unwrap_err().to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("opening manifest").unwrap_err();
+        assert!(e.to_string().starts_with("opening manifest: "), "{}", e);
+        let o: Option<u32> = None;
+        assert_eq!(
+            o.with_context(|| format!("missing {}", "x")).unwrap_err().to_string(),
+            "missing x"
+        );
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/llamea-kt")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -1,8 +1,11 @@
-//! Shared utilities: PRNG, statistics, JSON/table rendering, property tests.
+//! Shared utilities: PRNG, statistics, JSON/table rendering, property tests,
+//! error-context plumbing.
 //!
-//! The offline build environment provides no `rand`, `serde`, `criterion` or
-//! `proptest`; these modules are small, tested substitutes (see DESIGN.md §3).
+//! The offline build environment provides no `rand`, `serde`, `criterion`,
+//! `proptest` or `anyhow`; these modules are small, tested substitutes (see
+//! DESIGN.md §3).
 
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;

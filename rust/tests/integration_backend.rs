@@ -1,0 +1,219 @@
+//! Integration: the pluggable evaluation-backend seam.
+//!
+//! - The cached backend must reproduce the *pre-redesign* evaluator
+//!   bit-for-bit (golden reference reimplemented here from the old
+//!   `TuningContext::evaluate`), submitted one-at-a-time or in batches.
+//! - Every registry optimizer must stay deterministic per seed, through
+//!   both its `run` path and (where supported) the generic ask/tell
+//!   driver.
+//! - Grid output must remain byte-identical across scheduler widths now
+//!   that population optimizers batch whole generations.
+//! - The measured backend must be lazy, memoized across jobs, and
+//!   drivable through the same job graph (fake runner; the PJRT-backed
+//!   smoke lives in integration_runtime.rs behind the `pjrt` feature).
+
+use std::collections::HashMap;
+
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::searchspace::Application;
+use llamea_kt::tuning::cache::RUNS_PER_EVAL;
+use llamea_kt::tuning::{Cache, TuningContext};
+
+fn conv_cache() -> Cache {
+    Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap())
+}
+
+/// The pre-redesign evaluator, verbatim: unique-ordinal-keyed observation
+/// noise, full cost for fresh configs, epsilon for repeats, trajectory
+/// stamped after the charge. Any drift between this and the new
+/// backend-based context is a regression against pre-redesign results.
+struct ReferenceEvaluator<'a> {
+    cache: &'a Cache,
+    clock_s: f64,
+    unique_evals: u64,
+    seen: HashMap<u32, Option<f64>>,
+    best_ms: f64,
+    trajectory: Vec<(f64, f64)>,
+}
+
+const CACHED_EVAL_COST_S: f64 = 0.05;
+
+impl<'a> ReferenceEvaluator<'a> {
+    fn new(cache: &'a Cache) -> Self {
+        ReferenceEvaluator {
+            cache,
+            clock_s: 0.0,
+            unique_evals: 0,
+            seen: HashMap::new(),
+            best_ms: f64::INFINITY,
+            trajectory: Vec::new(),
+        }
+    }
+
+    fn evaluate(&mut self, i: u32) -> Option<f64> {
+        if let Some(&v) = self.seen.get(&i) {
+            self.clock_s += CACHED_EVAL_COST_S;
+            return v;
+        }
+        self.clock_s += self.cache.eval_cost_s(i);
+        self.unique_evals += 1;
+        let value = self.cache.true_mean_ms(i).map(|_| {
+            let mut sum = 0.0;
+            let base = self.unique_evals.wrapping_mul(RUNS_PER_EVAL as u64 + 1);
+            for r in 0..RUNS_PER_EVAL as u64 {
+                sum += self.cache.observe_ms(i, base + r).unwrap();
+            }
+            sum / RUNS_PER_EVAL as f64
+        });
+        self.seen.insert(i, value);
+        if let Some(v) = value {
+            if v < self.best_ms {
+                self.best_ms = v;
+                self.trajectory.push((self.clock_s, v));
+            }
+        }
+        value
+    }
+}
+
+/// A mixed evaluation sequence with repeats, spread over the space.
+fn scripted_sequence(n: usize, len: u32) -> Vec<u32> {
+    let mut rng = llamea_kt::util::rng::Rng::new(0xBEEF);
+    (0..n)
+        .map(|k| {
+            if k % 5 == 4 {
+                // Revisit an earlier config (dedup path).
+                (k as u32 / 2) % len
+            } else {
+                rng.below(len as usize) as u32
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn cached_backend_matches_pre_redesign_golden_sequentially() {
+    let cache = conv_cache();
+    let seq = scripted_sequence(400, cache.len() as u32);
+    let mut reference = ReferenceEvaluator::new(&cache);
+    let mut ctx = TuningContext::new(&cache, 1e12, 7);
+    for &i in &seq {
+        assert_eq!(reference.evaluate(i), ctx.evaluate(i), "config {}", i);
+    }
+    assert_eq!(reference.clock_s, ctx.elapsed_s());
+    assert_eq!(reference.unique_evals, ctx.unique_evals());
+    assert_eq!(reference.trajectory, ctx.trajectory);
+}
+
+#[test]
+fn cached_backend_matches_pre_redesign_golden_in_batches() {
+    let cache = conv_cache();
+    let seq = scripted_sequence(400, cache.len() as u32);
+    let mut reference = ReferenceEvaluator::new(&cache);
+    let ref_vals: Vec<Option<f64>> = seq.iter().map(|&i| reference.evaluate(i)).collect();
+
+    // Same sequence, chunked into uneven batches.
+    let mut ctx = TuningContext::new(&cache, 1e12, 7);
+    let mut got: Vec<Option<f64>> = Vec::new();
+    for chunk in seq.chunks(23) {
+        got.extend(ctx.evaluate_batch(chunk));
+    }
+    assert_eq!(ref_vals, got);
+    assert_eq!(reference.clock_s, ctx.elapsed_s());
+    assert_eq!(reference.trajectory, ctx.trajectory);
+}
+
+#[test]
+fn every_registry_optimizer_is_seed_deterministic() {
+    let cache = conv_cache();
+    for name in llamea_kt::optimizers::all_names() {
+        let run = |seed: u64| {
+            let mut opt = llamea_kt::optimizers::by_name(name).unwrap();
+            let mut ctx = TuningContext::new(&cache, 250.0, seed);
+            opt.run(&mut ctx);
+            (ctx.trajectory.clone(), ctx.unique_evals(), ctx.eval_calls())
+        };
+        assert_eq!(run(11), run(11), "{} diverged for equal seeds", name);
+        assert_ne!(run(11).0, run(12).0, "{} ignored its seed", name);
+    }
+}
+
+#[test]
+fn ask_tell_driver_is_deterministic_where_supported() {
+    let cache = conv_cache();
+    let mut supported = 0;
+    for name in llamea_kt::optimizers::all_names() {
+        let run = |seed: u64| {
+            let mut opt = llamea_kt::optimizers::by_name(name).unwrap();
+            let mut ctx = TuningContext::new(&cache, 200.0, seed);
+            let batched = llamea_kt::optimizers::run_ask_tell(opt.as_mut(), &mut ctx);
+            (batched, ctx.trajectory.clone(), ctx.batched_evals())
+        };
+        let (batched, trajectory, batched_evals) = run(21);
+        if !batched {
+            continue;
+        }
+        supported += 1;
+        assert!(!trajectory.is_empty(), "{} found nothing via ask/tell", name);
+        assert!(batched_evals > 0, "{} never used the batch path", name);
+        assert_eq!(run(21), (batched, trajectory, batched_evals), "{} nondeterministic", name);
+    }
+    // random, ga, de, pso at minimum.
+    assert!(supported >= 4, "only {} optimizers support ask/tell", supported);
+}
+
+#[test]
+fn grid_output_identical_across_widths_with_batching_optimizers() {
+    use llamea_kt::coordinator::{grid_jobs, CacheKey, CacheRegistry, Scheduler};
+    use llamea_kt::methodology::OptimizerFactory;
+    use llamea_kt::optimizers::OptimizerSpec;
+    let reg = CacheRegistry::new();
+    let entries = vec![reg.entry(CacheKey::parse("convolution@A4000").unwrap())];
+    // The batch-native and init-batching optimizers specifically.
+    let owned: Vec<(String, OptimizerSpec)> = ["ga", "de", "pso"]
+        .iter()
+        .map(|n| (n.to_string(), OptimizerSpec::named(*n)))
+        .collect();
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        owned.iter().map(|(l, s)| (l.clone(), s as &dyn OptimizerFactory)).collect();
+    let jobs = grid_jobs(&entries, &factories, 3, 4242);
+    let narrow = Scheduler::new(1).run(&jobs);
+    let wide = Scheduler::new(8).run(&jobs);
+    assert_eq!(narrow, wide, "thread width changed batched-optimizer results");
+}
+
+// ---------------------------------------------------------- measured seam
+
+mod measured {
+    use llamea_kt::methodology::{run_many, NamedFactory, SpaceSetup};
+    use llamea_kt::runtime::measured::NOMINAL_EVAL_COST_S;
+    use llamea_kt::runtime::measured_testing::{gemm_grid, FakeRunner};
+    use llamea_kt::runtime::MeasuredSource;
+    use llamea_kt::tuning::BackendSource;
+
+    #[test]
+    fn measured_source_drives_the_job_graph_and_measures_once() {
+        // 3x2 grid, fully covered: 6 variants.
+        let set = gemm_grid(&[32, 64, 128], &[32, 64]);
+        let runner = FakeRunner::default();
+        let source = MeasuredSource::new(&runner, &set, "gemm", 1, 3, 5).unwrap();
+        let setup = SpaceSetup::uncalibrated(120.0, NOMINAL_EVAL_COST_S);
+        // Many seeds, two optimizer families, one shared measurement store.
+        let curves = run_many(&source, &setup, &NamedFactory("random".into()), 4, 99);
+        assert_eq!(curves.len(), 4);
+        assert!(curves.iter().all(|c| c.len() == setup.times.len()));
+        let after_random = runner.calls();
+        assert!(after_random <= 6, "at most one compile per variant, got {}", after_random);
+        assert!(after_random > 0);
+        // A second grid over the same source re-measures nothing.
+        run_many(&source, &setup, &NamedFactory("ga".into()), 3, 7);
+        assert_eq!(
+            runner.calls(),
+            after_random,
+            "second optimizer grid must reuse the measurement store"
+        );
+        assert_eq!(source.space_id(), "gemm-measured");
+        assert!(source.errors().is_empty());
+        assert!(!source.results().is_empty());
+    }
+}

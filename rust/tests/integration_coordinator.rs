@@ -99,7 +99,7 @@ fn global_registry_is_shared_across_harness_calls() {
         gen_runs: 1,
         llm_calls: 4,
         seed: 3,
-        threads: None,
+        ..Default::default()
     };
     let owned = test_factories(&["random"]);
     let factories = as_refs(&owned);

@@ -109,6 +109,30 @@ fn measured_cache_over_dedispersion_variants() {
     assert!(setup.budget_s > 0.0);
 }
 
+/// MeasuredBackend smoke over the real PJRT runtime: lazy, memoized,
+/// optimizer-driven measurement. Gated behind the `pjrt` feature (plus
+/// the artifacts directory) — stub builds have no executing runtime.
+#[cfg(feature = "pjrt")]
+#[test]
+fn measured_backend_lazy_tuning_smoke() {
+    use llamea_kt::runtime::MeasuredSource;
+    use llamea_kt::tuning::{BackendSource, TuningContext};
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let set = ArtifactSet::load(&dir).unwrap();
+    let runtime = PjrtRuntime::new().unwrap();
+    let source = MeasuredSource::new(&runtime, &set, "dedispersion", 1, 3, 11).unwrap();
+    let mut backend = source.backend();
+    let mut ctx = TuningContext::with_backend(backend.as_mut(), 30.0, 5);
+    let mut opt = llamea_kt::optimizers::by_name("random").unwrap();
+    opt.run(&mut ctx);
+    assert!(ctx.best().is_some(), "lazy tuning found no runnable variant");
+    assert!(source.measured_count() > 0);
+    assert!(source.measured_count() as u64 >= ctx.unique_evals() / 2);
+}
+
 #[test]
 fn variant_space_covers_all_artifacts() {
     let Some(dir) = artifacts_dir() else {
