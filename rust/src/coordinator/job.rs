@@ -22,7 +22,7 @@ use std::sync::Arc;
 use super::registry::SpaceEntry;
 use crate::methodology::{runner::single_run, OptimizerFactory, SpaceSetup};
 use crate::tuning::BackendSource;
-use crate::util::rng::fnv1a;
+use crate::util::rng::{avalanche, fnv1a};
 
 /// One seeded tuning run against an evaluation-backend source.
 pub struct TuningJob<'a> {
@@ -58,9 +58,7 @@ pub fn job_seed(base: u64, space_id: &str, opt_label: &str, run: u64) -> u64 {
     h = h.wrapping_mul(0x100000001B3) ^ fnv1a(space_id.as_bytes());
     h = h.wrapping_mul(0x100000001B3) ^ fnv1a(opt_label.as_bytes());
     h = h.wrapping_mul(0x100000001B3) ^ run;
-    h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
-    h ^ (h >> 31)
+    avalanche(h)
 }
 
 /// Expand the (optimizer × space × seed) cross product into a flat job

@@ -39,5 +39,5 @@ pub mod scheduler;
 
 pub use job::{grid_jobs, job_seed, source_jobs, TuningJob};
 pub use registry::{CacheKey, CacheRegistry, SpaceEntry};
-pub use report::{collate, grid_aggregates, score_table};
+pub use report::{collate, grid_aggregates, score_table, scores_json};
 pub use scheduler::Scheduler;

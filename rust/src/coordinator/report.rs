@@ -3,6 +3,7 @@
 
 use super::job::TuningJob;
 use crate::methodology::{aggregate, Aggregate};
+use crate::util::json::Json;
 use crate::util::table::{f, Table};
 
 /// Regroup a flat batch result by each job's `group` index. Job order is
@@ -46,6 +47,28 @@ pub fn score_table(title: &str, results: &[(String, Aggregate)]) -> Table {
     t
 }
 
+/// The score table as JSON (the `coordinate --out` payload): per-optimizer
+/// aggregate score, std over spaces, and per-space scores keyed by the
+/// space ids. Every field is a pure function of the grid inputs, so files
+/// are byte-identical for any scheduler width; written through
+/// [`crate::util::json::write_file`], shared with `sweep --out`.
+pub fn scores_json(title: &str, space_ids: &[String], results: &[(String, Aggregate)]) -> Json {
+    let mut j = Json::obj();
+    j.set("title", title);
+    j.set("spaces", Json::Arr(space_ids.iter().map(|s| Json::from(s.as_str())).collect()));
+    let mut rows: Vec<Json> = Vec::with_capacity(results.len());
+    for (label, agg) in results {
+        let mut row = Json::obj();
+        row.set("optimizer", label.as_str());
+        row.set("score", agg.score);
+        row.set("score_std", agg.score_std);
+        row.set("per_space", agg.per_space_scores.clone());
+        rows.push(row);
+    }
+    j.set("scores", Json::Arr(rows));
+    j
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +102,10 @@ mod tests {
         assert!(results.iter().all(|(_, a)| a.score.is_finite()));
         let table = score_table("test", &results);
         assert!(table.to_text().contains("random"));
+        // The JSON view carries the same labels and scores.
+        let ids = vec!["convolution@A4000".to_string()];
+        let json = scores_json("test", &ids, &results).to_string();
+        assert!(json.contains("\"optimizer\":\"random\""), "{}", json);
+        assert!(json.contains("\"spaces\":[\"convolution@A4000\"]"), "{}", json);
     }
 }

@@ -1,4 +1,13 @@
 //! Experiment harness regenerating the paper's tables and figures.
+//!
+//! Every stage is a job batch against the global
+//! [`CacheRegistry`](crate::coordinator::CacheRegistry): the evaluation
+//! grids expand through `grid_jobs`, and the generation stage's candidate
+//! fitness now batches each LLaMEA generation through the scheduler as
+//! one flat job list across the training caches
+//! ([`fitness_batch`](crate::llamea::evolution::fitness_batch)).
+//! Hyperparameter sweeps over the same registry live in
+//! `crate::hypertune` (the `sweep` subcommand).
 
 pub mod experiments;
 

@@ -1,0 +1,408 @@
+//! The meta evaluation backend: one meta-configuration costs a grid of
+//! seeded tuning runs.
+//!
+//! [`MetaTuning`] is the shared setup of one sweep — base spec, inner
+//! `(application, GPU)` spaces, seeds-per-evaluation, base seed — plus a
+//! memo store of already-collapsed scores. It implements
+//! [`BackendSource`], minting [`MetaBackend`]s that implement
+//! [`EvalBackend`] over the meta search space, so a plain
+//! [`TuningContext`](crate::tuning::TuningContext) — and therefore any
+//! registry optimizer — can drive the sweep.
+//!
+//! ## Determinism contract
+//!
+//! Evaluating meta-configuration `o` expands the base spec with `o`'s
+//! decoded overrides and submits one flat `runs × spaces` batch of
+//! [`TuningJob`]s through the shared [`Scheduler`] — the nested fan-out
+//! path. Inner seeds derive from [`meta_seed`]`(base, o)` and the job's
+//! grid coordinates, **never** from execution order or worker identity,
+//! so sweep output is byte-identical for any `--threads` width.
+//! `meta_seed(base, 0) == base` (the SplitMix64 finalizer fixes zero),
+//! which pins the golden equivalence: a grid-of-one sweep issues exactly
+//! the jobs `coordinate` would issue for the same spec, seed and spaces.
+//!
+//! ## Cost accounting
+//!
+//! One meta-evaluation's [`EvalBackend::eval_cost_s`] is the real
+//! (simulated) tuning budget it consumes — `runs × Σ` inner space budgets
+//! — so meta-budgets are honest: a meta-optimizer given a budget of `k`
+//! meta-evaluations' worth of seconds performs `k` fresh evaluations.
+//! Per-run curves are memoized per ordinal: revisits never recompute, and
+//! a successive-halving rung escalation runs only the *new* seed indices,
+//! reusing every lower-rung curve (seeds are per-run-index, so a prefix
+//! of the stored curves is bit-identical to a fresh lower-rung grid).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::space::{decode, meta_space};
+use crate::coordinator::{collate, job_seed, Scheduler, SpaceEntry, TuningJob};
+use crate::methodology::{aggregate, OptimizerFactory};
+use crate::optimizers::OptimizerSpec;
+use crate::searchspace::SearchSpace;
+use crate::tuning::{BackendSource, EvalBackend};
+use crate::util::rng::avalanche;
+
+/// Base seed of one meta-configuration's inner tuning grid: the sweep seed
+/// decorrelated by the meta-config *ordinal* (never by execution order).
+/// `avalanche(0) == 0`, so ordinal 0 inherits the sweep seed unchanged —
+/// the grid-of-one ≡ `coordinate` equivalence relies on this fixed point.
+pub fn meta_seed(base: u64, ordinal: u64) -> u64 {
+    base ^ avalanche(ordinal)
+}
+
+/// The collapsed outcome of one meta-evaluation: the aggregate performance
+/// score P over the inner spaces, plus the per-space scalar scores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetaScore {
+    pub score: f64,
+    pub per_space: Vec<f64>,
+}
+
+/// One leaderboard entry of a sweep (see [`MetaTuning::leaderboard`]).
+#[derive(Debug, Clone)]
+pub struct MetaResult {
+    /// Index into the meta search space.
+    pub ordinal: u32,
+    /// The fully-expanded spec (base + decoded overrides).
+    pub spec: OptimizerSpec,
+    /// The decoded overrides alone, in domain order.
+    pub overrides: Vec<(String, f64)>,
+    /// Seeds this entry was (last) evaluated with — its highest rung.
+    pub runs: usize,
+    /// Aggregate score P at that run count (higher is better).
+    pub score: f64,
+    /// Per-space scalar scores, in sweep space order.
+    pub per_space: Vec<f64>,
+}
+
+/// Shared setup and memo store of one hyperparameter sweep.
+pub struct MetaTuning {
+    base: OptimizerSpec,
+    entries: Vec<Arc<SpaceEntry>>,
+    runs: usize,
+    seed: u64,
+    threads: Option<usize>,
+    space: Arc<SearchSpace>,
+    /// Per-ordinal memo: `store[o][si]` holds the curves of space `si`'s
+    /// runs 0..k, grown monotonically as rungs escalate.
+    store: Mutex<HashMap<u32, Vec<Vec<Vec<f64>>>>>,
+    hits: AtomicUsize,
+    fresh: AtomicUsize,
+}
+
+impl MetaTuning {
+    /// Set up a sweep of `base`'s unpinned hyperparameters over `entries`,
+    /// collapsing each meta-evaluation from `runs` seeds per space.
+    /// Overrides already on `base` pin their keys (excluded from the meta
+    /// space, applied to every expanded spec). Genome specs carry their
+    /// parameters inside the genome and cannot be swept.
+    pub fn new(
+        base: OptimizerSpec,
+        entries: Vec<Arc<SpaceEntry>>,
+        runs: usize,
+        seed: u64,
+        threads: Option<usize>,
+    ) -> Result<MetaTuning, String> {
+        let OptimizerSpec::Named { overrides, .. } = &base else {
+            return Err("genome specs have no hyperparameter domains to sweep".into());
+        };
+        if entries.is_empty() {
+            return Err("sweep needs at least one (application, GPU) space".into());
+        }
+        let pinned: Vec<String> = overrides.iter().map(|(k, _)| k.clone()).collect();
+        let domains = base.build().hyperparam_domains();
+        let space = Arc::new(meta_space(&base.label(), domains, &pinned));
+        Ok(MetaTuning {
+            base,
+            entries,
+            runs: runs.max(1),
+            seed,
+            threads,
+            space,
+            store: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            fresh: AtomicUsize::new(0),
+        })
+    }
+
+    /// The meta search space under sweep.
+    pub fn space(&self) -> &Arc<SearchSpace> {
+        &self.space
+    }
+
+    /// The base spec (pinned overrides included).
+    pub fn base(&self) -> &OptimizerSpec {
+        &self.base
+    }
+
+    /// Seeds per meta-evaluation at full strength (the final SHA rung).
+    pub fn runs(&self) -> usize {
+        self.runs
+    }
+
+    /// Inner space identifiers, in sweep order.
+    pub fn space_ids(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.cache.id()).collect()
+    }
+
+    /// The fully-expanded spec of meta-configuration `ordinal`.
+    pub fn spec_for(&self, ordinal: u32) -> OptimizerSpec {
+        let mut spec = self.base.clone();
+        for (k, v) in decode(&self.space, ordinal) {
+            spec = spec.try_with_override(k, v).expect("named base spec takes overrides");
+        }
+        spec
+    }
+
+    /// Real (simulated) tuning budget one full-strength meta-evaluation
+    /// consumes: `runs × Σ` inner space budgets.
+    pub fn meta_eval_cost_s(&self) -> f64 {
+        self.runs as f64 * self.entries.iter().map(|e| e.setup.budget_s).sum::<f64>()
+    }
+
+    /// Memo hits so far: queries answered entirely from stored curves —
+    /// meta-optimizer revisits and lower-rung re-queries recompute
+    /// nothing.
+    pub fn memo_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Fresh meta-evaluations so far — grid expansions that actually ran
+    /// tuning jobs (a rung escalation that only adds seed indices counts
+    /// once; memo hits do not count).
+    pub fn evaluations(&self) -> usize {
+        self.fresh.load(Ordering::Relaxed)
+    }
+
+    /// Score of one ordinal from the first `runs` stored curves per space.
+    fn score_prefix(stored: &[Vec<Vec<f64>>], runs: usize) -> MetaScore {
+        let per_space: Vec<Vec<Vec<f64>>> =
+            stored.iter().map(|rs| rs[..runs.min(rs.len())].to_vec()).collect();
+        let agg = aggregate(&per_space);
+        MetaScore { score: agg.score, per_space: agg.per_space_scores }
+    }
+
+    /// Evaluate meta-configurations at `runs` seeds each; returns one
+    /// [`MetaScore`] per ordinal, in input order. Ordinals whose stored
+    /// curves don't yet cover `runs` expand into one flat
+    /// `ordinals × spaces × missing-seeds` job batch drained by a single
+    /// scheduler pool — the nested fan-out under a meta-optimizer's own
+    /// `evaluate_batch`. Already-stored runs are never re-executed:
+    /// per-job seeds depend only on the run index, so the stored prefix
+    /// is bit-identical to a fresh lower-rung grid.
+    pub fn evaluate_all(&self, ordinals: &[u32], runs: usize) -> Vec<MetaScore> {
+        let runs = runs.max(1);
+        // (ordinal, runs already stored) pairs that need more seeds.
+        let mut missing: Vec<(u32, usize)> = Vec::new();
+        {
+            let store = self.store.lock().unwrap();
+            let mut queued: HashSet<u32> = HashSet::new();
+            for &o in ordinals {
+                let have = store.get(&o).map(|s| s[0].len()).unwrap_or(0);
+                if have >= runs {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else if queued.insert(o) {
+                    missing.push((o, have));
+                }
+            }
+        }
+        if !missing.is_empty() {
+            self.fresh.fetch_add(missing.len(), Ordering::Relaxed);
+            let specs: Vec<OptimizerSpec> =
+                missing.iter().map(|&(o, _)| self.spec_for(o)).collect();
+            let mut jobs: Vec<TuningJob> = Vec::new();
+            for (mi, (&(o, have), spec)) in missing.iter().zip(&specs).enumerate() {
+                let base_seed = meta_seed(self.seed, o as u64);
+                let label = spec.label();
+                for (si, e) in self.entries.iter().enumerate() {
+                    let space_id = e.cache.id();
+                    for r in have..runs {
+                        jobs.push(TuningJob {
+                            source: &e.cache,
+                            setup: &e.setup,
+                            factory: spec as &dyn OptimizerFactory,
+                            seed: job_seed(base_seed, &space_id, &label, r as u64),
+                            group: mi * self.entries.len() + si,
+                        });
+                    }
+                }
+            }
+            let curves = Scheduler::with_threads(self.threads).run(&jobs);
+            let grouped = collate(missing.len() * self.entries.len(), &jobs, curves);
+            let mut it = grouped.into_iter();
+            let mut store = self.store.lock().unwrap();
+            for &(o, have) in &missing {
+                let stored = store
+                    .entry(o)
+                    .or_insert_with(|| vec![Vec::new(); self.entries.len()]);
+                for space_runs in stored.iter_mut() {
+                    // Each computed curve belongs at run index `have + j`.
+                    // Append only at exactly the next free slot: a racing
+                    // caller may have stored some of these runs already
+                    // (bit-identical — seeds are per-run-index), and blind
+                    // appends would file curves under the wrong index.
+                    for (j, curve) in
+                        it.next().expect("collate group per (ordinal, space)").into_iter().enumerate()
+                    {
+                        if have + j == space_runs.len() {
+                            space_runs.push(curve);
+                        }
+                    }
+                }
+            }
+        }
+        let store = self.store.lock().unwrap();
+        ordinals.iter().map(|&o| Self::score_prefix(&store[&o], runs)).collect()
+    }
+
+    /// Everything evaluated so far, each ordinal at its highest run count,
+    /// ranked by score (descending; ties broken by ascending ordinal, so
+    /// the ranking is a pure function of the evaluated set).
+    pub fn leaderboard(&self) -> Vec<MetaResult> {
+        let store = self.store.lock().unwrap();
+        let mut out: Vec<MetaResult> = store
+            .iter()
+            .map(|(&o, stored)| {
+                let runs = stored[0].len();
+                let s = Self::score_prefix(stored, runs);
+                MetaResult {
+                    ordinal: o,
+                    spec: self.spec_for(o),
+                    overrides: decode(&self.space, o),
+                    runs,
+                    score: s.score,
+                    per_space: s.per_space,
+                }
+            })
+            .collect();
+        drop(store);
+        out.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.ordinal.cmp(&b.ordinal)));
+        out
+    }
+}
+
+/// Per-meta-run view of a [`MetaTuning`]: an [`EvalBackend`] over the meta
+/// search space whose objective is **−P** (the tuning context minimizes;
+/// the leaderboard reports the positive score).
+pub struct MetaBackend<'a> {
+    inner: &'a MetaTuning,
+}
+
+impl EvalBackend for MetaBackend<'_> {
+    fn space(&self) -> &Arc<SearchSpace> {
+        self.inner.space()
+    }
+
+    fn id(&self) -> String {
+        self.inner.space.name.clone()
+    }
+
+    fn eval_cost_s(&self, _i: u32) -> f64 {
+        self.inner.meta_eval_cost_s()
+    }
+
+    fn evaluate_batch(&mut self, configs: &[u32]) -> Vec<Option<f64>> {
+        self.inner
+            .evaluate_all(configs, self.inner.runs)
+            .into_iter()
+            .map(|s| Some(-s.score))
+            .collect()
+    }
+}
+
+impl BackendSource for MetaTuning {
+    fn backend(&self) -> Box<dyn EvalBackend + '_> {
+        Box::new(MetaBackend { inner: self })
+    }
+
+    fn space_id(&self) -> String {
+        self.space.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CacheKey, CacheRegistry};
+
+    fn tiny() -> MetaTuning {
+        let reg = CacheRegistry::global();
+        let entries = vec![reg.entry(CacheKey::parse("convolution@A4000").unwrap())];
+        // Pin everything but `elites`: a 4-point meta space keeps the
+        // tests fast.
+        let base = OptimizerSpec::parse(
+            "ga:population_size=8,tournament_k=2,crossover_rate=0.8,mutation_rate_factor=0.8",
+        )
+        .unwrap();
+        MetaTuning::new(base, entries, 2, 7, Some(2)).unwrap()
+    }
+
+    #[test]
+    fn ordinal_zero_inherits_the_sweep_seed() {
+        assert_eq!(meta_seed(42, 0), 42);
+        assert_ne!(meta_seed(42, 1), 42);
+        assert_ne!(meta_seed(42, 1), meta_seed(42, 2));
+    }
+
+    #[test]
+    fn meta_evaluations_are_memoized_and_deterministic() {
+        let mt = tiny();
+        assert_eq!(mt.space().len(), 4);
+        let a = mt.evaluate_all(&[0, 1, 2, 3], 2);
+        assert_eq!(mt.memo_hits(), 0);
+        assert_eq!(mt.evaluations(), 4);
+        let b = mt.evaluate_all(&[0, 1, 2, 3], 2);
+        assert_eq!(a, b);
+        assert_eq!(mt.memo_hits(), 4, "second pass must hit the memo");
+        // A lower run count is answered from the stored curve prefix...
+        let c = mt.evaluate_all(&[0], 1);
+        assert_eq!(mt.memo_hits(), 5);
+        assert_eq!(mt.evaluations(), 4, "prefix queries run no jobs");
+        // ...and equals a from-scratch lower-rung computation bit-for-bit.
+        assert_eq!(c[0], tiny().evaluate_all(&[0], 1)[0]);
+        // Rung escalation appends only the new seed indices (one more
+        // expansion, not a redo) and still equals a from-scratch grid.
+        let d = mt.evaluate_all(&[0], 3);
+        assert_eq!(mt.evaluations(), 5);
+        assert_eq!(d[0], tiny().evaluate_all(&[0], 3)[0]);
+        // The leaderboard keeps each ordinal at its highest run count.
+        let lb = mt.leaderboard();
+        assert_eq!(lb.len(), 4);
+        assert_eq!(lb.iter().find(|r| r.ordinal == 0).unwrap().runs, 3);
+        assert!(lb.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+
+    #[test]
+    fn backend_objective_is_negated_score() {
+        let mt = tiny();
+        let direct = mt.evaluate_all(&[1], mt.runs())[0].score;
+        let mut backend = mt.backend();
+        let via_backend = backend.evaluate_one(1).unwrap();
+        assert_eq!(via_backend, -direct);
+        assert!(backend.eval_cost_s(0) > 0.0);
+        assert_eq!(mt.space_id(), "hypertune:ga");
+    }
+
+    #[test]
+    fn expanded_specs_carry_pins_and_decoded_overrides() {
+        let mt = tiny();
+        let spec = mt.spec_for(0);
+        let shown = spec.to_string();
+        assert!(shown.starts_with("ga:population_size=8"), "{}", shown);
+        assert!(shown.contains("elites="), "{}", shown);
+        // The expanded spec must itself be valid configuration.
+        let _ = spec.build();
+    }
+
+    #[test]
+    fn genome_bases_are_rejected() {
+        let reg = CacheRegistry::global();
+        let entries = vec![reg.entry(CacheKey::parse("convolution@A4000").unwrap())];
+        let g = OptimizerSpec::genome(crate::llamea::Genome::hybrid_vndx_like());
+        assert!(MetaTuning::new(g, entries.clone(), 2, 1, None).is_err());
+        let ok = OptimizerSpec::named("sa");
+        assert!(MetaTuning::new(ok, Vec::new(), 2, 1, None).is_err(), "no spaces");
+    }
+}

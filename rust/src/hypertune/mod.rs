@@ -1,0 +1,43 @@
+//! Hypertune: meta-tuning — the repo's optimizers tuning the repo's
+//! optimizers through their own machinery.
+//!
+//! The source paper hand-tunes GA/SA hyperparameters for seven days of
+//! compute before comparing against its generated optimizers; its
+//! companion work ("Tuning the Tuner", Willemsen et al. 2025) argues that
+//! optimizer hyperparameters are themselves a tuning problem. This module
+//! closes the loop with the two seams PRs 1–2 built:
+//!
+//! - a hyperparameter configuration is a point in an ordinary
+//!   [`SearchSpace`](crate::searchspace::SearchSpace) built from the
+//!   typed [`HyperParamDomain`](crate::optimizers::HyperParamDomain)s
+//!   every registry optimizer declares ([`space`]);
+//! - the cost of that point is the aggregate methodology score of a grid
+//!   of seeded tuning runs, submitted as one flat [`TuningJob`] batch
+//!   through the shared scheduler and collapsed by
+//!   [`aggregate`](crate::methodology::aggregate) ([`backend`]);
+//! - meta-search is exhaustive grid, seeded random, successive halving
+//!   with seeds-per-rung escalation, or *any registry optimizer* driving
+//!   a plain `TuningContext` over the [`MetaBackend`] ([`strategy`]).
+//!
+//! ## Determinism contract
+//!
+//! Sweep output — leaderboard, rung trace, and the `sweep --out` JSON —
+//! is byte-identical for any scheduler width. Inner tuning seeds derive
+//! from [`meta_seed`] (sweep seed × meta-config *ordinal*) and the job's
+//! grid coordinates, never from execution order; ranking ties break by
+//! ordinal; and [`meta_seed`]`(s, 0) == s`, so a grid-of-one sweep (every
+//! key pinned on the base spec) issues bit-for-bit the jobs `coordinate`
+//! issues for the same spec. All three properties are pinned by
+//! `rust/tests/integration_hypertune.rs`.
+//!
+//! [`TuningJob`]: crate::coordinator::TuningJob
+
+pub mod backend;
+pub mod space;
+pub mod strategy;
+
+pub use backend::{meta_seed, MetaBackend, MetaResult, MetaScore, MetaTuning};
+pub use space::{decode, meta_space};
+pub use strategy::{
+    leaderboard_table, successive_halving, sweep, sweep_json, MetaStrategy, Rung, SweepOutcome,
+};

@@ -1,0 +1,100 @@
+//! Meta search spaces: hyperparameter domains as an ordinary
+//! [`SearchSpace`].
+//!
+//! A hyperparameter configuration is a point in a small constraint-free
+//! space whose dimensions are the optimizer's [`HyperParamDomain`]s, built
+//! through the same [`SearchSpace`] machinery the kernel spaces use — so
+//! every registry optimizer (neighbors, repair, random sampling all
+//! included) can search it unchanged.
+//!
+//! Keys already overridden on the base [`OptimizerSpec`] are *pinned*:
+//! they are excluded from the meta space and carried verbatim on every
+//! expanded spec, which is how a sweep is narrowed to a subset of knobs —
+//! and how a grid-of-one (everything pinned) degenerates to exactly one
+//! meta-configuration, the seam the golden `coordinate`-equivalence test
+//! exercises.
+//!
+//! [`OptimizerSpec`]: crate::optimizers::OptimizerSpec
+
+use crate::optimizers::HyperParamDomain;
+use crate::searchspace::{Param, ParamSet, SearchSpace};
+
+/// Dimension name of the sentinel parameter used when no unpinned domains
+/// remain (all keys pinned, or a knob-less optimizer): the meta space then
+/// holds exactly one configuration, and [`decode`] skips this dimension.
+pub const SENTINEL: &str = "__defaults__";
+
+/// Build the meta search space of one optimizer: one float dimension per
+/// unpinned hyperparameter domain, no constraints, named
+/// `hypertune:<label>`.
+pub fn meta_space(label: &str, domains: &[HyperParamDomain], pinned: &[String]) -> SearchSpace {
+    let mut params: Vec<Param> = domains
+        .iter()
+        .filter(|d| !pinned.iter().any(|p| p == d.key))
+        .map(|d| Param::floats(d.key, d.values))
+        .collect();
+    if params.is_empty() {
+        params.push(Param::fixed(SENTINEL, 0));
+    }
+    SearchSpace::build_parsed(&format!("hypertune:{}", label), ParamSet::new(params), Vec::new())
+}
+
+/// Decode meta configuration `i` into `(key, value)` hyperparameter
+/// overrides, in dimension (= declaration) order.
+pub fn decode(space: &SearchSpace, i: u32) -> Vec<(String, f64)> {
+    space
+        .config(i)
+        .iter()
+        .enumerate()
+        .filter(|(d, _)| space.params.params[*d].name != SENTINEL)
+        .map(|(d, &vi)| (space.params.params[d].name.clone(), space.params.value_f64(d, vi)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::by_name;
+
+    #[test]
+    fn meta_space_is_the_domain_product() {
+        let ga = by_name("ga").unwrap();
+        let domains = ga.hyperparam_domains();
+        let space = meta_space("ga", domains, &[]);
+        let expected: usize = domains.iter().map(|d| d.values.len()).product();
+        assert_eq!(space.len(), expected);
+        assert_eq!(space.dims(), domains.len());
+        assert_eq!(space.name, "hypertune:ga");
+        // Every config decodes to one override per dimension, with values
+        // drawn from the declared domains.
+        let overrides = decode(&space, 0);
+        assert_eq!(overrides.len(), domains.len());
+        for ((k, v), d) in overrides.iter().zip(domains) {
+            assert_eq!(k, d.key);
+            assert!(d.contains(*v));
+        }
+    }
+
+    #[test]
+    fn pinning_removes_dimensions() {
+        let ga = by_name("ga").unwrap();
+        let domains = ga.hyperparam_domains();
+        let space = meta_space("ga", domains, &["population_size".to_string()]);
+        assert_eq!(space.dims(), domains.len() - 1);
+        assert!(decode(&space, 0).iter().all(|(k, _)| k != "population_size"));
+    }
+
+    #[test]
+    fn fully_pinned_space_is_a_single_config() {
+        let ga = by_name("ga").unwrap();
+        let pinned: Vec<String> =
+            ga.hyperparam_domains().iter().map(|d| d.key.to_string()).collect();
+        let space = meta_space("ga", ga.hyperparam_domains(), &pinned);
+        assert_eq!(space.len(), 1);
+        assert!(decode(&space, 0).is_empty(), "sentinel must not decode");
+        // A knob-less optimizer degenerates the same way.
+        let none = meta_space("random", &[], &[]);
+        assert_eq!(none.len(), 1);
+        assert!(decode(&none, 0).is_empty());
+    }
+}

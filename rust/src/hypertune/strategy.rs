@@ -1,0 +1,254 @@
+//! Meta-search strategies over a [`MetaTuning`] setup.
+//!
+//! Four families, all driving the same memoized meta-evaluation seam:
+//!
+//! - **Grid**: every meta-configuration at full seed strength.
+//! - **Random**: a seeded distinct sample of the meta space.
+//! - **Successive halving**: rungs of escalating seeds-per-evaluation; the
+//!   top `1/eta` of each rung (ranked by score, ties by ordinal) advances
+//!   until a single survivor is scored at full strength. Candidates are
+//!   canonicalized (sorted, deduplicated) on entry, so rung survivors are
+//!   a pure function of the candidate *set* — invariant to job ordering.
+//! - **Search**: any registry optimizer run over the
+//!   [`MetaBackend`](super::backend::MetaBackend) through a plain
+//!   `TuningContext` — the repo's own optimizers tuning the repo's own
+//!   optimizers — with a budget of `evals` meta-evaluations' worth of
+//!   real tuning seconds.
+
+use super::backend::{MetaResult, MetaTuning};
+use crate::optimizers::OptimizerSpec;
+use crate::tuning::TuningContext;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::{f, Table};
+
+/// How to search the meta space.
+#[derive(Debug, Clone)]
+pub enum MetaStrategy {
+    /// Exhaustive: every meta-configuration at full seed strength.
+    Grid,
+    /// A seeded distinct sample of `evals` meta-configurations.
+    Random { evals: usize },
+    /// Successive halving with reduction factor `eta` over `evals`
+    /// starting candidates (the whole space when `evals` covers it).
+    Sha { eta: usize, evals: usize },
+    /// A registry optimizer over the meta backend, budgeted to `evals`
+    /// fresh meta-evaluations.
+    Search { spec: OptimizerSpec, evals: usize },
+}
+
+impl MetaStrategy {
+    /// Parse the CLI's `--meta` value: `grid`, `random`, `sha`, or any
+    /// optimizer spec the registry accepts (e.g. `sa` or `ga:elites=3`).
+    pub fn parse(s: &str, evals: usize) -> Option<MetaStrategy> {
+        match s {
+            "grid" => Some(MetaStrategy::Grid),
+            "random" => Some(MetaStrategy::Random { evals }),
+            "sha" => Some(MetaStrategy::Sha { eta: 3, evals }),
+            other => OptimizerSpec::parse(other).map(|spec| MetaStrategy::Search { spec, evals }),
+        }
+    }
+
+    /// Stable label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            MetaStrategy::Grid => "grid".into(),
+            MetaStrategy::Random { evals } => format!("random:{}", evals),
+            MetaStrategy::Sha { eta, evals } => format!("sha:eta={},evals={}", eta, evals),
+            MetaStrategy::Search { spec, evals } => format!("search:{}(evals={})", spec, evals),
+        }
+    }
+}
+
+/// One successive-halving rung: the candidates scored at `runs` seeds and
+/// the survivors advanced to the next rung (both in ascending ordinal
+/// order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rung {
+    pub runs: usize,
+    pub candidates: Vec<u32>,
+    pub survivors: Vec<u32>,
+}
+
+/// The outcome of one sweep: the ranked leaderboard of everything
+/// evaluated, plus the rung trace for successive halving.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// [`MetaStrategy::label`] of the strategy that ran.
+    pub strategy: String,
+    /// All evaluated configs, best first (see [`MetaTuning::leaderboard`]).
+    pub leaderboard: Vec<MetaResult>,
+    /// Successive-halving rungs (empty for the other strategies).
+    pub rungs: Vec<Rung>,
+}
+
+/// Run one meta-search strategy to completion. Deterministic: the outcome
+/// is a pure function of `(mt setup, strategy, seed)` — scheduler width
+/// never changes it.
+pub fn sweep(mt: &MetaTuning, strategy: &MetaStrategy, seed: u64) -> SweepOutcome {
+    let rungs = match strategy {
+        MetaStrategy::Grid => {
+            let all: Vec<u32> = (0..mt.space().len() as u32).collect();
+            mt.evaluate_all(&all, mt.runs());
+            Vec::new()
+        }
+        MetaStrategy::Random { evals } => {
+            let cands = sample_ordinals(mt, *evals, seed);
+            mt.evaluate_all(&cands, mt.runs());
+            Vec::new()
+        }
+        MetaStrategy::Sha { eta, evals } => {
+            let cands = sample_ordinals(mt, *evals, seed);
+            successive_halving(mt, cands, *eta)
+        }
+        MetaStrategy::Search { spec, evals } => {
+            let budget_s = mt.meta_eval_cost_s() * (*evals).max(1) as f64;
+            let mut backend = mt.backend();
+            let mut ctx = TuningContext::with_backend(backend.as_mut(), budget_s, seed);
+            spec.build().run(&mut ctx);
+            Vec::new()
+        }
+    };
+    SweepOutcome { strategy: strategy.label(), leaderboard: mt.leaderboard(), rungs }
+}
+
+/// A canonical (ascending) candidate list: the whole space when `evals`
+/// covers it, else a seeded distinct sample (`evals == 0` samples
+/// nothing — the CLI rejects it before it gets here).
+fn sample_ordinals(mt: &MetaTuning, evals: usize, seed: u64) -> Vec<u32> {
+    let n = mt.space().len();
+    if evals >= n {
+        return (0..n as u32).collect();
+    }
+    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+    let mut sample = mt.space().random_sample(&mut rng, evals);
+    sample.sort_unstable();
+    sample
+}
+
+/// Successive halving with seeds-per-rung escalation: rung `k` of `L`
+/// evaluates its candidates at `min(runs, max(runs / eta^(L−k), eta^k))`
+/// seeds — the budget-scaled schedule, floored by `eta^k` so every
+/// pre-final rung adds seeds even when `runs` is small relative to the
+/// candidate count (without the floor, `runs=5, eta=3` over 16 candidates
+/// clamps every early rung to a single seed and eliminates on
+/// single-seed noise) — and advances the top `⌈n/eta⌉` (score
+/// descending, ties by ascending ordinal); the final survivor is scored
+/// at the full run count. Escalation reuses lower-rung curves from the
+/// memo, so each rung pays only for its new seed indices. Candidates are
+/// sorted and deduplicated first, so the rung trace is invariant to the
+/// order candidates were supplied in.
+pub fn successive_halving(mt: &MetaTuning, mut cands: Vec<u32>, eta: usize) -> Vec<Rung> {
+    let eta = eta.max(2);
+    cands.sort_unstable();
+    cands.dedup();
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let final_runs = mt.runs();
+    // Rungs needed to reduce the field to one survivor.
+    let mut levels = 0usize;
+    let mut m = cands.len();
+    while m > 1 {
+        m = m.div_ceil(eta);
+        levels += 1;
+    }
+    let mut rungs = Vec::with_capacity(levels + 1);
+    for k in 0..=levels {
+        let budget_scaled =
+            (final_runs / eta.saturating_pow((levels - k) as u32).max(1)).max(1);
+        let escalation_floor = eta.saturating_pow(k as u32).min(final_runs);
+        let r = budget_scaled.max(escalation_floor).min(final_runs);
+        let scores = mt.evaluate_all(&cands, r);
+        let mut ranked: Vec<(u32, f64)> =
+            cands.iter().copied().zip(scores.iter().map(|s| s.score)).collect();
+        ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let keep = if cands.len() > 1 { cands.len().div_ceil(eta) } else { 1 };
+        let mut survivors: Vec<u32> = ranked.iter().take(keep).map(|&(o, _)| o).collect();
+        survivors.sort_unstable();
+        rungs.push(Rung { runs: r, candidates: cands.clone(), survivors: survivors.clone() });
+        cands = survivors;
+    }
+    rungs
+}
+
+/// Render the sweep leaderboard (top `top` rows) for the CLI.
+pub fn leaderboard_table(title: &str, leaderboard: &[MetaResult], top: usize) -> Table {
+    let mut t = Table::new(title, &["Rank", "Spec", "Seeds", "Score P"]);
+    for (i, r) in leaderboard.iter().take(top).enumerate() {
+        t.row(vec![
+            format!("{}", i + 1),
+            r.spec.to_string(),
+            format!("{}", r.runs),
+            f(r.score, 3),
+        ]);
+    }
+    t
+}
+
+/// The sweep report as JSON — every field a pure function of the sweep
+/// inputs (no wall-clock, no thread counts), so files are byte-identical
+/// for any `--threads` width. Shares [`crate::util::json::write_file`]
+/// with `coordinate --out`.
+pub fn sweep_json(mt: &MetaTuning, outcome: &SweepOutcome, seed: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("base", mt.base().to_string());
+    j.set("strategy", outcome.strategy.clone());
+    j.set("spaces", Json::Arr(mt.space_ids().into_iter().map(Json::from).collect()));
+    j.set("runs", mt.runs());
+    j.set("seed", seed);
+    j.set("meta_space_size", mt.space().len());
+    let mut rows: Vec<Json> = Vec::with_capacity(outcome.leaderboard.len());
+    for r in &outcome.leaderboard {
+        let mut row = Json::obj();
+        row.set("spec", r.spec.to_string());
+        let mut ov = Json::obj();
+        for (k, v) in &r.overrides {
+            ov.set(k, *v);
+        }
+        row.set("overrides", ov);
+        row.set("runs", r.runs);
+        row.set("score", r.score);
+        row.set("per_space", r.per_space.clone());
+        rows.push(row);
+    }
+    j.set("leaderboard", Json::Arr(rows));
+    if !outcome.rungs.is_empty() {
+        let ordinals = |os: &[u32]| Json::Arr(os.iter().map(|&o| Json::from(o as u64)).collect());
+        let mut rs: Vec<Json> = Vec::with_capacity(outcome.rungs.len());
+        for rung in &outcome.rungs {
+            let mut o = Json::obj();
+            o.set("runs", rung.runs);
+            o.set("candidates", ordinals(&rung.candidates));
+            o.set("survivors", ordinals(&rung.survivors));
+            rs.push(o);
+        }
+        j.set("rungs", Json::Arr(rs));
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parsing() {
+        assert!(matches!(MetaStrategy::parse("grid", 8), Some(MetaStrategy::Grid)));
+        assert!(matches!(
+            MetaStrategy::parse("random", 8),
+            Some(MetaStrategy::Random { evals: 8 })
+        ));
+        assert!(matches!(
+            MetaStrategy::parse("sha", 8),
+            Some(MetaStrategy::Sha { eta: 3, evals: 8 })
+        ));
+        match MetaStrategy::parse("sa", 4) {
+            Some(MetaStrategy::Search { spec, evals: 4 }) => assert_eq!(spec.label(), "sa"),
+            other => panic!("expected Search, got {:?}", other),
+        }
+        assert!(MetaStrategy::parse("not_an_optimizer", 4).is_none());
+        // Off-grid overrides fail at strategy parse time too.
+        assert!(MetaStrategy::parse("sa:alpha=0.123", 4).is_none());
+    }
+}

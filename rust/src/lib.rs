@@ -15,6 +15,7 @@
 
 pub mod coordinator;
 pub mod harness;
+pub mod hypertune;
 pub mod kernels;
 pub mod llamea;
 pub mod methodology;

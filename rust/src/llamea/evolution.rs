@@ -4,13 +4,21 @@
 //! methodology performance score P on the training caches, broken-candidate
 //! discarding, and stack-trace repair when a whole generation fails.
 //! A run stops after `llm_call_budget` LLM calls (paper: 100).
+//!
+//! Candidate fitness is evaluated through the L3 scheduler as **one flat
+//! job batch per generation** across all candidates × training caches ×
+//! seeds ([`fitness_batch`]), rather than per-cache `run_many` calls per
+//! candidate: per-job seeds derive from the same (candidate seed, space
+//! id, genome name, run) coordinates the per-cache path used, so results
+//! are bit-identical while the worker pool sees the whole generation.
 
 use std::borrow::Borrow;
 
 use super::genome::Genome;
 use super::llm::{Generation, LlmClient, TokenUsage};
 use super::prompt::{MutationPrompt, Prompt, SpaceInfo};
-use crate::methodology::{aggregate, run_many, SpaceSetup};
+use crate::coordinator::{collate, job_seed, Scheduler, TuningJob};
+use crate::methodology::{aggregate, OptimizerFactory, SpaceSetup};
 use crate::optimizers::OptimizerSpec;
 use crate::tuning::Cache;
 use crate::util::rng::Rng;
@@ -64,9 +72,58 @@ pub struct EvolutionResult {
     pub fitness_history: Vec<f64>,
 }
 
+/// Fitness of a whole candidate batch — typically one generation — as a
+/// single flat (candidate × cache × seed) job batch drained by one
+/// scheduler pool. Each entry pairs a genome with its per-candidate base
+/// seed; returns one aggregate score per entry, in input order.
+///
+/// Seed derivation matches what per-candidate `run_many` calls produced
+/// (`job_seed(candidate seed, cache id, genome name, run)`), so batching
+/// the generation changes scheduling, never results.
+pub fn fitness_batch<C: Borrow<Cache>>(
+    candidates: &[(Genome, u64)],
+    caches: &[C],
+    setups: &[SpaceSetup],
+    runs: usize,
+) -> Vec<f64> {
+    if candidates.is_empty() {
+        return Vec::new();
+    }
+    let specs: Vec<OptimizerSpec> =
+        candidates.iter().map(|(g, _)| OptimizerSpec::genome(g.clone())).collect();
+    let mut jobs: Vec<TuningJob> = Vec::with_capacity(candidates.len() * caches.len() * runs);
+    for (gi, ((_, gseed), spec)) in candidates.iter().zip(&specs).enumerate() {
+        let label = spec.label();
+        for (ci, c) in caches.iter().enumerate() {
+            let cache: &Cache = Borrow::borrow(c);
+            let space_id = cache.id();
+            for r in 0..runs {
+                jobs.push(TuningJob {
+                    source: cache,
+                    setup: &setups[ci],
+                    factory: spec as &dyn OptimizerFactory,
+                    seed: job_seed(*gseed, &space_id, &label, r as u64),
+                    group: gi * caches.len() + ci,
+                });
+            }
+        }
+    }
+    let curves = Scheduler::auto().run(&jobs);
+    let grouped = collate(candidates.len() * caches.len(), &jobs, curves);
+    let mut it = grouped.into_iter();
+    candidates
+        .iter()
+        .map(|_| {
+            let per_space: Vec<Vec<Vec<f64>>> = it.by_ref().take(caches.len()).collect();
+            aggregate(&per_space).score
+        })
+        .collect()
+}
+
 /// Fitness: aggregate performance score of the genome on the training set.
 /// Generic over `Cache` ownership so callers can pass owned caches or the
-/// coordinator registry's shared references.
+/// coordinator registry's shared references. Single-candidate view of
+/// [`fitness_batch`].
 pub fn fitness_of<C: Borrow<Cache>>(
     genome: &Genome,
     caches: &[C],
@@ -74,13 +131,7 @@ pub fn fitness_of<C: Borrow<Cache>>(
     runs: usize,
     seed: u64,
 ) -> f64 {
-    let spec = OptimizerSpec::genome(genome.clone());
-    let per_space: Vec<Vec<Vec<f64>>> = caches
-        .iter()
-        .zip(setups)
-        .map(|(c, s)| run_many(Borrow::borrow(c), s, &spec, runs, seed))
-        .collect();
-    aggregate(&per_space).score
+    fitness_batch(&[(genome.clone(), seed)], caches, setups, runs)[0]
 }
 
 /// Run one LLaMEA evolution (one of the paper's 5 independent runs).
@@ -113,7 +164,11 @@ pub fn evolve<C: Borrow<Cache>>(
     };
 
     // --- Initial population: mu fresh generations ---
-    while population.len() < config.mu && llm_calls < config.llm_call_budget {
+    // Valid genomes are collected (stamped with the fitness seed the
+    // eager path used, `seed ^ llm_calls` at acceptance) and evaluated
+    // below as one flat scheduler batch across all training caches.
+    let mut pending: Vec<(Genome, u64)> = Vec::new();
+    while pending.len() < config.mu && llm_calls < config.llm_call_budget {
         let prompt = base_prompt(None, last_trace.take());
         let (gen, usage) = llm.generate(&prompt);
         llm_calls += 1;
@@ -121,9 +176,7 @@ pub fn evolve<C: Borrow<Cache>>(
         tokens.completion_tokens += usage.completion_tokens;
         match gen {
             Generation::Code(genome) if genome.is_valid() => {
-                let fitness =
-                    fitness_of(&genome, caches, &setups, config.eval_runs, seed ^ llm_calls);
-                population.push(Candidate { genome, fitness });
+                pending.push((genome, seed ^ llm_calls));
             }
             Generation::Code(_) => {
                 failures += 1;
@@ -136,11 +189,17 @@ pub fn evolve<C: Borrow<Cache>>(
             }
         }
     }
+    let fits = fitness_batch(&pending, caches, &setups, config.eval_runs);
+    for ((genome, _), fitness) in pending.into_iter().zip(fits) {
+        population.push(Candidate { genome, fitness });
+    }
     assert!(!population.is_empty(), "no valid initial candidate generated");
 
     // --- Generations ---
     while llm_calls < config.llm_call_budget {
-        let mut offspring: Vec<Candidate> = Vec::new();
+        // Valid offspring accumulate un-scored; the whole generation is
+        // then evaluated as one flat job batch across all caches.
+        let mut valid: Vec<(Genome, u64)> = Vec::new();
         let mut gen_failures = 0u64;
         let mut gen_trace: Option<String> = None;
         for _ in 0..config.lambda {
@@ -151,7 +210,7 @@ pub fn evolve<C: Borrow<Cache>>(
             let op = *rng.choose(&MutationPrompt::ALL);
             // If every candidate so far this generation failed, feed the
             // stack trace back (the paper's self-debugging path).
-            let trace = if gen_failures > 0 && offspring.is_empty() {
+            let trace = if gen_failures > 0 && valid.is_empty() {
                 gen_trace.clone()
             } else {
                 None
@@ -163,14 +222,7 @@ pub fn evolve<C: Borrow<Cache>>(
             tokens.completion_tokens += usage.completion_tokens;
             match gen {
                 Generation::Code(genome) if genome.is_valid() => {
-                    let fitness = fitness_of(
-                        &genome,
-                        caches,
-                        &setups,
-                        config.eval_runs,
-                        seed ^ llm_calls,
-                    );
-                    offspring.push(Candidate { genome, fitness });
+                    valid.push((genome, seed ^ llm_calls));
                 }
                 Generation::Code(_) => {
                     failures += 1;
@@ -185,6 +237,11 @@ pub fn evolve<C: Borrow<Cache>>(
                 }
             }
         }
+        let fits = fitness_batch(&valid, caches, &setups, config.eval_runs);
+        let offspring = valid
+            .into_iter()
+            .zip(fits)
+            .map(|((genome, _), fitness)| Candidate { genome, fitness });
         // Elitist (mu + lambda) selection.
         population.extend(offspring);
         population.sort_by(|a, b| b.fitness.partial_cmp(&a.fitness).unwrap());
@@ -276,6 +333,27 @@ mod tests {
         let (best, tokens) = evolve_best_of_runs(&config, &mut make, &caches, 3, 11);
         assert_eq!(tokens.len(), 3);
         assert!(best.best.genome.is_valid());
+    }
+
+    #[test]
+    fn generation_batch_matches_per_candidate_run_many() {
+        // The flat generation batch must reproduce the pre-batching
+        // per-candidate, per-cache run_many evaluation bit-for-bit.
+        let (caches, _) = tiny_setup();
+        let setups: Vec<SpaceSetup> = caches.iter().map(SpaceSetup::new).collect();
+        let g = Genome::hybrid_vndx_like();
+        let batch = fitness_batch(&[(g.clone(), 11), (g.clone(), 22)], &caches, &setups, 2);
+        for (i, seed) in [11u64, 22].iter().enumerate() {
+            let spec = OptimizerSpec::genome(g.clone());
+            let per_space: Vec<Vec<Vec<f64>>> = caches
+                .iter()
+                .zip(&setups)
+                .map(|(c, s)| crate::methodology::run_many(c, s, &spec, 2, *seed))
+                .collect();
+            assert_eq!(batch[i], aggregate(&per_space).score, "seed {}", seed);
+        }
+        assert_eq!(batch[0], fitness_of(&g, &caches, &setups, 2, 11));
+        assert!(fitness_batch(&[], &caches, &setups, 2).is_empty());
     }
 
     #[test]

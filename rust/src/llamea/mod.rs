@@ -10,7 +10,10 @@ pub mod interpreter;
 pub mod llm;
 pub mod prompt;
 
-pub use evolution::{evolve, evolve_best_of_runs, Candidate, EvolutionConfig, EvolutionResult};
+pub use evolution::{
+    evolve, evolve_best_of_runs, fitness_batch, fitness_of, Candidate, EvolutionConfig,
+    EvolutionResult,
+};
 pub use genome::Genome;
 pub use interpreter::GenomeOptimizer;
 pub use llm::{Generation, LlmClient, MockLlm, TokenUsage};

@@ -11,8 +11,9 @@
 //! Subcommands:
 //!   spaces                         print Table-1 style space statistics
 //!   testbed                        print the six-GPU testbed
-//!   optimizers                     list the registry with exposed
-//!                                  hyperparameter keys (--opts name:key=val)
+//!   optimizers                     list the registry with each optimizer's
+//!                                  hyperparameter domains (key, tuned
+//!                                  default, sweepable values)
 //!   tune --space A@G --opt NAME    one tuning run on a simulated space
 //!   evolve --app NAME [--info]     one LLaMEA generation run
 //!   real-tune [--kernel K]         measured PJRT tuning over AOT variants;
@@ -27,18 +28,34 @@
 //!                                  grid and report aggregate scores
 //!       [--backend measured        tune lazily-measured AOT variant spaces
 //!        --artifacts DIR]          instead of simulated caches
+//!       [--out FILE]               also write the score table as JSON
+//!   sweep --opt NAME[:k=v,..]      meta-tune an optimizer's hyperparameters
+//!                                  (overridden keys are pinned out of the
+//!                                  sweep); spaces default to
+//!                                  convolution@A4000
+//!       [--meta grid|random|sha|   meta-search strategy — sha is
+//!        <optimizer-spec>]         successive halving (default); any
+//!                                  registry optimizer spec tunes the tuner
+//!                                  through its own machinery
+//!       [--meta-evals N]           meta-evaluation budget for
+//!                                  random/sha/optimizer strategies
+//!       [--spaces app@gpu,..]      inner spaces each meta-config is scored
+//!                                  on  [--runs N] seeds per space
+//!       [--out FILE]               write the leaderboard JSON (byte-
+//!                                  identical for any --threads width)
 //!   options: --runs N --gen-runs N --llm-calls N --seed S --threads N
-//!            --backend cached|measured
+//!            --jobs N --backend cached|measured
 
 #![allow(clippy::type_complexity)]
 
 use std::path::{Path, PathBuf};
 
 use llamea_kt::coordinator::{
-    collate, grid_aggregates, grid_jobs, score_table, source_jobs, CacheKey, CacheRegistry,
-    Scheduler,
+    collate, grid_aggregates, grid_jobs, score_table, scores_json, source_jobs, CacheKey,
+    CacheRegistry, Scheduler,
 };
 use llamea_kt::harness::{self, BackendKind, ExpOptions};
+use llamea_kt::hypertune::{leaderboard_table, sweep, sweep_json, MetaStrategy, MetaTuning};
 use llamea_kt::kernels::gpu::{GpuSpec, CPU_HOST};
 use llamea_kt::llamea::{evolve, EvolutionConfig, MockLlm, SpaceInfo};
 use llamea_kt::methodology::{OptimizerFactory, SpaceSetup};
@@ -152,20 +169,58 @@ fn cmd_evolve(args: &[String]) {
     println!("fitness history: {:?}", result.fitness_history);
 }
 
-/// List the optimizer registry with each optimizer's exposed
-/// hyperparameter keys (the `--opts name:key=val` surface).
+/// List the optimizer registry with each optimizer's typed hyperparameter
+/// domains: key, tuned default, and the sweepable value grid (the
+/// `--opts name:key=val` and `sweep --opt` surface; values outside the
+/// grid are rejected at parse time).
 fn cmd_optimizers() {
     let mut t = Table::new(
-        "Registered optimizers (override via --opts name:key=val,...)",
-        &["Name", "Hyperparameters"],
+        "Registered optimizers (override via --opts name:key=val,...; sweep via `sweep --opt`)",
+        &["Name", "Hyperparameter", "Default", "Sweepable values"],
     );
     for name in llamea_kt::optimizers::all_names() {
         let opt = llamea_kt::optimizers::by_name(name).unwrap();
-        let keys = opt.hyperparams();
-        let keys = if keys.is_empty() { "(none exposed)".to_string() } else { keys.join(", ") };
-        t.row(vec![name.to_string(), keys]);
+        let domains = opt.hyperparam_domains();
+        if domains.is_empty() {
+            t.row(vec![name.to_string(), "(none exposed)".into(), String::new(), String::new()]);
+            continue;
+        }
+        for (i, d) in domains.iter().enumerate() {
+            let values =
+                d.values.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ");
+            t.row(vec![
+                if i == 0 { name.to_string() } else { String::new() },
+                d.key.to_string(),
+                d.default.to_string(),
+                values,
+            ]);
+        }
     }
     println!("{}", t.to_text());
+}
+
+/// Resolve a `--spaces` list against the global registry (`None`/`"all"` =
+/// the full 4×6 grid; `default` is used when the flag is absent and
+/// non-empty — the `sweep` path, where the full grid would be excessive).
+fn space_entries(
+    args: &[String],
+    default: &str,
+) -> Vec<std::sync::Arc<llamea_kt::coordinator::SpaceEntry>> {
+    let registry = CacheRegistry::global();
+    let value = flag_value(args, "--spaces");
+    let list = match value.as_deref() {
+        None if !default.is_empty() => default.to_string(),
+        None | Some("all") => return registry.all_entries(),
+        Some(list) => list.to_string(),
+    };
+    // No empty-segment filtering: a malformed list (`--spaces ""`,
+    // `--spaces a@b,`) must fail loudly, not silently select nothing.
+    list.split(',')
+        .map(|s| {
+            registry
+                .entry(CacheKey::parse(s).unwrap_or_else(|| panic!("bad --spaces entry '{}'", s)))
+        })
+        .collect()
 }
 
 /// Parse `--opts` into specs (default: the given fallback list).
@@ -307,17 +362,7 @@ fn cmd_coordinate(args: &[String]) {
         return;
     }
     let registry = CacheRegistry::global();
-    let entries = match flag_value(args, "--spaces").as_deref() {
-        None | Some("all") => registry.all_entries(),
-        Some(list) => list
-            .split(',')
-            .map(|s| {
-                registry.entry(
-                    CacheKey::parse(s).unwrap_or_else(|| panic!("bad --spaces entry '{}'", s)),
-                )
-            })
-            .collect(),
-    };
+    let entries = space_entries(args, "");
     let factories: Vec<(String, &dyn OptimizerFactory)> =
         specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
     let jobs = grid_jobs(&entries, &factories, runs, opts.seed);
@@ -335,10 +380,15 @@ fn cmd_coordinate(args: &[String]) {
     let grouped = collate(factories.len() * entries.len(), &jobs, curves);
     let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
     let results = grid_aggregates(&labels, entries.len(), grouped);
-    println!(
-        "{}",
-        score_table("Coordinator: aggregate score P per optimizer", &results).to_text()
-    );
+    let title = "Coordinator: aggregate score P per optimizer";
+    println!("{}", score_table(title, &results).to_text());
+    if let Some(path) = flag_value(args, "--out") {
+        let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+        let json = scores_json(title, &ids, &results);
+        llamea_kt::util::json::write_file(Path::new(&path), &json)
+            .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
+        eprintln!("score table written to {}", path);
+    }
     eprintln!(
         "{} jobs over {} caches ({} built this process) in {:?}",
         jobs.len(),
@@ -420,6 +470,75 @@ fn coordinate_measured(
     eprintln!("{} jobs in {:?}", jobs.len(), t0.elapsed());
 }
 
+/// Meta-tune an optimizer's hyperparameters through the job graph: each
+/// meta-configuration is scored by a grid of seeded tuning runs over the
+/// selected spaces, searched by grid / random / successive-halving / any
+/// registry optimizer. Output (leaderboard and `--out` JSON) is
+/// byte-identical for any `--threads`/`--jobs` width.
+fn cmd_sweep(args: &[String]) {
+    let opts = options(args);
+    let threads =
+        flag_value(args, "--jobs").map(|v| v.parse().expect("--jobs")).or(opts.threads);
+    Scheduler::set_default_width(threads);
+    let opt = flag_value(args, "--opt").unwrap_or_else(|| "ga".into());
+    let base = OptimizerSpec::parse(&opt)
+        .unwrap_or_else(|| panic!("bad --opt spec '{}' (see `llamea-kt optimizers`)", opt));
+    let runs: usize =
+        flag_value(args, "--runs").map(|v| v.parse().expect("--runs")).unwrap_or(5);
+    let evals: usize = flag_value(args, "--meta-evals")
+        .map(|v| v.parse().expect("--meta-evals"))
+        .unwrap_or(16);
+    assert!(evals > 0, "--meta-evals must be at least 1");
+    let meta = flag_value(args, "--meta").unwrap_or_else(|| "sha".into());
+    let strategy = MetaStrategy::parse(&meta, evals)
+        .unwrap_or_else(|| panic!("--meta must be grid|random|sha|<optimizer-spec>, got '{}'", meta));
+    // The full 4×6 grid per meta-evaluation is rarely what an interactive
+    // sweep wants; default to one cheap space and let --spaces widen it.
+    let entries = space_entries(args, "convolution@A4000");
+    let mt = MetaTuning::new(base, entries, runs, opts.seed, threads)
+        .unwrap_or_else(|e| panic!("sweep setup: {}", e));
+    eprintln!(
+        "sweeping {} meta-configs of {} over {} ({} seeds each, strategy {}, ~{:.0}s simulated per meta-eval)",
+        mt.space().len(),
+        mt.base(),
+        mt.space_ids().join(","),
+        mt.runs(),
+        strategy.label(),
+        mt.meta_eval_cost_s(),
+    );
+    let t0 = std::time::Instant::now();
+    let outcome = sweep(&mt, &strategy, opts.seed);
+    println!(
+        "{}",
+        leaderboard_table("Hypertune: hyperparameter leaderboard", &outcome.leaderboard, 10)
+            .to_text()
+    );
+    for rung in &outcome.rungs {
+        eprintln!(
+            "  rung @{} seeds: {} candidates -> {} survivors",
+            rung.runs,
+            rung.candidates.len(),
+            rung.survivors.len()
+        );
+    }
+    if let Some(best) = outcome.leaderboard.first() {
+        println!("best: {} (score {:.3} over {} seeds)", best.spec, best.score, best.runs);
+    }
+    if let Some(path) = flag_value(args, "--out") {
+        let json = sweep_json(&mt, &outcome, opts.seed);
+        llamea_kt::util::json::write_file(Path::new(&path), &json)
+            .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
+        eprintln!("sweep report written to {}", path);
+    }
+    eprintln!(
+        "{} meta-evaluations over {} distinct configs ({} memo hits) in {:?}",
+        mt.evaluations(),
+        outcome.leaderboard.len(),
+        mt.memo_hits(),
+        t0.elapsed()
+    );
+}
+
 fn cmd_experiment(args: &[String]) {
     let id = args.first().map(|s| s.as_str()).unwrap_or("all");
     let rest = &args[args.len().min(1)..];
@@ -489,9 +608,10 @@ fn main() {
         Some("real-tune") => cmd_real_tune(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("coordinate") => cmd_coordinate(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         _ => {
             eprintln!(
-                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate> [options]\n\
+                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|sweep> [options]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);

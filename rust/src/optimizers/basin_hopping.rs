@@ -2,9 +2,16 @@
 //! between basins (Kernel Tuner ships a scipy-inspired variant).
 
 use super::components::{metropolis_accept, Cooling};
-use super::Optimizer;
+use super::{HyperParamDomain, Optimizer};
 use crate::searchspace::NeighborKind;
 use crate::tuning::TuningContext;
+
+/// Sweepable hyperparameter grid.
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("t0", 0.4, &[0.2, 0.4, 0.8]),
+    HyperParamDomain::new("alpha", 0.99, &[0.98, 0.99, 0.999]),
+    HyperParamDomain::new("jump_dims", 2.0, &[1.0, 2.0, 3.0, 4.0]),
+];
 
 #[derive(Debug)]
 pub struct BasinHopping {
@@ -57,6 +64,23 @@ impl BasinHopping {
 impl Optimizer for BasinHopping {
     fn name(&self) -> &str {
         "basin_hopping"
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "t0" => self.t0 = value,
+            "alpha" => self.alpha = value,
+            "jump_dims" => self.jump_dims = (value as usize).max(1),
+            _ => return false,
+        }
+        true
+    }
+
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {

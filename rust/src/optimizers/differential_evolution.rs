@@ -5,7 +5,9 @@
 //! formed in value-index space, rounded and clamped to each dimension's
 //! cardinality, then constraint-repaired. pyATF exposes no hyperparameter
 //! tuning (the paper notes this), so the canonical NP=20, F=0.7, CR=0.9
-//! are used as-is.
+//! are the registry defaults; the knobs are nonetheless declared as
+//! [`HyperParamDomain`]s so `hypertune` sweeps can explore what pyATF
+//! could not.
 //!
 //! `run` keeps pyATF's *asynchronous* update rule (each selection feeds
 //! the next donor draw), which is inherently sequential — only the initial
@@ -16,9 +18,16 @@
 //! drivers that fan generations out; it is deterministic but a different
 //! (standard) DE flavor, so `run` does not use it.
 
-use super::Optimizer;
+use super::{HyperParamDomain, Optimizer};
 use crate::searchspace::SearchSpace;
 use crate::tuning::TuningContext;
+
+/// Sweepable hyperparameter grid around the pyATF 0.0.9 defaults.
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("population_size", 20.0, &[10.0, 20.0, 40.0]),
+    HyperParamDomain::new("f", 0.7, &[0.5, 0.7, 0.9]),
+    HyperParamDomain::new("cr", 0.9, &[0.7, 0.9, 1.0]),
+];
 
 #[derive(Debug)]
 pub struct DifferentialEvolution {
@@ -98,6 +107,23 @@ impl DifferentialEvolution {
 impl Optimizer for DifferentialEvolution {
     fn name(&self) -> &str {
         "de"
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "population_size" => self.population_size = (value as usize).max(4),
+            "f" => self.f = value,
+            "cr" => self.cr = value,
+            _ => return false,
+        }
+        true
+    }
+
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {

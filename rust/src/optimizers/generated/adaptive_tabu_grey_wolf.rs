@@ -14,9 +14,22 @@
 //! q=0.15, tau=80, rho=0.3, T0=1.0, lambda=5.0, Tmin=1e-4.
 
 use crate::optimizers::components::{metropolis_accept, Cooling, TabuList};
-use crate::optimizers::Optimizer;
+use crate::optimizers::{HyperParamDomain, Optimizer};
 use crate::searchspace::NeighborKind;
 use crate::tuning::TuningContext;
+
+/// Sweepable grid around the paper's published defaults (which stay the
+/// registry constructor values — `defaults_match_paper` pins them).
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("population", 8.0, &[4.0, 8.0, 16.0]),
+    HyperParamDomain::new("tabu_factor", 3.0, &[2.0, 3.0, 5.0]),
+    HyperParamDomain::new("shake_rate", 0.2, &[0.1, 0.2, 0.4]),
+    HyperParamDomain::new("jump_rate", 0.15, &[0.05, 0.15, 0.3]),
+    HyperParamDomain::new("stagnation_limit", 80.0, &[40.0, 80.0, 160.0]),
+    HyperParamDomain::new("restart_ratio", 0.3, &[0.2, 0.3, 0.5]),
+    HyperParamDomain::new("t0", 1.0, &[0.5, 1.0, 2.0]),
+    HyperParamDomain::new("lambda", 5.0, &[2.5, 5.0, 10.0]),
+];
 
 #[derive(Debug)]
 pub struct AdaptiveTabuGreyWolf {
@@ -62,6 +75,28 @@ impl AdaptiveTabuGreyWolf {
 impl Optimizer for AdaptiveTabuGreyWolf {
     fn name(&self) -> &str {
         "atgw"
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "population" => self.population = (value as usize).max(4),
+            "tabu_factor" => self.tabu_factor = (value as usize).max(1),
+            "shake_rate" => self.shake_rate = value,
+            "jump_rate" => self.jump_rate = value,
+            "stagnation_limit" => self.stagnation_limit = value as u32,
+            "restart_ratio" => self.restart_ratio = value,
+            "t0" => self.t0 = value,
+            "lambda" => self.lambda = value,
+            _ => return false,
+        }
+        true
+    }
+
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {

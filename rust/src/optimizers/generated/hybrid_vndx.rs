@@ -11,9 +11,22 @@
 use crate::optimizers::components::{
     metropolis_accept, Cooling, EliteArchive, History, KnnSurrogate, TabuList,
 };
-use crate::optimizers::Optimizer;
+use crate::optimizers::{HyperParamDomain, Optimizer};
 use crate::searchspace::NeighborKind;
 use crate::tuning::TuningContext;
+
+/// Sweepable grid around the paper's published defaults (which stay the
+/// registry constructor values — `defaults_match_paper` pins them).
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("k", 5.0, &[3.0, 5.0, 7.0]),
+    HyperParamDomain::new("pool_size", 8.0, &[4.0, 8.0, 12.0]),
+    HyperParamDomain::new("restart_after", 100.0, &[50.0, 100.0, 200.0]),
+    HyperParamDomain::new("tabu_size", 300.0, &[100.0, 300.0, 600.0]),
+    HyperParamDomain::new("elite_size", 5.0, &[3.0, 5.0, 8.0]),
+    HyperParamDomain::new("t0", 1.0, &[0.5, 1.0, 2.0]),
+    HyperParamDomain::new("cooling", 0.995, &[0.99, 0.995, 0.999]),
+    HyperParamDomain::new("tabu_penalty", 0.25, &[0.1, 0.25, 0.5]),
+];
 
 /// The VND neighborhood set sampled by roulette over adaptive weights.
 const NEIGHBORHOODS: [NeighborKind; 3] = [
@@ -53,6 +66,28 @@ impl Default for HybridVndx {
 impl Optimizer for HybridVndx {
     fn name(&self) -> &str {
         "hybrid_vndx"
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "k" => self.k = (value as usize).max(1),
+            "pool_size" => self.pool_size = (value as usize).max(2),
+            "restart_after" => self.restart_after = value as u32,
+            "tabu_size" => self.tabu_size = value as usize,
+            "elite_size" => self.elite_size = (value as usize).max(1),
+            "t0" => self.t0 = value,
+            "cooling" => self.cooling = value,
+            "tabu_penalty" => self.tabu_penalty = value,
+            _ => return false,
+        }
+        true
+    }
+
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {

@@ -14,8 +14,17 @@
 //! would — while giving batch-capable backends whole generations to fan
 //! out.
 
-use super::Optimizer;
+use super::{HyperParamDomain, Optimizer};
 use crate::tuning::TuningContext;
+
+/// Sweepable hyperparameter grid (defaults are Kernel Tuner's tuned GA).
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("population_size", 20.0, &[8.0, 16.0, 20.0, 28.0, 40.0]),
+    HyperParamDomain::new("tournament_k", 3.0, &[2.0, 3.0, 4.0, 5.0]),
+    HyperParamDomain::new("crossover_rate", 0.9, &[0.6, 0.8, 0.9, 1.0]),
+    HyperParamDomain::new("mutation_rate_factor", 1.2, &[0.5, 0.8, 1.2, 2.0]),
+    HyperParamDomain::new("elites", 2.0, &[0.0, 1.0, 2.0, 3.0]),
+];
 
 #[derive(Debug)]
 pub struct GeneticAlgorithm {
@@ -93,8 +102,8 @@ impl Optimizer for GeneticAlgorithm {
         true
     }
 
-    fn hyperparams(&self) -> &'static [&'static str] {
-        &["population_size", "tournament_k", "crossover_rate", "mutation_rate_factor", "elites"]
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {

@@ -1,9 +1,20 @@
 //! Local-search strategies: greedy iterated local search and multi-start
 //! local search — two of Kernel Tuner's classical single-solution methods.
 
-use super::Optimizer;
+use super::{neighbor_kind_from_code, HyperParamDomain, Optimizer};
 use crate::searchspace::NeighborKind;
 use crate::tuning::TuningContext;
+
+/// Greedy-ILS sweepable grid (`neighbor` uses the 0/1/2 kind coding of
+/// [`neighbor_kind_from_code`]; default Adjacent = 1).
+const ILS_DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("kick_strength", 3.0, &[1.0, 2.0, 3.0, 4.0, 6.0]),
+    HyperParamDomain::new("neighbor", 1.0, &[0.0, 1.0, 2.0]),
+];
+
+/// MLS sweepable grid (default neighborhood Hamming = 0).
+const MLS_DOMAINS: &[HyperParamDomain] =
+    &[HyperParamDomain::new("neighbor", 0.0, &[0.0, 1.0, 2.0])];
 
 /// Greedy ILS: best-improvement hill climbing to a local optimum, then a
 /// perturbation kick (random multi-dim jump) and repeat.
@@ -55,6 +66,25 @@ impl GreedyIls {
 impl Optimizer for GreedyIls {
     fn name(&self) -> &str {
         "greedy_ils"
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "kick_strength" => self.kick_strength = (value as usize).max(1),
+            "neighbor" => match neighbor_kind_from_code(value) {
+                Some(k) => self.neighbor = k,
+                None => return false,
+            },
+            _ => return false,
+        }
+        true
+    }
+
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        ILS_DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {
@@ -110,6 +140,23 @@ impl Default for MultiStartLocalSearch {
 impl Optimizer for MultiStartLocalSearch {
     fn name(&self) -> &str {
         "mls"
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() || key != "neighbor" {
+            return false;
+        }
+        match neighbor_kind_from_code(value) {
+            Some(k) => {
+                self.neighbor = k;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        MLS_DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {

@@ -28,6 +28,14 @@
 //!   and sequential execution are bit-identical); DE and PSO expose
 //!   *synchronous* ask/tell variants while their `run` keeps the classic
 //!   asynchronous update rule.
+//!
+//! ## Hyperparameters
+//!
+//! Every registry optimizer declares its knobs as typed
+//! [`HyperParamDomain`]s (key, tuned default, discrete value grid), the
+//! single source behind the CLI's `optimizers` listing, parse-time
+//! override validation in [`OptimizerSpec::parse`], and the meta search
+//! spaces `crate::hypertune` sweeps over.
 
 pub mod basin_hopping;
 pub mod components;
@@ -41,6 +49,53 @@ pub mod simulated_annealing;
 
 use crate::tuning::TuningContext;
 
+/// The typed domain of one optimizer hyperparameter: the override key
+/// [`Optimizer::set_hyperparam`] accepts, the tuned default, and the
+/// discrete candidate values a hyperparameter-tuning grid draws from
+/// (`crate::hypertune` builds meta search spaces from these).
+///
+/// Contract (pinned by the registry test): `default` is a member of
+/// `values`, `values` is ascending and duplicate-free, and every value is
+/// accepted by `set_hyperparam` on a fresh instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HyperParamDomain {
+    /// Override key, e.g. `population_size`.
+    pub key: &'static str,
+    /// The tuned default the registry constructor uses.
+    pub default: f64,
+    /// Discrete candidate values, ascending.
+    pub values: &'static [f64],
+}
+
+impl HyperParamDomain {
+    pub const fn new(key: &'static str, default: f64, values: &'static [f64]) -> HyperParamDomain {
+        HyperParamDomain { key, default, values }
+    }
+
+    /// Whether `v` is (approximately) a member of the value set — the
+    /// parse-time validity check for spec overrides.
+    pub fn contains(&self, v: f64) -> bool {
+        self.values.iter().any(|&d| (d - v).abs() <= 1e-9 * d.abs().max(1.0))
+    }
+}
+
+/// Numeric coding of [`NeighborKind`](crate::searchspace::NeighborKind)
+/// for neighbor-kind hyperparameters
+/// (`0` = Hamming, `1` = Adjacent, `2` = StrictlyAdjacent); `None` for any
+/// other value, so `set_hyperparam` rejects unknown codes.
+pub fn neighbor_kind_from_code(v: f64) -> Option<crate::searchspace::NeighborKind> {
+    use crate::searchspace::NeighborKind;
+    if v != v.trunc() {
+        return None; // a fractional code is a caller bug, not a kind
+    }
+    match v as i64 {
+        0 => Some(NeighborKind::Hamming),
+        1 => Some(NeighborKind::Adjacent),
+        2 => Some(NeighborKind::StrictlyAdjacent),
+        _ => None,
+    }
+}
+
 /// A budgeted optimization algorithm over a tuning context.
 ///
 /// `run` must loop until `ctx.budget_exhausted()`; the context performs all
@@ -52,16 +107,29 @@ pub trait Optimizer {
     /// Override a named hyperparameter before `run` (the seam
     /// [`OptimizerSpec`] overrides flow through). Returns `false` for keys
     /// the optimizer does not expose; the default exposes none.
+    ///
+    /// Deliberately permissive about *values*: any finite value for a known
+    /// key is applied (optimizers clamp degenerate settings themselves).
+    /// Domain membership is enforced one layer up, in
+    /// [`OptimizerSpec::parse`], so programmatic callers can explore
+    /// off-grid values while CLI input fails fast.
     fn set_hyperparam(&mut self, _key: &str, _value: f64) -> bool {
         false
     }
 
-    /// The hyperparameter keys [`Optimizer::set_hyperparam`] accepts
-    /// (discoverability for the CLI's `optimizers` listing and for
-    /// hyperparameter-tuning grids). Must stay consistent with
-    /// `set_hyperparam`; the registry test pins the contract.
-    fn hyperparams(&self) -> &'static [&'static str] {
+    /// The typed hyperparameter domains of this optimizer: every key
+    /// [`Optimizer::set_hyperparam`] accepts, with its tuned default and
+    /// the discrete value grid meta-tuning sweeps over. The default
+    /// exposes none; the registry contract test pins agreement with
+    /// `set_hyperparam` for every registered optimizer.
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
         &[]
+    }
+
+    /// The hyperparameter keys this optimizer exposes, derived from
+    /// [`Optimizer::hyperparam_domains`] (single source of truth).
+    fn hyperparams(&self) -> Vec<&'static str> {
+        self.hyperparam_domains().iter().map(|d| d.key).collect()
     }
 
     /// Ask/tell: propose the next batch of configurations to evaluate.
@@ -210,10 +278,11 @@ impl OptimizerSpec {
     }
 
     /// Parse the CLI form `name` or `name:key=val,key=val`. Returns `None`
-    /// for unknown names, malformed overrides, and override keys (or
-    /// non-finite values) the named optimizer rejects — validated here
-    /// against a probe instance so a typo fails at parse time instead of
-    /// panicking inside a scheduler worker at job-build time.
+    /// for unknown names, malformed overrides, override keys (or
+    /// non-finite values) the named optimizer rejects, and values outside
+    /// the key's declared [`HyperParamDomain`] — all validated here against
+    /// a probe instance so a typo or out-of-range value fails at parse time
+    /// instead of panicking inside a scheduler worker at job-build time.
     ///
     /// Explicitly partial with respect to [`std::fmt::Display`]: genome
     /// specs print as `genome:<name>` for reports, but genomes are not
@@ -233,6 +302,14 @@ impl OptimizerSpec {
                 let v = v.parse::<f64>().ok()?;
                 if !probe.set_hyperparam(k, v) {
                     return None;
+                }
+                // The key exists; the value must also lie on the declared
+                // grid (keys without a declared domain — none in the
+                // registry today — stay unconstrained).
+                if let Some(d) = probe.hyperparam_domains().iter().find(|d| d.key == k) {
+                    if !d.contains(v) {
+                        return None;
+                    }
                 }
                 spec = spec.try_with_override(k, v).ok()?;
             }
@@ -360,20 +437,46 @@ mod tests {
     }
 
     #[test]
-    fn advertised_hyperparams_are_settable() {
-        // The hyperparams() listing and set_hyperparam() must agree, for
-        // every registry optimizer: every advertised key is accepted with
-        // a benign value, and made-up keys are rejected.
+    fn hyperparam_domains_are_the_contract() {
+        // The typed domains, the derived key listing and set_hyperparam()
+        // must agree for every registry optimizer: every domain value
+        // (default included) is accepted on a fresh instance, domains are
+        // ascending and duplicate-free, defaults lie on the grid, and
+        // made-up keys are rejected.
         for e in REGISTRY.iter() {
             let mut opt = by_name(e.name).unwrap();
-            let keys = opt.hyperparams();
-            for key in keys {
+            let domains = opt.hyperparam_domains();
+            assert_eq!(
+                opt.hyperparams(),
+                domains.iter().map(|d| d.key).collect::<Vec<_>>(),
+                "{}: keys must derive from domains",
+                e.name
+            );
+            for d in domains {
+                assert!(!d.values.is_empty(), "{}:{} empty domain", e.name, d.key);
                 assert!(
-                    opt.set_hyperparam(key, 1.0),
-                    "{} advertises '{}' but rejects it",
+                    d.values.windows(2).all(|w| w[0] < w[1]),
+                    "{}:{} domain not strictly ascending",
                     e.name,
-                    key
+                    d.key
                 );
+                assert!(
+                    d.contains(d.default),
+                    "{}:{} default {} not in its own domain",
+                    e.name,
+                    d.key,
+                    d.default
+                );
+                for &v in d.values {
+                    let mut fresh = by_name(e.name).unwrap();
+                    assert!(
+                        fresh.set_hyperparam(d.key, v),
+                        "{} declares {}={} but rejects it",
+                        e.name,
+                        d.key,
+                        v
+                    );
+                }
             }
             assert!(
                 !opt.set_hyperparam("definitely_not_a_knob", 1.0),
@@ -381,6 +484,16 @@ mod tests {
                 e.name
             );
         }
+        // At least the paper's two tuned baselines expose sweepable grids.
+        for tuned in ["ga", "sa"] {
+            assert!(!by_name(tuned).unwrap().hyperparam_domains().is_empty());
+        }
+        // Neighbor-kind codes are integers; fractional codes are rejected,
+        // not silently truncated onto a kind.
+        assert!(!by_name("mls").unwrap().set_hyperparam("neighbor", 1.5));
+        assert!(!by_name("mls").unwrap().set_hyperparam("neighbor", -1.0));
+        assert!(neighbor_kind_from_code(2.0).is_some());
+        assert!(neighbor_kind_from_code(0.5).is_none());
     }
 
     #[test]
@@ -393,8 +506,15 @@ mod tests {
         assert!(OptimizerSpec::parse("ga:population_size").is_none(), "missing value");
         assert!(OptimizerSpec::parse("ga:population_size=abc").is_none(), "bad value");
         assert!(OptimizerSpec::parse("ga:no_such_knob=1").is_none(), "unknown key");
-        assert!(OptimizerSpec::parse("de:f=0.5").is_none(), "DE exposes no knobs");
+        assert!(OptimizerSpec::parse("random:x=1").is_none(), "random exposes no knobs");
         assert!(OptimizerSpec::parse("ga:elites=NaN").is_none(), "non-finite value");
+        // Values must lie on the declared domain grid at parse time...
+        assert!(OptimizerSpec::parse("ga:population_size=41").is_none(), "off-grid value");
+        assert!(OptimizerSpec::parse("sa:alpha=0.42").is_none(), "off-grid value");
+        assert!(OptimizerSpec::parse("de:f=0.7").is_some(), "DE knobs are sweepable now");
+        // ...but set_hyperparam stays permissive for programmatic callers.
+        let mut ga2 = genetic_algorithm::GeneticAlgorithm::default();
+        assert!(ga2.set_hyperparam("population_size", 41.0));
 
         let mut ga = genetic_algorithm::GeneticAlgorithm::default();
         assert!(ga.set_hyperparam("population_size", 40.0));

@@ -12,9 +12,17 @@
 //! frozen bests, the whole sweep submitted as one batch — for drivers
 //! that fan iterations out.
 
-use super::Optimizer;
+use super::{HyperParamDomain, Optimizer};
 use crate::searchspace::SearchSpace;
 use crate::tuning::TuningContext;
+
+/// Sweepable hyperparameter grid around the constriction-style defaults.
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("swarm_size", 16.0, &[8.0, 16.0, 24.0, 32.0]),
+    HyperParamDomain::new("inertia", 0.72, &[0.4, 0.6, 0.72, 0.9]),
+    HyperParamDomain::new("c_personal", 1.49, &[0.5, 1.0, 1.49, 2.0]),
+    HyperParamDomain::new("c_global", 1.49, &[0.5, 1.0, 1.49, 2.0]),
+];
 
 #[derive(Debug)]
 pub struct ParticleSwarm {
@@ -112,8 +120,8 @@ impl Optimizer for ParticleSwarm {
         "pso"
     }
 
-    fn hyperparams(&self) -> &'static [&'static str] {
-        &["swarm_size", "inertia", "c_personal", "c_global"]
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
     }
 
     fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {

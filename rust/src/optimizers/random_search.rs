@@ -23,6 +23,11 @@ impl Optimizer for RandomSearch {
         "random"
     }
 
+    // No hyperparam_domains override: uniform random search genuinely has
+    // no knobs, so it inherits the empty default — the registry's one
+    // domain-less optimizer (hypertune sweeps over it degenerate to a
+    // single meta-configuration).
+
     fn run(&mut self, ctx: &mut TuningContext) {
         let n = ctx.space().len();
         while !ctx.budget_exhausted() {

@@ -7,9 +7,17 @@
 //! temperature, slow cooling, generous stagnation window.
 
 use super::components::{metropolis_accept, Cooling};
-use super::Optimizer;
+use super::{HyperParamDomain, Optimizer};
 use crate::searchspace::NeighborKind;
 use crate::tuning::TuningContext;
+
+/// Sweepable hyperparameter grid around the Willemsen-2025b tuned point.
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("t0", 0.6, &[0.2, 0.4, 0.6, 1.0]),
+    HyperParamDomain::new("alpha", 0.995, &[0.98, 0.99, 0.995, 0.999]),
+    HyperParamDomain::new("t_min", 1e-4, &[1e-5, 1e-4, 1e-3]),
+    HyperParamDomain::new("stagnation_limit", 150.0, &[50.0, 100.0, 150.0, 300.0]),
+];
 
 #[derive(Debug)]
 pub struct SimulatedAnnealing {
@@ -51,8 +59,8 @@ impl Optimizer for SimulatedAnnealing {
         true
     }
 
-    fn hyperparams(&self) -> &'static [&'static str] {
-        &["t0", "alpha", "t_min", "stagnation_limit"]
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
     }
 
     fn run(&mut self, ctx: &mut TuningContext) {

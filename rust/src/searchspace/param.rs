@@ -83,6 +83,15 @@ impl Param {
         Param::ints(name, &[value])
     }
 
+    /// Float-valued parameter (hyperparameter domains in `crate::hypertune`
+    /// meta-spaces; the kernel spaces themselves are integer-valued).
+    pub fn floats(name: &str, values: &[f64]) -> Param {
+        Param {
+            name: name.to_string(),
+            values: values.iter().map(|&v| Value::Float(v)).collect(),
+        }
+    }
+
     pub fn cardinality(&self) -> usize {
         self.values.len()
     }

@@ -137,6 +137,18 @@ impl Json {
     }
 }
 
+/// Write a value pretty-printed to `path` (creating parent directories) —
+/// the one writer behind `coordinate --out` and `sweep --out`, so every
+/// result file shares the same stable, diff-friendly serialization.
+pub fn write_file(path: &std::path::Path, value: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, value.to_pretty())
+}
+
 impl From<f64> for Json {
     fn from(x: f64) -> Json {
         Json::Num(x)

@@ -158,6 +158,18 @@ impl Rng {
     }
 }
 
+/// The SplitMix64 finalizer: a full-avalanche bijection on `u64`, used to
+/// decorrelate structured seed inputs (grid coordinates, meta-config
+/// ordinals). Note `avalanche(0) == 0`: the zero ordinal is a fixed point,
+/// which `hypertune` relies on so that meta-config 0 inherits the caller's
+/// base seed unchanged (the grid-of-one ≡ `coordinate` equivalence).
+#[inline]
+pub fn avalanche(mut h: u64) -> u64 {
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+    h ^ (h >> 31)
+}
+
 /// Stable 64-bit hash of arbitrary bytes (FNV-1a), for deterministic
 /// config-keyed noise in the performance models.
 #[inline]

@@ -1,0 +1,166 @@
+//! Integration tests for the hypertune sweep seam (ISSUE 3 acceptance):
+//!
+//! - byte-identical sweep output for any scheduler width (the nested
+//!   fan-out determinism contract);
+//! - the golden equivalence: a grid-of-one sweep (every hyperparameter
+//!   pinned on the base spec) reproduces a plain `coordinate`-style grid
+//!   run of the same spec bit-for-bit;
+//! - successive-halving rung survivors are invariant to candidate/job
+//!   ordering;
+//! - grid, random, successive-halving and a registry optimizer all run as
+//!   meta-strategies, over two tuned optimizers (GA and SA).
+
+use std::sync::Arc;
+
+use llamea_kt::coordinator::{
+    collate, grid_aggregates, grid_jobs, CacheKey, CacheRegistry, Scheduler, SpaceEntry,
+};
+use llamea_kt::hypertune::{
+    successive_halving, sweep, sweep_json, meta_seed, MetaStrategy, MetaTuning,
+};
+use llamea_kt::methodology::OptimizerFactory;
+use llamea_kt::optimizers::OptimizerSpec;
+
+fn conv_entries() -> Vec<Arc<SpaceEntry>> {
+    vec![CacheRegistry::global().entry(CacheKey::parse("convolution@A4000").unwrap())]
+}
+
+/// GA with everything but `elites` pinned: a 4-point meta space keeps the
+/// inner grids small.
+fn ga_narrow() -> OptimizerSpec {
+    OptimizerSpec::parse(
+        "ga:population_size=8,tournament_k=2,crossover_rate=0.8,mutation_rate_factor=0.8",
+    )
+    .unwrap()
+}
+
+/// SA with everything but `t0` pinned.
+fn sa_narrow() -> OptimizerSpec {
+    OptimizerSpec::parse("sa:alpha=0.99,t_min=0.0001,stagnation_limit=50").unwrap()
+}
+
+fn mt_with(base: OptimizerSpec, runs: usize, seed: u64, threads: usize) -> MetaTuning {
+    MetaTuning::new(base, conv_entries(), runs, seed, Some(threads)).unwrap()
+}
+
+#[test]
+fn sweep_output_is_byte_identical_across_thread_widths() {
+    // The acceptance bar: the full sweep report — leaderboard, scores,
+    // rung trace — serialized to JSON must not depend on scheduler width.
+    for strategy in [
+        MetaStrategy::Grid,
+        MetaStrategy::Sha { eta: 2, evals: 4 },
+        MetaStrategy::Search { spec: OptimizerSpec::parse("random").unwrap(), evals: 3 },
+    ] {
+        let narrow = mt_with(ga_narrow(), 2, 9, 1);
+        let wide = mt_with(ga_narrow(), 2, 9, 8);
+        let a = sweep_json(&narrow, &sweep(&narrow, &strategy, 9), 9).to_pretty();
+        let b = sweep_json(&wide, &sweep(&wide, &strategy, 9), 9).to_pretty();
+        assert_eq!(a, b, "strategy {} output depends on thread width", strategy.label());
+        assert!(a.contains("\"leaderboard\""));
+    }
+}
+
+#[test]
+fn grid_of_one_sweep_equals_coordinate_run() {
+    // Pin every GA hyperparameter at its tuned default: the meta space is
+    // a single sentinel configuration, and the sweep must issue exactly
+    // the jobs `coordinate --opts <spec> --spaces convolution@A4000` would
+    // issue — same seeds (meta_seed(s, 0) == s), same label, same grid —
+    // so the scores agree bit-for-bit.
+    let spec = OptimizerSpec::parse(
+        "ga:population_size=20,tournament_k=3,crossover_rate=0.9,mutation_rate_factor=1.2,elites=2",
+    )
+    .unwrap();
+    let (runs, seed) = (3usize, 42u64);
+    assert_eq!(meta_seed(seed, 0), seed);
+
+    let mt = mt_with(spec.clone(), runs, seed, 4);
+    assert_eq!(mt.space().len(), 1, "fully pinned spec must give a grid of one");
+    let outcome = sweep(&mt, &MetaStrategy::Grid, seed);
+    assert_eq!(outcome.leaderboard.len(), 1);
+    let meta = &outcome.leaderboard[0];
+    assert_eq!(meta.spec, spec, "ordinal 0 must expand to the base spec itself");
+
+    // Reference: the same grid through the coordinate path.
+    let entries = conv_entries();
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        vec![(spec.label(), &spec as &dyn OptimizerFactory)];
+    let jobs = grid_jobs(&entries, &factories, runs, seed);
+    let curves = Scheduler::new(2).run(&jobs);
+    let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+    let labels = vec![spec.label()];
+    let aggs = grid_aggregates(&labels, entries.len(), grouped);
+    let reference = &aggs[0].1;
+
+    assert_eq!(meta.score, reference.score, "grid-of-one sweep must equal coordinate");
+    assert_eq!(meta.per_space, reference.per_space_scores);
+}
+
+#[test]
+fn sha_survivors_are_invariant_to_candidate_order() {
+    let seed = 7u64;
+    let forward = mt_with(ga_narrow(), 4, seed, 2);
+    let shuffled = mt_with(ga_narrow(), 4, seed, 5);
+    let rungs_fwd = successive_halving(&forward, vec![0, 1, 2, 3], 2);
+    let rungs_rev = successive_halving(&shuffled, vec![2, 3, 1, 0, 1], 2);
+    assert_eq!(rungs_fwd, rungs_rev, "rung trace must be a function of the candidate set");
+    // Seeds-per-rung escalation: non-decreasing, ending at the full count.
+    assert!(rungs_fwd.windows(2).all(|w| w[0].runs <= w[1].runs));
+    assert_eq!(rungs_fwd.last().unwrap().runs, 4);
+    assert_eq!(rungs_fwd.last().unwrap().survivors.len(), 1);
+    // Survivors always come from the rung's own candidates.
+    for r in &rungs_fwd {
+        assert!(r.survivors.iter().all(|s| r.candidates.contains(s)));
+    }
+}
+
+#[test]
+fn all_meta_strategies_run_over_two_tuned_optimizers() {
+    // grid + random over SA; sha + optimizer-as-meta over GA (the
+    // acceptance matrix: 4 strategies x 2 tuned optimizers, interleaved).
+    let sa = mt_with(sa_narrow(), 2, 3, 2);
+    let grid = sweep(&sa, &MetaStrategy::Grid, 3);
+    assert_eq!(grid.leaderboard.len(), 4, "t0 domain has 4 values");
+    let sa2 = mt_with(sa_narrow(), 2, 3, 2);
+    let random = sweep(&sa2, &MetaStrategy::Random { evals: 2 }, 3);
+    assert_eq!(random.leaderboard.len(), 2);
+    // Random's sample is a subset of the grid with identical memo scores.
+    for r in &random.leaderboard {
+        let full = grid.leaderboard.iter().find(|g| g.ordinal == r.ordinal).unwrap();
+        assert_eq!(full.score, r.score);
+    }
+
+    let ga = mt_with(ga_narrow(), 2, 3, 2);
+    let sha = sweep(&ga, &MetaStrategy::Sha { eta: 2, evals: 4 }, 3);
+    assert!(!sha.rungs.is_empty());
+    assert!(!sha.leaderboard.is_empty());
+
+    // The repo's own SA tunes the repo's own GA through a TuningContext
+    // over the meta backend.
+    let ga2 = mt_with(ga_narrow(), 2, 3, 2);
+    let strategy = MetaStrategy::parse("sa", 4).unwrap();
+    let searched = sweep(&ga2, &strategy, 3);
+    assert!(!searched.leaderboard.is_empty());
+    assert!(searched.leaderboard.len() <= 4 + 1, "budget caps fresh meta-evals");
+    assert!(searched.leaderboard.iter().all(|r| r.score.is_finite()));
+    // Ranked best-first with deterministic tie-breaks.
+    assert!(searched
+        .leaderboard
+        .windows(2)
+        .all(|w| w[0].score > w[1].score
+            || (w[0].score == w[1].score && w[0].ordinal < w[1].ordinal)));
+}
+
+#[test]
+fn sweep_seed_changes_decorrelate_meta_configs_not_ordinal_zero() {
+    // Ordinal-derived seeding: different ordinals get different inner base
+    // seeds under the same sweep seed, and ordinal 0 always inherits the
+    // sweep seed itself.
+    assert_eq!(meta_seed(123, 0), 123);
+    let seeds: Vec<u64> = (0..16).map(|o| meta_seed(123, o)).collect();
+    let mut dedup = seeds.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), seeds.len(), "ordinal seeds must not collide");
+}
