@@ -1,6 +1,10 @@
 //! Hot-path microbenchmarks (§Perf): the primitives every simulated
 //! evaluation touches — space construction, membership lookups, neighbor
 //! enumeration, cache evaluation, baseline math, and a full optimizer run.
+//!
+//! Results are also written to `BENCH_hotpath.json` at the repo root
+//! (`{name, iters, ns_per_iter}` per section) so the perf trajectory is
+//! trackable across PRs; CI uploads the file as an artifact.
 mod common;
 use llamea_kt::kernels::gpu::GpuSpec;
 use llamea_kt::methodology::{Baseline, SpaceSetup};
@@ -9,62 +13,89 @@ use llamea_kt::tuning::{Cache, TuningContext};
 use llamea_kt::util::rng::Rng;
 
 fn main() {
+    let mut results = Vec::new();
     common::section("hot path");
     let app = Application::Gemm;
-    common::bench("gemm space construction", 1, 5, || {
+    results.push(common::bench("gemm space construction", 1, 5, || {
         assert!(app.build_space().len() > 0);
-    });
+    }));
 
     let cache = Cache::build(app, GpuSpec::by_name("A100").unwrap());
     let space = &cache.space;
     let mut rng = Rng::new(1);
 
-    common::bench("1M index_of lookups", 1, 5, || {
+    results.push(common::bench("1M index_of lookups", 1, 5, || {
         let mut acc = 0u32;
         for _ in 0..1_000_000 {
             let i = rng.below(space.len()) as u32;
             acc ^= space.index_of(space.config(i)).unwrap();
         }
         std::hint::black_box(acc);
-    });
+    }));
 
-    common::bench("10k hamming neighbor enumerations", 1, 5, || {
+    // One-time CSR table construction (amortized across every optimizer
+    // sharing the Arc<SearchSpace>). The spaces are pre-built outside the
+    // timed closure so this series isolates the table build — space
+    // enumeration is tracked by "gemm space construction" above.
+    let mut fresh_spaces: Vec<_> = (0..3).map(|_| app.build_space()).collect();
+    results.push(common::bench("csr hamming table build (gemm)", 0, 3, || {
+        let fresh = fresh_spaces.pop().expect("one pre-built space per rep");
+        std::hint::black_box(fresh.neighbors_of(0, NeighborKind::Hamming).len());
+    }));
+
+    // Row lookups after the table exists (the warmup iteration builds the
+    // shared cache's table): this is the ≥5x acceptance target.
+    results.push(common::bench("10k hamming neighbor enumerations", 1, 5, || {
         let mut total = 0usize;
         for _ in 0..10_000 {
             let i = rng.below(space.len()) as u32;
-            total += space.neighbors(i, NeighborKind::Hamming).len();
+            total += space.neighbors_of(i, NeighborKind::Hamming).len();
         }
         std::hint::black_box(total);
-    });
+    }));
 
-    common::bench("100k simulated evaluations", 1, 5, || {
+    results.push(common::bench("100k random hamming neighbors", 1, 5, || {
+        let mut acc = 0u32;
+        for _ in 0..100_000 {
+            let i = rng.below(space.len()) as u32;
+            if let Some(j) = space.random_neighbor(i, &mut rng, NeighborKind::Hamming) {
+                acc ^= j;
+            }
+        }
+        std::hint::black_box(acc);
+    }));
+
+    results.push(common::bench("100k simulated evaluations", 1, 5, || {
         let mut ctx = TuningContext::new(&cache, f64::INFINITY, 3);
         for _ in 0..100_000 {
             let i = ctx.rng.below(space.len()) as u32;
             ctx.evaluate(i);
         }
         std::hint::black_box(ctx.unique_evals());
-    });
+    }));
 
-    common::bench("cache build gemm@A100", 1, 3, || {
+    results.push(common::bench("cache build gemm@A100", 1, 3, || {
         let c = Cache::build_with_space(
             app,
             GpuSpec::by_name("A100").unwrap(),
             std::sync::Arc::clone(&cache.space),
         );
         std::hint::black_box(c.optimum_ms);
-    });
+    }));
 
     let baseline = Baseline::from_cache(&cache);
-    common::bench("baseline budget computation", 1, 10, || {
+    results.push(common::bench("baseline budget computation", 1, 10, || {
         std::hint::black_box(baseline.budget_s(0.95));
-    });
+    }));
 
     let setup = SpaceSetup::new(&cache);
-    common::bench("one hybrid_vndx run (gemm@A100 budget)", 0, 3, || {
+    results.push(common::bench("one hybrid_vndx run (gemm@A100 budget)", 0, 3, || {
         let mut opt = llamea_kt::optimizers::by_name("hybrid_vndx").unwrap();
         let mut ctx = TuningContext::new(&cache, setup.budget_s, 9);
         opt.run(&mut ctx);
         std::hint::black_box(ctx.unique_evals());
-    });
+    }));
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
+    common::write_json(&out, &results);
 }

@@ -1,9 +1,24 @@
 //! Tiny bench harness (criterion unavailable offline): timed sections with
-//! warmup + repetitions, reporting mean ± std.
+//! warmup + repetitions, reporting mean ± std — and, for perf-trajectory
+//! tracking across PRs, machine-readable records that [`write_json`] dumps
+//! as `{name, iters, ns_per_iter}` rows (CI uploads `BENCH_hotpath.json`
+//! as an artifact).
 use std::time::Instant;
 
+use llamea_kt::util::json::Json;
+
+/// One timed section's result: `iters` timed repetitions averaging
+/// `ns_per_iter` nanoseconds each (± `ns_std`).
 #[allow(dead_code)]
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) {
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub ns_per_iter: f64,
+    pub ns_std: f64,
+}
+
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
     for _ in 0..warmup { f(); }
     let mut samples = Vec::with_capacity(reps);
     for _ in 0..reps {
@@ -15,9 +30,32 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) {
     let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / reps.max(1) as f64;
     println!("bench {:40} {:>12.3} ms ± {:>8.3} ms  ({} reps)",
         name, mean * 1e3, var.sqrt() * 1e3, reps);
+    BenchResult {
+        name: name.to_string(),
+        iters: reps,
+        ns_per_iter: mean * 1e9,
+        ns_std: var.sqrt() * 1e9,
+    }
 }
 
 #[allow(dead_code)]
 pub fn section(name: &str) {
     println!("\n== {} ==", name);
+}
+
+/// Write bench records as a JSON array of `{name, iters, ns_per_iter}`
+/// objects (plus the std), so future PRs can diff the perf trajectory.
+#[allow(dead_code)]
+pub fn write_json(path: &std::path::Path, results: &[BenchResult]) {
+    let mut arr = Json::Arr(Vec::new());
+    for r in results {
+        let mut o = Json::obj();
+        o.set("name", r.name.as_str())
+            .set("iters", r.iters)
+            .set("ns_per_iter", r.ns_per_iter)
+            .set("ns_std", r.ns_std);
+        arr.push(o);
+    }
+    llamea_kt::util::json::write_file(path, &arr).expect("write bench json");
+    println!("\nwrote {}", path.display());
 }

@@ -10,15 +10,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 use super::job::TuningJob;
+use crate::util::parallel;
 
 /// A fixed-width worker pool over tuning jobs.
 pub struct Scheduler {
     threads: usize,
 }
-
-/// Process-wide default width consulted by [`Scheduler::auto`]
-/// (0 = size to the machine). Set once by the CLI's `--threads`.
-static DEFAULT_WIDTH: AtomicUsize = AtomicUsize::new(0);
 
 impl Scheduler {
     /// Pool with exactly `threads` workers (clamped to ≥ 1).
@@ -26,22 +23,21 @@ impl Scheduler {
         Scheduler { threads: threads.max(1) }
     }
 
-    /// Pool sized to the process default, falling back to the machine.
+    /// Pool sized to the process default
+    /// ([`crate::util::parallel::default_width`]), falling back to the
+    /// machine.
     pub fn auto() -> Scheduler {
-        match DEFAULT_WIDTH.load(Ordering::Relaxed) {
-            0 => Scheduler::new(
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-            ),
-            n => Scheduler::new(n),
-        }
+        Scheduler::new(parallel::default_width())
     }
 
     /// Set the process-wide default `auto()` width (`None` restores
     /// machine-sized). This is how `--threads` reaches the `run_many`
     /// paths (LLaMEA fitness evaluation, train/test split) that spawn
-    /// pools internally; width never affects results, only concurrency.
+    /// pools internally, and the parallel space/cache construction in
+    /// `searchspace`/`tuning` (via `util::parallel`); width never affects
+    /// results, only concurrency.
     pub fn set_default_width(threads: Option<usize>) {
-        DEFAULT_WIDTH.store(threads.unwrap_or(0), Ordering::Relaxed);
+        parallel::set_default_width(threads);
     }
 
     /// `Some(n)` for an explicit width (the CLI's `--threads`/`--jobs`),

@@ -109,7 +109,6 @@ impl GenomeOptimizer {
         // strategies likewise terminate when converged.
         let mut idle_steps = 0u32;
         let mut last_unique = ctx.unique_evals();
-        let mut memo: Option<(u32, usize, Vec<u32>)> = None;
 
         while !ctx.budget_exhausted() {
             if ctx.unique_evals() == last_unique {
@@ -136,16 +135,10 @@ impl GenomeOptimizer {
             };
             let kind = g.neighborhoods[n_idx];
 
-            // Candidate pool. Neighbor lists are memoized per (x, kind):
-            // enumeration is the hot allocation of this loop (§Perf).
-            if memo
-                .as_ref()
-                .map(|&(mx, mk, _)| mx != x || mk != n_idx)
-                .unwrap_or(true)
-            {
-                memo = Some((x, n_idx, space.neighbors(x, kind)));
-            }
-            let neigh = &memo.as_ref().unwrap().2;
+            // Candidate pool over the precomputed CSR row (§Perf): the
+            // per-(x, kind) memo this loop used to carry is obsolete —
+            // every lookup is already a borrowed slice.
+            let neigh = space.neighbors_of(x, kind);
             let mut pool: Vec<u32> = Vec::with_capacity(g.pool_size);
             let reserve = usize::from(elites.is_some());
             let take = g.pool_size.saturating_sub(1 + reserve).min(neigh.len());

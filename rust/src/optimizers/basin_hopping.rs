@@ -34,6 +34,7 @@ impl Default for BasinHopping {
 
 impl BasinHopping {
     fn descend(&self, ctx: &mut TuningContext, start: u32, f_start: f64) -> (u32, f64) {
+        let space = ctx.space_handle();
         let mut cur = start;
         let mut f_cur = f_start;
         loop {
@@ -41,7 +42,8 @@ impl BasinHopping {
                 return (cur, f_cur);
             }
             let mut improved = false;
-            for n in ctx.space().neighbors(cur, self.descent_neighbor) {
+            // Borrowed CSR row: no per-step neighbor allocation.
+            for &n in space.neighbors_of(cur, self.descent_neighbor) {
                 if ctx.budget_exhausted() {
                     return (cur, f_cur);
                 }

@@ -126,7 +126,9 @@ impl Optimizer for HybridVndx {
             // Line 4: build candidate pool: subset of N(x), 1 elite-
             // crossover child, fill with random valid samples; repair.
             let mut pool: Vec<u32> = Vec::with_capacity(self.pool_size);
-            let neigh = space.neighbors(x, kind);
+            // Borrowed CSR row (shared, precomputed) — the enumeration
+            // that used to dominate this loop is now a slice lookup.
+            let neigh = space.neighbors_of(x, kind);
             let take = (self.pool_size.saturating_sub(2)).min(neigh.len());
             for &j in ctx
                 .rng

@@ -34,15 +34,17 @@ impl Default for GreedyIls {
 impl GreedyIls {
     /// Best-improvement descent from `start`; returns the local optimum.
     fn descend(&self, ctx: &mut TuningContext, start: u32, f_start: f64) -> (u32, f64) {
+        let space = ctx.space_handle();
         let mut cur = start;
         let mut f_cur = f_start;
         loop {
             if ctx.budget_exhausted() {
                 return (cur, f_cur);
             }
-            let neigh = ctx.space().neighbors(cur, self.neighbor);
+            // Borrowed CSR row: no per-step neighbor allocation.
+            let neigh = space.neighbors_of(cur, self.neighbor);
             let mut best_n: Option<(u32, f64)> = None;
-            for n in neigh {
+            for &n in neigh {
                 if ctx.budget_exhausted() {
                     return (cur, f_cur);
                 }
@@ -173,7 +175,10 @@ impl Optimizer for MultiStartLocalSearch {
                 if ctx.budget_exhausted() {
                     return;
                 }
-                let mut neigh = space.neighbors(cur, self.neighbor);
+                // Owned copy of the CSR row: the shuffle needs mutation,
+                // but the enumeration cost is gone (same row, same order,
+                // so the forked-RNG shuffle stream is unchanged).
+                let mut neigh = space.neighbors_of(cur, self.neighbor).to_vec();
                 let mut rng = ctx.rng.fork(cur as u64);
                 rng.shuffle(&mut neigh);
                 for n in neigh {

@@ -6,6 +6,14 @@
 //! configuration's numeric values — shared by space construction (where
 //! early evaluation prunes the DFS) and by repair.
 //!
+//! Parsing produces two evaluators with identical semantics: the [`Expr`]
+//! AST (kept for introspection and as the reference implementation) and a
+//! flat postfix [`Program`] compiled from it by [`compile`]. The program
+//! is a `Vec` of opcodes evaluated over a caller-provided scratch stack —
+//! no `Box` chasing, no per-evaluation allocation — and is what the DFS
+//! enumeration inner loop and the repair hot paths execute.
+//! `program_matches_ast` pins the equivalence.
+//!
 //! Grammar (precedence climbing):
 //!   or:      and ('||' and)*            also accepts `or`
 //!   and:     cmp ('&&' cmp)*            also accepts `and`
@@ -53,13 +61,184 @@ pub enum Expr {
     Max(Box<Expr>, Box<Expr>),
 }
 
-/// A named constraint with its source text and the highest dimension it
-/// references (for early evaluation during DFS enumeration).
+impl Op {
+    /// Apply the operator to two scalars. `And`/`Or` are evaluated eagerly
+    /// (both operands computed); since expression evaluation is pure this
+    /// is observationally identical to the AST's short-circuiting.
+    #[inline]
+    pub fn apply(self, x: f64, y: f64) -> f64 {
+        match self {
+            Op::Add => x + y,
+            Op::Sub => x - y,
+            Op::Mul => x * y,
+            Op::Div => x / y,
+            Op::IntDiv => (x / y).floor(),
+            Op::Mod => {
+                // Python-style modulo on the integer grid.
+                let r = x % y;
+                if r != 0.0 && (r < 0.0) != (y < 0.0) {
+                    r + y
+                } else {
+                    r
+                }
+            }
+            Op::Eq => (x == y) as u8 as f64,
+            Op::Ne => (x != y) as u8 as f64,
+            Op::Lt => (x < y) as u8 as f64,
+            Op::Le => (x <= y) as u8 as f64,
+            Op::Gt => (x > y) as u8 as f64,
+            Op::Ge => (x >= y) as u8 as f64,
+            Op::And => (x != 0.0 && y != 0.0) as u8 as f64,
+            Op::Or => (x != 0.0 || y != 0.0) as u8 as f64,
+        }
+    }
+}
+
+/// One opcode of a compiled constraint [`Program`] (flat postfix form).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpCode {
+    /// Push a literal.
+    Push(f64),
+    /// Push the value of dimension `d`.
+    Load(u16),
+    /// Pop two operands, push `Op::apply`.
+    Bin(Op),
+    /// Negate the top of stack.
+    Neg,
+    /// Logical-not the top of stack.
+    Not,
+    /// Pop two operands, push the minimum.
+    Min,
+    /// Pop two operands, push the maximum.
+    Max,
+}
+
+/// A constraint compiled to flat postfix form: a linear opcode scan over a
+/// reusable operand stack, with no heap pointers to chase. Produced by
+/// [`compile`]; semantically identical to evaluating the source [`Expr`].
+#[derive(Debug, Clone)]
+pub struct Program {
+    code: Vec<OpCode>,
+    /// Peak operand-stack depth — callers preallocate scratch to this.
+    pub max_depth: usize,
+}
+
+impl Program {
+    /// Evaluate over per-dimension values using `stack` as scratch. The
+    /// stack is cleared on entry; no allocation occurs once its capacity
+    /// has reached [`Self::max_depth`].
+    pub fn eval(&self, values: &[f64], stack: &mut Vec<f64>) -> f64 {
+        stack.clear();
+        stack.reserve(self.max_depth);
+        for op in &self.code {
+            match *op {
+                OpCode::Push(x) => stack.push(x),
+                OpCode::Load(d) => stack.push(values[d as usize]),
+                OpCode::Neg => {
+                    let a = stack.last_mut().expect("neg on empty stack");
+                    *a = -*a;
+                }
+                OpCode::Not => {
+                    let a = stack.last_mut().expect("not on empty stack");
+                    *a = (*a == 0.0) as u8 as f64;
+                }
+                OpCode::Min => {
+                    let b = stack.pop().expect("min on empty stack");
+                    let a = stack.last_mut().expect("min on unary stack");
+                    *a = a.min(b);
+                }
+                OpCode::Max => {
+                    let b = stack.pop().expect("max on empty stack");
+                    let a = stack.last_mut().expect("max on unary stack");
+                    *a = a.max(b);
+                }
+                OpCode::Bin(op) => {
+                    let b = stack.pop().expect("bin on empty stack");
+                    let a = stack.last_mut().expect("bin on unary stack");
+                    *a = op.apply(*a, b);
+                }
+            }
+        }
+        stack.pop().expect("program left an empty stack")
+    }
+
+    /// True when the configuration satisfies the compiled constraint.
+    #[inline]
+    pub fn holds(&self, values: &[f64], stack: &mut Vec<f64>) -> bool {
+        self.eval(values, stack) != 0.0
+    }
+
+    /// Number of opcodes (diagnostics).
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+}
+
+/// Compile an [`Expr`] to its postfix [`Program`] (postorder emission).
+pub fn compile(expr: &Expr) -> Program {
+    fn emit(e: &Expr, code: &mut Vec<OpCode>) {
+        match e {
+            Expr::Num(x) => code.push(OpCode::Push(*x)),
+            Expr::Param(d) => {
+                debug_assert!(*d <= u16::MAX as usize, "dimension index fits u16");
+                code.push(OpCode::Load(*d as u16));
+            }
+            Expr::Neg(a) => {
+                emit(a, code);
+                code.push(OpCode::Neg);
+            }
+            Expr::Not(a) => {
+                emit(a, code);
+                code.push(OpCode::Not);
+            }
+            Expr::Min(a, b) => {
+                emit(a, code);
+                emit(b, code);
+                code.push(OpCode::Min);
+            }
+            Expr::Max(a, b) => {
+                emit(a, code);
+                emit(b, code);
+                code.push(OpCode::Max);
+            }
+            Expr::Bin(op, a, b) => {
+                emit(a, code);
+                emit(b, code);
+                code.push(OpCode::Bin(*op));
+            }
+        }
+    }
+    let mut code = Vec::new();
+    emit(expr, &mut code);
+    // Simulate to find the peak operand-stack depth.
+    let (mut depth, mut max_depth) = (0usize, 0usize);
+    for op in &code {
+        match op {
+            OpCode::Push(_) | OpCode::Load(_) => {
+                depth += 1;
+                max_depth = max_depth.max(depth);
+            }
+            OpCode::Neg | OpCode::Not => {}
+            OpCode::Bin(_) | OpCode::Min | OpCode::Max => depth -= 1,
+        }
+    }
+    debug_assert_eq!(depth, 1, "program must leave exactly one result");
+    Program { code, max_depth }
+}
+
+/// A named constraint with its source text, the highest dimension it
+/// references (for early evaluation during DFS enumeration), and its
+/// compiled postfix program (the hot-path evaluator).
 #[derive(Debug, Clone)]
 pub struct Constraint {
     pub source: String,
     pub expr: Expr,
     pub max_dim: usize,
+    pub program: Program,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -94,7 +273,8 @@ impl Expr {
             Expr::Max(a, b) => a.eval(values).max(b.eval(values)),
             Expr::Bin(op, a, b) => {
                 let x = a.eval(values);
-                // Short-circuit the logical ops.
+                // Short-circuit the logical ops (pure expressions, so this
+                // is observationally identical to `Op::apply`'s eager form).
                 match op {
                     Op::And => {
                         return if x != 0.0 && b.eval(values) != 0.0 { 1.0 } else { 0.0 }
@@ -104,30 +284,7 @@ impl Expr {
                     }
                     _ => {}
                 }
-                let y = b.eval(values);
-                match op {
-                    Op::Add => x + y,
-                    Op::Sub => x - y,
-                    Op::Mul => x * y,
-                    Op::Div => x / y,
-                    Op::IntDiv => (x / y).floor(),
-                    Op::Mod => {
-                        // Python-style modulo on the integer grid.
-                        let r = x % y;
-                        if r != 0.0 && (r < 0.0) != (y < 0.0) {
-                            r + y
-                        } else {
-                            r
-                        }
-                    }
-                    Op::Eq => (x == y) as u8 as f64,
-                    Op::Ne => (x != y) as u8 as f64,
-                    Op::Lt => (x < y) as u8 as f64,
-                    Op::Le => (x <= y) as u8 as f64,
-                    Op::Gt => (x > y) as u8 as f64,
-                    Op::Ge => (x >= y) as u8 as f64,
-                    Op::And | Op::Or => unreachable!(),
-                }
+                op.apply(x, b.eval(values))
             }
         }
     }
@@ -161,17 +318,27 @@ impl Constraint {
             });
         }
         let max_dim = expr.max_dim();
+        let program = compile(&expr);
         Ok(Constraint {
             source: source.to_string(),
             expr,
             max_dim,
+            program,
         })
     }
 
-    /// True when the configuration satisfies the constraint.
+    /// True when the configuration satisfies the constraint (AST walk; the
+    /// hot paths use [`Self::holds_scratch`] over the compiled program).
     #[inline]
     pub fn holds(&self, values: &[f64]) -> bool {
         self.expr.eval(values) != 0.0
+    }
+
+    /// Allocation-free twin of [`Self::holds`]: evaluates the compiled
+    /// program over a caller-owned scratch stack.
+    #[inline]
+    pub fn holds_scratch(&self, values: &[f64], stack: &mut Vec<f64>) -> bool {
+        self.program.holds(values, stack)
     }
 }
 
@@ -442,6 +609,68 @@ mod tests {
         assert!(Constraint::parse("bx ==", &ps()).is_err());
         assert!(Constraint::parse("bx == 1 extra", &ps()).is_err());
         assert!(Constraint::parse("(bx == 1", &ps()).is_err());
+    }
+
+    #[test]
+    fn program_matches_ast() {
+        // Every surface construct, compared compiled-vs-AST over a value
+        // grid (including zeros that exercise And/Or truth tables).
+        let srcs = [
+            "bx * by >= 32",
+            "bx + by - 2",
+            "by // bx",
+            "by % 3",
+            "bx == 2 || bx == 4",
+            "bx == 2 && by == 8",
+            "bx == 2 and by == 8 or u == 4",
+            "bx * by == 32 && u != 1",
+            "!(bx == 2)",
+            "-bx + 5",
+            "min(bx, by) + max(u, 2)",
+            "by % (bx * 2) == 0",
+            "u == 0 || bx > 1",
+        ];
+        let mut stack = Vec::new();
+        for src in srcs {
+            let c = Constraint::parse(src, &ps()).unwrap();
+            for bx in [0.0, 1.0, 2.0, 4.0, 8.0] {
+                for by in [0.0, 8.0, 16.0] {
+                    for u in [0.0, 1.0, 2.0, 4.0] {
+                        let vals = [bx, by, u];
+                        let ast = c.expr.eval(&vals);
+                        let compiled = c.program.eval(&vals, &mut stack);
+                        // NaN-aware equality: "by // bx" at bx=0, by=0
+                        // yields NaN from both evaluators.
+                        assert!(
+                            ast == compiled || (ast.is_nan() && compiled.is_nan()),
+                            "{} on {:?}: ast {} vs compiled {}",
+                            src,
+                            vals,
+                            ast,
+                            compiled
+                        );
+                        assert_eq!(c.holds(&vals), c.holds_scratch(&vals, &mut stack));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn program_depth_and_reuse() {
+        let c = Constraint::parse("min(bx, by) + max(u, 2) >= bx * by", &ps()).unwrap();
+        assert!(c.program.max_depth >= 2);
+        assert!(!c.program.is_empty());
+        // The scratch stack drains fully each eval and its capacity
+        // stabilizes at max_depth — reuse is allocation-free.
+        let mut stack = Vec::new();
+        c.program.eval(&[1.0, 8.0, 0.0], &mut stack);
+        assert!(stack.is_empty());
+        let cap = stack.capacity();
+        for _ in 0..10 {
+            c.program.eval(&[4.0, 16.0, 2.0], &mut stack);
+        }
+        assert_eq!(stack.capacity(), cap);
     }
 
     #[test]

@@ -1,5 +1,25 @@
 //! Search-space substrate: tunable parameters, constraints, enumeration,
 //! neighbor operations, and the four benchmark space builders (Table 1).
+//!
+//! The hot-path architecture (PR 4):
+//!
+//! - **Compiled constraints** — [`Constraint::parse`] produces both an
+//!   [`Expr`] AST (reference/introspection) and a flat postfix
+//!   [`constraint::Program`] evaluated over a caller-owned scratch stack.
+//!   The DFS enumerator and [`SearchSpace::satisfies_constraints_scratch`]
+//!   run the program: no `Box` chasing, no per-evaluation allocation.
+//! - **Parallel, deterministic construction** — [`SearchSpace::build_parsed`]
+//!   partitions the first dimension's values across workers
+//!   (`util::parallel`) and concatenates the arenas in value order, so the
+//!   enumeration order (and every config ordinal derived from it) is
+//!   byte-identical for any `--threads` width.
+//! - **CSR neighbor graphs** — per (space, [`NeighborKind`]) adjacency
+//!   tables (offsets + flat `u32` neighbor arena) built lazily behind
+//!   `OnceLock`s and shared through the `Arc<SearchSpace>`.
+//!   [`SearchSpace::neighbors_of`] returns a borrowed `&[u32]` row in the
+//!   exact order the on-the-fly [`SearchSpace::neighbors`] enumeration
+//!   produces; [`SearchSpace::random_neighbor`] is one uniform index into
+//!   the row.
 
 pub mod builder;
 pub mod constraint;
@@ -7,6 +27,6 @@ pub mod param;
 pub mod space;
 
 pub use builder::Application;
-pub use constraint::{Constraint, Expr};
+pub use constraint::{compile, Constraint, Expr, Program};
 pub use param::{Param, ParamSet, Value};
 pub use space::{NeighborKind, SearchSpace};

@@ -4,19 +4,44 @@
 //! enumeration of the Cartesian grid with *early constraint evaluation*: a
 //! constraint is checked as soon as its deepest referenced dimension is
 //! assigned, pruning entire subtrees (the approach of Willemsen et al. 2025a
-//! which the paper builds on). Valid configurations are stored in a flat
-//! arena (`u16` value indices) plus a hash index for O(1) membership tests —
-//! the primitive behind the neighbor operations that Kernel Tuner's
-//! `SearchSpace` object exposes to generated optimizers:
+//! which the paper builds on). Construction is parallel: the first
+//! dimension's values are partitioned across workers and the per-value
+//! arenas concatenated in value order, so enumeration order — and therefore
+//! every config ordinal, seed derivation and golden result — is
+//! byte-identical for any thread count. The DFS inner loop evaluates
+//! *compiled* constraint programs ([`super::constraint::Program`]) over a
+//! reusable scratch stack: no AST `Box` chasing, no per-node allocation.
+//!
+//! Valid configurations are stored in a flat arena (`u16` value indices)
+//! plus a hash index for O(1) membership tests — the primitive behind the
+//! neighbor operations that Kernel Tuner's `SearchSpace` object exposes to
+//! generated optimizers:
 //!   * `get_neighbors` (Hamming / adjacent / strictly-adjacent)
 //!   * `get_random_sample`
 //!   * `repair` of infeasible configurations
+//!
+//! Neighbor lookups come in two forms with one contract:
+//!   * [`SearchSpace::neighbors`] enumerates a row on the fly (hash probes,
+//!     owned `Vec`) — the reference implementation.
+//!   * [`SearchSpace::neighbors_of`] returns a borrowed `&[u32]` row of a
+//!     lazily-built CSR adjacency table (offsets + flat neighbor arena),
+//!     one table per [`NeighborKind`] behind a `OnceLock`. The table is
+//!     built once — in parallel, deterministically — and shared by every
+//!     clone of the `Arc<SearchSpace>`, so all optimizers, seeds and jobs
+//!     amortize it. Rows equal `neighbors()` element-for-element (same
+//!     order); `rust/tests/integration_hotpath.rs` pins this.
+//!
+//! [`SearchSpace::random_neighbor`] indexes uniformly into the CSR row —
+//! O(1) and bias-free for every kind (see its doc for how the old
+//! rejection scheme skewed each kind's proposal distribution).
 
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::OnceLock;
 
 use super::constraint::Constraint;
 use super::param::ParamSet;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 
 /// FxHash-style hasher (no SipHash overhead on the hot membership path).
@@ -61,6 +86,32 @@ pub enum NeighborKind {
     StrictlyAdjacent,
 }
 
+impl NeighborKind {
+    pub const ALL: [NeighborKind; 3] = [
+        NeighborKind::Hamming,
+        NeighborKind::Adjacent,
+        NeighborKind::StrictlyAdjacent,
+    ];
+
+    /// Slot of this kind in the per-space CSR table array.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            NeighborKind::Hamming => 0,
+            NeighborKind::Adjacent => 1,
+            NeighborKind::StrictlyAdjacent => 2,
+        }
+    }
+}
+
+/// CSR adjacency table for one [`NeighborKind`]: row `i` occupies
+/// `data[offsets[i]..offsets[i+1]]`, in the exact order the on-the-fly
+/// enumeration ([`SearchSpace::neighbors`]) produces.
+struct NeighborGraph {
+    offsets: Vec<usize>,
+    data: Vec<u32>,
+}
+
 /// A fully constructed, constraint-filtered search space.
 pub struct SearchSpace {
     pub name: String,
@@ -70,6 +121,10 @@ pub struct SearchSpace {
     data: Vec<u16>,
     dims: usize,
     index: HashMap<Box<[u16]>, u32, FxBuildHasher>,
+    /// Lazily-built CSR neighbor tables, one per [`NeighborKind`] (indexed
+    /// by [`NeighborKind::index`]). Shared through the `Arc<SearchSpace>`,
+    /// so the build cost is paid once per (space, kind) process-wide.
+    graphs: [OnceLock<NeighborGraph>; 3],
 }
 
 impl SearchSpace {
@@ -82,7 +137,23 @@ impl SearchSpace {
         Ok(Self::build_parsed(name, params, constraints))
     }
 
+    /// [`Self::build_parsed_width`] at the process default width
+    /// ([`crate::util::parallel::default_width`], i.e. the CLI's
+    /// `--threads` or the machine size).
     pub fn build_parsed(name: &str, params: ParamSet, constraints: Vec<Constraint>) -> SearchSpace {
+        Self::build_parsed_width(name, params, constraints, parallel::default_width())
+    }
+
+    /// Enumerate with an explicit worker count. The first dimension's
+    /// values are partitioned across workers and the per-value arenas
+    /// concatenated in value order, so the resulting space (arena bytes,
+    /// config ordinals, index) is identical for every `width`.
+    pub fn build_parsed_width(
+        name: &str,
+        params: ParamSet,
+        constraints: Vec<Constraint>,
+        width: usize,
+    ) -> SearchSpace {
         let dims = params.dims();
         // Bucket constraints by the dimension at which they become checkable.
         let mut by_depth: Vec<Vec<&Constraint>> = vec![Vec::new(); dims];
@@ -90,11 +161,9 @@ impl SearchSpace {
             by_depth[c.max_dim].push(c);
         }
 
-        let mut data: Vec<u16> = Vec::new();
-        let mut cfg: Vec<u16> = vec![0; dims];
-        let mut vals: Vec<f64> = vec![0.0; dims];
-
-        // Iterative DFS over dimensions.
+        // Recursive DFS over dimensions `d..dims`, evaluating each depth's
+        // compiled constraint programs over the shared scratch stack.
+        #[allow(clippy::too_many_arguments)]
         fn dfs(
             d: usize,
             dims: usize,
@@ -102,6 +171,7 @@ impl SearchSpace {
             by_depth: &[Vec<&Constraint>],
             cfg: &mut [u16],
             vals: &mut [f64],
+            stack: &mut Vec<f64>,
             data: &mut Vec<u16>,
         ) {
             if d == dims {
@@ -111,12 +181,39 @@ impl SearchSpace {
             for vi in 0..params.params[d].cardinality() {
                 cfg[d] = vi as u16;
                 vals[d] = params.value_f64(d, vi as u16);
-                if by_depth[d].iter().all(|c| c.holds(vals)) {
-                    dfs(d + 1, dims, params, by_depth, cfg, vals, data);
+                if by_depth[d].iter().all(|c| c.program.holds(vals, stack)) {
+                    dfs(d + 1, dims, params, by_depth, cfg, vals, stack, data);
                 }
             }
         }
-        dfs(0, dims, &params, &by_depth, &mut cfg, &mut vals, &mut data);
+
+        let data: Vec<u16> = if dims == 0 {
+            Vec::new()
+        } else {
+            // One chunk per first-dimension value: workers enumerate
+            // disjoint subtrees; concatenation in value order reproduces
+            // the serial DFS arena byte-for-byte.
+            let card0 = params.params[0].cardinality();
+            let chunks = parallel::map_chunks_width(card0, 1, width, |range| {
+                let mut data = Vec::new();
+                let mut cfg = vec![0u16; dims];
+                let mut vals = vec![0.0f64; dims];
+                let mut stack: Vec<f64> = Vec::new();
+                for vi in range {
+                    cfg[0] = vi as u16;
+                    vals[0] = params.value_f64(0, vi as u16);
+                    if by_depth[0].iter().all(|c| c.program.holds(&vals, &mut stack)) {
+                        dfs(1, dims, &params, &by_depth, &mut cfg, &mut vals, &mut stack, &mut data);
+                    }
+                }
+                data
+            });
+            let mut data = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+            for chunk in &chunks {
+                data.extend_from_slice(chunk);
+            }
+            data
+        };
 
         let n = data.len() / dims.max(1);
         let mut index: HashMap<Box<[u16]>, u32, FxBuildHasher> =
@@ -132,6 +229,7 @@ impl SearchSpace {
             data,
             dims,
             index,
+            graphs: Default::default(),
         }
     }
 
@@ -174,21 +272,45 @@ impl SearchSpace {
     /// Whether value-index assignment `cfg` satisfies all constraints
     /// (independent of enumeration — used by property tests and repair).
     pub fn satisfies_constraints(&self, cfg: &[u16]) -> bool {
-        let vals: Vec<f64> = cfg
-            .iter()
-            .enumerate()
-            .map(|(d, &vi)| self.params.value_f64(d, vi))
-            .collect();
-        self.constraints.iter().all(|c| c.holds(&vals))
+        let mut vals = Vec::with_capacity(self.dims);
+        let mut stack = Vec::new();
+        self.satisfies_constraints_scratch(cfg, &mut vals, &mut stack)
+    }
+
+    /// Allocation-free twin of [`Self::satisfies_constraints`]: `vals` and
+    /// `stack` are caller-owned scratch buffers, resized/reused in place.
+    pub fn satisfies_constraints_scratch(
+        &self,
+        cfg: &[u16],
+        vals: &mut Vec<f64>,
+        stack: &mut Vec<f64>,
+    ) -> bool {
+        vals.clear();
+        vals.extend(
+            cfg.iter()
+                .enumerate()
+                .map(|(d, &vi)| self.params.value_f64(d, vi)),
+        );
+        self.constraints.iter().all(|c| c.program.holds(vals, stack))
     }
 
     /// Numeric parameter values of a valid config, by dimension.
     pub fn values_f64(&self, i: u32) -> Vec<f64> {
-        self.config(i)
-            .iter()
-            .enumerate()
-            .map(|(d, &vi)| self.params.value_f64(d, vi))
-            .collect()
+        let mut out = Vec::with_capacity(self.dims);
+        self.values_f64_into(i, &mut out);
+        out
+    }
+
+    /// Allocation-free twin of [`Self::values_f64`]: fills a caller-owned
+    /// buffer (cleared first) with the config's numeric values.
+    pub fn values_f64_into(&self, i: u32, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(
+            self.config(i)
+                .iter()
+                .enumerate()
+                .map(|(d, &vi)| self.params.value_f64(d, vi)),
+        );
     }
 
     /// A uniformly random valid configuration index.
@@ -205,11 +327,13 @@ impl SearchSpace {
             .collect()
     }
 
-    /// Valid neighbors of configuration `i` under `kind`.
-    pub fn neighbors(&self, i: u32, kind: NeighborKind) -> Vec<u32> {
-        let base = self.config(i).to_vec();
-        let mut out = Vec::new();
-        let mut probe = base.clone();
+    /// Append the valid neighbors of `i` under `kind` to `out`, in the
+    /// canonical enumeration order (the CSR row order). `probe` is a
+    /// dims-sized scratch buffer.
+    fn push_neighbors(&self, i: u32, kind: NeighborKind, probe: &mut [u16], out: &mut Vec<u32>) {
+        debug_assert_eq!(probe.len(), self.dims);
+        probe.copy_from_slice(self.config(i));
+        let base = self.config(i);
         match kind {
             NeighborKind::Hamming => {
                 for d in 0..self.dims {
@@ -219,7 +343,7 @@ impl SearchSpace {
                             continue;
                         }
                         probe[d] = vi;
-                        if let Some(j) = self.index_of(&probe) {
+                        if let Some(j) = self.index_of(probe) {
                             out.push(j);
                         }
                     }
@@ -232,13 +356,13 @@ impl SearchSpace {
                     let card = self.params.params[d].cardinality() as u16;
                     if orig > 0 {
                         probe[d] = orig - 1;
-                        if let Some(j) = self.index_of(&probe) {
+                        if let Some(j) = self.index_of(probe) {
                             out.push(j);
                         }
                     }
                     if orig + 1 < card {
                         probe[d] = orig + 1;
-                        if let Some(j) = self.index_of(&probe) {
+                        if let Some(j) = self.index_of(probe) {
                             out.push(j);
                         }
                     }
@@ -247,7 +371,7 @@ impl SearchSpace {
             }
             NeighborKind::StrictlyAdjacent => {
                 // All single-dim ±1 moves plus two-dim diagonal ±1 moves.
-                out = self.neighbors(i, NeighborKind::Adjacent);
+                self.push_neighbors(i, NeighborKind::Adjacent, probe, out);
                 for d1 in 0..self.dims {
                     for d2 in (d1 + 1)..self.dims {
                         for s1 in [-1i32, 1] {
@@ -263,7 +387,7 @@ impl SearchSpace {
                                 }
                                 probe[d1] = v1 as u16;
                                 probe[d2] = v2 as u16;
-                                if let Some(j) = self.index_of(&probe) {
+                                if let Some(j) = self.index_of(probe) {
                                     out.push(j);
                                 }
                                 probe[d1] = base[d1];
@@ -274,50 +398,74 @@ impl SearchSpace {
                 }
             }
         }
+    }
+
+    /// Valid neighbors of configuration `i` under `kind`, enumerated on
+    /// the fly into an owned `Vec` — the reference implementation. Hot
+    /// paths use [`Self::neighbors_of`], whose rows match this output
+    /// element-for-element.
+    pub fn neighbors(&self, i: u32, kind: NeighborKind) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut probe = vec![0u16; self.dims];
+        self.push_neighbors(i, kind, &mut probe, &mut out);
         out
     }
 
-    /// A uniformly random valid Hamming neighbor, if any (fast path used in
-    /// optimizer inner loops — avoids materializing the full neighbor list).
-    pub fn random_neighbor(&self, i: u32, rng: &mut Rng, kind: NeighborKind) -> Option<u32> {
-        // Try a few random single-dim perturbations before falling back to
-        // the exhaustive list.
-        let base = self.config(i).to_vec();
-        let mut probe = base.clone();
-        for _ in 0..8 {
-            let d = rng.below(self.dims);
-            let card = self.params.params[d].cardinality() as u16;
-            if card <= 1 {
-                continue;
+    /// Build the CSR table for one kind: chunked parallel row construction
+    /// (rows are independent), concatenated in index order — the table is
+    /// identical for any worker count or build interleaving.
+    fn build_graph(&self, kind: NeighborKind) -> NeighborGraph {
+        let n = self.len();
+        let chunks = parallel::map_chunks(n, 2048, |range| {
+            let mut lens: Vec<u32> = Vec::with_capacity(range.len());
+            let mut rows: Vec<u32> = Vec::new();
+            let mut probe = vec![0u16; self.dims];
+            for i in range {
+                let before = rows.len();
+                self.push_neighbors(i as u32, kind, &mut probe, &mut rows);
+                lens.push((rows.len() - before) as u32);
             }
-            let nv = match kind {
-                NeighborKind::Hamming => {
-                    let mut v = rng.below(card as usize) as u16;
-                    if v == base[d] {
-                        v = (v + 1) % card;
-                    }
-                    v
-                }
-                _ => {
-                    let delta: i32 = if rng.chance(0.5) { 1 } else { -1 };
-                    let v = base[d] as i32 + delta;
-                    if v < 0 || v >= card as i32 {
-                        continue;
-                    }
-                    v as u16
-                }
-            };
-            probe[d] = nv;
-            if let Some(j) = self.index_of(&probe) {
-                return Some(j);
+            (lens, rows)
+        });
+        let total: usize = chunks.iter().map(|(_, rows)| rows.len()).sum();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut data = Vec::with_capacity(total);
+        offsets.push(0usize);
+        for (lens, rows) in &chunks {
+            for &l in lens {
+                offsets.push(offsets.last().unwrap() + l as usize);
             }
-            probe[d] = base[d];
+            data.extend_from_slice(rows);
         }
-        let all = self.neighbors(i, kind);
-        if all.is_empty() {
+        NeighborGraph { offsets, data }
+    }
+
+    /// Valid neighbors of `i` under `kind` as a borrowed CSR row — the
+    /// allocation-free fast path. The first call per (space, kind) builds
+    /// the table (in parallel, deterministically) behind a `OnceLock`;
+    /// every later call is two offset loads and a slice. Row contents and
+    /// order equal [`Self::neighbors`].
+    pub fn neighbors_of(&self, i: u32, kind: NeighborKind) -> &[u32] {
+        let g = self.graphs[kind.index()].get_or_init(|| self.build_graph(kind));
+        let i = i as usize;
+        &g.data[g.offsets[i]..g.offsets[i + 1]]
+    }
+
+    /// A uniformly random valid neighbor of `i` under `kind`, if any: one
+    /// RNG draw indexing the CSR row, every neighbor exactly equally
+    /// likely. This deliberately changed the proposal distribution of the
+    /// pre-CSR rejection scheme for **all** kinds: Hamming remapped draws
+    /// colliding with the base value to `(v+1) % card` (that neighbor was
+    /// twice as likely); Adjacent/StrictlyAdjacent drew a uniform
+    /// dimension then ±1 (dimension-weighted, and diagonal
+    /// strictly-adjacent moves were reachable almost only through the
+    /// rare exhaustive fallback — they now carry full weight).
+    pub fn random_neighbor(&self, i: u32, rng: &mut Rng, kind: NeighborKind) -> Option<u32> {
+        let row = self.neighbors_of(i, kind);
+        if row.is_empty() {
             None
         } else {
-            Some(*rng.choose(&all))
+            Some(row[rng.below(row.len())])
         }
     }
 
@@ -423,10 +571,54 @@ mod tests {
     }
 
     #[test]
+    fn parallel_build_identical_to_serial() {
+        let serial = {
+            let s = toy();
+            (s.params.clone(), s.constraints.clone(), s)
+        };
+        for width in [2, 4, 8] {
+            let p =
+                SearchSpace::build_parsed_width("toy", serial.0.clone(), serial.1.clone(), width);
+            assert_eq!(p.len(), serial.2.len());
+            for i in p.iter_indices() {
+                assert_eq!(p.config(i), serial.2.config(i), "width {}", width);
+            }
+        }
+    }
+
+    #[test]
     fn all_enumerated_satisfy_constraints() {
         let s = toy();
         for i in s.iter_indices() {
             assert!(s.satisfies_constraints(s.config(i)));
+        }
+    }
+
+    #[test]
+    fn scratch_constraint_check_matches_allocating() {
+        let s = toy();
+        let mut vals = Vec::new();
+        let mut stack = Vec::new();
+        for bx in 0..6u16 {
+            for by in 0..3u16 {
+                for pad in 0..2u16 {
+                    let cfg = [bx, by, pad];
+                    assert_eq!(
+                        s.satisfies_constraints(&cfg),
+                        s.satisfies_constraints_scratch(&cfg, &mut vals, &mut stack)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn values_into_matches_allocating() {
+        let s = toy();
+        let mut buf = Vec::new();
+        for i in s.iter_indices() {
+            s.values_f64_into(i, &mut buf);
+            assert_eq!(buf, s.values_f64(i));
         }
     }
 
@@ -445,6 +637,22 @@ mod tests {
         for i in s.iter_indices().take(10) {
             for j in s.neighbors(i, NeighborKind::Hamming) {
                 assert_eq!(s.hamming(i, j), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn csr_rows_equal_reference_enumeration() {
+        let s = toy();
+        for kind in NeighborKind::ALL {
+            for i in s.iter_indices() {
+                assert_eq!(
+                    s.neighbors_of(i, kind),
+                    s.neighbors(i, kind).as_slice(),
+                    "kind {:?} config {}",
+                    kind,
+                    i
+                );
             }
         }
     }
@@ -482,6 +690,39 @@ mod tests {
                 assert_eq!(s.hamming(i, j), 1);
             }
         }
+    }
+
+    #[test]
+    fn random_neighbor_is_uniform_over_row() {
+        // The pre-CSR sampler remapped draws that collided with the base
+        // value to `(v+1) % card`, making that neighbor twice as likely.
+        // With the CSR row the distribution must be flat.
+        let s = toy();
+        let i = s
+            .iter_indices()
+            .max_by_key(|&i| s.neighbors(i, NeighborKind::Hamming).len())
+            .unwrap();
+        let row = s.neighbors(i, NeighborKind::Hamming);
+        assert!(row.len() >= 3, "toy space should have a multi-neighbor row");
+        let mut counts: std::collections::HashMap<u32, u64> = HashMap::new();
+        let mut rng = Rng::new(7);
+        let draws = 30_000u64;
+        for _ in 0..draws {
+            let j = s.random_neighbor(i, &mut rng, NeighborKind::Hamming).unwrap();
+            *counts.entry(j).or_insert(0) += 1;
+        }
+        let expected = draws as f64 / row.len() as f64;
+        for &j in &row {
+            let c = *counts.get(&j).unwrap_or(&0) as f64;
+            assert!(
+                (c - expected).abs() < 0.2 * expected,
+                "neighbor {} drawn {} times, expected ~{}",
+                j,
+                c,
+                expected
+            );
+        }
+        assert_eq!(counts.len(), row.len(), "all neighbors reachable");
     }
 
     #[test]

@@ -113,14 +113,10 @@ impl EvalBackend for CachedBackend<'_> {
         self.evals += 1;
         // Observed value: mean over the benchmark repetitions, drawn from
         // the noise stream keyed by this run's unique-evaluation ordinal.
+        // The fused cache call is bit-identical to the per-draw
+        // `observe_ms` loop (pinned by `observe_mean_matches_per_draw_loop`).
         let base = self.evals.wrapping_mul(RUNS_PER_EVAL as u64 + 1);
-        self.cache.true_mean_ms(i).map(|_| {
-            let mut sum = 0.0;
-            for r in 0..RUNS_PER_EVAL as u64 {
-                sum += self.cache.observe_ms(i, base + r).unwrap();
-            }
-            sum / RUNS_PER_EVAL as f64
-        })
+        self.cache.observe_mean_ms(i, base, RUNS_PER_EVAL)
     }
 }
 

@@ -51,29 +51,57 @@ impl Cache {
 
     /// Build against an existing (shared) space — the space enumeration is
     /// the expensive part for hotspot, so callers batch-share it.
+    ///
+    /// Model evaluation is embarrassingly parallel (each entry is a pure
+    /// function of its config), so it is chunked across the process
+    /// default width; chunk outputs concatenate in index order, keeping
+    /// the cache byte-identical for any `--threads`.
     pub fn build_with_space(
         app: Application,
         gpu: &'static GpuSpec,
         space: Arc<SearchSpace>,
     ) -> Cache {
+        Self::build_with_space_width(app, gpu, space, crate::util::parallel::default_width())
+    }
+
+    /// [`Self::build_with_space`] with an explicit worker count (the
+    /// determinism tests compare width 1 against wide builds).
+    pub fn build_with_space_width(
+        app: Application,
+        gpu: &'static GpuSpec,
+        space: Arc<SearchSpace>,
+        width: usize,
+    ) -> Cache {
         let model: Box<dyn KernelModel> = model_for(app, &space.params);
         let salt = space_salt(app, gpu);
         let n = space.len();
+        let model_ref: &dyn KernelModel = &*model;
+        let space_ref: &SearchSpace = &space;
+        let chunks = crate::util::parallel::map_chunks_width(n, 4096, width, |range| {
+            let mut mean_ms = Vec::with_capacity(range.len());
+            let mut compile_s = Vec::with_capacity(range.len());
+            let mut vals = Vec::with_capacity(space_ref.dims());
+            for i in range {
+                let cfg = space_ref.config(i as u32);
+                space_ref.values_f64_into(i as u32, &mut vals);
+                let t = model_ref.runtime_ms(&vals, gpu, salt);
+                mean_ms.push(t.map(|t| t as f32).unwrap_or(f32::INFINITY));
+                // Compile time: a deterministic lognormal spread around
+                // the device mean, keyed only by the config hash. It does
+                // NOT model code size — no parameter (unrolling included)
+                // shifts the distribution; only the identity of the
+                // config selects the draw.
+                let h = hash_config(salt ^ 0xC0817E, cfg);
+                let z = hash_normal(h);
+                compile_s.push((gpu.compile_time_s * (0.35 * z).exp()) as f32);
+            }
+            (mean_ms, compile_s)
+        });
         let mut mean_ms = Vec::with_capacity(n);
         let mut compile_s = Vec::with_capacity(n);
-        let mut vals = vec![0.0f64; space.dims()];
-        for i in space.iter_indices() {
-            let cfg = space.config(i);
-            for (d, &vi) in cfg.iter().enumerate() {
-                vals[d] = space.params.value_f64(d, vi);
-            }
-            let t = model.runtime_ms(&vals, gpu, salt);
-            mean_ms.push(t.map(|t| t as f32).unwrap_or(f32::INFINITY));
-            // Compile time: deterministic lognormal around the device mean,
-            // inflated by unrolling-heavy configurations (more code).
-            let h = hash_config(salt ^ 0xC0817E, cfg);
-            let z = hash_normal(h);
-            compile_s.push((gpu.compile_time_s * (0.35 * z).exp()) as f32);
+        for (mm, cs) in chunks {
+            mean_ms.extend_from_slice(&mm);
+            compile_s.extend_from_slice(&cs);
         }
 
         let mut ok: Vec<f64> = mean_ms
@@ -194,6 +222,27 @@ impl Cache {
         Some(t as f64 * (MEASUREMENT_SIGMA * hash_normal(h)).exp())
     }
 
+    /// Mean of `runs` consecutive noisy observations of config `i`
+    /// starting at draw ordinal `base` — bit-identical to averaging
+    /// [`Self::observe_ms`] over `base..base+runs` (same per-draw values,
+    /// same accumulation order), with the config slice fetch and the
+    /// finiteness check hoisted out of the loop. This is the simulated
+    /// evaluation inner loop ([`super::backend::CachedBackend`]).
+    #[inline]
+    pub fn observe_mean_ms(&self, i: u32, base: u64, runs: u32) -> Option<f64> {
+        let t = self.mean_ms[i as usize];
+        if !t.is_finite() {
+            return None;
+        }
+        let cfg = self.space.config(i);
+        let mut sum = 0.0;
+        for r in 0..runs as u64 {
+            let h = hash_config(self.salt ^ (base + r).wrapping_mul(0x9E3779B97F4A7C15), cfg);
+            sum += t as f64 * (MEASUREMENT_SIGMA * hash_normal(h)).exp();
+        }
+        Some(sum / runs as f64)
+    }
+
     /// Simulated wall-clock cost of evaluating config `i` once (compile +
     /// benchmark repetitions), seconds.
     #[inline]
@@ -295,6 +344,38 @@ mod tests {
         let failures = c.mean_ms.iter().filter(|t| !t.is_finite()).count();
         let rate = failures as f64 / c.len() as f64;
         assert!(rate > 0.0 && rate < 0.12, "failure rate {}", rate);
+    }
+
+    #[test]
+    fn observe_mean_matches_per_draw_loop() {
+        let c = small_cache();
+        for i in 0..40u32 {
+            for base in [0u64, 8, 1024] {
+                let fused = c.observe_mean_ms(i, base, RUNS_PER_EVAL);
+                let loop_mean = c.true_mean_ms(i).map(|_| {
+                    let mut sum = 0.0;
+                    for r in 0..RUNS_PER_EVAL as u64 {
+                        sum += c.observe_ms(i, base + r).unwrap();
+                    }
+                    sum / RUNS_PER_EVAL as f64
+                });
+                assert_eq!(fused, loop_mean, "config {} base {}", i, base);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_cache_build_identical_to_serial() {
+        let app = Application::Convolution;
+        let gpu = GpuSpec::by_name("A4000").unwrap();
+        let space = std::sync::Arc::new(app.build_space());
+        let serial = Cache::build_with_space_width(app, gpu, std::sync::Arc::clone(&space), 1);
+        let wide = Cache::build_with_space_width(app, gpu, std::sync::Arc::clone(&space), 8);
+        assert_eq!(serial.mean_ms, wide.mean_ms);
+        assert_eq!(serial.compile_s, wide.compile_s);
+        assert_eq!(serial.optimum_ms, wide.optimum_ms);
+        assert_eq!(serial.median_ms, wide.median_ms);
+        assert_eq!(serial.mean_eval_cost_s, wide.mean_eval_cost_s);
     }
 
     #[test]

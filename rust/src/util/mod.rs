@@ -1,5 +1,5 @@
 //! Shared utilities: PRNG, statistics, JSON/table rendering, property tests,
-//! error-context plumbing.
+//! error-context plumbing, and the process-wide parallelism primitives.
 //!
 //! The offline build environment provides no `rand`, `serde`, `criterion`,
 //! `proptest` or `anyhow`; these modules are small, tested substitutes (see
@@ -7,6 +7,7 @@
 
 pub mod error;
 pub mod json;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,138 @@
+//! Process-wide parallelism width and deterministic chunked fan-out.
+//!
+//! Two things live here, shared by every layer that spawns threads:
+//!
+//! - The **default width**: one process-global knob (0 = size to the
+//!   machine) set by the CLI's `--threads` and consulted by the
+//!   coordinator's [`Scheduler`](crate::coordinator::Scheduler) *and* by
+//!   the construction paths below it (space enumeration, neighbor-graph
+//!   and cache builds). Width never affects results, only concurrency.
+//! - [`map_chunks`]: order-preserving chunked fan-out. The index range is
+//!   split into contiguous chunks, workers claim chunks off an atomic
+//!   cursor, and the per-chunk outputs are returned **in chunk order** —
+//!   so a caller that concatenates them gets output byte-identical to a
+//!   serial loop, for any width. This is the primitive behind the
+//!   determinism contract of parallel space and cache construction
+//!   (`rust/tests/integration_hotpath.rs` pins it).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Process-wide default width (0 = size to the machine). Set once by the
+/// CLI's `--threads`, read by [`default_width`].
+static DEFAULT_WIDTH: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process default width (`None` restores machine-sized).
+pub fn set_default_width(threads: Option<usize>) {
+    DEFAULT_WIDTH.store(threads.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// The effective default width: the CLI override if set, otherwise the
+/// machine's available parallelism (min 1).
+pub fn default_width() -> usize {
+    match DEFAULT_WIDTH.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n.max(1),
+    }
+}
+
+/// Split `0..n` into contiguous chunks of at most `chunk_size` elements.
+fn chunk_ranges(n: usize, chunk_size: usize) -> Vec<Range<usize>> {
+    let chunk_size = chunk_size.max(1);
+    let mut out = Vec::with_capacity(n.div_ceil(chunk_size));
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk_size).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Apply `f` to contiguous chunks of `0..n` on up to `width` workers and
+/// return the per-chunk outputs in chunk order.
+///
+/// `f` must be a pure function of its range for the determinism contract
+/// to hold; under that condition the result is identical for every
+/// `width`, including 1 (which runs inline without spawning).
+///
+/// `T: Send + Sync` because the result slots (`OnceLock<T>`) are shared
+/// by reference across the scoped workers.
+pub fn map_chunks_width<T, F>(n: usize, chunk_size: usize, width: usize, f: F) -> Vec<T>
+where
+    T: Send + Sync,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let chunks = chunk_ranges(n, chunk_size);
+    let width = width.max(1).min(chunks.len());
+    if width <= 1 {
+        return chunks.into_iter().map(f).collect();
+    }
+    let slots: Vec<OnceLock<T>> = (0..chunks.len()).map(|_| OnceLock::new()).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..width {
+            scope.spawn(|| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= chunks.len() {
+                    break;
+                }
+                let value = f(chunks[c].clone());
+                if slots[c].set(value).is_err() {
+                    panic!("chunk slot written twice");
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("map_chunks finished with a missing chunk"))
+        .collect()
+}
+
+/// [`map_chunks_width`] at the process default width.
+pub fn map_chunks<T, F>(n: usize, chunk_size: usize, f: F) -> Vec<T>
+where
+    T: Send + Sync,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    map_chunks_width(n, chunk_size, default_width(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_range_in_order() {
+        let r = chunk_ranges(10, 3);
+        assert_eq!(r, vec![0..3, 3..6, 6..9, 9..10]);
+        assert!(chunk_ranges(0, 3).is_empty());
+        // chunk_size 0 is clamped to 1.
+        assert_eq!(chunk_ranges(2, 0).len(), 2);
+    }
+
+    #[test]
+    fn output_in_chunk_order_any_width() {
+        let serial = map_chunks_width(1000, 7, 1, |r| r.sum::<usize>());
+        for width in [2, 4, 16] {
+            let parallel = map_chunks_width(1000, 7, width, |r| r.sum::<usize>());
+            assert_eq!(serial, parallel, "width {}", width);
+        }
+    }
+
+    #[test]
+    fn concatenation_equals_serial_loop() {
+        let chunks = map_chunks_width(257, 16, 8, |r| r.map(|i| i * i).collect::<Vec<_>>());
+        let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+        let expected: Vec<usize> = (0..257).map(|i| i * i).collect();
+        assert_eq!(flat, expected);
+    }
+
+    // NOTE: no set-and-read test of DEFAULT_WIDTH here — the process
+    // global is shared with `coordinator::scheduler`'s
+    // `width_is_clamped_and_default_is_settable`, which owns that assert;
+    // a second mutating test in the same binary would race it under the
+    // parallel test runner.
+}

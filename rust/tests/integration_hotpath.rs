@@ -1,0 +1,241 @@
+//! Integration: the precomputed hot path (PR 4).
+//!
+//! - CSR neighbor rows (`SearchSpace::neighbors_of`) must equal the
+//!   pre-refactor on-the-fly enumeration element-for-element, for all
+//!   four application spaces and all three `NeighborKind`s. The reference
+//!   implementation below is the pre-CSR `SearchSpace::neighbors` code,
+//!   ported verbatim so drift in the shared helper cannot mask a
+//!   regression.
+//! - Parallel space construction must be byte-identical to `--threads 1`
+//!   construction (the enumeration-order contract every config ordinal,
+//!   seed and golden result depends on).
+//! - The CSR table must come out identical no matter which thread wins
+//!   the `OnceLock` race (build under `std::thread::scope` contention vs
+//!   a serial build).
+//! - Compiled constraint programs must agree with the AST evaluator on
+//!   arbitrary (also invalid) assignments.
+
+use std::sync::Arc;
+
+use llamea_kt::searchspace::{Application, NeighborKind, SearchSpace};
+use llamea_kt::util::proptest::check;
+
+/// Pre-refactor `SearchSpace::neighbors`, verbatim (hash probes over an
+/// owned probe vector; StrictlyAdjacent = Adjacent then diagonals).
+fn reference_neighbors(space: &SearchSpace, i: u32, kind: NeighborKind) -> Vec<u32> {
+    let base = space.config(i).to_vec();
+    let mut out = Vec::new();
+    let mut probe = base.clone();
+    let dims = space.dims();
+    match kind {
+        NeighborKind::Hamming => {
+            for d in 0..dims {
+                let orig = base[d];
+                for vi in 0..space.params.params[d].cardinality() as u16 {
+                    if vi == orig {
+                        continue;
+                    }
+                    probe[d] = vi;
+                    if let Some(j) = space.index_of(&probe) {
+                        out.push(j);
+                    }
+                }
+                probe[d] = orig;
+            }
+        }
+        NeighborKind::Adjacent => {
+            for d in 0..dims {
+                let orig = base[d];
+                let card = space.params.params[d].cardinality() as u16;
+                if orig > 0 {
+                    probe[d] = orig - 1;
+                    if let Some(j) = space.index_of(&probe) {
+                        out.push(j);
+                    }
+                }
+                if orig + 1 < card {
+                    probe[d] = orig + 1;
+                    if let Some(j) = space.index_of(&probe) {
+                        out.push(j);
+                    }
+                }
+                probe[d] = orig;
+            }
+        }
+        NeighborKind::StrictlyAdjacent => {
+            out = reference_neighbors(space, i, NeighborKind::Adjacent);
+            for d1 in 0..dims {
+                for d2 in (d1 + 1)..dims {
+                    for s1 in [-1i32, 1] {
+                        for s2 in [-1i32, 1] {
+                            let v1 = base[d1] as i32 + s1;
+                            let v2 = base[d2] as i32 + s2;
+                            if v1 < 0
+                                || v2 < 0
+                                || v1 >= space.params.params[d1].cardinality() as i32
+                                || v2 >= space.params.params[d2].cardinality() as i32
+                            {
+                                continue;
+                            }
+                            probe[d1] = v1 as u16;
+                            probe[d2] = v2 as u16;
+                            if let Some(j) = space.index_of(&probe) {
+                                out.push(j);
+                            }
+                            probe[d1] = base[d1];
+                            probe[d2] = base[d2];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Property: sampled CSR rows equal the reference enumeration (plus the
+/// first and last row, the concatenation seams of the chunked build).
+fn csr_matches_reference(app: Application, cases: u64) {
+    let space = app.build_space();
+    for kind in NeighborKind::ALL {
+        let last = space.len() as u32 - 1;
+        for i in [0, last] {
+            assert_eq!(
+                space.neighbors_of(i, kind),
+                reference_neighbors(&space, i, kind).as_slice(),
+                "{} {:?} row {}",
+                app.name(),
+                kind,
+                i
+            );
+        }
+        check(&format!("csr {} {:?}", app.name(), kind), cases, |rng| {
+            let i = rng.below(space.len()) as u32;
+            assert_eq!(
+                space.neighbors_of(i, kind),
+                reference_neighbors(&space, i, kind).as_slice(),
+                "{} {:?} row {}",
+                app.name(),
+                kind,
+                i
+            );
+        });
+    }
+}
+
+#[test]
+fn csr_matches_reference_dedispersion() {
+    csr_matches_reference(Application::Dedispersion, 400);
+}
+
+#[test]
+fn csr_matches_reference_convolution() {
+    csr_matches_reference(Application::Convolution, 400);
+}
+
+#[test]
+fn csr_matches_reference_gemm() {
+    csr_matches_reference(Application::Gemm, 250);
+}
+
+#[test]
+fn csr_matches_reference_hotspot() {
+    csr_matches_reference(Application::Hotspot, 150);
+}
+
+#[test]
+fn parallel_space_build_byte_identical_to_serial() {
+    for app in [Application::Dedispersion, Application::Convolution, Application::Gemm] {
+        let base = app.build_space(); // process-default width
+        let serial = SearchSpace::build_parsed_width(
+            &base.name,
+            base.params.clone(),
+            base.constraints.clone(),
+            1,
+        );
+        let wide = SearchSpace::build_parsed_width(
+            &base.name,
+            base.params.clone(),
+            base.constraints.clone(),
+            8,
+        );
+        assert_eq!(serial.len(), base.len(), "{}", app.name());
+        assert_eq!(serial.len(), wide.len(), "{}", app.name());
+        for i in serial.iter_indices() {
+            assert_eq!(serial.config(i), wide.config(i), "{} config {}", app.name(), i);
+            assert_eq!(serial.config(i), base.config(i), "{} config {}", app.name(), i);
+        }
+    }
+}
+
+#[test]
+fn csr_rows_identical_regardless_of_building_thread() {
+    // Serial reference: every row of every kind, built on this thread.
+    let serial = Application::Convolution.build_space();
+    for kind in NeighborKind::ALL {
+        let _ = serial.neighbors_of(0, kind);
+    }
+
+    // Fresh space, tables raced by 8 threads under scope contention; the
+    // OnceLock admits one winner per kind, and chunk-ordered assembly
+    // makes every candidate table identical — so the surviving rows must
+    // match the serial build exactly.
+    let contended = Arc::new(Application::Convolution.build_space());
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let sp = Arc::clone(&contended);
+            scope.spawn(move || {
+                for kind in NeighborKind::ALL {
+                    let i = (t * 131) as u32 % sp.len() as u32;
+                    let _ = sp.neighbors_of(i, kind);
+                }
+            });
+        }
+    });
+    for kind in NeighborKind::ALL {
+        for i in serial.iter_indices() {
+            assert_eq!(
+                contended.neighbors_of(i, kind),
+                serial.neighbors_of(i, kind),
+                "kind {:?} row {}",
+                kind,
+                i
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_constraints_match_ast_on_random_assignments() {
+    for app in Application::ALL {
+        let space = app.build_space();
+        check(&format!("constraints {}", app.name()), 512, |rng| {
+            // Arbitrary raw assignment — valid or not.
+            let cfg: Vec<u16> = (0..space.dims())
+                .map(|d| rng.below(space.params.params[d].cardinality()) as u16)
+                .collect();
+            let vals: Vec<f64> = cfg
+                .iter()
+                .enumerate()
+                .map(|(d, &vi)| space.params.value_f64(d, vi))
+                .collect();
+            let mut stack = Vec::new();
+            for c in &space.constraints {
+                assert_eq!(
+                    c.holds(&vals),
+                    c.holds_scratch(&vals, &mut stack),
+                    "{}: {}",
+                    app.name(),
+                    c.source
+                );
+            }
+            let mut vbuf = Vec::new();
+            assert_eq!(
+                space.satisfies_constraints(&cfg),
+                space.satisfies_constraints_scratch(&cfg, &mut vbuf, &mut stack),
+                "{}",
+                app.name()
+            );
+        });
+    }
+}
