@@ -1,0 +1,791 @@
+//! The streaming execution engine behind every tuning-job batch.
+//!
+//! [`Executor`] replaces the drain-everything `Scheduler::run` seam with a
+//! worker pool driven by a **backpressured job stream**:
+//!
+//! - jobs come from a [`JobSource`] — an iterator-style seam, so grids and
+//!   meta-batches stream into the pool instead of being materialized as a
+//!   `Vec<TuningJob>` up front. The pool never holds more than `queue_cap`
+//!   *jobs* pulled-but-unfinished; per-slot bookkeeping (a small
+//!   [`JobHandle`] record and, for completed jobs, the result curve) still
+//!   accumulates over the whole stream — streaming bounds the
+//!   pre-execution materialization, not the result storage;
+//! - each streamed job carries a [`Priority`]; free workers always take
+//!   the highest-priority queued job (ties go to the lower slot). Because
+//!   every job's seed is pre-derived, priorities reorder *execution*,
+//!   never results;
+//! - a [`CancelToken`] cancels cooperatively: running jobs observe it at
+//!   their next between-evaluations budget check and wind down, queued
+//!   and unpulled jobs are never started. Every job that completes is
+//!   bit-identical to its drain-all counterpart — cancellation changes
+//!   *which* jobs complete, never *what* a completed job returns;
+//! - a panicking job is isolated with `catch_unwind` and surfaces as
+//!   [`JobOutcome::Failed`] in its own slot — the rest of the batch keeps
+//!   its results (the old pool lost the whole `thread::scope`);
+//! - [`Progress`] events (started / finished / cancelled / failed, with
+//!   completed-so-far counters) stream to an optional consumer — the CLI
+//!   live line, `sweep`'s job counters. Consumers only observe; event
+//!   timing cannot change results (though a consumer may cancel).
+//!
+//! ## Determinism contract
+//!
+//! A job's result depends only on its `(source, setup, factory, seed)` —
+//! the [`TuningJob`](super::job::TuningJob) contract — and results land in
+//! **slot-indexed** handles (slot = position in the job stream). So for a
+//! fixed job stream, the completed results are byte-identical for any
+//! worker count, any `queue_cap`, any priority assignment, and any
+//! progress-consumer timing. Under cancellation, the *set* of completed
+//! slots may vary run to run, but each completed slot's curve is exactly
+//! what the drain-all run produces for that slot
+//! (`rust/tests/integration_coordinator.rs` pins all four properties).
+
+use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+
+use super::job::TuningJob;
+use crate::util::cancel::CancelToken;
+use crate::util::error::panic_message;
+use crate::util::json::Json;
+use crate::util::parallel;
+
+/// Scheduling weight of one job: higher runs first (e.g. successive
+/// halving's higher rungs, whose scores gate the next elimination).
+/// Priorities never affect results, only the order work is picked up in —
+/// and only within the executor's bounded lookahead window.
+pub type Priority = i64;
+
+/// One streamed job plus its scheduling metadata.
+pub struct SourcedJob<'a> {
+    pub job: TuningJob<'a>,
+    pub priority: Priority,
+}
+
+impl<'a> From<TuningJob<'a>> for SourcedJob<'a> {
+    fn from(job: TuningJob<'a>) -> SourcedJob<'a> {
+        SourcedJob { job, priority: 0 }
+    }
+}
+
+/// A backpressured stream of tuning jobs.
+///
+/// The executor pulls jobs on demand and never runs more than `queue_cap`
+/// ahead of completion, so sources can generate huge grids lazily. The
+/// slot (result index) of a job is its position in the stream; sources
+/// must yield a deterministic sequence for the determinism contract to
+/// hold. `Send` because the pool's workers share the source behind a lock
+/// and whichever worker is free pulls next.
+pub trait JobSource<'a>: Send {
+    /// The next job, or `None` once the stream is exhausted (the executor
+    /// stops polling after the first `None`).
+    fn next_job(&mut self) -> Option<SourcedJob<'a>>;
+
+    /// Bounds on the number of jobs remaining, iterator-style. Used for
+    /// progress estimation and — only when *exact* (lower == upper) — to
+    /// avoid spawning workers a small batch can never feed; never
+    /// trusted for allocation or termination.
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (0, None)
+    }
+}
+
+/// An indexed lazy source: `len` jobs computed on demand from their flat
+/// index. The shape behind streamed grids (`grid_source`, the hypertune
+/// fan-out): position arithmetic instead of a materialized `Vec`.
+pub struct FnSource<F> {
+    len: usize,
+    next: usize,
+    f: F,
+}
+
+impl<F> FnSource<F> {
+    pub fn new(len: usize, f: F) -> FnSource<F> {
+        FnSource { len, next: 0, f }
+    }
+}
+
+impl<'a, F: FnMut(usize) -> SourcedJob<'a> + Send> JobSource<'a> for FnSource<F> {
+    fn next_job(&mut self) -> Option<SourcedJob<'a>> {
+        if self.next >= self.len {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        Some((self.f)(i))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.len - self.next;
+        (left, Some(left))
+    }
+}
+
+/// Any iterator of [`SourcedJob`]s as a [`JobSource`].
+pub struct IterSource<I>(pub I);
+
+impl<'a, I: Iterator<Item = SourcedJob<'a>> + Send> JobSource<'a> for IterSource<I> {
+    fn next_job(&mut self) -> Option<SourcedJob<'a>> {
+        self.0.next()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.0.size_hint()
+    }
+}
+
+/// How one job ended.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobOutcome {
+    /// Ran to completion; the curve is bit-identical to the same job in a
+    /// drain-all run.
+    Completed(Vec<f64>),
+    /// Never started, or observed the cancel token mid-run (partial output
+    /// discarded — see `TuningContext::cancellation_observed`).
+    Cancelled,
+    /// The job panicked; the payload message, batch preserved.
+    Failed(String),
+}
+
+impl JobOutcome {
+    pub fn curve(&self) -> Option<&[f64]> {
+        match self {
+            JobOutcome::Completed(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self, JobOutcome::Completed(_))
+    }
+}
+
+/// Per-job record of an executor run: the job's slot (position in the
+/// stream — results are reassembled by slot, never by completion order),
+/// its reassembly group and scheduling metadata, and how it ended.
+#[derive(Debug, Clone)]
+pub struct JobHandle {
+    pub slot: usize,
+    pub group: usize,
+    pub priority: Priority,
+    pub seed: u64,
+    pub outcome: JobOutcome,
+}
+
+/// Completion counters of a batch (the `"jobs"` block of `coordinate
+/// --out` / `sweep --out` reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JobsSummary {
+    pub completed: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+}
+
+impl JobsSummary {
+    pub fn total(&self) -> usize {
+        self.completed + self.cancelled + self.failed
+    }
+
+    pub fn all_completed(&self) -> bool {
+        self.cancelled == 0 && self.failed == 0
+    }
+
+    /// Accumulate another batch's counters (sweeps run many batches).
+    pub fn absorb(&mut self, other: JobsSummary) {
+        self.completed += other.completed;
+        self.cancelled += other.cancelled;
+        self.failed += other.failed;
+    }
+
+    /// The `{"completed":…,"cancelled":…,"failed":…}` report block.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("completed", self.completed);
+        j.set("cancelled", self.cancelled);
+        j.set("failed", self.failed);
+        j
+    }
+}
+
+/// Everything one executor run produced, slot-indexed.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// One handle per job pulled from the source (a cancelled run stops
+    /// pulling, so unpulled jobs have no handle — check
+    /// [`Self::fully_drained`] before treating the handle count as the
+    /// grid size), in slot order.
+    pub handles: Vec<JobHandle>,
+    /// Whether the source was pulled to exhaustion. `false` means
+    /// cancellation (or fail-fast) stopped the run with jobs still
+    /// unpulled: the handles cover a prefix window of the stream only.
+    drained: bool,
+}
+
+impl BatchResult {
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    pub fn summary(&self) -> JobsSummary {
+        let mut s = JobsSummary::default();
+        for h in &self.handles {
+            match h.outcome {
+                JobOutcome::Completed(_) => s.completed += 1,
+                JobOutcome::Cancelled => s.cancelled += 1,
+                JobOutcome::Failed(_) => s.failed += 1,
+            }
+        }
+        s
+    }
+
+    /// Each handle's reassembly group, in slot order (feeds
+    /// [`super::report::collate_groups`]).
+    pub fn groups(&self) -> Vec<usize> {
+        self.handles.iter().map(|h| h.group).collect()
+    }
+
+    /// Whether the source was pulled to exhaustion (see `drained`).
+    pub fn fully_drained(&self) -> bool {
+        self.drained
+    }
+
+    /// Drain-all view: every job's curve in slot order. Panics with a
+    /// structured message if any job failed or was cancelled, **or** if
+    /// the source was not pulled to exhaustion (an early cancellation
+    /// must not pass off a prefix as the whole batch) — the compatibility
+    /// surface for callers whose API is curves-only (`Scheduler::run`,
+    /// `run_many`); callers that tolerate partial batches consume
+    /// `handles` directly. A failure is reported in preference to the
+    /// cancellations it triggered under fail-fast.
+    pub fn expect_curves(self) -> Vec<Vec<f64>> {
+        let summary = self.summary();
+        if let Some((slot, group, e)) = self.handles.iter().find_map(|h| match &h.outcome {
+            JobOutcome::Failed(e) => Some((h.slot, h.group, e.clone())),
+            _ => None,
+        }) {
+            panic!(
+                "job {} (group {}) failed: {} ({} of {} jobs completed)",
+                slot, group, e, summary.completed, summary.total()
+            );
+        }
+        if !self.drained || summary.cancelled > 0 {
+            panic!(
+                "batch cancelled: {} of {} pulled jobs completed{}",
+                summary.completed,
+                summary.total(),
+                if self.drained { "" } else { "; the source was not fully drained" }
+            );
+        }
+        self.handles
+            .into_iter()
+            .map(|h| match h.outcome {
+                JobOutcome::Completed(curve) => curve,
+                _ => unreachable!("non-completed outcomes rejected above"),
+            })
+            .collect()
+    }
+}
+
+/// One execution event, streamed to the run's progress consumer as it
+/// happens (from whichever worker is involved — consumers synchronize
+/// themselves). Counters are consistent snapshots taken under the pool
+/// lock.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Progress {
+    /// A worker picked the job up.
+    Started { slot: usize },
+    /// The job completed; `completed` counts completions so far.
+    Finished { slot: usize, completed: usize },
+    /// The job was cancelled before or during execution.
+    Cancelled { slot: usize },
+    /// The job panicked.
+    Failed { slot: usize, error: String },
+}
+
+impl Progress {
+    pub fn slot(&self) -> usize {
+        match *self {
+            Progress::Started { slot }
+            | Progress::Finished { slot, .. }
+            | Progress::Cancelled { slot }
+            | Progress::Failed { slot, .. } => slot,
+        }
+    }
+}
+
+/// A progress consumer: called from worker threads, must synchronize its
+/// own state. Consumers only observe (event timing never changes
+/// results), though holding a [`CancelToken`] they may cancel.
+pub type ProgressSink = dyn Fn(&Progress) + Sync;
+
+fn no_progress(_: &Progress) {}
+
+/// The streaming worker pool. Plain configuration — worker threads are
+/// scoped to each [`Executor::run`] call (jobs borrow caches and setups,
+/// so a persistent `'static` pool is impossible without copying them);
+/// holding an `Executor` shares its width, queue bound and cancel token
+/// across successive batches (the hypertune nested fan-out does exactly
+/// that).
+pub struct Executor {
+    threads: usize,
+    queue_cap: usize,
+    cancel: CancelToken,
+    fail_fast: bool,
+}
+
+impl Executor {
+    /// Pool with exactly `threads` workers (clamped to ≥ 1) and the
+    /// default lookahead window of `2 × threads` jobs.
+    pub fn new(threads: usize) -> Executor {
+        let threads = threads.max(1);
+        Executor { threads, queue_cap: threads * 2, cancel: CancelToken::new(), fail_fast: false }
+    }
+
+    /// Pool sized to the process default
+    /// ([`crate::util::parallel::default_width`]).
+    pub fn auto() -> Executor {
+        Executor::new(parallel::default_width())
+    }
+
+    /// `Some(n)` for an explicit width (the CLI's `--threads`/`--jobs`),
+    /// `None` for the process default.
+    pub fn with_threads(threads: Option<usize>) -> Executor {
+        threads.map(Executor::new).unwrap_or_else(Executor::auto)
+    }
+
+    /// Bound the source lookahead: at most `cap` jobs pulled-but-unfinished
+    /// at any moment (clamped to ≥ 1; a cap below the worker count idles
+    /// the excess workers). This is the backpressure knob *and* the
+    /// priority-reorder window.
+    pub fn queue_cap(mut self, cap: usize) -> Executor {
+        self.queue_cap = cap.max(1);
+        self
+    }
+
+    /// Stop starting new jobs after the first [`JobOutcome::Failed`]
+    /// (jobs already running finish normally; queued/unpulled ones are
+    /// cancelled). The per-run abort is internal state, so a shared
+    /// `Executor` is not poisoned for later batches. Drain-all surfaces
+    /// set this: when `expect_curves` will discard everything on failure
+    /// anyway, computing the rest of a large grid first is pure waste.
+    pub fn fail_fast(mut self) -> Executor {
+        self.fail_fast = true;
+        self
+    }
+
+    /// The run's cancellation token. Hand clones to signal handlers or
+    /// progress consumers; firing it stops new jobs from starting and
+    /// winds down running ones at their next budget check.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Drain the source with no progress consumer.
+    pub fn run<'a>(&self, source: &mut dyn JobSource<'a>) -> BatchResult {
+        self.run_observed(source, &no_progress)
+    }
+
+    /// Convenience: a pre-materialized batch at default priority.
+    pub fn run_jobs(&self, jobs: &[TuningJob<'_>]) -> BatchResult {
+        self.run_jobs_observed(jobs, &no_progress)
+    }
+
+    /// [`Self::run_jobs`] with a progress consumer.
+    pub fn run_jobs_observed(
+        &self,
+        jobs: &[TuningJob<'_>],
+        sink: &ProgressSink,
+    ) -> BatchResult {
+        let mut source = FnSource::new(jobs.len(), |i| jobs[i].into());
+        self.run_observed(&mut source, sink)
+    }
+
+    /// Drain the source, streaming [`Progress`] events to `sink`.
+    pub fn run_observed<'a>(
+        &self,
+        source: &mut dyn JobSource<'a>,
+        sink: &ProgressSink,
+    ) -> BatchResult {
+        let cap = self.queue_cap.max(1);
+        // Don't spawn workers a small batch can never feed — but only
+        // when the hint is exact (indexed grids); a conservative upper
+        // bound must not serialize a large stream.
+        let threads = match source.size_hint() {
+            (lower, Some(upper)) if lower == upper => self.threads.min(upper.max(1)),
+            _ => self.threads,
+        };
+        let pool = Pool {
+            state: Mutex::new(PoolState {
+                source,
+                drained: false,
+                aborted: false,
+                queue: BinaryHeap::new(),
+                pulled: 0,
+                finished: 0,
+                slots: Vec::new(),
+                completed: 0,
+            }),
+            wakeup: Condvar::new(),
+            cap,
+            cancel: &self.cancel,
+            fail_fast: self.fail_fast,
+            sink,
+        };
+        if threads <= 1 {
+            // Inline fast path: same pull/refill/pick loop, no spawn. Keeps
+            // single-width runs cheap while exercising identical logic.
+            pool.worker();
+        } else {
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| pool.worker());
+                }
+            });
+        }
+        pool.finish()
+    }
+}
+
+/// A queued, pulled-but-unstarted job. Max-heap order: higher priority
+/// first, then lower slot — so with equal priorities the pool picks jobs
+/// in stream order.
+struct QueueEntry<'a> {
+    priority: Priority,
+    slot: usize,
+    job: TuningJob<'a>,
+}
+
+impl PartialEq for QueueEntry<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.slot == other.slot
+    }
+}
+impl Eq for QueueEntry<'_> {}
+impl PartialOrd for QueueEntry<'_> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueueEntry<'_> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority.cmp(&other.priority).then(other.slot.cmp(&self.slot))
+    }
+}
+
+/// Slot-indexed bookkeeping for one pulled job.
+struct SlotState {
+    group: usize,
+    priority: Priority,
+    seed: u64,
+    outcome: Option<JobOutcome>,
+}
+
+struct PoolState<'a, 's> {
+    source: &'s mut dyn JobSource<'a>,
+    drained: bool,
+    /// Per-run fail-fast latch: set on the first failed job when the
+    /// executor was built with [`Executor::fail_fast`]; stops pulling and
+    /// starting like a fired cancel token, without touching the (possibly
+    /// shared) token itself.
+    aborted: bool,
+    queue: BinaryHeap<QueueEntry<'a>>,
+    /// Jobs pulled from the source so far (also the next slot index).
+    pulled: usize,
+    /// Jobs with a recorded outcome. The backpressure invariant the pool
+    /// maintains: `pulled - finished <= cap` at every pull.
+    finished: usize,
+    slots: Vec<SlotState>,
+    completed: usize,
+}
+
+struct Pool<'a, 's, 'p> {
+    state: Mutex<PoolState<'a, 's>>,
+    wakeup: Condvar,
+    cap: usize,
+    cancel: &'p CancelToken,
+    fail_fast: bool,
+    sink: &'p ProgressSink,
+}
+
+impl<'a> Pool<'a, '_, '_> {
+    /// One worker: pull/refill under the lock, execute outside it, repeat
+    /// until the source is drained or the token fires. Runs on scoped
+    /// threads — or inline on the caller's thread for width 1.
+    fn worker(&self) {
+        loop {
+            let entry = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if self.cancel.is_cancelled() || st.aborted {
+                        break None;
+                    }
+                    // Refill the bounded queue. The source is polled at
+                    // most `cap` jobs ahead of completion — this is the
+                    // backpressure seam.
+                    while !st.drained && st.pulled - st.finished < self.cap {
+                        match st.source.next_job() {
+                            Some(sj) => {
+                                let slot = st.pulled;
+                                st.pulled += 1;
+                                st.slots.push(SlotState {
+                                    group: sj.job.group,
+                                    priority: sj.priority,
+                                    seed: sj.job.seed,
+                                    outcome: None,
+                                });
+                                st.queue.push(QueueEntry {
+                                    priority: sj.priority,
+                                    slot,
+                                    job: sj.job,
+                                });
+                            }
+                            None => st.drained = true,
+                        }
+                    }
+                    if let Some(e) = st.queue.pop() {
+                        break Some(e);
+                    }
+                    if st.drained {
+                        break None;
+                    }
+                    // Queue empty but the window is full of running jobs:
+                    // wait for a completion to reopen it. A waiting worker
+                    // implies another is running a job, and every
+                    // completion (and worker exit) notifies — no deadlock.
+                    st = self.wakeup.wait(st).unwrap();
+                }
+            };
+            let Some(entry) = entry else {
+                self.wakeup.notify_all();
+                return;
+            };
+            (self.sink)(&Progress::Started { slot: entry.slot });
+            let outcome = execute_isolated(&entry.job, self.cancel);
+            let event = {
+                let mut st = self.state.lock().unwrap();
+                st.finished += 1;
+                let event = match &outcome {
+                    JobOutcome::Completed(_) => {
+                        st.completed += 1;
+                        Progress::Finished { slot: entry.slot, completed: st.completed }
+                    }
+                    JobOutcome::Cancelled => Progress::Cancelled { slot: entry.slot },
+                    JobOutcome::Failed(e) => {
+                        if self.fail_fast {
+                            st.aborted = true;
+                        }
+                        Progress::Failed { slot: entry.slot, error: e.clone() }
+                    }
+                };
+                st.slots[entry.slot].outcome = Some(outcome);
+                event
+            };
+            self.wakeup.notify_all();
+            (self.sink)(&event);
+        }
+    }
+
+    /// After all workers exit: mark jobs a cancellation (or fail-fast
+    /// abort) left in the queue, then freeze the slot table into handles.
+    fn finish(self) -> BatchResult {
+        let mut st = self.state.into_inner().unwrap();
+        while let Some(e) = st.queue.pop() {
+            st.slots[e.slot].outcome = Some(JobOutcome::Cancelled);
+            (self.sink)(&Progress::Cancelled { slot: e.slot });
+        }
+        let handles = st
+            .slots
+            .into_iter()
+            .enumerate()
+            .map(|(slot, s)| JobHandle {
+                slot,
+                group: s.group,
+                priority: s.priority,
+                seed: s.seed,
+                outcome: s.outcome.expect("pulled job left without an outcome"),
+            })
+            .collect();
+        BatchResult { handles, drained: st.drained }
+    }
+}
+
+/// Run one job with per-job panic isolation and cooperative cancellation.
+fn execute_isolated(job: &TuningJob<'_>, cancel: &CancelToken) -> JobOutcome {
+    if cancel.is_cancelled() {
+        return JobOutcome::Cancelled;
+    }
+    match catch_unwind(AssertUnwindSafe(|| job.execute_cancellable(cancel))) {
+        Ok(Some(curve)) => JobOutcome::Completed(curve),
+        Ok(None) => JobOutcome::Cancelled,
+        Err(payload) => JobOutcome::Failed(panic_message(payload.as_ref())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::job_seed;
+    use crate::kernels::gpu::GpuSpec;
+    use crate::methodology::{NamedFactory, SpaceSetup};
+    use crate::searchspace::Application;
+    use crate::tuning::Cache;
+
+    #[test]
+    fn queue_orders_by_priority_then_slot() {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let setup = SpaceSetup::new(&cache);
+        let factory = NamedFactory("sa".into());
+        let entry = |priority: Priority, slot: usize| QueueEntry {
+            priority,
+            slot,
+            job: TuningJob { source: &cache, setup: &setup, factory: &factory, seed: 0, group: 0 },
+        };
+        let mut heap = BinaryHeap::new();
+        heap.push(entry(0, 2));
+        heap.push(entry(5, 3));
+        heap.push(entry(0, 0));
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop().map(|e| e.slot)).collect();
+        assert_eq!(order, vec![3, 0, 2], "highest priority first, then lowest slot");
+    }
+
+    #[test]
+    fn summary_counts_and_json_block() {
+        let mut s = JobsSummary { completed: 3, cancelled: 1, failed: 0 };
+        assert_eq!(s.total(), 4);
+        assert!(!s.all_completed());
+        s.absorb(JobsSummary { completed: 2, cancelled: 0, failed: 1 });
+        assert_eq!(s, JobsSummary { completed: 5, cancelled: 1, failed: 1 });
+        assert_eq!(s.to_json().to_string(), r#"{"completed":5,"cancelled":1,"failed":1}"#);
+    }
+
+    #[test]
+    fn executor_drains_a_streamed_grid_identically_to_the_batch_path() {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let setup = SpaceSetup::new(&cache);
+        let factory = NamedFactory("sa".into());
+        let space_id = cache.id();
+        let job_at = |r: usize| TuningJob {
+            source: &cache,
+            setup: &setup,
+            factory: &factory,
+            seed: job_seed(42, &space_id, "sa", r as u64),
+            group: r % 2,
+        };
+        let jobs: Vec<TuningJob> = (0..6).map(job_at).collect();
+        let batch = Executor::new(4).run_jobs(&jobs);
+        assert_eq!(batch.len(), 6);
+        assert_eq!(batch.groups(), vec![0, 1, 0, 1, 0, 1]);
+        assert!(batch.summary().all_completed());
+        // Streamed (lazy, tiny lookahead) equals materialized, equals serial.
+        let mut lazy = FnSource::new(6, |i| job_at(i).into());
+        let streamed = Executor::new(4).queue_cap(2).run(&mut lazy);
+        let serial = Executor::new(1).run_jobs(&jobs);
+        assert_eq!(batch.expect_curves(), streamed.expect_curves());
+        let serial_curves = serial.expect_curves();
+        let direct: Vec<Vec<f64>> = jobs.iter().map(|j| j.execute()).collect();
+        assert_eq!(serial_curves, direct);
+    }
+
+    #[test]
+    fn fail_fast_aborts_the_stream_and_expect_curves_reports_the_failure() {
+        use crate::methodology::OptimizerFactory;
+        struct Bomb;
+        impl crate::optimizers::Optimizer for Bomb {
+            fn name(&self) -> &str {
+                "bomb"
+            }
+            fn run(&mut self, _ctx: &mut crate::tuning::TuningContext) {
+                panic!("bomb optimizer detonated");
+            }
+        }
+        struct BombFactory;
+        impl OptimizerFactory for BombFactory {
+            fn build(&self) -> Box<dyn crate::optimizers::Optimizer> {
+                Box::new(Bomb)
+            }
+            fn label(&self) -> String {
+                "bomb".into()
+            }
+        }
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let setup = SpaceSetup::new(&cache);
+        let good = NamedFactory("random".into());
+        let bomb = BombFactory;
+        let space_id = cache.id();
+        let mut src = FnSource::new(6, |i| {
+            TuningJob {
+                source: &cache,
+                setup: &setup,
+                factory: if i == 1 {
+                    &bomb as &dyn OptimizerFactory
+                } else {
+                    &good as &dyn OptimizerFactory
+                },
+                seed: job_seed(3, &space_id, "random", i as u64),
+                group: 0,
+            }
+            .into()
+        });
+        // Width 1, default window 2: job 0 completes, job 1 fails and
+        // latches the abort, the one queued job is cancelled, the rest of
+        // the stream is never pulled.
+        let batch = Executor::new(1).fail_fast().run(&mut src);
+        assert!(!batch.fully_drained(), "fail-fast must stop pulling the source");
+        let s = batch.summary();
+        assert_eq!((s.completed, s.cancelled, s.failed), (1, 1, 1));
+        let err = catch_unwind(AssertUnwindSafe(|| batch.expect_curves())).unwrap_err();
+        let msg = panic_message(err.as_ref());
+        assert!(msg.contains("job 1 (group 0) failed"), "{}", msg);
+        assert!(msg.contains("bomb optimizer detonated"), "{}", msg);
+    }
+
+    #[test]
+    fn progress_events_cover_every_slot() {
+        let cache = Cache::build(Application::Convolution, GpuSpec::by_name("A4000").unwrap());
+        let setup = SpaceSetup::new(&cache);
+        let factory = NamedFactory("random".into());
+        let space_id = cache.id();
+        let jobs: Vec<TuningJob> = (0..4)
+            .map(|r| TuningJob {
+                source: &cache,
+                setup: &setup,
+                factory: &factory,
+                seed: job_seed(7, &space_id, "random", r as u64),
+                group: 0,
+            })
+            .collect();
+        let events = Mutex::new(Vec::new());
+        let batch = Executor::new(2)
+            .run_jobs_observed(&jobs, &|p: &Progress| events.lock().unwrap().push(p.clone()));
+        assert!(batch.summary().all_completed());
+        let events = events.into_inner().unwrap();
+        let started: Vec<usize> = events
+            .iter()
+            .filter(|e| matches!(e, Progress::Started { .. }))
+            .map(Progress::slot)
+            .collect();
+        let finished: Vec<usize> = events
+            .iter()
+            .filter(|e| matches!(e, Progress::Finished { .. }))
+            .map(Progress::slot)
+            .collect();
+        assert_eq!(started.len(), 4);
+        assert_eq!(finished.len(), 4);
+        // The completed counter reaches the batch size exactly once.
+        let max_completed = events
+            .iter()
+            .filter_map(|e| match e {
+                Progress::Finished { completed, .. } => Some(*completed),
+                _ => None,
+            })
+            .max();
+        assert_eq!(max_completed, Some(4));
+    }
+}

@@ -19,12 +19,17 @@
 
 use std::sync::Arc;
 
+use super::executor::{FnSource, JobSource, SourcedJob};
 use super::registry::SpaceEntry;
-use crate::methodology::{runner::single_run, OptimizerFactory, SpaceSetup};
+use crate::methodology::{runner::single_run_cancellable, OptimizerFactory, SpaceSetup};
 use crate::tuning::BackendSource;
+use crate::util::cancel::CancelToken;
 use crate::util::rng::{avalanche, fnv1a};
 
-/// One seeded tuning run against an evaluation-backend source.
+/// One seeded tuning run against an evaluation-backend source. `Copy`
+/// (the fields are shared references plus scalars), so sources can mint
+/// jobs from borrowed grid state on demand.
+#[derive(Clone, Copy)]
 pub struct TuningJob<'a> {
     /// Mints the run's evaluation backend (shared across the batch).
     pub source: &'a dyn BackendSource,
@@ -41,8 +46,18 @@ pub struct TuningJob<'a> {
 impl TuningJob<'_> {
     /// Execute the run and return its performance curve.
     pub fn execute(&self) -> Vec<f64> {
+        self.execute_cancellable(&CancelToken::new())
+            .expect("a fresh token cannot cancel the run")
+    }
+
+    /// Execute the run under a cooperative cancellation token. `None` if
+    /// the run *observed* the fired token at a budget check (its partial
+    /// trajectory is discarded — a truncated curve must never pass as a
+    /// completed result); `Some(curve)` for a run that completed without
+    /// observing it, bit-identical to the uncancelled run.
+    pub fn execute_cancellable(&self, cancel: &CancelToken) -> Option<Vec<f64>> {
         let mut opt = self.factory.build();
-        single_run(self.source, self.setup, opt.as_mut(), self.seed)
+        single_run_cancellable(self.source, self.setup, opt.as_mut(), self.seed, cancel)
     }
 }
 
@@ -77,23 +92,67 @@ pub fn grid_jobs<'a>(
     runs: usize,
     base_seed: u64,
 ) -> Vec<TuningJob<'a>> {
-    let mut jobs = Vec::with_capacity(entries.len() * factories.len() * runs);
-    for (fi, (_, factory)) in factories.iter().enumerate() {
-        let seed_label = factory.label();
-        for (si, e) in entries.iter().enumerate() {
-            let space_id = e.cache.space_id();
-            for r in 0..runs {
-                jobs.push(TuningJob {
-                    source: &e.cache,
-                    setup: &e.setup,
-                    factory: *factory,
-                    seed: job_seed(base_seed, &space_id, &seed_label, r as u64),
-                    group: fi * entries.len() + si,
-                });
-            }
+    collect_jobs(&mut grid_source(entries, factories, runs, base_seed))
+}
+
+/// The one factory-major decomposition behind both streamed grids: flat
+/// index `i` decodes to `(factory fi, entry si, run r)` with group
+/// `fi * n_entries + si`; `entry_at` resolves `si` to its backend source
+/// and setup. Keeping [`grid_source`] and [`source_jobs_source`] on this
+/// single core means the index arithmetic, seed derivation and group
+/// formula cannot drift apart.
+fn product_source<'a, G>(
+    n_entries: usize,
+    factories: &'a [(String, &'a dyn OptimizerFactory)],
+    runs: usize,
+    base_seed: u64,
+    space_ids: Vec<String>,
+    entry_at: G,
+) -> FnSource<impl FnMut(usize) -> SourcedJob<'a> + Send + 'a>
+where
+    G: Fn(usize) -> (&'a dyn BackendSource, &'a SpaceSetup) + Send + 'a,
+{
+    let seed_labels: Vec<String> = factories.iter().map(|(_, f)| f.label()).collect();
+    let per_factory = n_entries * runs;
+    FnSource::new(n_entries * factories.len() * runs, move |i| {
+        let (fi, rem) = (i / per_factory, i % per_factory);
+        let (si, r) = (rem / runs, rem % runs);
+        let (source, setup) = entry_at(si);
+        TuningJob {
+            source,
+            setup,
+            factory: factories[fi].1,
+            seed: job_seed(base_seed, &space_ids[si], &seed_labels[fi], r as u64),
+            group: fi * n_entries + si,
         }
-    }
-    jobs
+        .into()
+    })
+}
+
+/// The streaming twin of [`grid_jobs`]: the identical factory-major job
+/// sequence (same slots, seeds and groups — [`grid_jobs`] is literally
+/// this source collected), generated lazily from the flat index so the
+/// executor's bounded queue, not the grid size, bounds memory.
+pub fn grid_source<'a>(
+    entries: &'a [Arc<SpaceEntry>],
+    factories: &'a [(String, &'a dyn OptimizerFactory)],
+    runs: usize,
+    base_seed: u64,
+) -> FnSource<impl FnMut(usize) -> SourcedJob<'a> + Send + 'a> {
+    product_source(
+        entries.len(),
+        factories,
+        runs,
+        base_seed,
+        entries.iter().map(|e| e.cache.space_id()).collect(),
+        |si| (&entries[si].cache as &dyn BackendSource, &entries[si].setup),
+    )
+}
+
+/// Drain a source into the materialized job list (the eager views over
+/// the lazy generators; also handy in tests).
+pub fn collect_jobs<'a>(source: &mut dyn JobSource<'a>) -> Vec<TuningJob<'a>> {
+    std::iter::from_fn(|| source.next_job().map(|sj| sj.job)).collect()
 }
 
 /// Expand an (optimizer × source × seed) grid over arbitrary backend
@@ -106,23 +165,25 @@ pub fn source_jobs<'a>(
     runs: usize,
     base_seed: u64,
 ) -> Vec<TuningJob<'a>> {
-    let mut jobs = Vec::with_capacity(sources.len() * factories.len() * runs);
-    for (fi, (_, factory)) in factories.iter().enumerate() {
-        let seed_label = factory.label();
-        for (si, (source, setup)) in sources.iter().enumerate() {
-            let space_id = source.space_id();
-            for r in 0..runs {
-                jobs.push(TuningJob {
-                    source: *source,
-                    setup,
-                    factory: *factory,
-                    seed: job_seed(base_seed, &space_id, &seed_label, r as u64),
-                    group: fi * sources.len() + si,
-                });
-            }
-        }
-    }
-    jobs
+    collect_jobs(&mut source_jobs_source(sources, factories, runs, base_seed))
+}
+
+/// The streaming twin of [`source_jobs`] (same relationship as
+/// [`grid_source`] to [`grid_jobs`]).
+pub fn source_jobs_source<'a>(
+    sources: &'a [(&'a dyn BackendSource, SpaceSetup)],
+    factories: &'a [(String, &'a dyn OptimizerFactory)],
+    runs: usize,
+    base_seed: u64,
+) -> FnSource<impl FnMut(usize) -> SourcedJob<'a> + Send + 'a> {
+    product_source(
+        sources.len(),
+        factories,
+        runs,
+        base_seed,
+        sources.iter().map(|(s, _)| s.space_id()).collect(),
+        |si| (sources[si].0, &sources[si].1),
+    )
 }
 
 #[cfg(test)]
@@ -137,6 +198,65 @@ mod tests {
         assert_ne!(s, job_seed(1, "gemm@A4000", "ga", 0));
         assert_ne!(s, job_seed(1, "gemm@A100", "sa", 0));
         assert_ne!(s, job_seed(1, "gemm@A100", "ga", 1));
+    }
+
+    #[test]
+    fn grid_source_matches_the_verbatim_nested_loop() {
+        // `grid_jobs` is the collected `grid_source`; pin the lazy index
+        // arithmetic against a verbatim port of the pre-streaming loop.
+        use crate::coordinator::registry::{CacheKey, CacheRegistry};
+        use crate::methodology::NamedFactory;
+        let reg = CacheRegistry::new();
+        let entries = vec![
+            reg.entry(CacheKey::parse("convolution@A4000").unwrap()),
+            reg.entry(CacheKey::parse("convolution@W6600").unwrap()),
+        ];
+        let named: Vec<(String, NamedFactory)> = ["sa", "random"]
+            .iter()
+            .map(|n| (n.to_string(), NamedFactory(n.to_string())))
+            .collect();
+        let factories: Vec<(String, &dyn OptimizerFactory)> =
+            named.iter().map(|(l, f)| (l.clone(), f as &dyn OptimizerFactory)).collect();
+        let runs = 3;
+        let jobs = grid_jobs(&entries, &factories, runs, 17);
+        let mut expected: Vec<(u64, usize)> = Vec::new();
+        for (fi, (_, factory)) in factories.iter().enumerate() {
+            let seed_label = factory.label();
+            for (si, e) in entries.iter().enumerate() {
+                let space_id = e.cache.space_id();
+                for r in 0..runs {
+                    expected.push((
+                        job_seed(17, &space_id, &seed_label, r as u64),
+                        fi * entries.len() + si,
+                    ));
+                }
+            }
+        }
+        let got: Vec<(u64, usize)> = jobs.iter().map(|j| (j.seed, j.group)).collect();
+        assert_eq!(got, expected);
+
+        // And the source_jobs flavor, against its own verbatim loop (the
+        // shared core makes them agree, but pin each public surface).
+        let sources: Vec<(&dyn BackendSource, SpaceSetup)> = entries
+            .iter()
+            .map(|e| (&e.cache as &dyn BackendSource, SpaceSetup::new(&e.cache)))
+            .collect();
+        let sjobs = source_jobs(&sources, &factories, runs, 17);
+        let mut sexpected: Vec<(u64, usize)> = Vec::new();
+        for (fi, (_, factory)) in factories.iter().enumerate() {
+            let seed_label = factory.label();
+            for (si, (source, _)) in sources.iter().enumerate() {
+                let space_id = source.space_id();
+                for r in 0..runs {
+                    sexpected.push((
+                        job_seed(17, &space_id, &seed_label, r as u64),
+                        fi * sources.len() + si,
+                    ));
+                }
+            }
+        }
+        let sgot: Vec<(u64, usize)> = sjobs.iter().map(|j| (j.seed, j.group)).collect();
+        assert_eq!(sgot, sexpected);
     }
 
     #[test]

@@ -1,11 +1,11 @@
-//! The L3 coordinator: job-graph scheduling of tuning runs over shared,
-//! memoized search spaces (the paper's three-level view of auto-tuning at
-//! scale — L1 kernel measurement, L2 per-space optimization, L3
-//! cross-experiment orchestration).
+//! The L3 coordinator: streaming execution of tuning-job graphs over
+//! shared, memoized search spaces (the paper's three-level view of
+//! auto-tuning at scale — L1 kernel measurement, L2 per-space
+//! optimization, L3 cross-experiment orchestration).
 //!
 //! The paper's evaluation is a large cross product — optimizers ×
 //! applications × GPUs × seeds — and every harness entry point is some
-//! slice of it. The coordinator decomposes that product into its three
+//! slice of it. The coordinator decomposes that product into its
 //! orthogonal concerns:
 //!
 //! - [`registry`]: a process-wide [`registry::CacheRegistry`] that lazily
@@ -14,30 +14,59 @@
 //!   stage, Tables 2–3, Fig. 7 and Figs. 8–9.
 //! - [`job`]: a [`job::TuningJob`] is one seeded run over any
 //!   `BackendSource` (a registry cache, or a measured-variant source on
-//!   the real-tune path); [`job::grid_jobs`] expands a (spaces ×
-//!   optimizers × seeds) grid into a flat batch with per-job seeds derived
-//!   by [`job::job_seed`] from the job's grid coordinates — never from
-//!   execution order. [`job::source_jobs`] is the same expansion over
-//!   arbitrary backend sources.
-//! - [`scheduler`]: a [`scheduler::Scheduler`] worker pool that drains a
-//!   batch via an atomic cursor, parallelizing across every axis at once
-//!   while keeping results byte-identical for any thread count.
-//! - [`report`]: reassembles flat results into per-(optimizer, space)
-//!   groups, aggregates them with the methodology's score, and renders the
-//!   `coordinate` subcommand's tables.
+//!   the real-tune path), with its seed derived by [`job::job_seed`] from
+//!   the job's grid coordinates — never from execution order.
+//!   [`job::grid_source`] / [`job::source_jobs_source`] generate (spaces ×
+//!   optimizers × seeds) grids **lazily** from the flat index;
+//!   [`job::grid_jobs`] / [`job::source_jobs`] are their collected, eager
+//!   views.
+//! - [`executor`]: the execution engine. An [`executor::Executor`] pulls
+//!   jobs from a backpressured [`executor::JobSource`] (at most
+//!   `queue_cap` jobs pulled-but-unfinished), schedules them by
+//!   [`executor::Priority`] (execution order only — results are
+//!   slot-indexed), cancels cooperatively through a
+//!   [`CancelToken`](crate::util::cancel::CancelToken) (completed jobs
+//!   stay bit-identical to their drain-all counterparts; cancelled jobs
+//!   are discarded, never truncated-and-kept), isolates per-job panics
+//!   (`catch_unwind` → [`executor::JobOutcome::Failed`]), and streams
+//!   [`executor::Progress`] events to an optional consumer (the CLI live
+//!   line, sweep counters).
+//! - [`scheduler`]: the drain-all compatibility wrapper
+//!   ([`scheduler::Scheduler::run`] = run every job, return plain
+//!   curves) kept over the executor during the execution-API transition.
+//! - [`report`]: reassembles slot-ordered results into per-(optimizer,
+//!   space) groups ([`report::collate_groups`] over batch handles, with
+//!   validated group ids), aggregates them with the methodology's score,
+//!   and renders the `coordinate` subcommand's tables and JSON (including
+//!   the `"jobs"` completion block for partial runs).
 //!
-//! `methodology::run_many` is a thin single-space wrapper over the
-//! scheduler, and `harness::experiments` expresses each figure/table as a
-//! job batch against the shared registry, so new execution backends
-//! (sharding, async, distributed) only need to reimplement this module's
-//! seam.
+//! ## Determinism contract
+//!
+//! A job's result is a pure function of its `(source, setup, factory,
+//! seed)`; results land in slots indexed by stream position. Therefore,
+//! for a fixed job stream, completed results are byte-identical for any
+//! worker count, queue bound, priority assignment, or progress-consumer
+//! timing; under cancellation the *set* of completed slots may vary but
+//! never a completed slot's curve. `methodology::run_many`,
+//! `harness::experiments`, `hypertune::MetaTuning` (the nested fan-out
+//! shares one bounded executor rather than spawning ad-hoc scopes) and
+//! `llamea::evolution::fitness_batch` all submit through this seam, so
+//! new execution backends (sharding, distributed workers) only need to
+//! reimplement this module.
 
+pub mod executor;
 pub mod job;
 pub mod registry;
 pub mod report;
 pub mod scheduler;
 
-pub use job::{grid_jobs, job_seed, source_jobs, TuningJob};
+pub use executor::{
+    BatchResult, Executor, FnSource, IterSource, JobHandle, JobOutcome, JobSource, JobsSummary,
+    Priority, Progress, SourcedJob,
+};
+pub use job::{
+    collect_jobs, grid_jobs, grid_source, job_seed, source_jobs, source_jobs_source, TuningJob,
+};
 pub use registry::{CacheKey, CacheRegistry, SpaceEntry};
-pub use report::{collate, grid_aggregates, score_table, scores_json};
+pub use report::{collate, collate_groups, grid_aggregates, score_table, scores_json};
 pub use scheduler::Scheduler;

@@ -1,6 +1,7 @@
 //! Reassembly of flat scheduler output into per-(optimizer, space) curve
 //! groups, aggregate scores, and rendered tables.
 
+use super::executor::JobsSummary;
 use super::job::TuningJob;
 use crate::methodology::{aggregate, Aggregate};
 use crate::util::json::Json;
@@ -10,10 +11,34 @@ use crate::util::table::{f, Table};
 /// preserved within a group, so a group's curves are in run order — exactly
 /// what [`aggregate`] expects per space.
 pub fn collate(n_groups: usize, jobs: &[TuningJob], curves: Vec<Vec<f64>>) -> Vec<Vec<Vec<f64>>> {
-    assert_eq!(jobs.len(), curves.len(), "one curve per job");
+    let groups: Vec<usize> = jobs.iter().map(|j| j.group).collect();
+    collate_groups(n_groups, &groups, curves)
+}
+
+/// [`collate`] over bare group ids — the streaming-executor view, where
+/// per-slot groups come from the batch handles
+/// ([`super::executor::BatchResult::groups`]) instead of a materialized
+/// job list. Group ids are validated up front: a malformed id fails with
+/// a message naming the offending job and group, not an opaque
+/// out-of-bounds index.
+pub fn collate_groups(
+    n_groups: usize,
+    groups: &[usize],
+    curves: Vec<Vec<f64>>,
+) -> Vec<Vec<Vec<f64>>> {
+    assert_eq!(groups.len(), curves.len(), "one curve per job");
+    for (ji, &g) in groups.iter().enumerate() {
+        assert!(
+            g < n_groups,
+            "job {} has group {}, but the batch declares only {} group(s)",
+            ji,
+            g,
+            n_groups
+        );
+    }
     let mut out = vec![Vec::new(); n_groups];
-    for (job, curve) in jobs.iter().zip(curves) {
-        out[job.group].push(curve);
+    for (&g, curve) in groups.iter().zip(curves) {
+        out[g].push(curve);
     }
     out
 }
@@ -48,14 +73,22 @@ pub fn score_table(title: &str, results: &[(String, Aggregate)]) -> Table {
 }
 
 /// The score table as JSON (the `coordinate --out` payload): per-optimizer
-/// aggregate score, std over spaces, and per-space scores keyed by the
-/// space ids. Every field is a pure function of the grid inputs, so files
-/// are byte-identical for any scheduler width; written through
+/// aggregate score, std over spaces, per-space scores keyed by the space
+/// ids, and the batch's `"jobs"` completion block (`{completed,
+/// cancelled, failed}` — so partial runs diff meaningfully downstream).
+/// Every field is a pure function of the grid inputs and outcomes, so
+/// files are byte-identical for any executor width; written through
 /// [`crate::util::json::write_file`], shared with `sweep --out`.
-pub fn scores_json(title: &str, space_ids: &[String], results: &[(String, Aggregate)]) -> Json {
+pub fn scores_json(
+    title: &str,
+    space_ids: &[String],
+    results: &[(String, Aggregate)],
+    jobs: &JobsSummary,
+) -> Json {
     let mut j = Json::obj();
     j.set("title", title);
     j.set("spaces", Json::Arr(space_ids.iter().map(|s| Json::from(s.as_str())).collect()));
+    j.set("jobs", jobs.to_json());
     let mut rows: Vec<Json> = Vec::with_capacity(results.len());
     for (label, agg) in results {
         let mut row = Json::obj();
@@ -102,10 +135,27 @@ mod tests {
         assert!(results.iter().all(|(_, a)| a.score.is_finite()));
         let table = score_table("test", &results);
         assert!(table.to_text().contains("random"));
-        // The JSON view carries the same labels and scores.
+        // The JSON view carries the same labels and scores, plus the
+        // batch completion block.
         let ids = vec!["convolution@A4000".to_string()];
-        let json = scores_json("test", &ids, &results).to_string();
+        let jobs_block = crate::coordinator::executor::JobsSummary {
+            completed: 2 * runs,
+            cancelled: 0,
+            failed: 0,
+        };
+        let json = scores_json("test", &ids, &results, &jobs_block).to_string();
         assert!(json.contains("\"optimizer\":\"random\""), "{}", json);
         assert!(json.contains("\"spaces\":[\"convolution@A4000\"]"), "{}", json);
+        assert!(
+            json.contains("\"jobs\":{\"completed\":6,\"cancelled\":0,\"failed\":0}"),
+            "{}",
+            json
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "job 1 has group 7, but the batch declares only 2 group(s)")]
+    fn collate_names_the_offending_job_and_group() {
+        collate_groups(2, &[0, 7], vec![vec![0.0], vec![0.0]]);
     }
 }

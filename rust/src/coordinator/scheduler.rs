@@ -1,18 +1,21 @@
-//! The work-stealing worker pool that executes tuning-job batches.
+//! Compatibility wrapper over the streaming [`Executor`]: the drain-all,
+//! curves-only batch API the coordinator grew up with.
 //!
-//! One shared atomic cursor hands jobs to whichever worker is free, so the
-//! pool parallelizes across spaces *and* optimizers *and* seeds — not just
-//! the innermost seed loop. Results land in per-job slots indexed by batch
-//! position, and every job's seed is pre-derived ([`super::job::job_seed`]),
-//! so output is byte-identical for any thread count or execution order.
+//! `Scheduler::run` drains a pre-materialized batch and returns plain
+//! curves in batch order — no priorities, no cancellation, no events. It
+//! is now a thin veneer over [`Executor::run_jobs`], kept during the
+//! execution-API transition for callers (and tests) whose contract is
+//! exactly "every job completes, give me the curves". New code should
+//! talk to the [`Executor`] seam directly; a failed job here still
+//! panics (with the per-job structured message), because this API has no
+//! channel to report partial results through.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
-
+use super::executor::Executor;
 use super::job::TuningJob;
 use crate::util::parallel;
 
-/// A fixed-width worker pool over tuning jobs.
+/// A fixed-width, drain-all worker pool over tuning jobs (the
+/// compatibility surface of [`Executor`]).
 pub struct Scheduler {
     threads: usize,
 }
@@ -51,33 +54,13 @@ impl Scheduler {
     }
 
     /// Execute every job and return the performance curves in batch order.
+    /// Drain-all semantics: panics (with the executor's structured
+    /// message) if any job fails — use the [`Executor`] API to consume
+    /// partial batches.
     pub fn run(&self, jobs: &[TuningJob]) -> Vec<Vec<f64>> {
-        let n = jobs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let threads = self.threads.min(n);
-        if threads <= 1 {
-            return jobs.iter().map(TuningJob::execute).collect();
-        }
-        let slots: Vec<OnceLock<Vec<f64>>> = (0..n).map(|_| OnceLock::new()).collect();
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| loop {
-                    let j = next.fetch_add(1, Ordering::Relaxed);
-                    if j >= n {
-                        break;
-                    }
-                    let curve = jobs[j].execute();
-                    slots[j].set(curve).expect("job slot written twice");
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|s| s.into_inner().expect("scheduler finished with a missing result"))
-            .collect()
+        // Fail fast: expect_curves discards everything on failure, so
+        // finishing the rest of the batch first would be pure waste.
+        Executor::new(self.threads).fail_fast().run_jobs(jobs).expect_curves()
     }
 }
 

@@ -6,7 +6,9 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::coordinator::{collate, grid_aggregates, grid_jobs, CacheKey, CacheRegistry, Scheduler};
+use crate::coordinator::{
+    collate_groups, grid_aggregates, grid_source, CacheKey, CacheRegistry, Executor,
+};
 use crate::kernels::gpu::{GpuSpec, ALL_GPUS, TEST_GPUS, TRAIN_GPUS};
 use crate::llamea::{evolve_best_of_runs, EvolutionConfig, Genome, MockLlm, SpaceInfo};
 use crate::methodology::{run_many, Aggregate, OptimizerFactory};
@@ -48,7 +50,7 @@ pub struct ExpOptions {
     /// LLM calls per LLaMEA run (paper: 100).
     pub llm_calls: u64,
     pub seed: u64,
-    /// Scheduler worker count; `None` sizes the pool to the machine.
+    /// Executor worker count; `None` sizes the pool to the machine.
     pub threads: Option<usize>,
     /// Evaluation backend the grid runs against.
     pub backend: BackendKind,
@@ -227,9 +229,13 @@ pub fn evaluate_on_all_spaces(
     require_cached_backend(opts);
     let entries = CacheRegistry::global().all_entries();
     let space_ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
-    let jobs = grid_jobs(&entries, factories, opts.runs, seed);
-    let curves = Scheduler::with_threads(opts.threads).run(&jobs);
-    let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+    // The grid streams through the executor's bounded queue instead of
+    // materializing optimizers × spaces × seeds jobs up front.
+    let mut source = grid_source(&entries, factories, opts.runs, seed);
+    let batch = Executor::with_threads(opts.threads).fail_fast().run(&mut source);
+    let groups = batch.groups();
+    let grouped =
+        collate_groups(factories.len() * entries.len(), &groups, batch.expect_curves());
     let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
 
     let mut curves_csv = String::from("algorithm,t_frac,mean,ci95\n");

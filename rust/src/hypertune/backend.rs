@@ -12,11 +12,14 @@
 //! ## Determinism contract
 //!
 //! Evaluating meta-configuration `o` expands the base spec with `o`'s
-//! decoded overrides and submits one flat `runs × spaces` batch of
-//! [`TuningJob`]s through the shared [`Scheduler`] — the nested fan-out
-//! path. Inner seeds derive from [`meta_seed`]`(base, o)` and the job's
-//! grid coordinates, **never** from execution order or worker identity,
-//! so sweep output is byte-identical for any `--threads` width.
+//! decoded overrides and streams one `runs × spaces` batch of
+//! [`TuningJob`]s through the sweep's shared, bounded [`Executor`] — the
+//! nested fan-out path (rung escalations carry higher
+//! [`Priority`](crate::coordinator::Priority): their scores gate the next
+//! elimination). Inner seeds derive from [`meta_seed`]`(base, o)` and the
+//! job's grid coordinates, **never** from execution order, worker
+//! identity or priority, so sweep output is byte-identical for any
+//! `--threads` width and any priority assignment.
 //! `meta_seed(base, 0) == base` (the SplitMix64 finalizer fixes zero),
 //! which pins the golden equivalence: a grid-of-one sweep issues exactly
 //! the jobs `coordinate` would issue for the same spec, seed and spaces.
@@ -37,12 +40,18 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::space::{decode, meta_space};
-use crate::coordinator::{collate, job_seed, Scheduler, SpaceEntry, TuningJob};
+use crate::coordinator::{
+    collate_groups, job_seed, Executor, FnSource, JobsSummary, Progress, SpaceEntry, TuningJob,
+};
 use crate::methodology::{aggregate, OptimizerFactory};
 use crate::optimizers::OptimizerSpec;
 use crate::searchspace::SearchSpace;
 use crate::tuning::{BackendSource, EvalBackend};
 use crate::util::rng::avalanche;
+
+/// A sweep-level progress consumer (Send so the sweep setup can move
+/// across threads, Sync because executor workers call it concurrently).
+pub type SweepProgress = Box<dyn Fn(&Progress) + Send + Sync>;
 
 /// Base seed of one meta-configuration's inner tuning grid: the sweep seed
 /// decorrelated by the meta-config *ordinal* (never by execution order).
@@ -83,11 +92,20 @@ pub struct MetaTuning {
     entries: Vec<Arc<SpaceEntry>>,
     runs: usize,
     seed: u64,
-    threads: Option<usize>,
+    /// The one bounded executor every nested fan-out of this sweep drains
+    /// through — meta-batches share its width, queue bound and cancel
+    /// token instead of spawning ad-hoc per-batch scopes.
+    executor: Executor,
+    /// Optional consumer of the inner jobs' progress events (the CLI's
+    /// live sweep line).
+    progress: Option<SweepProgress>,
     space: Arc<SearchSpace>,
     /// Per-ordinal memo: `store[o][si]` holds the curves of space `si`'s
     /// runs 0..k, grown monotonically as rungs escalate.
     store: Mutex<HashMap<u32, Vec<Vec<Vec<f64>>>>>,
+    /// Cumulative completion counters over every inner job batch (the
+    /// `sweep --out` `"jobs"` block).
+    jobs_done: Mutex<JobsSummary>,
     hits: AtomicUsize,
     fresh: AtomicUsize,
 }
@@ -119,12 +137,31 @@ impl MetaTuning {
             entries,
             runs: runs.max(1),
             seed,
-            threads,
+            // Fail fast: evaluate_all's expect_curves discards the batch
+            // on failure anyway (the abort latch is per-run, so the
+            // shared executor is not poisoned for later batches).
+            executor: Executor::with_threads(threads).fail_fast(),
+            progress: None,
             space,
             store: Mutex::new(HashMap::new()),
+            jobs_done: Mutex::new(JobsSummary::default()),
             hits: AtomicUsize::new(0),
             fresh: AtomicUsize::new(0),
         })
+    }
+
+    /// Stream the inner jobs' [`Progress`] events to `sink` (executor
+    /// workers call it concurrently). Events only observe; consumer timing
+    /// never changes sweep output.
+    pub fn with_progress(mut self, sink: SweepProgress) -> MetaTuning {
+        self.progress = Some(sink);
+        self
+    }
+
+    /// Cumulative `{completed, cancelled, failed}` counters over every
+    /// inner job batch this sweep has drained.
+    pub fn jobs_summary(&self) -> JobsSummary {
+        *self.jobs_done.lock().unwrap()
     }
 
     /// The meta search space under sweep.
@@ -212,25 +249,53 @@ impl MetaTuning {
             self.fresh.fetch_add(missing.len(), Ordering::Relaxed);
             let specs: Vec<OptimizerSpec> =
                 missing.iter().map(|&(o, _)| self.spec_for(o)).collect();
-            let mut jobs: Vec<TuningJob> = Vec::new();
-            for (mi, (&(o, have), spec)) in missing.iter().zip(&specs).enumerate() {
-                let base_seed = meta_seed(self.seed, o as u64);
-                let label = spec.label();
-                for (si, e) in self.entries.iter().enumerate() {
-                    let space_id = e.cache.id();
-                    for r in have..runs {
-                        jobs.push(TuningJob {
-                            source: &e.cache,
-                            setup: &e.setup,
-                            factory: spec as &dyn OptimizerFactory,
-                            seed: job_seed(base_seed, &space_id, &label, r as u64),
-                            group: mi * self.entries.len() + si,
-                        });
-                    }
-                }
+            let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
+            let base_seeds: Vec<u64> =
+                missing.iter().map(|&(o, _)| meta_seed(self.seed, o as u64)).collect();
+            let space_ids: Vec<String> = self.entries.iter().map(|e| e.cache.id()).collect();
+            let n_spaces = self.entries.len();
+            // Flat-offset table over the irregular fan-out: meta-config
+            // `mi` contributes `n_spaces × (runs − have)` jobs (only the
+            // missing seed indices), streamed lazily to the executor.
+            let mut offsets = Vec::with_capacity(missing.len() + 1);
+            let mut total = 0usize;
+            offsets.push(0);
+            for &(_, have) in &missing {
+                total += n_spaces * (runs - have);
+                offsets.push(total);
             }
-            let curves = Scheduler::with_threads(self.threads).run(&jobs);
-            let grouped = collate(missing.len() * self.entries.len(), &jobs, curves);
+            let mut source = FnSource::new(total, |i| {
+                let mi = offsets.partition_point(|&off| off <= i) - 1;
+                let (_, have) = missing[mi];
+                let per = runs - have;
+                let local = i - offsets[mi];
+                let (si, r) = (local / per, have + local % per);
+                let e = &self.entries[si];
+                crate::coordinator::SourcedJob {
+                    job: TuningJob {
+                        source: &e.cache,
+                        setup: &e.setup,
+                        factory: &specs[mi] as &dyn OptimizerFactory,
+                        seed: job_seed(base_seeds[mi], &space_ids[si], &labels[mi], r as u64),
+                        group: mi * n_spaces + si,
+                    },
+                    // Rung escalations (configs that already hold stored
+                    // curves) outrank fresh candidates: their scores gate
+                    // the next elimination. Execution order only — seeds
+                    // are grid-derived, so scores never move.
+                    priority: have as i64,
+                }
+            });
+            let noop = |_: &Progress| {};
+            let sink: &(dyn Fn(&Progress) + Sync) = match &self.progress {
+                Some(b) => b.as_ref(),
+                None => &noop,
+            };
+            let batch = self.executor.run_observed(&mut source, sink);
+            self.jobs_done.lock().unwrap().absorb(batch.summary());
+            let groups = batch.groups();
+            let grouped =
+                collate_groups(missing.len() * n_spaces, &groups, batch.expect_curves());
             let mut it = grouped.into_iter();
             let mut store = self.store.lock().unwrap();
             for &(o, have) in &missing {

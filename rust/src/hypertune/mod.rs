@@ -12,8 +12,9 @@
 //!   typed [`HyperParamDomain`](crate::optimizers::HyperParamDomain)s
 //!   every registry optimizer declares ([`space`]);
 //! - the cost of that point is the aggregate methodology score of a grid
-//!   of seeded tuning runs, submitted as one flat [`TuningJob`] batch
-//!   through the shared scheduler and collapsed by
+//!   of seeded tuning runs, streamed as one [`TuningJob`] batch through
+//!   the sweep's shared bounded executor (rung escalations at higher
+//!   priority) and collapsed by
 //!   [`aggregate`](crate::methodology::aggregate) ([`backend`]);
 //! - meta-search is exhaustive grid, seeded random, successive halving
 //!   with seeds-per-rung escalation, or *any registry optimizer* driving
@@ -36,7 +37,7 @@ pub mod backend;
 pub mod space;
 pub mod strategy;
 
-pub use backend::{meta_seed, MetaBackend, MetaResult, MetaScore, MetaTuning};
+pub use backend::{meta_seed, MetaBackend, MetaResult, MetaScore, MetaTuning, SweepProgress};
 pub use space::{decode, meta_space};
 pub use strategy::{
     leaderboard_table, successive_halving, sweep, sweep_json, MetaStrategy, Rung, SweepOutcome,

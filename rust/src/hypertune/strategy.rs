@@ -198,6 +198,9 @@ pub fn sweep_json(mt: &MetaTuning, outcome: &SweepOutcome, seed: u64) -> Json {
     j.set("runs", mt.runs());
     j.set("seed", seed);
     j.set("meta_space_size", mt.space().len());
+    // Inner-job completion counters: partial sweeps (a cancelled or
+    // partly-failed run) stay diffable against full ones.
+    j.set("jobs", mt.jobs_summary().to_json());
     let mut rows: Vec<Json> = Vec::with_capacity(outcome.leaderboard.len());
     for r in &outcome.leaderboard {
         let mut row = Json::obj();

@@ -5,19 +5,20 @@
 //! discarding, and stack-trace repair when a whole generation fails.
 //! A run stops after `llm_call_budget` LLM calls (paper: 100).
 //!
-//! Candidate fitness is evaluated through the L3 scheduler as **one flat
-//! job batch per generation** across all candidates × training caches ×
-//! seeds ([`fitness_batch`]), rather than per-cache `run_many` calls per
-//! candidate: per-job seeds derive from the same (candidate seed, space
-//! id, genome name, run) coordinates the per-cache path used, so results
-//! are bit-identical while the worker pool sees the whole generation.
+//! Candidate fitness is evaluated through the L3 executor as **one
+//! streamed job batch per generation** across all candidates × training
+//! caches × seeds ([`fitness_batch`]), rather than per-cache `run_many`
+//! calls per candidate: per-job seeds derive from the same (candidate
+//! seed, space id, genome name, run) coordinates the per-cache path used,
+//! so results are bit-identical while the worker pool sees the whole
+//! generation through its bounded queue.
 
 use std::borrow::Borrow;
 
 use super::genome::Genome;
 use super::llm::{Generation, LlmClient, TokenUsage};
 use super::prompt::{MutationPrompt, Prompt, SpaceInfo};
-use crate::coordinator::{collate, job_seed, Scheduler, TuningJob};
+use crate::coordinator::{collate_groups, job_seed, Executor, FnSource, TuningJob};
 use crate::methodology::{aggregate, OptimizerFactory, SpaceSetup};
 use crate::optimizers::OptimizerSpec;
 use crate::tuning::Cache;
@@ -73,8 +74,8 @@ pub struct EvolutionResult {
 }
 
 /// Fitness of a whole candidate batch — typically one generation — as a
-/// single flat (candidate × cache × seed) job batch drained by one
-/// scheduler pool. Each entry pairs a genome with its per-candidate base
+/// single streamed (candidate × cache × seed) job batch drained by one
+/// executor pool. Each entry pairs a genome with its per-candidate base
 /// seed; returns one aggregate score per entry, in input order.
 ///
 /// Seed derivation matches what per-candidate `run_many` calls produced
@@ -91,25 +92,31 @@ pub fn fitness_batch<C: Borrow<Cache>>(
     }
     let specs: Vec<OptimizerSpec> =
         candidates.iter().map(|(g, _)| OptimizerSpec::genome(g.clone())).collect();
-    let mut jobs: Vec<TuningJob> = Vec::with_capacity(candidates.len() * caches.len() * runs);
-    for (gi, ((_, gseed), spec)) in candidates.iter().zip(&specs).enumerate() {
-        let label = spec.label();
-        for (ci, c) in caches.iter().enumerate() {
-            let cache: &Cache = Borrow::borrow(c);
-            let space_id = cache.id();
-            for r in 0..runs {
-                jobs.push(TuningJob {
-                    source: cache,
-                    setup: &setups[ci],
-                    factory: spec as &dyn OptimizerFactory,
-                    seed: job_seed(*gseed, &space_id, &label, r as u64),
-                    group: gi * caches.len() + ci,
-                });
-            }
+    let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
+    // Resolve the generic ownership once: the job stream borrows plain
+    // `&Cache` refs (so `C` itself needs no extra bounds).
+    let cache_refs: Vec<&Cache> = caches.iter().map(Borrow::borrow).collect();
+    let space_ids: Vec<String> = cache_refs.iter().map(|c| c.id()).collect();
+    // The generation streams lazily (candidate-major, then cache, then
+    // seed) through the executor's bounded queue — same job sequence the
+    // materialized batch produced, same seeds, same groups.
+    let per_candidate = caches.len() * runs;
+    let mut source = FnSource::new(candidates.len() * per_candidate, |i| {
+        let (gi, rem) = (i / per_candidate, i % per_candidate);
+        let (ci, r) = (rem / runs, rem % runs);
+        TuningJob {
+            source: cache_refs[ci],
+            setup: &setups[ci],
+            factory: &specs[gi] as &dyn OptimizerFactory,
+            seed: job_seed(candidates[gi].1, &space_ids[ci], &labels[gi], r as u64),
+            group: gi * caches.len() + ci,
         }
-    }
-    let curves = Scheduler::auto().run(&jobs);
-    let grouped = collate(candidates.len() * caches.len(), &jobs, curves);
+        .into()
+    });
+    let batch = Executor::auto().fail_fast().run(&mut source);
+    let groups = batch.groups();
+    let grouped =
+        collate_groups(candidates.len() * caches.len(), &groups, batch.expect_curves());
     let mut it = grouped.into_iter();
     candidates
         .iter()

@@ -2,11 +2,15 @@
 //!
 //! Every evaluation subcommand is a job graph handed to the coordinator
 //! (`llamea_kt::coordinator`): tuning runs become `TuningJob`s (space ×
-//! optimizer spec × derived seed) drained by a work-stealing worker pool,
-//! and all (application, GPU) caches are built once in a process-wide
-//! registry and shared across stages. `--threads N` fixes the pool width
-//! (results are byte-identical for any width); `coordinate` exposes the
-//! job-graph layer directly for ad-hoc grids.
+//! optimizer spec × derived seed) streamed into the `Executor`'s bounded
+//! worker pool, and all (application, GPU) caches are built once in a
+//! process-wide registry and shared across stages. While a batch drains,
+//! its progress events feed a live stderr counter line (terminal only).
+//! `--threads N` fixes the pool width (results are byte-identical for any
+//! width); `coordinate` exposes the job-graph layer directly for ad-hoc
+//! grids, and `coordinate --out`/`sweep --out` reports carry a
+//! `"jobs": {completed, cancelled, failed}` block for diffing partial
+//! runs.
 //!
 //! Subcommands:
 //!   spaces                         print Table-1 style space statistics
@@ -51,8 +55,8 @@
 use std::path::{Path, PathBuf};
 
 use llamea_kt::coordinator::{
-    collate, grid_aggregates, grid_jobs, score_table, scores_json, source_jobs, CacheKey,
-    CacheRegistry, Scheduler,
+    collate_groups, grid_aggregates, grid_jobs, grid_source, score_table, scores_json,
+    source_jobs, CacheKey, CacheRegistry, Executor, Progress, Scheduler,
 };
 use llamea_kt::harness::{self, BackendKind, ExpOptions};
 use llamea_kt::hypertune::{leaderboard_table, sweep, sweep_json, MetaStrategy, MetaTuning};
@@ -64,6 +68,87 @@ use llamea_kt::runtime::{measured::NOMINAL_EVAL_COST_S, MeasuredSource, PjrtRunt
 use llamea_kt::searchspace::Application;
 use llamea_kt::tuning::{BackendSource, Cache, TuningContext};
 use llamea_kt::util::table::Table;
+
+/// A live stderr progress line over executor [`Progress`] events: one
+/// `\r`-rewritten counter line while a batch drains, active only when
+/// stderr is a terminal (silent under redirection/CI). Consumers observe
+/// only — the line can never change results.
+struct ProgressLine {
+    /// Total jobs when the batch size is known up front (`None` for
+    /// sweeps, whose fan-out depends on memo state).
+    total: Option<usize>,
+    enabled: bool,
+    /// (started, completed, cancelled, failed) counters.
+    counts: std::sync::Mutex<(usize, usize, usize, usize)>,
+}
+
+impl ProgressLine {
+    fn new(total: Option<usize>) -> ProgressLine {
+        use std::io::IsTerminal;
+        ProgressLine {
+            total,
+            enabled: std::io::stderr().is_terminal(),
+            counts: std::sync::Mutex::new((0, 0, 0, 0)),
+        }
+    }
+
+    fn observe(&self, event: &Progress) {
+        let mut c = self.counts.lock().unwrap();
+        match event {
+            Progress::Started { .. } => c.0 += 1,
+            Progress::Finished { .. } => c.1 += 1,
+            Progress::Cancelled { .. } => c.2 += 1,
+            Progress::Failed { .. } => c.3 += 1,
+        }
+        if !self.enabled {
+            return;
+        }
+        let done = c.1 + c.2 + c.3;
+        let total = match self.total {
+            Some(t) => format!("/{}", t),
+            None => String::new(),
+        };
+        eprint!(
+            "\r{}{} jobs done ({} running, {} cancelled, {} failed)   ",
+            done,
+            total,
+            c.0.saturating_sub(done),
+            c.2,
+            c.3
+        );
+    }
+
+    /// End the rewritten line (call once, after the batch).
+    fn finish(&self) {
+        if self.enabled {
+            eprintln!();
+        }
+    }
+}
+
+/// Surface a batch that did not fully complete (visible even when the
+/// progress line was suppressed because stderr is not a terminal).
+/// Failed jobs are fatal, as the pre-redesign pool's panic was: scripts
+/// consuming the exit status must not mistake a partial run for success.
+/// Cancelled jobs only warn — cancellation is a deliberate request.
+fn report_job_outcomes(summary: &llamea_kt::coordinator::JobsSummary) {
+    if summary.failed > 0 {
+        eprintln!(
+            "error: {} of {} jobs failed ({} cancelled)",
+            summary.failed,
+            summary.total(),
+            summary.cancelled
+        );
+        std::process::exit(1);
+    }
+    if !summary.all_completed() {
+        eprintln!(
+            "warning: {} of {} jobs were cancelled",
+            summary.cancelled,
+            summary.total()
+        );
+    }
+}
 
 fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter()
@@ -269,7 +354,11 @@ fn cmd_real_tune(args: &[String]) {
         )];
         let jobs = source_jobs(&sources, &factories, runs, opts.seed);
         let t0 = std::time::Instant::now();
-        Scheduler::with_threads(opts.threads).run(&jobs);
+        let progress = ProgressLine::new(Some(jobs.len()));
+        let batch = Executor::with_threads(opts.threads)
+            .run_jobs_observed(&jobs, &|ev| progress.observe(ev));
+        progress.finish();
+        report_job_outcomes(&batch.summary());
         let space_len = source.space().len();
         println!(
             "lazily measured {}/{} variants of {} in {:?} ({} jobs, budget {:.0}s each)",
@@ -330,8 +419,14 @@ fn cmd_real_tune(args: &[String]) {
         let factories: Vec<(String, &dyn OptimizerFactory)> =
             specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
         let jobs = grid_jobs(&entries, &factories, runs, opts.seed);
-        let curves = Scheduler::with_threads(opts.threads).run(&jobs);
-        let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+        let progress = ProgressLine::new(Some(jobs.len()));
+        let batch = Executor::with_threads(opts.threads)
+            .fail_fast()
+            .run_jobs_observed(&jobs, &|ev| progress.observe(ev));
+        progress.finish();
+        let groups = batch.groups();
+        let grouped =
+            collate_groups(factories.len() * entries.len(), &groups, batch.expect_curves());
         let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
         let results = grid_aggregates(&labels, entries.len(), grouped);
         println!(
@@ -365,33 +460,40 @@ fn cmd_coordinate(args: &[String]) {
     let entries = space_entries(args, "");
     let factories: Vec<(String, &dyn OptimizerFactory)> =
         specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
-    let jobs = grid_jobs(&entries, &factories, runs, opts.seed);
-    let sched = Scheduler::with_threads(threads);
+    let n_jobs = entries.len() * factories.len() * runs;
+    let exec = Executor::with_threads(threads).fail_fast();
     eprintln!(
         "coordinating {} jobs ({} optimizers x {} spaces x {} seeds) on {} workers",
-        jobs.len(),
+        n_jobs,
         specs.len(),
         entries.len(),
         runs,
-        sched.threads()
+        exec.threads()
     );
     let t0 = std::time::Instant::now();
-    let curves = sched.run(&jobs);
-    let grouped = collate(factories.len() * entries.len(), &jobs, curves);
+    // The grid streams into the executor's bounded queue; the progress
+    // line consumes the event stream while the batch drains.
+    let mut source = grid_source(&entries, &factories, runs, opts.seed);
+    let progress = ProgressLine::new(Some(n_jobs));
+    let batch = exec.run_observed(&mut source, &|ev| progress.observe(ev));
+    progress.finish();
+    let summary = batch.summary();
+    let groups = batch.groups();
+    let grouped = collate_groups(factories.len() * entries.len(), &groups, batch.expect_curves());
     let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
     let results = grid_aggregates(&labels, entries.len(), grouped);
     let title = "Coordinator: aggregate score P per optimizer";
     println!("{}", score_table(title, &results).to_text());
     if let Some(path) = flag_value(args, "--out") {
         let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
-        let json = scores_json(title, &ids, &results);
+        let json = scores_json(title, &ids, &results, &summary);
         llamea_kt::util::json::write_file(Path::new(&path), &json)
             .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
         eprintln!("score table written to {}", path);
     }
     eprintln!(
         "{} jobs over {} caches ({} built this process) in {:?}",
-        jobs.len(),
+        n_jobs,
         entries.len(),
         registry.builds(),
         t0.elapsed()
@@ -439,17 +541,20 @@ fn coordinate_measured(
     let factories: Vec<(String, &dyn OptimizerFactory)> =
         specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
     let jobs = source_jobs(&sources, &factories, runs, opts.seed);
-    let sched = Scheduler::with_threads(threads);
+    let exec = Executor::with_threads(threads);
     eprintln!(
         "coordinating {} measured jobs ({} optimizers x {} kernels x {} seeds) on {} workers",
         jobs.len(),
         factories.len(),
         sources.len(),
         runs,
-        sched.threads()
+        exec.threads()
     );
     let t0 = std::time::Instant::now();
-    sched.run(&jobs);
+    let progress = ProgressLine::new(Some(jobs.len()));
+    let batch = exec.run_jobs_observed(&jobs, &|ev| progress.observe(ev));
+    progress.finish();
+    report_job_outcomes(&batch.summary());
     // No methodology score table here: uncalibrated spaces have no
     // random-search reference, so curve-based scores would be
     // meaningless. The deliverables are the measured optima.
@@ -495,8 +600,13 @@ fn cmd_sweep(args: &[String]) {
     // The full 4×6 grid per meta-evaluation is rarely what an interactive
     // sweep wants; default to one cheap space and let --spaces widen it.
     let entries = space_entries(args, "convolution@A4000");
+    // The sweep's inner job batches stream progress events to the live
+    // line (total unknown up front: the fan-out depends on memo state).
+    let progress = std::sync::Arc::new(ProgressLine::new(None));
+    let line = std::sync::Arc::clone(&progress);
     let mt = MetaTuning::new(base, entries, runs, opts.seed, threads)
-        .unwrap_or_else(|e| panic!("sweep setup: {}", e));
+        .unwrap_or_else(|e| panic!("sweep setup: {}", e))
+        .with_progress(Box::new(move |ev| line.observe(ev)));
     eprintln!(
         "sweeping {} meta-configs of {} over {} ({} seeds each, strategy {}, ~{:.0}s simulated per meta-eval)",
         mt.space().len(),
@@ -508,6 +618,7 @@ fn cmd_sweep(args: &[String]) {
     );
     let t0 = std::time::Instant::now();
     let outcome = sweep(&mt, &strategy, opts.seed);
+    progress.finish();
     println!(
         "{}",
         leaderboard_table("Hypertune: hyperparameter leaderboard", &outcome.leaderboard, 10)
@@ -530,9 +641,11 @@ fn cmd_sweep(args: &[String]) {
             .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
         eprintln!("sweep report written to {}", path);
     }
+    let jobs = mt.jobs_summary();
     eprintln!(
-        "{} meta-evaluations over {} distinct configs ({} memo hits) in {:?}",
+        "{} meta-evaluations / {} inner jobs over {} distinct configs ({} memo hits) in {:?}",
         mt.evaluations(),
+        jobs.total(),
         outcome.leaderboard.len(),
         mt.memo_hits(),
         t0.elapsed()

@@ -1,8 +1,8 @@
 //! Run optimizers against evaluation backends under the methodology's
 //! budget and produce per-run performance curves. Multi-run execution is
-//! delegated to the L3 coordinator's scheduler (`crate::coordinator`),
-//! which parallelizes whole job batches; [`run_many`] is its single-space
-//! convenience wrapper.
+//! delegated to the L3 coordinator's executor (`crate::coordinator`),
+//! which drains streamed job batches through a bounded worker pool;
+//! [`run_many`] is its single-space convenience wrapper.
 //!
 //! Runs are expressed over [`BackendSource`] (anything that mints per-run
 //! [`EvalBackend`](crate::tuning::EvalBackend)s): a shared `Cache` in
@@ -13,6 +13,7 @@ use super::baseline::Baseline;
 use super::curve::{performance_curve, resample_trajectory, sample_times, DEFAULT_T_POINTS};
 use crate::optimizers::Optimizer;
 use crate::tuning::{BackendSource, Cache, TuningContext};
+use crate::util::cancel::CancelToken;
 
 /// The methodology's cutoff percentile (paper: ~95%).
 pub const DEFAULT_CUTOFF: f64 = 0.95;
@@ -91,20 +92,41 @@ pub fn single_run(
     opt: &mut dyn Optimizer,
     seed: u64,
 ) -> Vec<f64> {
+    single_run_cancellable(source, setup, opt, seed, &CancelToken::new())
+        .expect("a fresh token cannot cancel the run")
+}
+
+/// [`single_run`] under a cooperative cancellation token: the context
+/// reports the budget as spent once the token fires, so the optimizer
+/// winds down at its next between-evaluations check. Returns `None` when
+/// the run *observed* the fired token (the truncated trajectory is
+/// discarded — it must never pass as a completed curve) and `Some` for a
+/// completed run, bit-identical to the token-less path.
+pub fn single_run_cancellable(
+    source: &dyn BackendSource,
+    setup: &SpaceSetup,
+    opt: &mut dyn Optimizer,
+    seed: u64,
+    cancel: &CancelToken,
+) -> Option<Vec<f64>> {
     let mut backend = source.backend();
     let mut ctx = TuningContext::with_backend(backend.as_mut(), setup.budget_s, seed);
+    ctx.set_cancel_token(cancel.clone());
     opt.run(&mut ctx);
+    if ctx.cancellation_observed() {
+        return None;
+    }
     let no_value = setup.baseline.expected_best_after(0);
     let best = resample_trajectory(&ctx.trajectory, &setup.times, no_value);
-    performance_curve(&best, &setup.times, &setup.baseline)
+    Some(performance_curve(&best, &setup.times, &setup.baseline))
 }
 
 /// Run `runs` independent seeds of the factory's optimizer on one space,
 /// in parallel; returns `runs` performance curves.
 ///
-/// Thin wrapper over the L3 scheduler: one job per seed, with per-job
-/// seeds derived from (space id, optimizer label, run index) so results
-/// are identical to the same grid executed inside a larger batch.
+/// Thin wrapper over the L3 executor: one streamed job per seed, with
+/// per-job seeds derived from (space id, optimizer label, run index) so
+/// results are identical to the same grid executed inside a larger batch.
 pub fn run_many(
     source: &dyn BackendSource,
     setup: &SpaceSetup,
@@ -112,19 +134,21 @@ pub fn run_many(
     runs: usize,
     base_seed: u64,
 ) -> Vec<Vec<f64>> {
-    use crate::coordinator::{job_seed, Scheduler, TuningJob};
+    use crate::coordinator::executor::{Executor, FnSource};
+    use crate::coordinator::{job_seed, TuningJob};
     let space_id = source.space_id();
     let label = factory.label();
-    let jobs: Vec<TuningJob> = (0..runs)
-        .map(|r| TuningJob {
+    let mut jobs = FnSource::new(runs, |r| {
+        TuningJob {
             source,
             setup,
             factory,
             seed: job_seed(base_seed, &space_id, &label, r as u64),
             group: 0,
-        })
-        .collect();
-    Scheduler::auto().run(&jobs)
+        }
+        .into()
+    });
+    Executor::auto().fail_fast().run(&mut jobs).expect_curves()
 }
 
 #[cfg(test)]

@@ -23,6 +23,7 @@
 //!   submitted one at a time by a caller that checks `budget_exhausted`
 //!   between evaluations.
 
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -30,6 +31,7 @@ use super::backend::{CachedBackend, EvalBackend};
 use super::cache::Cache;
 use crate::searchspace::space::FxBuildHasher;
 use crate::searchspace::SearchSpace;
+use crate::util::cancel::CancelToken;
 use crate::util::rng::Rng;
 
 /// Wall-clock charged for a strategy step that hits the evaluation cache
@@ -91,6 +93,14 @@ pub struct TuningContext<'a> {
     batch_calls: u64,
     batched_evals: u64,
     largest_batch: usize,
+    /// Cooperative cancellation: when set and fired, the budget reads as
+    /// exhausted so the optimizer winds down between evaluations.
+    cancel: Option<CancelToken>,
+    /// Whether a budget check ever *observed* the fired token. A run that
+    /// completes without observing it behaved bit-identically to an
+    /// uncancelled run; a run that observed it was cut short and its
+    /// outputs must be discarded (see [`Self::cancellation_observed`]).
+    cancel_observed: Cell<bool>,
 }
 
 impl<'a> TuningContext<'a> {
@@ -126,6 +136,40 @@ impl<'a> TuningContext<'a> {
             batch_calls: 0,
             batched_evals: 0,
             largest_batch: 0,
+            cancel: None,
+            cancel_observed: Cell::new(false),
+        }
+    }
+
+    /// Attach a cooperative cancellation token: once it fires, every budget
+    /// check reports the budget as spent, so the optimizer winds down at
+    /// its next between-evaluations check (`budget_spent_fraction` /
+    /// `budget_exhausted` are the natural sites — every registry optimizer
+    /// loops on them). The run-level contract lives in
+    /// [`Self::cancellation_observed`].
+    pub fn set_cancel_token(&mut self, token: CancelToken) {
+        self.cancel = Some(token);
+    }
+
+    /// True once a budget check has observed the fired token. The caller
+    /// (the executor's job runner) uses this to classify the run: observed
+    /// ⇒ the optimizer's behavior diverged from the drain-all run and the
+    /// trajectory must be discarded as *cancelled*; never observed ⇒ the
+    /// run is a normal completion, bit-identical to its uncancelled twin
+    /// (even if the token fired after the last check).
+    pub fn cancellation_observed(&self) -> bool {
+        self.cancel_observed.get()
+    }
+
+    /// Poll the token (if any), recording the observation.
+    #[inline]
+    fn check_cancelled(&self) -> bool {
+        match &self.cancel {
+            Some(t) if t.is_cancelled() => {
+                self.cancel_observed.set(true);
+                true
+            }
+            _ => false,
         }
     }
 
@@ -201,7 +245,10 @@ impl<'a> TuningContext<'a> {
             let mut fresh: std::collections::HashSet<u32, FxBuildHasher> =
                 std::collections::HashSet::with_hasher(FxBuildHasher::default());
             for &i in configs {
-                if planned_clock >= self.budget_s || planned_calls >= MAX_EVAL_CALLS {
+                if planned_clock >= self.budget_s
+                    || planned_calls >= MAX_EVAL_CALLS
+                    || self.check_cancelled()
+                {
                     steps.push(Step::Skip);
                     continue;
                 }
@@ -294,22 +341,38 @@ impl<'a> TuningContext<'a> {
         }
     }
 
-    /// True when the time budget (or the call-count safety cap) is spent.
+    /// True when the time budget (or the call-count safety cap) is spent,
+    /// or a cancellation token has fired (cancellation presents as budget
+    /// exhaustion so every optimizer's existing check site honors it).
     #[inline]
     pub fn budget_exhausted(&self) -> bool {
-        self.clock_s >= self.budget_s || self.eval_calls >= MAX_EVAL_CALLS
+        self.clock_s >= self.budget_s
+            || self.eval_calls >= MAX_EVAL_CALLS
+            || self.check_cancelled()
     }
 
     /// Fraction of the time budget consumed, clamped to [0, 1]. A
     /// non-positive budget reports 1.0 (fully spent) rather than NaN —
     /// generated-optimizer schedules branch on this value, and NaN would
-    /// silently disable every `fraction < x` phase switch.
+    /// silently disable every `fraction < x` phase switch. A fired
+    /// cancellation token also reports 1.0 (fully spent) — but, as in
+    /// [`Self::budget_exhausted`], only a run whose budget is *not*
+    /// already naturally spent polls the token: a run in its final stretch
+    /// answers 1.0 from the clock alone and is never misclassified as
+    /// cancelled when its behavior could not have diverged.
     #[inline]
     pub fn budget_spent_fraction(&self) -> f64 {
         if self.budget_s <= 0.0 {
             return 1.0;
         }
-        (self.clock_s / self.budget_s).min(1.0)
+        let fraction = self.clock_s / self.budget_s;
+        if fraction >= 1.0 {
+            return 1.0;
+        }
+        if self.check_cancelled() {
+            return 1.0;
+        }
+        fraction
     }
 
     pub fn elapsed_s(&self) -> f64 {
@@ -422,6 +485,46 @@ mod tests {
         assert!(ctx.budget_exhausted());
         let neg = TuningContext::new(&cache, -5.0, 4);
         assert_eq!(neg.budget_spent_fraction(), 1.0);
+    }
+
+    #[test]
+    fn cancellation_presents_as_budget_exhaustion_and_is_observed() {
+        let cache = ctx_cache();
+        let token = crate::util::cancel::CancelToken::new();
+        let mut ctx = TuningContext::new(&cache, 1e9, 6);
+        ctx.set_cancel_token(token.clone());
+        assert!(!ctx.budget_exhausted());
+        assert!(!ctx.cancellation_observed(), "unfired token must not mark the run");
+        ctx.evaluate(0);
+        token.cancel();
+        assert!(ctx.budget_exhausted());
+        assert_eq!(ctx.budget_spent_fraction(), 1.0);
+        assert!(ctx.cancellation_observed());
+        // A fired token also cuts batch submissions: the whole batch is
+        // skipped, nothing evaluated or charged.
+        let before = ctx.eval_calls();
+        assert!(ctx.evaluate_batch(&[1, 2, 3]).iter().all(Option::is_none));
+        assert_eq!(ctx.eval_calls(), before);
+    }
+
+    #[test]
+    fn unobserved_token_leaves_the_run_untouched() {
+        // A token that fires but is never polled must not change anything:
+        // the run's outputs stay bit-identical to the token-less run.
+        let cache = ctx_cache();
+        let plain = {
+            let mut ctx = TuningContext::new(&cache, 1e9, 8);
+            let vals: Vec<_> = (0..10u32).map(|i| ctx.evaluate(i)).collect();
+            (vals, ctx.trajectory.clone(), ctx.elapsed_s())
+        };
+        let with_token = {
+            let mut ctx = TuningContext::new(&cache, 1e9, 8);
+            ctx.set_cancel_token(CancelToken::new());
+            let vals: Vec<_> = (0..10u32).map(|i| ctx.evaluate(i)).collect();
+            assert!(!ctx.cancellation_observed());
+            (vals, ctx.trajectory.clone(), ctx.elapsed_s())
+        };
+        assert_eq!(plain, with_token);
     }
 
     #[test]

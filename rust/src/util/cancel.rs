@@ -1,0 +1,79 @@
+//! Cooperative cancellation: a cheap, cloneable token shared between a
+//! controller (the executor, a CLI signal handler, a progress consumer)
+//! and the workers it may want to stop.
+//!
+//! Cancellation is *cooperative*: setting the token never interrupts
+//! anything by force. Workers poll [`CancelToken::is_cancelled`] at their
+//! natural check sites — for tuning runs that is
+//! [`TuningContext::budget_exhausted`](crate::tuning::TuningContext::budget_exhausted)
+//! between evaluations — and wind down on their own. A run that observes
+//! the token mid-flight is reported as cancelled (its partial output is
+//! discarded, never mixed into completed results); a run that finishes
+//! without ever observing it is a normal completion, bit-identical to the
+//! same run without a token. That asymmetry is what makes cancellation
+//! deterministic at the result level: *which* jobs complete may depend on
+//! timing, but every completed job's output is exactly its drain-all
+//! counterpart.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A shared cancellation flag. Clones observe the same flag; `Default`
+/// yields a fresh, un-cancelled token.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; never blocks. All clones observe
+    /// the flag on their next [`Self::is_cancelled`] poll.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_flag() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!t.is_cancelled());
+        assert!(!c.is_cancelled());
+        c.cancel();
+        assert!(t.is_cancelled());
+        assert!(c.is_cancelled());
+        // Idempotent.
+        t.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn fresh_tokens_are_independent() {
+        let a = CancelToken::new();
+        let b = CancelToken::default();
+        a.cancel();
+        assert!(!b.is_cancelled());
+    }
+
+    #[test]
+    fn flag_crosses_threads() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || c.cancel());
+        });
+        assert!(t.is_cancelled());
+    }
+}

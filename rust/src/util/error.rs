@@ -8,6 +8,19 @@
 
 use std::fmt;
 
+/// Best-effort text of a caught panic payload (`&str` or `String`
+/// payloads — everything `panic!` produces — else a placeholder). Shared
+/// by the executor's per-job isolation and the proptest harness.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
 /// A chain-formatted error: the context message plus its source, rendered
 /// as `context: source` (one level is enough for the runtime layer).
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -1,10 +1,12 @@
 //! Shared utilities: PRNG, statistics, JSON/table rendering, property tests,
-//! error-context plumbing, and the process-wide parallelism primitives.
+//! error-context plumbing, cooperative cancellation, and the process-wide
+//! parallelism primitives.
 //!
 //! The offline build environment provides no `rand`, `serde`, `criterion`,
 //! `proptest` or `anyhow`; these modules are small, tested substitutes (see
 //! DESIGN.md §3).
 
+pub mod cancel;
 pub mod error;
 pub mod json;
 pub mod parallel;

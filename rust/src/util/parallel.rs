@@ -91,6 +91,19 @@ where
         .collect()
 }
 
+/// The "wide" width the test suite's determinism checks run at:
+/// `LLAMEA_KT_TEST_THREADS` when set, else `default`. CI runs the
+/// integration suite with the variable pinned to 1 and 8 (a matrix
+/// independent of libtest's `--test-threads`), so width-determinism
+/// regressions fail there, not just on a many-core dev box.
+pub fn test_width(default: usize) -> usize {
+    std::env::var("LLAMEA_KT_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(default)
+}
+
 /// [`map_chunks_width`] at the process default width.
 pub fn map_chunks<T, F>(n: usize, chunk_size: usize, f: F) -> Vec<T>
 where

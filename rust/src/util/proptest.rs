@@ -27,11 +27,7 @@ pub fn check_seeded<F: Fn(&mut Rng)>(name: &str, base_seed: u64, cases: u64, pro
             property(&mut rng);
         }));
         if let Err(err) = result {
-            let msg = err
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".to_string());
+            let msg = super::error::panic_message(err.as_ref());
             panic!(
                 "property '{}' failed at case {}/{} (replay: check_one({:#x})): {}",
                 name, case, cases, seed, msg

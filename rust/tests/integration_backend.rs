@@ -178,7 +178,7 @@ fn grid_output_identical_across_widths_with_batching_optimizers() {
         owned.iter().map(|(l, s)| (l.clone(), s as &dyn OptimizerFactory)).collect();
     let jobs = grid_jobs(&entries, &factories, 3, 4242);
     let narrow = Scheduler::new(1).run(&jobs);
-    let wide = Scheduler::new(8).run(&jobs);
+    let wide = Scheduler::new(llamea_kt::util::parallel::test_width(8)).run(&jobs);
     assert_eq!(narrow, wide, "thread width changed batched-optimizer results");
 }
 

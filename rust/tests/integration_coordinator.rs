@@ -1,13 +1,23 @@
-//! Integration: the L3 coordinator — shared cache registry, job-graph
-//! scheduler determinism, and per-job seed derivation.
+//! Integration: the L3 coordinator — shared cache registry, execution-API
+//! determinism (streamed sources, priorities, cancellation, panic
+//! isolation, backpressure), and per-job seed derivation.
+//!
+//! Width-sensitive checks use `util::parallel::test_width` (the
+//! `LLAMEA_KT_TEST_THREADS` knob) so CI's width matrix exercises them at
+//! 1 and 8 workers.
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use llamea_kt::coordinator::{
-    collate, grid_aggregates, grid_jobs, job_seed, CacheKey, CacheRegistry, Scheduler,
+    collate, collate_groups, grid_aggregates, grid_jobs, grid_source, job_seed, BatchResult,
+    CacheKey, CacheRegistry, Executor, FnSource, JobOutcome, JobSource, Progress, Scheduler,
+    SourcedJob, TuningJob,
 };
 use llamea_kt::methodology::{run_many, OptimizerFactory};
 use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::util::parallel::test_width;
 
 fn test_factories(names: &[&str]) -> Vec<(String, OptimizerSpec)> {
     names.iter().map(|n| (n.to_string(), OptimizerSpec::named(*n))).collect()
@@ -31,7 +41,7 @@ fn grid_output_identical_across_thread_counts() {
     let jobs = grid_jobs(&entries, &factories, 4, 2026);
     assert_eq!(jobs.len(), 2 * 2 * 4);
     let single = Scheduler::new(1).run(&jobs);
-    let wide = Scheduler::new(8).run(&jobs);
+    let wide = Scheduler::new(test_width(8)).run(&jobs);
     assert_eq!(single, wide, "thread count changed results");
 
     // And the aggregates reassemble per (optimizer, space) without loss.
@@ -117,6 +127,335 @@ fn global_registry_is_shared_across_harness_calls() {
     );
     // Same seeds, same registry: identical scores.
     assert_eq!(first[0].1.per_space_scores, second[0].1.per_space_scores);
+}
+
+// ------------------------------------------------ execution API (PR 5)
+
+/// One (space, spec) fixture over the shared registry.
+fn exec_fixture() -> (std::sync::Arc<llamea_kt::coordinator::SpaceEntry>, OptimizerSpec, String) {
+    let e = CacheRegistry::global().entry(CacheKey::parse("convolution@A4000").unwrap());
+    let space_id = e.cache.id();
+    (e, OptimizerSpec::named("sa"), space_id)
+}
+
+fn seeded_jobs<'a>(
+    e: &'a llamea_kt::coordinator::SpaceEntry,
+    spec: &'a OptimizerSpec,
+    space_id: &str,
+    n: usize,
+    base: u64,
+) -> Vec<TuningJob<'a>> {
+    (0..n)
+        .map(|r| TuningJob {
+            source: &e.cache,
+            setup: &e.setup,
+            factory: spec,
+            seed: job_seed(base, space_id, "sa", r as u64),
+            group: 0,
+        })
+        .collect()
+}
+
+/// Verbatim port of the pre-redesign `Scheduler::run` (atomic cursor over
+/// a materialized batch, `OnceLock` result slots): the golden reference
+/// for the executor's drain-all equivalence — the acceptance criterion
+/// that the redesign changed the engine, not one bit of the results.
+fn pre_redesign_scheduler_run(jobs: &[TuningJob], threads: usize) -> Vec<Vec<f64>> {
+    use std::sync::OnceLock;
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        return jobs.iter().map(TuningJob::execute).collect();
+    }
+    let slots: Vec<OnceLock<Vec<f64>>> = (0..n).map(|_| OnceLock::new()).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                if j >= n {
+                    break;
+                }
+                let curve = jobs[j].execute();
+                slots[j].set(curve).expect("job slot written twice");
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("scheduler finished with a missing result"))
+        .collect()
+}
+
+#[test]
+fn executor_is_bit_identical_to_the_pre_redesign_scheduler() {
+    let reg = CacheRegistry::new();
+    let entries = vec![
+        reg.entry(CacheKey::parse("convolution@A4000").unwrap()),
+        reg.entry(CacheKey::parse("convolution@W6600").unwrap()),
+    ];
+    let owned = test_factories(&["sa", "random"]);
+    let factories = as_refs(&owned);
+    let jobs = grid_jobs(&entries, &factories, 3, 31);
+    let width = test_width(8);
+    let old = pre_redesign_scheduler_run(&jobs, width);
+    // The compatibility wrapper, the executor batch API, and the lazy
+    // streamed grid must all reproduce the pre-redesign output exactly.
+    assert_eq!(old, Scheduler::new(width).run(&jobs));
+    assert_eq!(old, Executor::new(width).run_jobs(&jobs).expect_curves());
+    let mut streamed = grid_source(&entries, &factories, 3, 31);
+    let batch = Executor::new(width).queue_cap(3).run(&mut streamed);
+    assert_eq!(batch.groups(), jobs.iter().map(|j| j.group).collect::<Vec<_>>());
+    assert_eq!(old, batch.expect_curves());
+}
+
+#[test]
+fn completed_prefix_is_bit_identical_under_mid_batch_cancellation() {
+    let (e, spec, space_id) = exec_fixture();
+    let jobs = seeded_jobs(&e, &spec, &space_id, 8, 5);
+    let reference = Executor::new(1).run_jobs(&jobs).expect_curves();
+
+    // Deterministic single-worker run, default lookahead (2): cancel after
+    // the 3rd completion. Jobs 0–2 completed, the one queued job (3)
+    // cancelled, jobs 4+ never pulled.
+    let exec = Executor::new(1);
+    let token = exec.cancel_token();
+    let sink = |ev: &Progress| {
+        if let Progress::Finished { completed: 3, .. } = ev {
+            token.cancel();
+        }
+    };
+    let batch = exec.run_jobs_observed(&jobs, &sink);
+    assert_eq!(batch.len(), 4, "one queued job beyond the completed prefix");
+    for h in &batch.handles[..3] {
+        assert_eq!(
+            h.outcome.curve().expect("prefix job completed"),
+            &reference[h.slot][..],
+            "completed slot {} must be bit-identical to the drain-all run",
+            h.slot
+        );
+    }
+    assert_eq!(batch.handles[3].outcome, JobOutcome::Cancelled);
+    let s = batch.summary();
+    assert_eq!((s.completed, s.cancelled, s.failed), (3, 1, 0));
+}
+
+#[test]
+fn cancellation_under_contention_preserves_every_completed_curve() {
+    // Wide variant: whichever jobs complete under a racing cancellation,
+    // each completed curve is exactly its drain-all counterpart, and the
+    // batch can never complete fully (40 jobs >> the lookahead window).
+    let (e, spec, space_id) = exec_fixture();
+    let jobs = seeded_jobs(&e, &spec, &space_id, 40, 6);
+    let reference = Executor::new(1).run_jobs(&jobs).expect_curves();
+    let exec = Executor::new(test_width(8));
+    let token = exec.cancel_token();
+    let sink = |ev: &Progress| {
+        if let Progress::Finished { completed: 2, .. } = ev {
+            token.cancel();
+        }
+    };
+    let batch = exec.run_jobs_observed(&jobs, &sink);
+    let s = batch.summary();
+    assert!(s.completed >= 2, "the two triggering completions are in the batch");
+    assert!(
+        s.completed < jobs.len(),
+        "cancellation must stop the batch short ({} completed)",
+        s.completed
+    );
+    for h in &batch.handles {
+        if let Some(curve) = h.outcome.curve() {
+            assert_eq!(curve, &reference[h.slot][..], "slot {}", h.slot);
+        }
+    }
+}
+
+#[test]
+fn results_are_invariant_to_priority_order() {
+    let (e, spec, space_id) = exec_fixture();
+    let jobs = seeded_jobs(&e, &spec, &space_id, 6, 77);
+    let run_with = |priorities: fn(usize) -> i64| -> (Vec<Vec<f64>>, Vec<usize>) {
+        let started = Mutex::new(Vec::new());
+        let sink = |ev: &Progress| {
+            if let Progress::Started { slot } = ev {
+                started.lock().unwrap().push(*slot);
+            }
+        };
+        let mut source =
+            FnSource::new(jobs.len(), |i| SourcedJob { job: jobs[i], priority: priorities(i) });
+        // Width 1 with a whole-batch window: execution order is exactly
+        // the priority order, results must not care.
+        let batch = Executor::new(1).queue_cap(jobs.len()).run_observed(&mut source, &sink);
+        (batch.expect_curves(), started.into_inner().unwrap())
+    };
+    let (flat, order_flat) = run_with(|_| 0);
+    let (ascending, order_asc) = run_with(|i| i as i64);
+    let (wide, _) = {
+        let mut source =
+            FnSource::new(jobs.len(), |i| SourcedJob { job: jobs[i], priority: -(i as i64) });
+        let batch = Executor::new(test_width(4)).run(&mut source);
+        (batch.expect_curves(), ())
+    };
+    assert_eq!(flat, ascending, "priorities reordered results");
+    assert_eq!(flat, wide, "priorities reordered results under contention");
+    // And priorities really do steer execution: equal priorities run in
+    // slot order, ascending priorities in reverse slot order.
+    assert_eq!(order_flat, (0..jobs.len()).collect::<Vec<_>>());
+    assert_eq!(order_asc, (0..jobs.len()).rev().collect::<Vec<_>>());
+}
+
+/// A [`JobSource`] that records how far ahead of completion it has been
+/// polled (the backpressure observable).
+struct CountingSource<'a> {
+    jobs: &'a [TuningJob<'a>],
+    next: usize,
+    finished: &'a AtomicUsize,
+    max_lead: &'a AtomicUsize,
+}
+
+impl<'a> JobSource<'a> for CountingSource<'a> {
+    fn next_job(&mut self) -> Option<SourcedJob<'a>> {
+        if self.next >= self.jobs.len() {
+            return None;
+        }
+        let job = self.jobs[self.next];
+        self.next += 1;
+        let lead = self.next - self.finished.load(Ordering::SeqCst).min(self.next);
+        self.max_lead.fetch_max(lead, Ordering::SeqCst);
+        Some(job.into())
+    }
+}
+
+#[test]
+fn source_is_polled_at_most_queue_cap_ahead() {
+    let (e, spec, space_id) = exec_fixture();
+    let jobs = seeded_jobs(&e, &spec, &space_id, 12, 13);
+    let reference = Executor::new(1).run_jobs(&jobs).expect_curves();
+
+    let run_bounded = |threads: usize, cap: usize| -> (Vec<Vec<f64>>, usize) {
+        let finished = AtomicUsize::new(0);
+        let max_lead = AtomicUsize::new(0);
+        let mut source =
+            CountingSource { jobs: &jobs, next: 0, finished: &finished, max_lead: &max_lead };
+        let sink = |ev: &Progress| {
+            if !matches!(ev, Progress::Started { .. }) {
+                finished.fetch_add(1, Ordering::SeqCst);
+            }
+        };
+        let batch = Executor::new(threads).queue_cap(cap).run_observed(&mut source, &sink);
+        (batch.expect_curves(), max_lead.load(Ordering::SeqCst))
+    };
+
+    // Single worker: completions are observed synchronously, so the bound
+    // is exact — and reached (the initial refill fills the window).
+    let (curves, lead) = run_bounded(1, 3);
+    assert_eq!(curves, reference);
+    assert_eq!(lead, 3, "single-worker lead must equal queue_cap exactly");
+
+    // Contended: the sink observes completions slightly after the pool's
+    // internal counter, so allow one in-flight job per worker of lag.
+    let threads = test_width(4);
+    let (curves, lead) = run_bounded(threads, 4);
+    assert_eq!(curves, reference);
+    assert!(
+        lead <= 4 + threads,
+        "lead {} exceeds queue_cap 4 + {} workers of event lag",
+        lead,
+        threads
+    );
+}
+
+/// The satellite regression: pre-redesign, one panicking
+/// `TuningJob::execute` inside `thread::scope` aborted the whole batch
+/// and lost every completed slot. The executor isolates it per job.
+struct PanickingOpt;
+
+impl llamea_kt::optimizers::Optimizer for PanickingOpt {
+    fn name(&self) -> &str {
+        "panicking"
+    }
+    fn run(&mut self, _ctx: &mut llamea_kt::tuning::TuningContext) {
+        panic!("boom from the panicking test optimizer");
+    }
+}
+
+struct PanickingFactory;
+
+impl OptimizerFactory for PanickingFactory {
+    fn build(&self) -> Box<dyn llamea_kt::optimizers::Optimizer> {
+        Box::new(PanickingOpt)
+    }
+    fn label(&self) -> String {
+        "panicking".into()
+    }
+}
+
+#[test]
+fn panicking_job_is_isolated_and_the_batch_keeps_its_results() {
+    let (e, spec, space_id) = exec_fixture();
+    let bomb = PanickingFactory;
+    let mut jobs = seeded_jobs(&e, &spec, &space_id, 5, 21);
+    let reference = Executor::new(1).run_jobs(&jobs).expect_curves();
+    jobs[2].factory = &bomb;
+
+    let batch = Executor::new(test_width(4)).run_jobs(&jobs);
+    let s = batch.summary();
+    assert_eq!((s.completed, s.cancelled, s.failed), (4, 0, 1));
+    match &batch.handles[2].outcome {
+        JobOutcome::Failed(msg) => {
+            assert!(msg.contains("boom from the panicking test optimizer"), "{}", msg)
+        }
+        other => panic!("expected Failed, got {:?}", other),
+    }
+    for h in batch.handles.iter().filter(|h| h.slot != 2) {
+        assert_eq!(
+            h.outcome.curve().expect("non-panicking jobs complete"),
+            &reference[h.slot][..],
+            "slot {} lost or changed by the neighboring panic",
+            h.slot
+        );
+    }
+    // Collation over the survivors still works from the handles.
+    let completed: Vec<(usize, Vec<f64>)> = batch
+        .handles
+        .iter()
+        .filter_map(|h| h.outcome.curve().map(|c| (h.group, c.to_vec())))
+        .collect();
+    let groups: Vec<usize> = completed.iter().map(|(g, _)| *g).collect();
+    let curves: Vec<Vec<f64>> = completed.into_iter().map(|(_, c)| c).collect();
+    let grouped = collate_groups(1, &groups, curves);
+    assert_eq!(grouped[0].len(), 4);
+}
+
+#[test]
+#[should_panic(expected = "failed")]
+fn drain_all_compat_surface_panics_on_failed_jobs() {
+    // `Scheduler::run` keeps drain-all semantics: a failed job panics at
+    // collection (with the structured per-job message) because the
+    // curves-only API has no channel for partial results.
+    let (e, spec, space_id) = exec_fixture();
+    let bomb = PanickingFactory;
+    let mut jobs = seeded_jobs(&e, &spec, &space_id, 3, 22);
+    jobs[1].factory = &bomb;
+    let _ = Scheduler::new(2).run(&jobs);
+}
+
+#[test]
+fn batch_result_reports_slot_metadata() {
+    let (e, spec, space_id) = exec_fixture();
+    let jobs = seeded_jobs(&e, &spec, &space_id, 3, 23);
+    let batch: BatchResult = Executor::new(2).run_jobs(&jobs);
+    assert_eq!(batch.len(), 3);
+    assert!(!batch.is_empty());
+    for (h, job) in batch.handles.iter().zip(&jobs) {
+        assert_eq!(h.seed, job.seed);
+        assert_eq!(h.group, job.group);
+        assert_eq!(h.priority, 0);
+        assert!(h.outcome.is_completed());
+    }
 }
 
 /// Property (mini-proptest): per-job seed derivation has no collisions

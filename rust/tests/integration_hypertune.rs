@@ -53,7 +53,7 @@ fn sweep_output_is_byte_identical_across_thread_widths() {
         MetaStrategy::Search { spec: OptimizerSpec::parse("random").unwrap(), evals: 3 },
     ] {
         let narrow = mt_with(ga_narrow(), 2, 9, 1);
-        let wide = mt_with(ga_narrow(), 2, 9, 8);
+        let wide = mt_with(ga_narrow(), 2, 9, llamea_kt::util::parallel::test_width(8));
         let a = sweep_json(&narrow, &sweep(&narrow, &strategy, 9), 9).to_pretty();
         let b = sweep_json(&wide, &sweep(&wide, &strategy, 9), 9).to_pretty();
         assert_eq!(a, b, "strategy {} output depends on thread width", strategy.label());
