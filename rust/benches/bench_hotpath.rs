@@ -8,6 +8,7 @@
 mod common;
 use llamea_kt::kernels::gpu::GpuSpec;
 use llamea_kt::methodology::{Baseline, SpaceSetup};
+use llamea_kt::persist;
 use llamea_kt::searchspace::{Application, NeighborKind};
 use llamea_kt::tuning::{Cache, TuningContext};
 use llamea_kt::util::rng::Rng;
@@ -95,6 +96,47 @@ fn main() {
         opt.run(&mut ctx);
         std::hint::black_box(ctx.unique_evals());
     }));
+
+    // Persistent cache store: cold full build vs save vs the zero-copy
+    // warm path (load_space + load_cache, both mmap) for the heaviest
+    // application. Acceptance target: cache_load_mmap ≥10× faster than
+    // cache_cold_build.
+    common::section("persistent cache store (hotspot@A100)");
+    let hs = Application::Hotspot;
+    let hs_gpu = GpuSpec::by_name("A100").unwrap();
+    let hs_cache = Cache::build(hs, hs_gpu);
+    let store = std::env::temp_dir().join(format!("llkt-bench-persist-{}", std::process::id()));
+    std::fs::create_dir_all(&store).unwrap();
+    let hs_space_path = persist::space_path(&store, hs);
+    let hs_cache_path = persist::cache_path(&store, hs, hs_gpu.name);
+    persist::save_space(&hs_space_path, &hs_cache.space).unwrap();
+
+    let cold = common::bench("cache_cold_build hotspot@A100", 0, 3, || {
+        let c = Cache::build(hs, hs_gpu);
+        std::hint::black_box(c.optimum_ms);
+    });
+    results.push(common::bench("cache_save hotspot@A100", 1, 3, || {
+        persist::save_cache(&hs_cache_path, &hs_cache).unwrap();
+    }));
+    let warm = common::bench("cache_load_mmap hotspot@A100", 1, 5, || {
+        let s = persist::load_space(&hs_space_path, hs, persist::LoadMode::Mmap).unwrap();
+        let c = persist::load_cache(
+            &hs_cache_path,
+            hs,
+            hs_gpu,
+            std::sync::Arc::new(s),
+            persist::LoadMode::Mmap,
+        )
+        .unwrap();
+        std::hint::black_box(c.optimum_ms);
+    });
+    println!(
+        "cache_load_mmap is {:.1}x faster than cache_cold_build (target: >=10x)",
+        cold.ns_per_iter / warm.ns_per_iter
+    );
+    results.push(cold);
+    results.push(warm);
+    let _ = std::fs::remove_dir_all(&store);
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     common::write_json(&out, &results);

@@ -39,6 +39,12 @@
 //!   validated group ids), aggregates them with the methodology's score,
 //!   and renders the `coordinate` subcommand's tables and JSON (including
 //!   the `"jobs"` completion block for partial runs).
+//! - [`shard`]: multi-process execution. `--shard K/N` partitions a grid
+//!   by flat index (round-robin, seeds are grid-derived so any partition
+//!   is valid), each shard writes a partial report of raw curves, and
+//!   [`shard::merge_reports`] (the `merge` subcommand) validates the
+//!   shard set and collates the partials into exactly the
+//!   single-process report, byte for byte.
 //!
 //! ## Determinism contract
 //!
@@ -59,6 +65,7 @@ pub mod job;
 pub mod registry;
 pub mod report;
 pub mod scheduler;
+pub mod shard;
 
 pub use executor::{
     BatchResult, Executor, FnSource, IterSource, JobHandle, JobOutcome, JobSource, JobsSummary,
@@ -67,6 +74,7 @@ pub use executor::{
 pub use job::{
     collect_jobs, grid_jobs, grid_source, job_seed, source_jobs, source_jobs_source, TuningJob,
 };
-pub use registry::{CacheKey, CacheRegistry, SpaceEntry};
+pub use registry::{CacheEvent, CacheKey, CacheOutcome, CacheRegistry, SpaceEntry};
 pub use report::{collate, collate_groups, grid_aggregates, score_table, scores_json};
 pub use scheduler::Scheduler;
+pub use shard::{merge_reports, partial_coordinate_json, ShardJob, ShardSpec};

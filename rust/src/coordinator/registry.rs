@@ -8,20 +8,50 @@
 //! hands out `Arc<SpaceEntry>` clones, so the generation stage, Table 2/3,
 //! Fig. 7 and Figs. 8–9 all share one copy.
 //!
+//! # Warm path (`--cache-dir`)
+//!
+//! With a cache directory configured ([`CacheRegistry::set_cache_dir`]),
+//! the one-time-per-process cost becomes one-time-per-*machine*: on a
+//! registry miss the store (`crate::persist`) is consulted first. A valid
+//! file — format version, checksums, build fingerprint and recomputed
+//! summary stats all passing — is loaded (mmap-backed, zero-copy; falling
+//! back to an owned read where mapping is unavailable) and the exhaustive
+//! model sweep is skipped entirely. Any rejection, for any reason, falls
+//! back to a cold build whose result is then atomically written back
+//! (temp file + rename), overwriting the stale file. Spaces persist
+//! per-application (`space_<app>.llkt`, config arena + all three CSR
+//! neighbor tables — eagerly built at save time so warm processes also
+//! skip graph construction); caches per key (`cache_<app>@<gpu>.llkt`).
+//! Save failures only warn: the store is an optimization, never a
+//! correctness dependency, and a loaded cache is byte-identical to a
+//! built one (pinned by `rust/tests/integration_persist.rs`), so every
+//! downstream report is unaffected by warm vs cold.
+//!
+//! Measured caches entering through [`CacheRegistry::insert`] are *not*
+//! persisted: their bytes come from real hardware, not from anything a
+//! build fingerprint could derive, so the store could never validate them.
+//!
 //! Concurrency: the per-key `OnceLock` guarantees at-most-once construction
-//! even when many scheduler workers request the same key simultaneously;
-//! distinct keys build in parallel (the map mutex is only held to look up
-//! the key's cell, never during a build). `builds()` exposes the
-//! construction counter so tests can assert the exactly-once property.
+//! (and at-most-once *load*) even when many scheduler workers request the
+//! same key simultaneously; distinct keys build in parallel (the map mutex
+//! is only held to look up the key's cell, never during a build or load).
+//! `builds()`/`loads()` expose the counters so tests can assert the
+//! exactly-once property, and [`CacheRegistry::caches_json`] reports
+//! per-key outcomes for the `"caches"` block of `coordinate`/`sweep`
+//! reports.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::kernels::gpu::{GpuSpec, ALL_GPUS};
 use crate::methodology::SpaceSetup;
+use crate::persist::{self, LoadError, LoadMode};
 use crate::searchspace::{Application, SearchSpace};
 use crate::tuning::Cache;
+use crate::util::json::Json;
 
 /// Identity of one pre-explored search space: (application, GPU).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -58,6 +88,34 @@ pub struct SpaceEntry {
     pub setup: SpaceSetup,
 }
 
+/// How a registry object came to exist this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Cold: enumerated/model-evaluated in this process.
+    Built,
+    /// Warm: loaded from the persistent store.
+    Loaded,
+}
+
+impl CacheOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CacheOutcome::Built => "built",
+            CacheOutcome::Loaded => "loaded",
+        }
+    }
+}
+
+/// One build/load event, for the `"caches"` report block.
+#[derive(Debug, Clone)]
+pub struct CacheEvent {
+    /// `gemm@A100` for caches, `space:gemm` for space enumerations.
+    pub id: String,
+    pub outcome: CacheOutcome,
+    /// Wall seconds spent building or loading.
+    pub seconds: f64,
+}
+
 type Cell<T> = Arc<OnceLock<T>>;
 
 /// Lazily-built, memoized registry of caches and search spaces.
@@ -66,8 +124,13 @@ pub struct CacheRegistry {
     spaces: Mutex<HashMap<Application, Cell<Arc<SearchSpace>>>>,
     /// Per-(application, GPU) cache + setup.
     entries: Mutex<HashMap<CacheKey, Cell<Arc<SpaceEntry>>>>,
+    /// Persistent-store directory; `None` disables the warm path.
+    cache_dir: Mutex<Option<PathBuf>>,
     cache_builds: AtomicUsize,
+    cache_loads: AtomicUsize,
     space_builds: AtomicUsize,
+    space_loads: AtomicUsize,
+    events: Mutex<Vec<CacheEvent>>,
 }
 
 impl CacheRegistry {
@@ -75,9 +138,20 @@ impl CacheRegistry {
         CacheRegistry {
             spaces: Mutex::new(HashMap::new()),
             entries: Mutex::new(HashMap::new()),
+            cache_dir: Mutex::new(None),
             cache_builds: AtomicUsize::new(0),
+            cache_loads: AtomicUsize::new(0),
             space_builds: AtomicUsize::new(0),
+            space_loads: AtomicUsize::new(0),
+            events: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Registry with the persistent warm path enabled.
+    pub fn with_cache_dir(dir: PathBuf) -> CacheRegistry {
+        let reg = CacheRegistry::new();
+        reg.set_cache_dir(Some(dir));
+        reg
     }
 
     /// The process-wide registry every harness entry point shares.
@@ -86,25 +160,98 @@ impl CacheRegistry {
         GLOBAL.get_or_init(CacheRegistry::new)
     }
 
-    /// The application's enumerated search space, built at most once.
+    /// Enable (or disable, with `None`) the persistent warm path. Only
+    /// affects keys not yet resolved; already-memoized cells keep their
+    /// objects.
+    pub fn set_cache_dir(&self, dir: Option<PathBuf>) {
+        *self.cache_dir.lock().unwrap() = dir;
+    }
+
+    fn record(&self, id: String, outcome: CacheOutcome, seconds: f64) {
+        self.events.lock().unwrap().push(CacheEvent { id, outcome, seconds });
+    }
+
+    /// The application's enumerated search space, resolved at most once:
+    /// store load when a valid file exists, else build + save-back.
     pub fn space(&self, app: Application) -> Arc<SearchSpace> {
         let cell = self.spaces.lock().unwrap().entry(app).or_default().clone();
         cell.get_or_init(|| {
+            let dir = self.cache_dir.lock().unwrap().clone();
+            let t0 = Instant::now();
+            if let Some(dir) = &dir {
+                let path = persist::space_path(dir, app);
+                match persist::load_space(&path, app, LoadMode::Mmap) {
+                    Ok(space) => {
+                        self.space_loads.fetch_add(1, Ordering::Relaxed);
+                        self.record(
+                            format!("space:{}", app.name()),
+                            CacheOutcome::Loaded,
+                            t0.elapsed().as_secs_f64(),
+                        );
+                        return Arc::new(space);
+                    }
+                    Err(LoadError::Missing) => {}
+                    Err(e) => eprintln!(
+                        "cache store: rejecting {} ({e}); rebuilding",
+                        path.display()
+                    ),
+                }
+            }
             self.space_builds.fetch_add(1, Ordering::Relaxed);
-            Arc::new(app.build_space())
+            let space = Arc::new(app.build_space());
+            if let Some(dir) = &dir {
+                let path = persist::space_path(dir, app);
+                if let Err(e) = persist::save_space(&path, &space) {
+                    eprintln!("cache store: cannot write {} ({e})", path.display());
+                }
+            }
+            self.record(
+                format!("space:{}", app.name()),
+                CacheOutcome::Built,
+                t0.elapsed().as_secs_f64(),
+            );
+            space
         })
         .clone()
     }
 
-    /// The key's cache + setup, built at most once; concurrent callers of
-    /// the same key block on one build, distinct keys build in parallel.
+    /// The key's cache + setup, resolved at most once (store load when a
+    /// valid file exists, else build + save-back); concurrent callers of
+    /// the same key block on one resolution, distinct keys in parallel.
     pub fn entry(&self, key: CacheKey) -> Arc<SpaceEntry> {
         let cell = self.entries.lock().unwrap().entry(key).or_default().clone();
         cell.get_or_init(|| {
             let gpu = GpuSpec::by_name(key.gpu).expect("unknown GPU in cache key");
-            let cache = Cache::build_with_space(key.app, gpu, self.space(key.app));
-            let setup = SpaceSetup::new(&cache);
+            let space = self.space(key.app);
+            let dir = self.cache_dir.lock().unwrap().clone();
+            let t0 = Instant::now();
+            if let Some(dir) = &dir {
+                let path = persist::cache_path(dir, key.app, key.gpu);
+                match persist::load_cache(&path, key.app, gpu, Arc::clone(&space), LoadMode::Mmap)
+                {
+                    Ok(cache) => {
+                        self.cache_loads.fetch_add(1, Ordering::Relaxed);
+                        let setup = SpaceSetup::new(&cache);
+                        self.record(key.id(), CacheOutcome::Loaded, t0.elapsed().as_secs_f64());
+                        return Arc::new(SpaceEntry { key, cache, setup });
+                    }
+                    Err(LoadError::Missing) => {}
+                    Err(e) => eprintln!(
+                        "cache store: rejecting {} ({e}); rebuilding",
+                        path.display()
+                    ),
+                }
+            }
+            let cache = Cache::build_with_space(key.app, gpu, space);
             self.cache_builds.fetch_add(1, Ordering::Relaxed);
+            if let Some(dir) = &dir {
+                let path = persist::cache_path(dir, key.app, key.gpu);
+                if let Err(e) = persist::save_cache(&path, &cache) {
+                    eprintln!("cache store: cannot write {} ({e})", path.display());
+                }
+            }
+            let setup = SpaceSetup::new(&cache);
+            self.record(key.id(), CacheOutcome::Built, t0.elapsed().as_secs_f64());
             Arc::new(SpaceEntry { key, cache, setup })
         })
         .clone()
@@ -114,7 +261,8 @@ impl CacheRegistry {
     /// assembled by `runtime::measure_kernel` — under `key`, making it
     /// schedulable through the same job graph as the simulated spaces.
     /// Like every registry cell, the first registration wins; the entry
-    /// (new or pre-existing) is returned.
+    /// (new or pre-existing) is returned. Never persisted (measured bytes
+    /// have no derivable fingerprint).
     pub fn insert(&self, key: CacheKey, cache: Cache) -> Arc<SpaceEntry> {
         let cell = self.entries.lock().unwrap().entry(key).or_default().clone();
         cell.get_or_init(move || {
@@ -125,14 +273,57 @@ impl CacheRegistry {
         .clone()
     }
 
-    /// Number of caches constructed so far (tests assert exactly-once).
+    /// Number of caches constructed so far (tests assert exactly-once; a
+    /// fully warm run reports 0).
     pub fn builds(&self) -> usize {
         self.cache_builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of caches loaded from the persistent store so far.
+    pub fn loads(&self) -> usize {
+        self.cache_loads.load(Ordering::Relaxed)
     }
 
     /// Number of search-space enumerations so far.
     pub fn space_builds(&self) -> usize {
         self.space_builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of spaces loaded from the persistent store so far.
+    pub fn space_loads(&self) -> usize {
+        self.space_loads.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of all build/load events so far.
+    pub fn events(&self) -> Vec<CacheEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// The `"caches"` block of `coordinate`/`sweep` reports: counters plus
+    /// per-key outcomes with wall seconds. Entries are sorted by id —
+    /// resolution order is nondeterministic under parallel setup — and
+    /// the whole block is run *metadata*: wall seconds (and built-vs-
+    /// loaded) legitimately differ between warm and cold runs, so the
+    /// byte-identity contract covers reports with this block stripped
+    /// (`merge` emits none), see `rust/tests/integration_persist.rs`.
+    pub fn caches_json(&self) -> Json {
+        let mut events = self.events();
+        events.sort_by(|a, b| a.id.cmp(&b.id));
+        let mut block = Json::obj();
+        block.set("builds", self.builds());
+        block.set("loads", self.loads());
+        block.set("space_builds", self.space_builds());
+        block.set("space_loads", self.space_loads());
+        let mut rows = Json::Arr(Vec::new());
+        for e in events {
+            let mut row = Json::obj();
+            row.set("id", e.id.as_str());
+            row.set("outcome", e.outcome.label());
+            row.set("seconds", e.seconds);
+            rows.push(row);
+        }
+        block.set("entries", rows);
+        block
     }
 
     /// The full 4×6 evaluation grid in stable application-major order
@@ -228,5 +419,21 @@ mod tests {
         assert!(CacheKey::parse("gemm@H100").is_none());
         assert!(CacheKey::parse("nope@A100").is_none());
         assert_eq!(CacheKey::parse("gemm@A100").unwrap().id(), "gemm@A100");
+    }
+
+    #[test]
+    fn cold_run_records_built_events_and_caches_block() {
+        let reg = CacheRegistry::new();
+        reg.entry(CacheKey::parse("convolution@A4000").unwrap());
+        let events = reg.events();
+        assert_eq!(events.len(), 2); // space:convolution + convolution@A4000
+        assert!(events.iter().all(|e| e.outcome == CacheOutcome::Built));
+        let block = reg.caches_json();
+        assert_eq!(block.get("builds").and_then(Json::as_usize), Some(1));
+        assert_eq!(block.get("loads").and_then(Json::as_usize), Some(0));
+        let rows = block.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        // Sorted by id: "convolution@A4000" < "space:convolution".
+        assert_eq!(rows[0].get("id").and_then(Json::as_str), Some("convolution@A4000"));
     }
 }

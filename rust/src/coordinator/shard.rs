@@ -1,0 +1,379 @@
+//! Sharded grid execution: split a deterministic job grid across
+//! processes, then collate the per-shard partial reports into exactly the
+//! single-process report, byte for byte.
+//!
+//! Because every job's seed is derived from its grid *coordinates*
+//! ([`super::job::job_seed`]) and never from execution order, the grid can
+//! be partitioned arbitrarily: shard `K/N` owns the flat indices `i` with
+//! `i % N == K` (round-robin, so uneven space costs spread across shards
+//! instead of clustering in one). Each shard executes only its own jobs
+//! and writes a *partial* report — the grid header plus its raw
+//! per-job curves. [`merge_reports`] then validates that the partials
+//! describe the same grid (identical headers), that every shard of the
+//! declared count is present exactly once, and that the job indices cover
+//! the grid exactly; it reassembles the curves in flat-index order and
+//! recomputes the aggregation pipeline ([`super::report::collate_groups`]
+//! → [`super::report::grid_aggregates`] → [`super::report::scores_json`]).
+//! The JSON number grammar round-trips `f64` bit-exactly
+//! ([`crate::util::json::Json::parse`]), so the merged report is
+//! byte-identical to `coordinate --out` run in one process — pinned by
+//! `rust/tests/integration_persist.rs`.
+//!
+//! Sweep partials work the same way over meta-ordinals instead of job
+//! indices (grid strategy only — the adaptive strategies decide later
+//! evaluations from earlier scores, so their job sets are not
+//! partitionable up front); their rows are produced by
+//! [`crate::hypertune::sweep_partial_json`] and merged here.
+
+use super::executor::JobsSummary;
+use super::report::{grid_aggregates, scores_json};
+use crate::util::json::Json;
+
+/// One shard of an `N`-way split: owns flat indices `i % count == index`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// Parse the CLI's `--shard K/N` (0-based, `K < N`).
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let (k, n) = s.split_once('/').ok_or_else(|| format!("--shard wants K/N, got '{s}'"))?;
+        let index: usize = k.parse().map_err(|_| format!("bad shard index '{k}'"))?;
+        let count: usize = n.parse().map_err(|_| format!("bad shard count '{n}'"))?;
+        if count == 0 {
+            return Err("shard count must be at least 1".into());
+        }
+        if index >= count {
+            return Err(format!("shard index {index} out of range for {count} shard(s)"));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Does this shard own flat grid index `i`?
+    pub fn owns(&self, i: usize) -> bool {
+        i % self.count == self.index
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("index", self.index);
+        j.set("count", self.count);
+        j
+    }
+}
+
+/// One executed job of a shard: its flat grid index, its reassembly group,
+/// and its curve.
+pub struct ShardJob {
+    pub index: usize,
+    pub group: usize,
+    pub curve: Vec<f64>,
+}
+
+/// The partial report of one `coordinate --shard K/N` run: the full grid
+/// header (so the merger can prove all partials describe the same grid)
+/// plus this shard's raw curves. Deliberately *not* aggregated — scores
+/// only exist on the merged whole.
+#[allow(clippy::too_many_arguments)]
+pub fn partial_coordinate_json(
+    title: &str,
+    space_ids: &[String],
+    labels: &[String],
+    runs: usize,
+    seed: u64,
+    shard: &ShardSpec,
+    total_jobs: usize,
+    summary: &JobsSummary,
+    jobs: &[ShardJob],
+) -> Json {
+    let mut j = Json::obj();
+    j.set("partial", "coordinate");
+    j.set("title", title);
+    j.set("spaces", Json::Arr(space_ids.iter().map(|s| Json::from(s.as_str())).collect()));
+    j.set("optimizers", Json::Arr(labels.iter().map(|s| Json::from(s.as_str())).collect()));
+    j.set("runs", runs);
+    j.set("seed", seed);
+    j.set("total_jobs", total_jobs);
+    j.set("shard", shard.to_json());
+    j.set("jobs", summary.to_json());
+    let mut rows: Vec<Json> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let mut row = Json::obj();
+        row.set("index", job.index);
+        row.set("group", job.group);
+        row.set("curve", job.curve.clone());
+        rows.push(row);
+    }
+    j.set("curves", Json::Arr(rows));
+    j
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("partial report is missing '{key}'"))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    field(j, key)?.as_usize().ok_or_else(|| format!("'{key}' is not a non-negative integer"))
+}
+
+/// Check that `key` renders identically in every partial (the cheap,
+/// exact way to compare grid headers — the writer is canonical).
+fn require_equal(partials: &[Json], key: &str) -> Result<(), String> {
+    let first = field(&partials[0], key)?.to_string();
+    for (i, p) in partials.iter().enumerate().skip(1) {
+        if field(p, key)?.to_string() != first {
+            return Err(format!("partial {i} disagrees on '{key}' (different grids?)"));
+        }
+    }
+    Ok(())
+}
+
+/// Validate the shard set: every partial declares the same count, and the
+/// indices are exactly `0..count`, each once. Returns the count.
+fn require_complete_shards(partials: &[Json]) -> Result<usize, String> {
+    let count = usize_field(field(&partials[0], "shard")?, "count")?;
+    let mut seen = vec![false; count];
+    for p in partials {
+        let shard = field(p, "shard")?;
+        if usize_field(shard, "count")? != count {
+            return Err("partials disagree on the shard count".into());
+        }
+        let idx = usize_field(shard, "index")?;
+        if idx >= count {
+            return Err(format!("shard index {idx} out of range for {count} shard(s)"));
+        }
+        if std::mem::replace(&mut seen[idx], true) {
+            return Err(format!("shard {idx}/{count} appears twice"));
+        }
+    }
+    if let Some(missing) = seen.iter().position(|s| !s) {
+        return Err(format!("shard {missing}/{count} is missing"));
+    }
+    Ok(count)
+}
+
+/// Sum the per-shard `"jobs"` completion blocks.
+fn summed_jobs(partials: &[Json]) -> Result<JobsSummary, String> {
+    let mut out = JobsSummary::default();
+    for p in partials {
+        let jobs = field(p, "jobs")?;
+        out.absorb(JobsSummary {
+            completed: usize_field(jobs, "completed")?,
+            cancelled: usize_field(jobs, "cancelled")?,
+            failed: usize_field(jobs, "failed")?,
+        });
+    }
+    Ok(out)
+}
+
+fn str_list(j: &Json, key: &str) -> Result<Vec<String>, String> {
+    field(j, key)?
+        .as_arr()
+        .ok_or_else(|| format!("'{key}' is not an array"))?
+        .iter()
+        .map(|v| {
+            v.as_str().map(str::to_string).ok_or_else(|| format!("'{key}' holds a non-string"))
+        })
+        .collect()
+}
+
+/// Merge per-shard partial reports into the single-process report. The
+/// input order is irrelevant; the output is a pure function of the
+/// partial *set*. Errors (never panics) on partials from different grids,
+/// duplicate or missing shards, and incomplete or overlapping coverage.
+pub fn merge_reports(partials: &[Json]) -> Result<Json, String> {
+    if partials.is_empty() {
+        return Err("no partial reports to merge".into());
+    }
+    let kind = field(&partials[0], "partial")?
+        .as_str()
+        .ok_or("'partial' is not a string")?
+        .to_string();
+    for (i, p) in partials.iter().enumerate() {
+        if field(p, "partial")?.as_str() != Some(kind.as_str()) {
+            return Err(format!("partial {i} is not a '{kind}' report"));
+        }
+    }
+    match kind.as_str() {
+        "coordinate" => merge_coordinate(partials),
+        "sweep" => merge_sweep(partials),
+        other => Err(format!("unknown partial report kind '{other}'")),
+    }
+}
+
+fn merge_coordinate(partials: &[Json]) -> Result<Json, String> {
+    for key in ["title", "spaces", "optimizers", "runs", "seed", "total_jobs"] {
+        require_equal(partials, key)?;
+    }
+    require_complete_shards(partials)?;
+    let head = &partials[0];
+    let title = field(head, "title")?.as_str().ok_or("'title' is not a string")?;
+    let space_ids = str_list(head, "spaces")?;
+    let labels = str_list(head, "optimizers")?;
+    let total_jobs = usize_field(head, "total_jobs")?;
+    let n_groups = labels.len() * space_ids.len();
+
+    // Reassemble the flat curve array: every grid index exactly once.
+    let mut slots: Vec<Option<(usize, Vec<f64>)>> = (0..total_jobs).map(|_| None).collect();
+    for p in partials {
+        let rows = field(p, "curves")?.as_arr().ok_or("'curves' is not an array")?;
+        for row in rows {
+            let index = usize_field(row, "index")?;
+            if index >= total_jobs {
+                return Err(format!("job index {index} out of range for {total_jobs} jobs"));
+            }
+            let group = usize_field(row, "group")?;
+            if group >= n_groups {
+                return Err(format!("job {index} has group {group}, grid has {n_groups}"));
+            }
+            let curve: Vec<f64> = field(row, "curve")?
+                .as_arr()
+                .ok_or("'curve' is not an array")?
+                .iter()
+                .map(|v| v.as_f64().ok_or("curve holds a non-number"))
+                .collect::<Result<_, _>>()?;
+            if slots[index].replace((group, curve)).is_some() {
+                return Err(format!("job index {index} appears in more than one partial"));
+            }
+        }
+    }
+    if let Some(missing) = slots.iter().position(|s| s.is_none()) {
+        return Err(format!("job index {missing} is covered by no partial"));
+    }
+    let (groups, curves): (Vec<usize>, Vec<Vec<f64>>) =
+        slots.into_iter().map(|s| s.unwrap()).unzip();
+
+    let grouped = super::report::collate_groups(n_groups, &groups, curves);
+    let results = grid_aggregates(&labels, space_ids.len(), grouped);
+    Ok(scores_json(title, &space_ids, &results, &summed_jobs(partials)?))
+}
+
+fn merge_sweep(partials: &[Json]) -> Result<Json, String> {
+    for key in ["base", "strategy", "spaces", "runs", "seed", "meta_space_size"] {
+        require_equal(partials, key)?;
+    }
+    require_complete_shards(partials)?;
+    let head = &partials[0];
+    let meta_space_size = usize_field(head, "meta_space_size")?;
+
+    // Every meta-ordinal exactly once; rows re-sorted into leaderboard
+    // order (score descending, ties by ascending ordinal — the exact
+    // comparator of `MetaTuning::leaderboard`).
+    let mut rows: Vec<(usize, f64, Json)> = Vec::with_capacity(meta_space_size);
+    let mut seen = vec![false; meta_space_size];
+    for p in partials {
+        for row in field(p, "leaderboard")?.as_arr().ok_or("'leaderboard' is not an array")? {
+            let ordinal = usize_field(row, "ordinal")?;
+            if ordinal >= meta_space_size {
+                return Err(format!(
+                    "meta-ordinal {ordinal} out of range for {meta_space_size} configs"
+                ));
+            }
+            if std::mem::replace(&mut seen[ordinal], true) {
+                return Err(format!("meta-ordinal {ordinal} appears in more than one partial"));
+            }
+            let score =
+                field(row, "score")?.as_f64().ok_or("'score' is not a number")?;
+            let mut row = row.clone();
+            row.remove("ordinal");
+            rows.push((ordinal, score, row));
+        }
+    }
+    if let Some(missing) = seen.iter().position(|s| !s) {
+        return Err(format!("meta-ordinal {missing} is covered by no partial"));
+    }
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+
+    let mut j = Json::obj();
+    for key in ["base", "strategy", "spaces", "runs", "seed", "meta_space_size"] {
+        j.set(key, field(head, key)?.clone());
+    }
+    j.set("jobs", summed_jobs(partials)?.to_json());
+    j.set("leaderboard", Json::Arr(rows.into_iter().map(|(_, _, r)| r).collect()));
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_parse_and_ownership() {
+        let s = ShardSpec::parse("1/3").unwrap();
+        assert_eq!(s, ShardSpec { index: 1, count: 3 });
+        assert!(!s.owns(0) && s.owns(1) && !s.owns(2) && !s.owns(3) && s.owns(4));
+        // Every index is owned by exactly one shard of a split.
+        for i in 0..20 {
+            let owners =
+                (0..3).filter(|&k| ShardSpec { index: k, count: 3 }.owns(i)).count();
+            assert_eq!(owners, 1);
+        }
+        assert!(ShardSpec::parse("3/3").is_err());
+        assert!(ShardSpec::parse("0/0").is_err());
+        assert!(ShardSpec::parse("1").is_err());
+        assert!(ShardSpec::parse("a/b").is_err());
+        assert!(ShardSpec::parse("1/2").unwrap().owns(1));
+    }
+
+    fn tiny_partial(shard: ShardSpec, total: usize) -> Json {
+        let jobs: Vec<ShardJob> = (0..total)
+            .filter(|&i| shard.owns(i))
+            .map(|i| ShardJob { index: i, group: i % 2, curve: vec![i as f64, 0.5] })
+            .collect();
+        let summary =
+            JobsSummary { completed: jobs.len(), cancelled: 0, failed: 0 };
+        partial_coordinate_json(
+            "t",
+            &["s".to_string()],
+            &["a".to_string(), "b".to_string()],
+            3,
+            7,
+            &shard,
+            total,
+            &summary,
+            &jobs,
+        )
+    }
+
+    #[test]
+    fn merge_validates_shard_set_and_coverage() {
+        let a = tiny_partial(ShardSpec { index: 0, count: 2 }, 6);
+        let b = tiny_partial(ShardSpec { index: 1, count: 2 }, 6);
+        // Complete set merges (order-independently).
+        let m1 = merge_reports(&[a.clone(), b.clone()]).unwrap();
+        let m2 = merge_reports(&[b.clone(), a.clone()]).unwrap();
+        assert_eq!(m1.to_string(), m2.to_string());
+        assert_eq!(
+            m1.get("jobs").unwrap().get("completed").unwrap().as_usize(),
+            Some(6)
+        );
+        // The merged report is a full report, not a partial.
+        assert!(m1.get("partial").is_none());
+        assert!(m1.get("scores").is_some());
+        // Missing shard.
+        let err = merge_reports(&[a.clone()]).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+        // Duplicate shard.
+        let err = merge_reports(&[a.clone(), a.clone()]).unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+        // Mismatched grids.
+        let c = tiny_partial(ShardSpec { index: 1, count: 2 }, 8);
+        let err = merge_reports(&[a.clone(), c]).unwrap_err();
+        assert!(err.contains("total_jobs"), "{err}");
+        // Nothing at all.
+        assert!(merge_reports(&[]).is_err());
+        // Duplicate job coverage: two shards both claiming index 0.
+        let mut d = tiny_partial(ShardSpec { index: 1, count: 2 }, 6);
+        let mut extra = Json::obj();
+        extra.set("index", 0usize);
+        extra.set("group", 0usize);
+        extra.set("curve", vec![0.0]);
+        let mut rows = d.remove("curves").unwrap();
+        rows.push(extra);
+        d.set("curves", rows);
+        let err = merge_reports(&[a, d]).unwrap_err();
+        assert!(err.contains("more than one partial"), "{err}");
+    }
+}

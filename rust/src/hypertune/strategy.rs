@@ -186,35 +186,51 @@ pub fn leaderboard_table(title: &str, leaderboard: &[MetaResult], top: usize) ->
     t
 }
 
+/// The sweep's grid header — the fields shared verbatim by the full
+/// report and the per-shard partials (so `merge` can prove all partials
+/// describe the same sweep by exact comparison).
+fn sweep_header(mt: &MetaTuning, strategy: &str, seed: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("base", mt.base().to_string());
+    j.set("strategy", strategy);
+    j.set("spaces", Json::Arr(mt.space_ids().into_iter().map(Json::from).collect()));
+    j.set("runs", mt.runs());
+    j.set("seed", seed);
+    j.set("meta_space_size", mt.space().len());
+    j
+}
+
+/// One leaderboard row. `ordinal` is carried only in shard partials —
+/// the merger needs it to prove coverage and to re-sort exactly as
+/// [`MetaTuning::leaderboard`] does — and stripped on merge, so the full
+/// report never shows it.
+fn result_row(r: &MetaResult, with_ordinal: bool) -> Json {
+    let mut row = Json::obj();
+    if with_ordinal {
+        row.set("ordinal", r.ordinal as u64);
+    }
+    row.set("spec", r.spec.to_string());
+    let mut ov = Json::obj();
+    for (k, v) in &r.overrides {
+        ov.set(k, *v);
+    }
+    row.set("overrides", ov);
+    row.set("runs", r.runs);
+    row.set("score", r.score);
+    row.set("per_space", r.per_space.clone());
+    row
+}
+
 /// The sweep report as JSON — every field a pure function of the sweep
 /// inputs (no wall-clock, no thread counts), so files are byte-identical
 /// for any `--threads` width. Shares [`crate::util::json::write_file`]
 /// with `coordinate --out`.
 pub fn sweep_json(mt: &MetaTuning, outcome: &SweepOutcome, seed: u64) -> Json {
-    let mut j = Json::obj();
-    j.set("base", mt.base().to_string());
-    j.set("strategy", outcome.strategy.clone());
-    j.set("spaces", Json::Arr(mt.space_ids().into_iter().map(Json::from).collect()));
-    j.set("runs", mt.runs());
-    j.set("seed", seed);
-    j.set("meta_space_size", mt.space().len());
+    let mut j = sweep_header(mt, &outcome.strategy, seed);
     // Inner-job completion counters: partial sweeps (a cancelled or
     // partly-failed run) stay diffable against full ones.
     j.set("jobs", mt.jobs_summary().to_json());
-    let mut rows: Vec<Json> = Vec::with_capacity(outcome.leaderboard.len());
-    for r in &outcome.leaderboard {
-        let mut row = Json::obj();
-        row.set("spec", r.spec.to_string());
-        let mut ov = Json::obj();
-        for (k, v) in &r.overrides {
-            ov.set(k, *v);
-        }
-        row.set("overrides", ov);
-        row.set("runs", r.runs);
-        row.set("score", r.score);
-        row.set("per_space", r.per_space.clone());
-        rows.push(row);
-    }
+    let rows: Vec<Json> = outcome.leaderboard.iter().map(|r| result_row(r, false)).collect();
     j.set("leaderboard", Json::Arr(rows));
     if !outcome.rungs.is_empty() {
         let ordinals = |os: &[u32]| Json::Arr(os.iter().map(|&o| Json::from(o as u64)).collect());
@@ -228,6 +244,33 @@ pub fn sweep_json(mt: &MetaTuning, outcome: &SweepOutcome, seed: u64) -> Json {
         }
         j.set("rungs", Json::Arr(rs));
     }
+    j
+}
+
+/// The partial report of one `sweep --meta grid --shard K/N` run: the
+/// sweep header, this shard's `"jobs"` counters, and the leaderboard rows
+/// of the meta-ordinals it owns (each tagged with its ordinal for the
+/// merger). Grid only — the adaptive strategies (random with shared seed
+/// is fine, but sha/search choose later evaluations from earlier scores)
+/// have no up-front partition, and the CLI rejects them.
+pub fn sweep_partial_json(
+    mt: &MetaTuning,
+    outcome: &SweepOutcome,
+    seed: u64,
+    shard: &crate::coordinator::ShardSpec,
+) -> Json {
+    let mut j = Json::obj();
+    j.set("partial", "sweep");
+    let header = sweep_header(mt, &outcome.strategy, seed);
+    if let Json::Obj(pairs) = header {
+        for (k, v) in pairs {
+            j.set(&k, v);
+        }
+    }
+    j.set("shard", shard.to_json());
+    j.set("jobs", mt.jobs_summary().to_json());
+    let rows: Vec<Json> = outcome.leaderboard.iter().map(|r| result_row(r, true)).collect();
+    j.set("leaderboard", Json::Arr(rows));
     j
 }
 

@@ -55,6 +55,14 @@ pub fn space_salt(app: Application, gpu: &GpuSpec) -> u64 {
     crate::util::rng::fnv1a(format!("{}::{}", app.name(), gpu.name).as_bytes())
 }
 
+/// Revision counter of the performance-model family. Bump whenever any
+/// model formula, shared component, GPU spec constant, or noise stream
+/// changes the values a [`KernelModel`] (or the simulated compile times)
+/// can produce — the persistent cache store (`crate::persist`) folds this
+/// into its build fingerprint, so bumping it invalidates every stored
+/// cache instead of silently replaying outputs of the old models.
+pub const MODEL_REVISION: u32 = 1;
+
 // ----------------------------------------------------------------------
 // Shared model components
 // ----------------------------------------------------------------------

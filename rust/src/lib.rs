@@ -20,6 +20,7 @@ pub mod kernels;
 pub mod llamea;
 pub mod methodology;
 pub mod optimizers;
+pub mod persist;
 pub mod runtime;
 pub mod searchspace;
 pub mod tuning;

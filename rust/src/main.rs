@@ -33,6 +33,9 @@
 //!       [--backend measured        tune lazily-measured AOT variant spaces
 //!        --artifacts DIR]          instead of simulated caches
 //!       [--out FILE]               also write the score table as JSON
+//!       [--shard K/N]              run only grid jobs with index % N == K
+//!                                  and write a partial report (requires
+//!                                  --out; collate with `merge`)
 //!   sweep --opt NAME[:k=v,..]      meta-tune an optimizer's hyperparameters
 //!                                  (overridden keys are pinned out of the
 //!                                  sweep); spaces default to
@@ -47,19 +50,33 @@
 //!                                  on  [--runs N] seeds per space
 //!       [--out FILE]               write the leaderboard JSON (byte-
 //!                                  identical for any --threads width)
+//!       [--shard K/N]              evaluate only meta-ordinals with
+//!                                  o % N == K (grid strategy only) and
+//!                                  write a partial report (requires --out)
+//!   merge <partial.json>.. --out F collate per-shard partial reports into
+//!                                  exactly the single-process report,
+//!                                  byte for byte
 //!   options: --runs N --gen-runs N --llm-calls N --seed S --threads N
 //!            --jobs N --backend cached|measured
+//!            --cache-dir DIR (any subcommand: persist exhaustive caches
+//!            and search spaces to DIR and warm-start from it — stale or
+//!            foreign files are fingerprint-rejected and rebuilt; reports
+//!            gain a "caches" block of per-key built|loaded outcomes)
 
 #![allow(clippy::type_complexity)]
 
 use std::path::{Path, PathBuf};
 
 use llamea_kt::coordinator::{
-    collate_groups, grid_aggregates, grid_jobs, grid_source, score_table, scores_json,
-    source_jobs, CacheKey, CacheRegistry, Executor, Progress, Scheduler,
+    collate_groups, grid_aggregates, grid_jobs, grid_source, merge_reports,
+    partial_coordinate_json, score_table, scores_json, source_jobs, CacheKey, CacheRegistry,
+    Executor, Progress, Scheduler, ShardJob, ShardSpec,
 };
 use llamea_kt::harness::{self, BackendKind, ExpOptions};
-use llamea_kt::hypertune::{leaderboard_table, sweep, sweep_json, MetaStrategy, MetaTuning};
+use llamea_kt::hypertune::{
+    leaderboard_table, sweep, sweep_json, sweep_partial_json, MetaStrategy, MetaTuning,
+    SweepOutcome,
+};
 use llamea_kt::kernels::gpu::{GpuSpec, CPU_HOST};
 use llamea_kt::llamea::{evolve, EvolutionConfig, MockLlm, SpaceInfo};
 use llamea_kt::methodology::{OptimizerFactory, SpaceSetup};
@@ -189,6 +206,44 @@ fn options(args: &[String]) -> ExpOptions {
 
 fn out_dir(args: &[String]) -> PathBuf {
     PathBuf::from(flag_value(args, "--out").unwrap_or_else(|| "results".into()))
+}
+
+/// Parse `--shard K/N` if present (exit 2 on a malformed value).
+fn shard_flag(args: &[String]) -> Option<ShardSpec> {
+    flag_value(args, "--shard").map(|s| {
+        ShardSpec::parse(&s).unwrap_or_else(|e| {
+            eprintln!("{}", e);
+            std::process::exit(2);
+        })
+    })
+}
+
+/// `--out` is mandatory for sharded runs: the partial report *is* the
+/// deliverable (scores only exist on the merged whole).
+fn shard_out(args: &[String]) -> String {
+    flag_value(args, "--out").unwrap_or_else(|| {
+        eprintln!("--shard requires --out FILE (the partial report is the shard's output)");
+        std::process::exit(2);
+    })
+}
+
+/// Write a report, appending the registry's `"caches"` block — run
+/// metadata (built-vs-loaded outcomes with wall seconds), deliberately
+/// outside the byte-identity contract: identity comparisons strip this
+/// one key, and `merge` emits none.
+fn write_report(path: &str, mut json: llamea_kt::util::json::Json) {
+    json.set("caches", CacheRegistry::global().caches_json());
+    llamea_kt::util::json::write_file(Path::new(path), &json)
+        .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
+}
+
+/// The warm/cold cache tally for the post-run stderr summary.
+fn cache_tally(registry: &CacheRegistry) -> String {
+    format!(
+        "{} loaded from store, {} built this process",
+        registry.loads() + registry.space_loads(),
+        registry.builds() + registry.space_builds()
+    )
 }
 
 fn cmd_spaces() {
@@ -461,7 +516,51 @@ fn cmd_coordinate(args: &[String]) {
     let factories: Vec<(String, &dyn OptimizerFactory)> =
         specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
     let n_jobs = entries.len() * factories.len() * runs;
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+    let title = "Coordinator: aggregate score P per optimizer";
     let exec = Executor::with_threads(threads).fail_fast();
+
+    if let Some(shard) = shard_flag(args) {
+        // Sharded run: execute only the owned slice of the grid and write
+        // a partial report of raw curves (`merge` collates the shards
+        // into exactly the single-process report).
+        let path = shard_out(args);
+        let all_jobs = grid_jobs(&entries, &factories, runs, opts.seed);
+        let picked: Vec<usize> = (0..all_jobs.len()).filter(|&i| shard.owns(i)).collect();
+        let shard_jobs: Vec<_> = picked.iter().map(|&i| all_jobs[i]).collect();
+        eprintln!(
+            "coordinating shard {}/{}: {} of {} jobs on {} workers",
+            shard.index,
+            shard.count,
+            shard_jobs.len(),
+            n_jobs,
+            exec.threads()
+        );
+        let t0 = std::time::Instant::now();
+        let progress = ProgressLine::new(Some(shard_jobs.len()));
+        let batch = exec.run_jobs_observed(&shard_jobs, &|ev| progress.observe(ev));
+        progress.finish();
+        let summary = batch.summary();
+        let rows: Vec<ShardJob> = picked
+            .iter()
+            .zip(batch.expect_curves())
+            .map(|(&i, curve)| ShardJob { index: i, group: all_jobs[i].group, curve })
+            .collect();
+        let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+        let json = partial_coordinate_json(
+            title, &ids, &labels, runs, opts.seed, &shard, n_jobs, &summary, &rows,
+        );
+        write_report(&path, json);
+        eprintln!("partial report written to {}", path);
+        eprintln!(
+            "{} jobs (caches: {}) in {:?}",
+            rows.len(),
+            cache_tally(registry),
+            t0.elapsed()
+        );
+        return;
+    }
+
     eprintln!(
         "coordinating {} jobs ({} optimizers x {} spaces x {} seeds) on {} workers",
         n_jobs,
@@ -480,22 +579,18 @@ fn cmd_coordinate(args: &[String]) {
     let summary = batch.summary();
     let groups = batch.groups();
     let grouped = collate_groups(factories.len() * entries.len(), &groups, batch.expect_curves());
-    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
     let results = grid_aggregates(&labels, entries.len(), grouped);
-    let title = "Coordinator: aggregate score P per optimizer";
     println!("{}", score_table(title, &results).to_text());
     if let Some(path) = flag_value(args, "--out") {
         let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
-        let json = scores_json(title, &ids, &results, &summary);
-        llamea_kt::util::json::write_file(Path::new(&path), &json)
-            .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
+        write_report(&path, scores_json(title, &ids, &results, &summary));
         eprintln!("score table written to {}", path);
     }
     eprintln!(
-        "{} jobs over {} caches ({} built this process) in {:?}",
+        "{} jobs over {} spaces (caches: {}) in {:?}",
         n_jobs,
         entries.len(),
-        registry.builds(),
+        cache_tally(registry),
         t0.elapsed()
     );
 }
@@ -607,6 +702,52 @@ fn cmd_sweep(args: &[String]) {
     let mt = MetaTuning::new(base, entries, runs, opts.seed, threads)
         .unwrap_or_else(|e| panic!("sweep setup: {}", e))
         .with_progress(Box::new(move |ev| line.observe(ev)));
+
+    if let Some(shard) = shard_flag(args) {
+        // Sharded sweep: only the grid strategy has an up-front job set
+        // (adaptive strategies pick later evaluations from earlier
+        // scores, so their work cannot be partitioned before running).
+        if !matches!(strategy, MetaStrategy::Grid) {
+            eprintln!(
+                "--shard requires --meta grid (strategy '{}' decides its evaluations \
+                 adaptively and cannot be partitioned up front)",
+                strategy.label()
+            );
+            std::process::exit(2);
+        }
+        let path = shard_out(args);
+        let cands: Vec<u32> =
+            (0..mt.space().len() as u32).filter(|&o| shard.owns(o as usize)).collect();
+        eprintln!(
+            "sweeping shard {}/{}: {} of {} meta-configs of {} over {} ({} seeds each)",
+            shard.index,
+            shard.count,
+            cands.len(),
+            mt.space().len(),
+            mt.base(),
+            mt.space_ids().join(","),
+            mt.runs(),
+        );
+        let t0 = std::time::Instant::now();
+        mt.evaluate_all(&cands, mt.runs());
+        progress.finish();
+        let outcome = SweepOutcome {
+            strategy: strategy.label(),
+            leaderboard: mt.leaderboard(),
+            rungs: Vec::new(),
+        };
+        write_report(&path, sweep_partial_json(&mt, &outcome, opts.seed, &shard));
+        eprintln!("partial sweep report written to {}", path);
+        eprintln!(
+            "{} meta-evaluations / {} inner jobs (caches: {}) in {:?}",
+            mt.evaluations(),
+            mt.jobs_summary().total(),
+            cache_tally(CacheRegistry::global()),
+            t0.elapsed()
+        );
+        return;
+    }
+
     eprintln!(
         "sweeping {} meta-configs of {} over {} ({} seeds each, strategy {}, ~{:.0}s simulated per meta-eval)",
         mt.space().len(),
@@ -636,20 +777,66 @@ fn cmd_sweep(args: &[String]) {
         println!("best: {} (score {:.3} over {} seeds)", best.spec, best.score, best.runs);
     }
     if let Some(path) = flag_value(args, "--out") {
-        let json = sweep_json(&mt, &outcome, opts.seed);
-        llamea_kt::util::json::write_file(Path::new(&path), &json)
-            .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
+        write_report(&path, sweep_json(&mt, &outcome, opts.seed));
         eprintln!("sweep report written to {}", path);
     }
     let jobs = mt.jobs_summary();
     eprintln!(
-        "{} meta-evaluations / {} inner jobs over {} distinct configs ({} memo hits) in {:?}",
+        "{} meta-evaluations / {} inner jobs over {} distinct configs ({} memo hits, caches: {}) in {:?}",
         mt.evaluations(),
         jobs.total(),
         outcome.leaderboard.len(),
         mt.memo_hits(),
+        cache_tally(CacheRegistry::global()),
         t0.elapsed()
     );
+}
+
+/// Collate per-shard partial reports (`coordinate --shard` / `sweep
+/// --shard` outputs) into the single-process report, byte for byte.
+/// Inputs are the positional arguments; `--out` names the merged file.
+fn cmd_merge(args: &[String]) {
+    let out = flag_value(args, "--out").unwrap_or_else(|| {
+        eprintln!("merge requires --out FILE");
+        std::process::exit(2);
+    });
+    let mut inputs: Vec<&String> = Vec::new();
+    let mut skip = false;
+    for a in args {
+        if skip {
+            skip = false;
+            continue;
+        }
+        if a == "--out" || a == "--cache-dir" {
+            skip = true;
+            continue;
+        }
+        if a.starts_with("--") {
+            eprintln!("merge: unknown flag '{}' (usage: merge <partial.json>.. --out F)", a);
+            std::process::exit(2);
+        }
+        inputs.push(a);
+    }
+    if inputs.is_empty() {
+        eprintln!("merge: no partial reports given");
+        std::process::exit(2);
+    }
+    let partials: Vec<llamea_kt::util::json::Json> = inputs
+        .iter()
+        .map(|p| {
+            llamea_kt::util::json::read_file(Path::new(p)).unwrap_or_else(|e| {
+                eprintln!("merge: {}", e);
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    let merged = merge_reports(&partials).unwrap_or_else(|e| {
+        eprintln!("merge: {}", e);
+        std::process::exit(2);
+    });
+    llamea_kt::util::json::write_file(Path::new(&out), &merged)
+        .unwrap_or_else(|e| panic!("writing {}: {}", out, e));
+    eprintln!("merged {} partial reports into {}", partials.len(), out);
 }
 
 fn cmd_experiment(args: &[String]) {
@@ -712,6 +899,17 @@ fn cmd_experiment(args: &[String]) {
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // `--cache-dir DIR` works on every subcommand: all registry lookups
+    // anywhere in the process warm-start from (and save back to) DIR.
+    if let Some(dir) = flag_value(&args, "--cache-dir") {
+        match llamea_kt::persist::prepare_cache_dir(Path::new(&dir)) {
+            Ok(p) => CacheRegistry::global().set_cache_dir(Some(p)),
+            Err(e) => {
+                eprintln!("--cache-dir: {}", e);
+                std::process::exit(2);
+            }
+        }
+    }
     match args.first().map(|s| s.as_str()) {
         Some("spaces") => cmd_spaces(),
         Some("testbed") => println!("{}", harness::testbed_summary().to_text()),
@@ -722,9 +920,10 @@ fn main() {
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("coordinate") => cmd_coordinate(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("merge") => cmd_merge(&args[1..]),
         _ => {
             eprintln!(
-                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|sweep> [options]\n\
+                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|sweep|merge> [options]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);

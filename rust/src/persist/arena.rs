@@ -1,0 +1,327 @@
+//! Owned-or-mapped flat arenas.
+//!
+//! [`Arena<T>`] is the storage type behind every flat array the persistent
+//! store serializes (`SearchSpace` config rows, CSR neighbor tables,
+//! `Cache::mean_ms`/`compile_s`). It dereferences to `&[T]` so all existing
+//! accessor seams keep working, and it comes in two flavors:
+//!
+//! - `Owned`: a plain `Vec<T>` — what fresh builds produce.
+//! - `View`: a typed window into a shared byte buffer ([`Bytes`]), which is
+//!   either the whole store file read into memory or an mmap of it. Loading
+//!   a store file this way copies nothing: the arenas borrow the mapping.
+//!
+//! Safety rests on two invariants enforced at construction: the element
+//! type is plain-old-data ([`Pod`]), and the view's byte offset is aligned
+//! for `T` (section offsets are 16-byte aligned in the file, mmap bases are
+//! page-aligned, and owned buffers are backed by `Vec<u64>`, so any `T` up
+//! to 8-byte alignment is valid). The store is little-endian on disk and
+//! refuses to operate on big-endian hosts rather than byte-swapping.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Marker for plain-old-data element types that can be reinterpreted from
+/// raw little-endian bytes.
+///
+/// # Safety
+///
+/// Implementors must be `Copy`, have no padding, no invalid bit patterns,
+/// and alignment ≤ 8.
+pub unsafe trait Pod: Copy + 'static {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// View a typed slice as raw bytes (for serialization; little-endian hosts
+/// only — the store gates on endianness before calling this).
+pub fn slice_bytes<T: Pod>(s: &[T]) -> &[u8] {
+    // Safety: Pod guarantees no padding; any byte pattern is readable.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+}
+
+/// A read-only, page-aligned memory map of an entire file.
+///
+/// The offline environment has no `libc` crate, but every `std` binary on
+/// unix already links the C library, so `mmap`/`munmap` are declared
+/// directly. Non-unix targets return `Unsupported` and callers fall back to
+/// reading the file into an owned buffer.
+pub struct Mmap {
+    #[cfg(unix)]
+    ptr: *mut std::os::raw::c_void,
+    len: usize,
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+impl Mmap {
+    /// Map a whole file read-only. Fails on empty files (zero-length maps
+    /// are invalid) and on non-unix targets.
+    pub fn map(file: &std::fs::File) -> std::io::Result<Mmap> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let len = file.metadata()?.len();
+            if len == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "cannot map an empty file",
+                ));
+            }
+            let len = usize::try_from(len).map_err(|_| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "file too large to map")
+            })?;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr, len })
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = file;
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mmap is unavailable on this target",
+            ))
+        }
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        #[cfg(unix)]
+        // Safety: the mapping is valid for `len` bytes until Drop.
+        unsafe {
+            std::slice::from_raw_parts(self.ptr as *const u8, self.len)
+        }
+        #[cfg(not(unix))]
+        unreachable!("Mmap cannot be constructed on non-unix targets")
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // Safety: ptr/len came from a successful mmap and are unmapped once.
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+// Safety: the mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
+// lifetime, so shared references across threads are sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len)
+    }
+}
+
+/// An 8-byte-aligned owned buffer holding a whole store file (the read —
+/// non-mmap — load path). Backed by `Vec<u64>` so typed views up to 8-byte
+/// alignment are valid at any 8-aligned offset.
+#[derive(Debug)]
+pub struct OwnedBytes {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl OwnedBytes {
+    /// Read an entire file into an aligned buffer.
+    pub fn read(file: &mut std::fs::File) -> std::io::Result<OwnedBytes> {
+        use std::io::Read;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "file too large to read")
+        })?;
+        let mut words = vec![0u64; len.div_ceil(8)];
+        // Safety: u64 has no padding; viewing its buffer as bytes is sound.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, words.len() * 8)
+        };
+        file.read_exact(&mut bytes[..len])?;
+        Ok(OwnedBytes { words, len })
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // Safety: as above; only the first `len` bytes were filled from the
+        // file (the tail of the last word stays zero).
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+}
+
+/// The shared backing buffer of a loaded store file.
+#[derive(Debug, Clone)]
+pub enum Bytes {
+    Owned(Arc<OwnedBytes>),
+    Mapped(Arc<Mmap>),
+}
+
+impl Bytes {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Bytes::Owned(b) => b.bytes(),
+            Bytes::Mapped(m) => m.bytes(),
+        }
+    }
+}
+
+/// A flat array that is either owned or a zero-copy view into a loaded
+/// store file. Dereferences to `&[T]`.
+pub enum Arena<T: Pod> {
+    Owned(Vec<T>),
+    View {
+        bytes: Bytes,
+        /// Byte offset of the first element (aligned for `T`).
+        offset: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl<T: Pod> Arena<T> {
+    /// Build a view into `bytes` at `offset` covering `len` elements.
+    /// Returns `None` if the range is out of bounds or misaligned for `T`.
+    pub fn view(bytes: Bytes, offset: usize, len: usize) -> Option<Arena<T>> {
+        let byte_len = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = offset.checked_add(byte_len)?;
+        let buf = bytes.as_slice();
+        if end > buf.len() {
+            return None;
+        }
+        if (buf.as_ptr() as usize + offset) % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(Arena::View { bytes, offset, len })
+    }
+
+    /// Copy a byte range into an owned arena (the non-zero-copy load mode).
+    pub fn copied(raw: &[u8], len: usize) -> Option<Arena<T>> {
+        if raw.len() != len.checked_mul(std::mem::size_of::<T>())? {
+            return None;
+        }
+        let mut v = Vec::<T>::with_capacity(len);
+        // Safety: Pod means any bit pattern is a valid T; the source length
+        // matches exactly and the Vec buffer is properly aligned.
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), v.as_mut_ptr() as *mut u8, raw.len());
+            v.set_len(len);
+        }
+        Some(Arena::Owned(v))
+    }
+}
+
+impl<T: Pod> Deref for Arena<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match self {
+            Arena::Owned(v) => v,
+            Arena::View { bytes, offset, len } => {
+                let buf = bytes.as_slice();
+                // Safety: bounds and alignment were checked in `view`; the
+                // backing buffer is immutable and owned via Arc.
+                unsafe {
+                    std::slice::from_raw_parts(buf.as_ptr().add(*offset) as *const T, *len)
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Arena<T> {
+    fn from(v: Vec<T>) -> Arena<T> {
+        Arena::Owned(v)
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Arena<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: Pod + fmt::Debug> fmt::Debug for Arena<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = match self {
+            Arena::Owned(_) => "owned",
+            Arena::View { .. } => "view",
+        };
+        write!(f, "Arena<{kind}>({} elems)", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_derefs() {
+        let a: Arena<f32> = vec![1.0f32, 2.0, 3.0].into();
+        assert_eq!(&a[..], &[1.0, 2.0, 3.0]);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn copied_roundtrip() {
+        let src = [7u32, 8, 9];
+        let a = Arena::<u32>::copied(slice_bytes(&src), 3).unwrap();
+        assert_eq!(&a[..], &src[..]);
+        assert!(Arena::<u32>::copied(slice_bytes(&src), 2).is_none());
+    }
+
+    #[test]
+    fn view_into_owned_bytes() {
+        // Simulate a loaded buffer: 16 bytes of header + 3 u32s.
+        let mut words = vec![0u64; 4];
+        let payload = [5u32, 6, 7];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                payload.as_ptr() as *const u8,
+                (words.as_mut_ptr() as *mut u8).add(16),
+                12,
+            );
+        }
+        let bytes = Bytes::Owned(Arc::new(OwnedBytes { words, len: 28 }));
+        let a = Arena::<u32>::view(bytes.clone(), 16, 3).unwrap();
+        assert_eq!(&a[..], &[5, 6, 7]);
+        // Out of bounds and misaligned views are refused.
+        assert!(Arena::<u32>::view(bytes.clone(), 24, 3).is_none());
+        assert!(Arena::<u32>::view(bytes, 17, 2).is_none());
+    }
+
+    #[test]
+    fn arenas_compare_across_flavors() {
+        let owned: Arena<u16> = vec![1u16, 2, 3].into();
+        let copied = Arena::<u16>::copied(slice_bytes(&[1u16, 2, 3]), 3).unwrap();
+        assert_eq!(owned, copied);
+    }
+}

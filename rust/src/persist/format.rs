@@ -1,0 +1,444 @@
+//! The on-disk container format: header, section table, checksums.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic            "LLKTPERS"
+//! 8       4     format version   (u32; readers reject other versions)
+//! 12      4     section count    (u32)
+//! 16      8     build fingerprint (u64; semantic identity, see store.rs)
+//! 24      8     payload checksum (u64 over every section's bytes, in
+//!                                 table order)
+//! 32      24×n  section table:   { id u32, elem size u32,
+//!                                  byte offset u64, byte length u64 }
+//! 32+24n  8     header checksum  (u64 over bytes [0, 32+24n))
+//! ...           payload sections, each 16-byte aligned from file start,
+//!               zero-padded between sections
+//! ```
+//!
+//! The header checksum makes truncation and header corruption detectable
+//! before any offset is trusted; the payload checksum covers the arena
+//! bytes themselves. Both use an FNV-style word hash with an avalanche
+//! finish — integrity, not cryptography. Writes go to a temp file in the
+//! destination directory followed by an atomic rename, so readers never
+//! observe a half-written store.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::arena::{Arena, Bytes, Mmap, OwnedBytes, Pod};
+use crate::util::rng::avalanche;
+
+/// "LLKTPERS" as a little-endian u64.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"LLKTPERS");
+
+/// Current container format version. Bump on any layout change; readers
+/// reject every other version (the file is then rebuilt, never reused).
+pub const FORMAT_VERSION: u32 = 1;
+
+const FIXED_HEADER: usize = 32;
+const SECTION_DESC: usize = 24;
+const MAX_SECTIONS: u32 = 1024;
+
+/// Why a store file could not be used. Everything except `Missing` is
+/// worth a diagnostic; all variants mean "rebuild".
+#[derive(Debug)]
+pub enum LoadError {
+    /// The file does not exist — the ordinary cold path.
+    Missing,
+    Io(std::io::Error),
+    /// Structural corruption: bad magic, checksum mismatch, truncation,
+    /// out-of-bounds sections, malformed arenas.
+    Corrupt(String),
+    /// A well-formed file from a different format version.
+    Version { found: u32 },
+    /// A well-formed file whose build fingerprint does not match the
+    /// expected identity (stale spec, different salt/model/constants).
+    Fingerprint { found: u64, expected: u64 },
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Missing => write!(f, "file not found"),
+            LoadError::Io(e) => write!(f, "io error: {e}"),
+            LoadError::Corrupt(why) => write!(f, "corrupt store file: {why}"),
+            LoadError::Version { found } => write!(
+                f,
+                "format version {found} (this build reads {FORMAT_VERSION})"
+            ),
+            LoadError::Fingerprint { found, expected } => write!(
+                f,
+                "build fingerprint {found:#018x} does not match expected {expected:#018x}"
+            ),
+        }
+    }
+}
+
+impl From<std::io::Error> for LoadError {
+    fn from(e: std::io::Error) -> LoadError {
+        if e.kind() == std::io::ErrorKind::NotFound {
+            LoadError::Missing
+        } else {
+            LoadError::Io(e)
+        }
+    }
+}
+
+/// Integrity checksum: FNV-style over u64 words with an avalanche finish.
+pub fn checksum64(bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100000001B3;
+    let mut h = 0x9E3779B97F4A7C15u64 ^ (bytes.len() as u64).wrapping_mul(PRIME);
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes(c.try_into().unwrap());
+        h = (h ^ w).wrapping_mul(PRIME);
+        h ^= h >> 29;
+    }
+    for &b in chunks.remainder() {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    avalanche(h)
+}
+
+/// A section to be written: (section id, element size in bytes, raw bytes).
+pub type SectionOut<'a> = (u32, u32, &'a [u8]);
+
+fn align16(x: usize) -> usize {
+    (x + 15) & !15
+}
+
+/// Serialize sections into a container and atomically install it at
+/// `path` (temp file in the same directory + rename).
+pub fn write(
+    path: &Path,
+    version: u32,
+    fingerprint: u64,
+    sections: &[SectionOut<'_>],
+) -> std::io::Result<()> {
+    assert!(
+        sections.len() <= MAX_SECTIONS as usize,
+        "too many sections ({})",
+        sections.len()
+    );
+    if cfg!(target_endian = "big") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "the persistent store writes little-endian arenas; big-endian hosts are unsupported",
+        ));
+    }
+    let table_end = FIXED_HEADER + sections.len() * SECTION_DESC;
+    let header_end = table_end + 8; // + header checksum
+
+    // Lay out section offsets.
+    let mut offsets = Vec::with_capacity(sections.len());
+    let mut cursor = align16(header_end);
+    for (_, elem, bytes) in sections {
+        assert!(*elem > 0 && bytes.len() % *elem as usize == 0);
+        offsets.push(cursor);
+        cursor = align16(cursor + bytes.len());
+    }
+
+    let mut payload_hash = 0x9E3779B97F4A7C15u64;
+    for (_, _, bytes) in sections {
+        payload_hash = avalanche(payload_hash ^ checksum64(bytes));
+    }
+
+    let mut header = Vec::with_capacity(header_end);
+    header.extend_from_slice(&MAGIC.to_le_bytes());
+    header.extend_from_slice(&version.to_le_bytes());
+    header.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    header.extend_from_slice(&fingerprint.to_le_bytes());
+    header.extend_from_slice(&payload_hash.to_le_bytes());
+    for ((id, elem, bytes), off) in sections.iter().zip(&offsets) {
+        header.extend_from_slice(&id.to_le_bytes());
+        header.extend_from_slice(&elem.to_le_bytes());
+        header.extend_from_slice(&(*off as u64).to_le_bytes());
+        header.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    }
+    let header_sum = checksum64(&header);
+    header.extend_from_slice(&header_sum.to_le_bytes());
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = temp_sibling(path);
+    let result = (|| -> std::io::Result<()> {
+        let mut f = File::create(&tmp)?;
+        f.write_all(&header)?;
+        let mut written = header.len();
+        for ((_, _, bytes), off) in sections.iter().zip(&offsets) {
+            f.write_all(&vec![0u8; off - written])?;
+            f.write_all(bytes)?;
+            written = off + bytes.len();
+        }
+        f.flush()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+fn temp_sibling(path: &Path) -> PathBuf {
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("store");
+    let pid = std::process::id();
+    path.with_file_name(format!(".{name}.tmp.{pid}"))
+}
+
+/// How to back a loaded file in memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Read the whole file into an owned, 8-byte-aligned buffer.
+    Read,
+    /// `mmap` the file (zero-copy); falls back to `Read` where mapping is
+    /// unavailable (non-unix targets, exotic filesystems).
+    Mmap,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SectionDesc {
+    id: u32,
+    elem: u32,
+    offset: usize,
+    byte_len: usize,
+}
+
+/// A validated, loaded container. Arenas handed out borrow its backing
+/// buffer (zero-copy) or copy out of it, per [`Loaded::arena`].
+pub struct Loaded {
+    bytes: Bytes,
+    pub version: u32,
+    pub fingerprint: u64,
+    sections: Vec<SectionDesc>,
+}
+
+/// Open, validate, and index a container file. Checks (in order): size,
+/// magic, version, section count, header checksum, section bounds and
+/// alignment, payload checksum. Any failure is a rejection — there is no
+/// partially-trusted state.
+pub fn read(path: &Path, mode: LoadMode) -> Result<Loaded, LoadError> {
+    if cfg!(target_endian = "big") {
+        return Err(LoadError::Corrupt(
+            "the persistent store is little-endian; big-endian hosts are unsupported".into(),
+        ));
+    }
+    let mut file = File::open(path)?;
+    let bytes = match mode {
+        LoadMode::Mmap => match Mmap::map(&file) {
+            Ok(m) => Bytes::Mapped(Arc::new(m)),
+            Err(_) => Bytes::Owned(Arc::new(OwnedBytes::read(&mut file)?)),
+        },
+        LoadMode::Read => Bytes::Owned(Arc::new(OwnedBytes::read(&mut file)?)),
+    };
+    drop(file);
+
+    let buf = bytes.as_slice();
+    let corrupt = |why: &str| LoadError::Corrupt(why.to_string());
+    if buf.len() < FIXED_HEADER + 8 {
+        return Err(corrupt("shorter than the fixed header"));
+    }
+    let u64_at = |off: usize| u64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+    let u32_at = |off: usize| u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+    if u64_at(0) != MAGIC {
+        return Err(corrupt("bad magic"));
+    }
+    let version = u32_at(8);
+    if version != FORMAT_VERSION {
+        return Err(LoadError::Version { found: version });
+    }
+    let count = u32_at(12);
+    if count > MAX_SECTIONS {
+        return Err(corrupt("implausible section count"));
+    }
+    let fingerprint = u64_at(16);
+    let payload_sum = u64_at(24);
+    let table_end = FIXED_HEADER + count as usize * SECTION_DESC;
+    if buf.len() < table_end + 8 {
+        return Err(corrupt("truncated section table"));
+    }
+    if u64_at(table_end) != checksum64(&buf[..table_end]) {
+        return Err(corrupt("header checksum mismatch"));
+    }
+
+    let mut sections = Vec::with_capacity(count as usize);
+    for i in 0..count as usize {
+        let base = FIXED_HEADER + i * SECTION_DESC;
+        let desc = SectionDesc {
+            id: u32_at(base),
+            elem: u32_at(base + 4),
+            offset: u64_at(base + 8) as usize,
+            byte_len: u64_at(base + 16) as usize,
+        };
+        let end = desc
+            .offset
+            .checked_add(desc.byte_len)
+            .ok_or_else(|| corrupt("section range overflow"))?;
+        if desc.offset < table_end + 8 || end > buf.len() || desc.offset % 16 != 0 {
+            return Err(corrupt("section out of bounds or misaligned"));
+        }
+        if desc.elem == 0 || desc.byte_len % desc.elem as usize != 0 {
+            return Err(corrupt("section length not a multiple of its element size"));
+        }
+        sections.push(desc);
+    }
+
+    let mut payload_hash = 0x9E3779B97F4A7C15u64;
+    for s in &sections {
+        payload_hash = avalanche(payload_hash ^ checksum64(&buf[s.offset..s.offset + s.byte_len]));
+    }
+    if payload_hash != payload_sum {
+        return Err(corrupt("payload checksum mismatch"));
+    }
+
+    Ok(Loaded {
+        bytes,
+        version,
+        fingerprint,
+        sections,
+    })
+}
+
+impl Loaded {
+    fn find(&self, id: u32) -> Option<&SectionDesc> {
+        self.sections.iter().find(|s| s.id == id)
+    }
+
+    pub fn has_section(&self, id: u32) -> bool {
+        self.find(id).is_some()
+    }
+
+    /// Extract a typed arena for section `id`. `zero_copy` views borrow
+    /// the backing buffer; otherwise elements are copied into a `Vec<T>`.
+    pub fn arena<T: Pod>(&self, id: u32, zero_copy: bool) -> Result<Arena<T>, LoadError> {
+        let s = self
+            .find(id)
+            .ok_or_else(|| LoadError::Corrupt(format!("missing section {id}")))?;
+        if s.elem as usize != std::mem::size_of::<T>() {
+            return Err(LoadError::Corrupt(format!(
+                "section {id} holds {}-byte elements, expected {}",
+                s.elem,
+                std::mem::size_of::<T>()
+            )));
+        }
+        let len = s.byte_len / s.elem as usize;
+        let arena = if zero_copy {
+            Arena::view(self.bytes.clone(), s.offset, len)
+        } else {
+            Arena::copied(&self.bytes.as_slice()[s.offset..s.offset + s.byte_len], len)
+        };
+        arena.ok_or_else(|| LoadError::Corrupt(format!("section {id} view failed")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::arena::slice_bytes;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("llamea-kt-format-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}-{}.llkt", name, std::process::id()))
+    }
+
+    fn sample_sections() -> (Vec<u16>, Vec<f32>) {
+        ((0..100u16).collect(), (0..50).map(|i| i as f32 * 0.5).collect())
+    }
+
+    #[test]
+    fn roundtrip_both_modes() {
+        let (a, b) = sample_sections();
+        let path = tmp("roundtrip");
+        write(
+            &path,
+            FORMAT_VERSION,
+            0xABCD,
+            &[(1, 2, slice_bytes(&a)), (2, 4, slice_bytes(&b))],
+        )
+        .unwrap();
+        for mode in [LoadMode::Read, LoadMode::Mmap] {
+            for zero_copy in [false, true] {
+                let loaded = read(&path, mode).unwrap();
+                assert_eq!(loaded.fingerprint, 0xABCD);
+                let ra: Arena<u16> = loaded.arena(1, zero_copy).unwrap();
+                let rb: Arena<f32> = loaded.arena(2, zero_copy).unwrap();
+                assert_eq!(&ra[..], &a[..]);
+                assert_eq!(&rb[..], &b[..]);
+                assert!(!loaded.has_section(3));
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_missing() {
+        match read(Path::new("/nonexistent/llkt/store.llkt"), LoadMode::Read) {
+            Err(LoadError::Missing) => {}
+            other => panic!("expected Missing, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let (a, _) = sample_sections();
+        let path = tmp("version");
+        write(&path, FORMAT_VERSION + 1, 7, &[(1, 2, slice_bytes(&a))]).unwrap();
+        match read(&path, LoadMode::Read) {
+            Err(LoadError::Version { found }) => assert_eq!(found, FORMAT_VERSION + 1),
+            other => panic!("expected Version, got {other:?}"),
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncation_and_corruption_rejected() {
+        let (a, b) = sample_sections();
+        let path = tmp("corrupt");
+        write(
+            &path,
+            FORMAT_VERSION,
+            9,
+            &[(1, 2, slice_bytes(&a)), (2, 4, slice_bytes(&b))],
+        )
+        .unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Truncations at every structural boundary.
+        for cut in [10, FIXED_HEADER + 3, good.len() - 7] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(
+                matches!(read(&path, LoadMode::Read), Err(LoadError::Corrupt(_))),
+                "cut at {cut}"
+            );
+        }
+        // Single-byte payload flip.
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(read(&path, LoadMode::Read), Err(LoadError::Corrupt(_))));
+        // Header flip (magic).
+        let mut bad = good.clone();
+        bad[0] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(read(&path, LoadMode::Read), Err(LoadError::Corrupt(_))));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn element_size_mismatch_rejected() {
+        let (a, _) = sample_sections();
+        let path = tmp("elem");
+        write(&path, FORMAT_VERSION, 1, &[(1, 2, slice_bytes(&a))]).unwrap();
+        let loaded = read(&path, LoadMode::Read).unwrap();
+        assert!(loaded.arena::<f64>(1, true).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

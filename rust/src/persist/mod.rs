@@ -1,0 +1,56 @@
+//! Persistent zero-copy store for exhaustive caches and search spaces.
+//!
+//! Every `llamea-kt` process used to rebuild all exhaustive caches from
+//! scratch — the dominant setup cost of the simulation methodology (the
+//! paper replays cachefiles of exhaustively benchmarked spaces; a full
+//! harness run needs 24 of them). This module makes that a one-time cost:
+//! the flat arenas behind [`crate::searchspace::SearchSpace`] and
+//! [`crate::tuning::cache::Cache`] serialize into a versioned, checksummed
+//! container that later processes either read back into owned `Vec`s or
+//! mmap and borrow zero-copy ([`arena::Arena`]).
+//!
+//! # File layout
+//!
+//! A store file is a fixed header, a section table, and raw little-endian
+//! arena dumps (see [`format`] for exact offsets):
+//!
+//! ```text
+//! magic "LLKTPERS" | format version | section count | build fingerprint
+//! payload checksum | section table { id, elem size, offset, length }…
+//! header checksum  | 16-byte-aligned sections…
+//! ```
+//!
+//! Sections are 16-byte aligned from the start of the file so `&[u16]`,
+//! `&[u32]`, `&[u64]`, `&[f32]` and `&[f64]` views into the mapping are
+//! always correctly aligned. Space files carry the config arena plus the
+//! three CSR neighbor tables; cache files carry `mean_ms`/`compile_s` and
+//! a stored summary triple that loads recompute and assert (see [`store`]
+//! for the section ids and the full fingerprint contract).
+//!
+//! # Safety/trust model
+//!
+//! A file is usable only if *all* of the following hold, checked in order:
+//! plausible size → magic → exact format version → header checksum →
+//! section bounds/alignment → payload checksum → build fingerprint →
+//! structural invariants (config values in range, CSR monotone and
+//! covering, arena lengths matching the space) → summary-stat equality
+//! (caches). Any failure is a rejection; callers rebuild and atomically
+//! overwrite (temp file + rename), so a stale, foreign, truncated or
+//! corrupt file is never silently reused and readers never observe a
+//! partial write.
+//!
+//! The warm path lives in [`crate::coordinator::registry::CacheRegistry`]
+//! (`--cache-dir`): registry misses try the store first and fall back to
+//! building + saving.
+
+pub mod arena;
+pub mod format;
+pub mod store;
+
+pub use arena::Arena;
+pub use format::{LoadError, LoadMode, FORMAT_VERSION};
+pub use store::{
+    cache_fp, cache_path, expected_cache_fp, expected_space_fp, load_cache, load_space,
+    prepare_cache_dir, save_cache, save_cache_tagged, save_space, save_space_tagged, space_fp,
+    space_path,
+};

@@ -1,0 +1,428 @@
+//! Typed save/load of `SearchSpace` and `Cache` over the container format,
+//! plus the build-fingerprint contract.
+//!
+//! Two file kinds live in a cache directory:
+//!
+//! - `space_<app>.llkt` — one per application (all GPUs of an app share
+//!   its space): the flat `u16` config arena plus all three CSR neighbor
+//!   tables (`u64` offsets + `u32` neighbor data per [`NeighborKind`]).
+//! - `cache_<app>@<gpu>.llkt` — one per (application, GPU) pair:
+//!   `mean_ms`/`compile_s` `f32` arenas plus the stored summary triple
+//!   (`optimum_ms`, `median_ms`, `mean_eval_cost_s`) which loads
+//!   *recompute from the arenas and assert equal* — an end-to-end
+//!   integrity check beyond the byte checksums.
+//!
+//! # Fingerprint contract
+//!
+//! A store file is only reusable if every input that determines its arena
+//! bytes is unchanged. The fingerprints hash exactly those inputs:
+//!
+//! - **space**: container format version; space name; every parameter
+//!   (name, ordered value list, each value's exact bits and type tag);
+//!   every constraint source string, in order.
+//! - **cache**: the space fingerprint; application and GPU names;
+//!   `space_salt(app, gpu)`; [`MODEL_REVISION`] (the performance-model
+//!   identity); `RUNS_PER_EVAL`, `MEASUREMENT_SIGMA`, `FAILURE_COST_S`
+//!   (the noise/cost constants folded into `mean_eval_cost_s` and the
+//!   observation streams).
+//!
+//! Loading compares the file's fingerprint against the one computed from
+//! the *current build*; any mismatch — stale spec, edited constraint,
+//! bumped model revision, different salt or constants — rejects the file
+//! and the caller rebuilds (and overwrites it). There is no path that
+//! reuses a mismatched file.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::arena::slice_bytes;
+use super::format::{self, LoadError, LoadMode, SectionOut, FORMAT_VERSION};
+use crate::kernels::gpu::GpuSpec;
+use crate::kernels::{space_salt, MODEL_REVISION};
+use crate::searchspace::constraint::Constraint;
+use crate::searchspace::param::{ParamSet, Value};
+use crate::searchspace::{Application, NeighborKind, SearchSpace};
+use crate::tuning::cache::{Cache, FAILURE_COST_S, MEASUREMENT_SIGMA, RUNS_PER_EVAL};
+use crate::util::rng::avalanche;
+
+// Section ids. Space files:
+const SEC_SPACE_CONFIGS: u32 = 1;
+const fn sec_csr_offsets(kind: usize) -> u32 {
+    16 + 2 * kind as u32
+}
+const fn sec_csr_data(kind: usize) -> u32 {
+    17 + 2 * kind as u32
+}
+// Cache files:
+const SEC_MEAN_MS: u32 = 32;
+const SEC_COMPILE_S: u32 = 33;
+const SEC_SUMMARY: u32 = 34;
+
+/// Incremental fingerprint builder (FNV-1a over a framed byte stream with
+/// an avalanche finish). Every field is length- or tag-framed so distinct
+/// input sequences cannot collide by concatenation.
+struct Fp(u64);
+
+impl Fp {
+    fn new(domain: &str) -> Fp {
+        let mut fp = Fp(0xcbf29ce484222325);
+        fp.str(domain);
+        fp.u64(FORMAT_VERSION as u64);
+        fp
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001B3);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    fn value(&mut self, v: &Value) {
+        match v {
+            Value::Int(i) => {
+                self.u64(1);
+                self.u64(*i as u64);
+            }
+            Value::Float(x) => {
+                self.u64(2);
+                self.u64(x.to_bits());
+            }
+            Value::Bool(b) => {
+                self.u64(3);
+                self.u64(*b as u64);
+            }
+            Value::Str(s) => {
+                self.u64(4);
+                self.str(s);
+            }
+        }
+    }
+
+    fn finish(self) -> u64 {
+        avalanche(self.0)
+    }
+}
+
+/// Fingerprint of a space definition (see the module docs for what it
+/// covers). `sources` are the constraint source strings, in order.
+pub fn space_fingerprint<'a>(
+    name: &str,
+    params: &ParamSet,
+    sources: impl Iterator<Item = &'a str>,
+) -> u64 {
+    let mut fp = Fp::new("llamea-kt space");
+    fp.str(name);
+    fp.u64(params.dims() as u64);
+    for p in &params.params {
+        fp.str(&p.name);
+        fp.u64(p.cardinality() as u64);
+        for v in &p.values {
+            fp.value(v);
+        }
+    }
+    for s in sources {
+        fp.str(s);
+    }
+    fp.finish()
+}
+
+/// Space fingerprint of a live, already-built space.
+pub fn space_fp(space: &SearchSpace) -> u64 {
+    space_fingerprint(
+        &space.name,
+        &space.params,
+        space.constraints.iter().map(|c| c.source.as_str()),
+    )
+}
+
+/// Space fingerprint of the current build's spec for `app` — what a
+/// loaded `space_<app>.llkt` must carry.
+pub fn expected_space_fp(app: Application) -> u64 {
+    let spec = app.space_spec();
+    space_fingerprint(spec.name, &spec.params, spec.constraints.iter().copied())
+}
+
+fn cache_fingerprint(space_fp: u64, app: Application, gpu: &GpuSpec, salt: u64) -> u64 {
+    let mut fp = Fp::new("llamea-kt cache");
+    fp.u64(space_fp);
+    fp.str(app.name());
+    fp.str(gpu.name);
+    fp.u64(salt);
+    fp.u64(MODEL_REVISION as u64);
+    fp.u64(RUNS_PER_EVAL as u64);
+    fp.u64(MEASUREMENT_SIGMA.to_bits());
+    fp.u64(FAILURE_COST_S.to_bits());
+    fp.finish()
+}
+
+/// Cache fingerprint of a live cache (what `save_cache` stamps).
+pub fn cache_fp(cache: &Cache) -> u64 {
+    cache_fingerprint(space_fp(&cache.space), cache.app, cache.gpu, cache.salt)
+}
+
+/// Cache fingerprint the current build expects for (app, gpu) — what a
+/// loaded `cache_<app>@<gpu>.llkt` must carry.
+pub fn expected_cache_fp(app: Application, gpu: &GpuSpec) -> u64 {
+    cache_fingerprint(expected_space_fp(app), app, gpu, space_salt(app, gpu))
+}
+
+/// Canonical path of an application's space file inside a cache dir.
+pub fn space_path(dir: &Path, app: Application) -> PathBuf {
+    dir.join(format!("space_{}.llkt", app.name()))
+}
+
+/// Canonical path of a (app, gpu) cache file inside a cache dir.
+pub fn cache_path(dir: &Path, app: Application, gpu_name: &str) -> PathBuf {
+    dir.join(format!("cache_{}@{gpu_name}.llkt", app.name()))
+}
+
+/// Serialize a space (config arena + all three CSR tables, building any
+/// table not yet built) and atomically install it at `path`.
+pub fn save_space(path: &Path, space: &SearchSpace) -> std::io::Result<()> {
+    save_space_tagged(path, space, space_fp(space))
+}
+
+/// [`save_space`] with an explicit fingerprint tag — the tamper seam the
+/// fingerprint-rejection tests use; production callers want [`save_space`].
+pub fn save_space_tagged(
+    path: &Path,
+    space: &SearchSpace,
+    fingerprint: u64,
+) -> std::io::Result<()> {
+    let parts: Vec<(&[u64], &[u32])> = NeighborKind::ALL
+        .iter()
+        .map(|&k| space.graph_parts(k))
+        .collect();
+    let mut sections: Vec<SectionOut<'_>> =
+        vec![(SEC_SPACE_CONFIGS, 2, slice_bytes(space.config_arena()))];
+    for (slot, (offsets, rows)) in parts.iter().enumerate() {
+        sections.push((sec_csr_offsets(slot), 8, slice_bytes(offsets)));
+        sections.push((sec_csr_data(slot), 4, slice_bytes(rows)));
+    }
+    format::write(path, FORMAT_VERSION, fingerprint, &sections)
+}
+
+/// Load a space for `app`, verifying fingerprint, checksums and every
+/// structural invariant. `LoadMode::Mmap` yields arenas borrowing the
+/// mapping (zero-copy); `LoadMode::Read` copies into owned `Vec`s.
+pub fn load_space(path: &Path, app: Application, mode: LoadMode) -> Result<SearchSpace, LoadError> {
+    let spec = app.space_spec();
+    let expected = space_fingerprint(spec.name, &spec.params, spec.constraints.iter().copied());
+    let loaded = format::read(path, mode)?;
+    if loaded.fingerprint != expected {
+        return Err(LoadError::Fingerprint {
+            found: loaded.fingerprint,
+            expected,
+        });
+    }
+    let zero_copy = mode == LoadMode::Mmap;
+    let data = loaded.arena::<u16>(SEC_SPACE_CONFIGS, zero_copy)?;
+    let mut graphs = [None, None, None];
+    for (slot, g) in graphs.iter_mut().enumerate() {
+        // CSR tables are optional per kind: a file without one simply
+        // rebuilds that table lazily.
+        if loaded.has_section(sec_csr_offsets(slot)) && loaded.has_section(sec_csr_data(slot)) {
+            *g = Some((
+                loaded.arena::<u64>(sec_csr_offsets(slot), zero_copy)?,
+                loaded.arena::<u32>(sec_csr_data(slot), zero_copy)?,
+            ));
+        }
+    }
+    // The spec is static and always parses; a failure here is a bug in the
+    // builder, exactly as it would be for a cold build.
+    let constraints: Vec<Constraint> = spec
+        .constraints
+        .iter()
+        .map(|s| Constraint::parse(s, &spec.params).expect("builder constraint parses"))
+        .collect();
+    SearchSpace::from_parts(spec.name, spec.params, constraints, data, graphs)
+        .map_err(LoadError::Corrupt)
+}
+
+/// Serialize a cache (arenas + stored summary triple) and atomically
+/// install it at `path`.
+pub fn save_cache(path: &Path, cache: &Cache) -> std::io::Result<()> {
+    save_cache_tagged(path, cache, cache_fp(cache))
+}
+
+/// [`save_cache`] with an explicit fingerprint tag (test tamper seam).
+pub fn save_cache_tagged(path: &Path, cache: &Cache, fingerprint: u64) -> std::io::Result<()> {
+    let summary = [cache.optimum_ms, cache.median_ms, cache.mean_eval_cost_s];
+    let sections: Vec<SectionOut<'_>> = vec![
+        (SEC_MEAN_MS, 4, slice_bytes(&cache.mean_ms)),
+        (SEC_COMPILE_S, 4, slice_bytes(&cache.compile_s)),
+        (SEC_SUMMARY, 8, slice_bytes(&summary)),
+    ];
+    format::write(path, FORMAT_VERSION, fingerprint, &sections)
+}
+
+/// Load the cache for (app, gpu) against an already-resolved space,
+/// verifying fingerprint and checksums, then recomputing the summary
+/// statistics from the loaded arenas and asserting exact (bitwise f64)
+/// equality with the stored triple.
+pub fn load_cache(
+    path: &Path,
+    app: Application,
+    gpu: &'static GpuSpec,
+    space: Arc<SearchSpace>,
+    mode: LoadMode,
+) -> Result<Cache, LoadError> {
+    let salt = space_salt(app, gpu);
+    let expected = cache_fingerprint(space_fp(&space), app, gpu, salt);
+    let loaded = format::read(path, mode)?;
+    if loaded.fingerprint != expected {
+        return Err(LoadError::Fingerprint {
+            found: loaded.fingerprint,
+            expected,
+        });
+    }
+    let zero_copy = mode == LoadMode::Mmap;
+    let mean_ms = loaded.arena::<f32>(SEC_MEAN_MS, zero_copy)?;
+    let compile_s = loaded.arena::<f32>(SEC_COMPILE_S, zero_copy)?;
+    let stored = loaded.arena::<f64>(SEC_SUMMARY, false)?;
+    if stored.len() != 3 {
+        return Err(LoadError::Corrupt(format!(
+            "summary section holds {} values, expected 3",
+            stored.len()
+        )));
+    }
+    let cache = Cache::from_arenas(app, gpu, space, mean_ms, compile_s, salt)
+        .map_err(LoadError::Corrupt)?;
+    let recomputed = [cache.optimum_ms, cache.median_ms, cache.mean_eval_cost_s];
+    if recomputed != stored[..] {
+        return Err(LoadError::Corrupt(format!(
+            "stored summary stats {:?} disagree with recomputation {:?}",
+            &stored[..],
+            recomputed
+        )));
+    }
+    Ok(cache)
+}
+
+/// Resolve and validate a `--cache-dir` argument: accept an existing
+/// directory, create a missing leaf whose parent exists, and reject
+/// everything else with an actionable message (no raw io errors).
+pub fn prepare_cache_dir(path: &Path) -> Result<PathBuf, String> {
+    if path.as_os_str().is_empty() {
+        return Err("--cache-dir: empty path".into());
+    }
+    match std::fs::metadata(path) {
+        Ok(m) if m.is_dir() => Ok(path.to_path_buf()),
+        Ok(_) => Err(format!(
+            "--cache-dir {}: exists but is not a directory",
+            path.display()
+        )),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            let parent = match path.parent() {
+                Some(p) if !p.as_os_str().is_empty() => p,
+                _ => Path::new("."),
+            };
+            if parent.is_dir() {
+                std::fs::create_dir(path).map_err(|e| {
+                    format!("--cache-dir {}: cannot create: {e}", path.display())
+                })?;
+                Ok(path.to_path_buf())
+            } else {
+                Err(format!(
+                    "--cache-dir {}: parent directory {} does not exist (create it first)",
+                    path.display(),
+                    parent.display()
+                ))
+            }
+        }
+        Err(e) => Err(format!("--cache-dir {}: {e}", path.display())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_sensitive_to_every_input() {
+        let spec = Application::Convolution.space_spec();
+        let base = space_fingerprint(spec.name, &spec.params, spec.constraints.iter().copied());
+        // Name.
+        assert_ne!(
+            base,
+            space_fingerprint("convolution2", &spec.params, spec.constraints.iter().copied())
+        );
+        // Constraint source text (even a whitespace-level edit).
+        let mut edited: Vec<&str> = spec.constraints.to_vec();
+        edited[0] = "block_size_x * block_size_y >= 33";
+        assert_ne!(
+            base,
+            space_fingerprint(spec.name, &spec.params, edited.iter().copied())
+        );
+        // Dropping a constraint.
+        assert_ne!(
+            base,
+            space_fingerprint(spec.name, &spec.params, spec.constraints[1..].iter().copied())
+        );
+        // Parameter values.
+        let mut params = spec.params.clone();
+        params.params[0].values[0] = Value::Int(17);
+        assert_ne!(
+            base,
+            space_fingerprint(spec.name, &params, spec.constraints.iter().copied())
+        );
+    }
+
+    #[test]
+    fn cache_fingerprint_sensitive_to_salt_and_gpu() {
+        let app = Application::Convolution;
+        let sfp = expected_space_fp(app);
+        let a = GpuSpec::by_name("A100").unwrap();
+        let b = GpuSpec::by_name("A4000").unwrap();
+        let fa = cache_fingerprint(sfp, app, a, space_salt(app, a));
+        assert_eq!(fa, expected_cache_fp(app, a));
+        // Different GPU → different fingerprint.
+        assert_ne!(fa, expected_cache_fp(app, b));
+        // Flipped salt alone → different fingerprint.
+        assert_ne!(fa, cache_fingerprint(sfp, app, a, space_salt(app, a) ^ 1));
+        // Different space fingerprint → different cache fingerprint.
+        assert_ne!(fa, cache_fingerprint(sfp ^ 1, app, a, space_salt(app, a)));
+    }
+
+    #[test]
+    fn live_space_fp_matches_spec_fp() {
+        for app in Application::ALL {
+            if app == Application::Hotspot {
+                continue; // too large for a unit test; covered by spec identity
+            }
+            let space = app.build_space();
+            assert_eq!(space_fp(&space), expected_space_fp(app), "{}", app.name());
+        }
+    }
+
+    #[test]
+    fn prepare_cache_dir_cases() {
+        let base = std::env::temp_dir().join(format!("llkt-store-{}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        // Existing dir is accepted.
+        assert_eq!(prepare_cache_dir(&base).unwrap(), base);
+        // Missing leaf with existing parent is created.
+        let leaf = base.join("cache");
+        assert_eq!(prepare_cache_dir(&leaf).unwrap(), leaf);
+        assert!(leaf.is_dir());
+        // Missing parent is an actionable error, not a raw io failure.
+        let deep = base.join("no-such-parent").join("cache");
+        let err = prepare_cache_dir(&deep).unwrap_err();
+        assert!(err.contains("parent directory"), "{err}");
+        // A file in the way is rejected.
+        let file = base.join("afile");
+        std::fs::write(&file, b"x").unwrap();
+        assert!(prepare_cache_dir(&file).unwrap_err().contains("not a directory"));
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

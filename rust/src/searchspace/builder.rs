@@ -52,20 +52,39 @@ impl Application {
         }
     }
 
-    pub fn build_space(&self) -> SearchSpace {
+    /// The declarative space specification (name, parameter grid,
+    /// constraint sources) *without* enumerating it. This is the seam the
+    /// persistent store (`crate::persist`) builds on: the spec both seeds
+    /// the build fingerprint (any edit to a parameter list or constraint
+    /// string changes the fingerprint and invalidates stored arenas) and
+    /// reconstitutes params/constraints when a space is loaded from disk.
+    pub fn space_spec(&self) -> SpaceSpec {
         match self {
-            Application::Dedispersion => build_dedispersion(),
-            Application::Convolution => build_convolution(),
-            Application::Hotspot => build_hotspot(),
-            Application::Gemm => build_gemm(),
+            Application::Dedispersion => dedispersion_spec(),
+            Application::Convolution => convolution_spec(),
+            Application::Hotspot => hotspot_spec(),
+            Application::Gemm => gemm_spec(),
         }
     }
+
+    pub fn build_space(&self) -> SearchSpace {
+        let spec = self.space_spec();
+        SearchSpace::build(spec.name, spec.params, spec.constraints)
+            .unwrap_or_else(|e| panic!("{} space: {e}", spec.name))
+    }
+}
+
+/// A search space's declarative definition, prior to enumeration.
+pub struct SpaceSpec {
+    pub name: &'static str,
+    pub params: ParamSet,
+    pub constraints: &'static [&'static str],
 }
 
 /// Dedispersion (AMBER / ARTS survey): 8 tunables.
 ///
 /// Cartesian: 6*2*4*4*2*2*7*4 = 21,504 (paper: 22,272, -3.4%).
-pub fn build_dedispersion() -> SearchSpace {
+fn dedispersion_spec() -> SpaceSpec {
     let params = ParamSet::new(vec![
         Param::ints("block_size_x", &[1, 2, 4, 8, 16, 32]),
         Param::ints("block_size_y", &[8, 16]),
@@ -77,10 +96,10 @@ pub fn build_dedispersion() -> SearchSpace {
         Param::ints("loop_unroll_factor_channel", &[0, 1, 2, 4, 8, 16, 32]),
         Param::ints("blocks_per_sm", &[0, 1, 2, 3]),
     ]);
-    SearchSpace::build(
-        "dedispersion",
+    SpaceSpec {
+        name: "dedispersion",
         params,
-        &[
+        constraints: &[
             // Thread block shape limits.
             "block_size_x * block_size_y >= 32",
             "block_size_x * block_size_y <= 1024",
@@ -90,15 +109,18 @@ pub fn build_dedispersion() -> SearchSpace {
             // Register pressure: total work items per thread bounded.
             "tile_size_x * tile_size_y <= 12",
         ],
-    )
-    .expect("dedispersion space")
+    }
+}
+
+pub fn build_dedispersion() -> SearchSpace {
+    Application::Dedispersion.build_space()
 }
 
 /// 2D convolution (van Werkhoven et al. 2014): 10 tunables.
 ///
 /// Cartesian: 8*4*5*4*2*2*2*2*1*1 = 10,240 (paper: 10,240, exact).
 /// filter_height/filter_width are fixed 15x15 as in the BAT scenario.
-pub fn build_convolution() -> SearchSpace {
+fn convolution_spec() -> SpaceSpec {
     let params = ParamSet::new(vec![
         Param::ints("block_size_x", &[16, 32, 48, 64, 80, 96, 112, 128]),
         Param::ints("block_size_y", &[1, 2, 4, 8]),
@@ -111,10 +133,10 @@ pub fn build_convolution() -> SearchSpace {
         Param::fixed("filter_height", 15),
         Param::fixed("filter_width", 15),
     ]);
-    SearchSpace::build(
-        "convolution",
+    SpaceSpec {
+        name: "convolution",
         params,
-        &[
+        constraints: &[
             "block_size_x * block_size_y >= 32",
             "block_size_x * block_size_y <= 1024",
             // Padding only exists for the shared-memory path, and only helps
@@ -127,15 +149,18 @@ pub fn build_convolution() -> SearchSpace {
             // Vectorized loads require the block width to stay lane aligned.
             "vector == 1 || block_size_x % (vector * 8) == 0",
         ],
-    )
-    .expect("convolution space")
+    }
+}
+
+pub fn build_convolution() -> SearchSpace {
+    Application::Convolution.build_space()
 }
 
 /// Hotspot (Rodinia): 11 tunables.
 ///
 /// Cartesian: 11*11*8*8*10*9*2*2*2*2*2 = 22,302,720 (paper: 22,200,000,
 /// +0.46%).
-pub fn build_hotspot() -> SearchSpace {
+fn hotspot_spec() -> SpaceSpec {
     let pow2: Vec<i64> = (0..11).map(|i| 1i64 << i).collect(); // 1..1024
     let params = ParamSet::new(vec![
         Param::ints("block_size_x", &pow2),
@@ -150,10 +175,10 @@ pub fn build_hotspot() -> SearchSpace {
         Param::ints("reorder", &[0, 1]),
         Param::ints("double_buffer", &[0, 1]),
     ]);
-    SearchSpace::build(
-        "hotspot",
+    SpaceSpec {
+        name: "hotspot",
         params,
-        &[
+        constraints: &[
             "block_size_x * block_size_y >= 32",
             "block_size_x * block_size_y <= 1024",
             // The time unroll must divide the temporal tiling factor.
@@ -167,14 +192,17 @@ pub fn build_hotspot() -> SearchSpace {
             // Double buffering requires the shared-memory path.
             "double_buffer == 0 || sh_power == 1",
         ],
-    )
-    .expect("hotspot space")
+    }
+}
+
+pub fn build_hotspot() -> SearchSpace {
+    Application::Hotspot.build_space()
 }
 
 /// GEMM (CLBlast): 17 tunables (three pinned by BAT's scenario).
 ///
 /// Cartesian: 4*4*1*3*3*3*3*2*4*4*2*2*2*2*1*1*1 = 663,552 (paper: exact).
-pub fn build_gemm() -> SearchSpace {
+fn gemm_spec() -> SpaceSpec {
     let params = ParamSet::new(vec![
         Param::ints("MWG", &[16, 32, 64, 128]),
         Param::ints("NWG", &[16, 32, 64, 128]),
@@ -194,10 +222,10 @@ pub fn build_gemm() -> SearchSpace {
         Param::fixed("GEMMK", 0),
         Param::fixed("KREG", 1),
     ]);
-    SearchSpace::build(
-        "gemm",
+    SpaceSpec {
+        name: "gemm",
         params,
-        &[
+        constraints: &[
             // The canonical CLBlast xgemm restrictions.
             "KWG % KWI == 0",
             "MWG % (MDIMC * VWM) == 0",
@@ -211,8 +239,11 @@ pub fn build_gemm() -> SearchSpace {
             // Strided access is only distinct for vectorized loads of A.
             "STRM == 0 || VWM > 1",
         ],
-    )
-    .expect("gemm space")
+    }
+}
+
+pub fn build_gemm() -> SearchSpace {
+    Application::Gemm.build_space()
 }
 
 #[cfg(test)]

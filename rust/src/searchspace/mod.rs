@@ -26,7 +26,7 @@ pub mod constraint;
 pub mod param;
 pub mod space;
 
-pub use builder::Application;
+pub use builder::{Application, SpaceSpec};
 pub use constraint::{compile, Constraint, Expr, Program};
 pub use param::{Param, ParamSet, Value};
 pub use space::{NeighborKind, SearchSpace};

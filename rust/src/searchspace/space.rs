@@ -41,6 +41,7 @@ use std::sync::OnceLock;
 
 use super::constraint::Constraint;
 use super::param::ParamSet;
+use crate::persist::arena::Arena;
 use crate::util::parallel;
 use crate::util::rng::Rng;
 
@@ -106,10 +107,13 @@ impl NeighborKind {
 
 /// CSR adjacency table for one [`NeighborKind`]: row `i` occupies
 /// `data[offsets[i]..offsets[i+1]]`, in the exact order the on-the-fly
-/// enumeration ([`SearchSpace::neighbors`]) produces.
+/// enumeration ([`SearchSpace::neighbors`]) produces. Offsets are `u64` so
+/// the table serializes as fixed-width arenas (`crate::persist`), and both
+/// arrays are [`Arena`]s so a loaded space can borrow them zero-copy from
+/// an mmap'd store file.
 struct NeighborGraph {
-    offsets: Vec<usize>,
-    data: Vec<u32>,
+    offsets: Arena<u64>,
+    data: Arena<u32>,
 }
 
 /// A fully constructed, constraint-filtered search space.
@@ -118,7 +122,7 @@ pub struct SearchSpace {
     pub params: ParamSet,
     pub constraints: Vec<Constraint>,
     /// Flat arena: config i occupies `[i*dims, (i+1)*dims)`.
-    data: Vec<u16>,
+    data: Arena<u16>,
     dims: usize,
     index: HashMap<Box<[u16]>, u32, FxBuildHasher>,
     /// Lazily-built CSR neighbor tables, one per [`NeighborKind`] (indexed
@@ -226,11 +230,98 @@ impl SearchSpace {
             name: name.to_string(),
             params,
             constraints,
-            data,
+            data: data.into(),
             dims,
             index,
             graphs: Default::default(),
         }
+    }
+
+    /// Reassemble a space from deserialized arenas (`crate::persist`): the
+    /// spec (name, params, constraints) comes from the current build — the
+    /// store file only carries arena bytes, guarded by its fingerprint —
+    /// and the hash index is rebuilt here (O(n), cheap next to
+    /// enumeration). Pre-built CSR tables are optional per kind; missing
+    /// kinds rebuild lazily as usual. Every structural property a config
+    /// or neighbor lookup relies on is validated, so a file that passed
+    /// the checksum but violates shape invariants is still rejected
+    /// instead of panicking later.
+    pub(crate) fn from_parts(
+        name: &str,
+        params: ParamSet,
+        constraints: Vec<Constraint>,
+        data: Arena<u16>,
+        graphs: [Option<(Arena<u64>, Arena<u32>)>; 3],
+    ) -> Result<SearchSpace, String> {
+        let dims = params.dims();
+        if dims == 0 {
+            return Err("space has no dimensions".into());
+        }
+        if data.len() % dims != 0 {
+            return Err(format!(
+                "config arena length {} is not a multiple of dims {}",
+                data.len(),
+                dims
+            ));
+        }
+        let n = data.len() / dims;
+        for d in 0..dims {
+            let card = params.params[d].cardinality() as u16;
+            if (0..n).any(|i| data[i * dims + d] >= card) {
+                return Err(format!("value index out of range in dimension {d}"));
+            }
+        }
+        let mut index: HashMap<Box<[u16]>, u32, FxBuildHasher> =
+            HashMap::with_capacity_and_hasher(n, FxBuildHasher::default());
+        for i in 0..n {
+            if index.insert(data[i * dims..(i + 1) * dims].into(), i as u32).is_some() {
+                return Err(format!("duplicate configuration at index {i}"));
+            }
+        }
+        let cells: [OnceLock<NeighborGraph>; 3] = Default::default();
+        for (slot, g) in graphs.into_iter().enumerate() {
+            let Some((offsets, rows)) = g else { continue };
+            if offsets.len() != n + 1 || offsets.first() != Some(&0) {
+                return Err(format!("CSR table {slot}: bad offsets shape"));
+            }
+            if offsets.windows(2).any(|w| w[0] > w[1]) {
+                return Err(format!("CSR table {slot}: offsets not monotone"));
+            }
+            if *offsets.last().unwrap() != rows.len() as u64 {
+                return Err(format!("CSR table {slot}: offsets do not cover the data"));
+            }
+            if rows.iter().any(|&j| j as usize >= n) {
+                return Err(format!("CSR table {slot}: neighbor index out of range"));
+            }
+            let _ = cells[slot].set(NeighborGraph { offsets, data: rows });
+        }
+        Ok(SearchSpace {
+            name: name.to_string(),
+            params,
+            constraints,
+            data,
+            dims,
+            index,
+            graphs: cells,
+        })
+    }
+
+    /// The raw flat config arena (serialization seam for `crate::persist`).
+    pub fn config_arena(&self) -> &[u16] {
+        &self.data
+    }
+
+    /// Borrow the CSR table for `kind` as raw arenas (offsets, neighbor
+    /// data), building it first if needed — the serialization seam for
+    /// `crate::persist`, which dumps all three tables into the store file.
+    pub fn graph_parts(&self, kind: NeighborKind) -> (&[u64], &[u32]) {
+        let g = self.graphs[kind.index()].get_or_init(|| self.build_graph(kind));
+        (&g.offsets, &g.data)
+    }
+
+    /// Whether the CSR table for `kind` has been built (or loaded) yet.
+    pub fn has_graph(&self, kind: NeighborKind) -> bool {
+        self.graphs[kind.index()].get().is_some()
     }
 
     /// Number of valid configurations ("constrained size", Table 1).
@@ -430,14 +521,17 @@ impl SearchSpace {
         let total: usize = chunks.iter().map(|(_, rows)| rows.len()).sum();
         let mut offsets = Vec::with_capacity(n + 1);
         let mut data = Vec::with_capacity(total);
-        offsets.push(0usize);
+        offsets.push(0u64);
         for (lens, rows) in &chunks {
             for &l in lens {
-                offsets.push(offsets.last().unwrap() + l as usize);
+                offsets.push(offsets.last().unwrap() + l as u64);
             }
             data.extend_from_slice(rows);
         }
-        NeighborGraph { offsets, data }
+        NeighborGraph {
+            offsets: offsets.into(),
+            data: data.into(),
+        }
     }
 
     /// Valid neighbors of `i` under `kind` as a borrowed CSR row — the
@@ -448,7 +542,7 @@ impl SearchSpace {
     pub fn neighbors_of(&self, i: u32, kind: NeighborKind) -> &[u32] {
         let g = self.graphs[kind.index()].get_or_init(|| self.build_graph(kind));
         let i = i as usize;
-        &g.data[g.offsets[i]..g.offsets[i + 1]]
+        &g.data[g.offsets[i] as usize..g.offsets[i + 1] as usize]
     }
 
     /// A uniformly random valid neighbor of `i` under `kind`, if any: one

@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::kernels::gpu::GpuSpec;
 use crate::kernels::{model_for, space_salt, KernelModel};
+use crate::persist::arena::Arena;
 use crate::searchspace::{Application, SearchSpace};
 use crate::util::rng::{hash_config, hash_normal};
 
@@ -21,9 +22,11 @@ pub struct Cache {
     pub app: Application,
     pub gpu: &'static GpuSpec,
     /// Mean runtime per valid config, ms; +inf marks hidden-failure configs.
-    pub mean_ms: Vec<f32>,
-    /// Simulated compile time per config, seconds.
-    pub compile_s: Vec<f32>,
+    /// An [`Arena`] so a warm start (`crate::persist`) can borrow it
+    /// zero-copy from an mmap'd store file; fresh builds own a `Vec`.
+    pub mean_ms: Arena<f32>,
+    /// Simulated compile time per config, seconds (arena, as above).
+    pub compile_s: Arena<f32>,
     /// Global optimum of `mean_ms` (ms).
     pub optimum_ms: f64,
     /// Median of the successful configs (ms).
@@ -104,29 +107,78 @@ impl Cache {
             compile_s.extend_from_slice(&cs);
         }
 
+        let (optimum_ms, median_ms, mean_eval_cost_s) = Self::summary_stats(&mean_ms, &compile_s)
+            .unwrap_or_else(|| panic!("no runnable configuration in {}", space.name));
+
+        Cache {
+            space,
+            app,
+            gpu,
+            mean_ms: mean_ms.into(),
+            compile_s: compile_s.into(),
+            optimum_ms,
+            median_ms,
+            mean_eval_cost_s,
+            salt,
+        }
+    }
+
+    /// Summary statistics over the raw arenas:
+    /// `(optimum_ms, median_ms, mean_eval_cost_s)`, or `None` when no
+    /// config is runnable. This is the single definition shared by fresh
+    /// builds, measured caches and the persistent store's load-time
+    /// integrity check (`crate::persist` recomputes these from the loaded
+    /// arenas and asserts equality with the stored values — any
+    /// disagreement rejects the file).
+    pub fn summary_stats(mean_ms: &[f32], compile_s: &[f32]) -> Option<(f64, f64, f64)> {
+        assert_eq!(mean_ms.len(), compile_s.len());
         let mut ok: Vec<f64> = mean_ms
             .iter()
             .filter(|t| t.is_finite())
             .map(|&t| t as f64)
             .collect();
+        if ok.is_empty() {
+            return None;
+        }
         ok.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert!(!ok.is_empty(), "no runnable configuration in {}", space.name);
         let optimum_ms = ok[0];
         let median_ms = ok[ok.len() / 2];
-        let mean_eval_cost_s = {
-            let mut total = 0.0;
-            for i in 0..n {
-                total += compile_s[i] as f64
-                    + if mean_ms[i].is_finite() {
-                        RUNS_PER_EVAL as f64 * mean_ms[i] as f64 * 1e-3
-                    } else {
-                        FAILURE_COST_S
-                    };
-            }
-            total / n as f64
-        };
+        let n = mean_ms.len();
+        let mut total = 0.0;
+        for i in 0..n {
+            total += compile_s[i] as f64
+                + if mean_ms[i].is_finite() {
+                    RUNS_PER_EVAL as f64 * mean_ms[i] as f64 * 1e-3
+                } else {
+                    FAILURE_COST_S
+                };
+        }
+        Some((optimum_ms, median_ms, total / n as f64))
+    }
 
-        Cache {
+    /// Assemble a cache from deserialized arenas (`crate::persist`). The
+    /// summary statistics are recomputed here — never trusted from disk —
+    /// so the caller can compare them against the stored triple.
+    pub(crate) fn from_arenas(
+        app: Application,
+        gpu: &'static GpuSpec,
+        space: Arc<SearchSpace>,
+        mean_ms: Arena<f32>,
+        compile_s: Arena<f32>,
+        salt: u64,
+    ) -> Result<Cache, String> {
+        if mean_ms.len() != space.len() || compile_s.len() != space.len() {
+            return Err(format!(
+                "arena lengths {}/{} do not match space size {}",
+                mean_ms.len(),
+                compile_s.len(),
+                space.len()
+            ));
+        }
+        let (optimum_ms, median_ms, mean_eval_cost_s) =
+            Self::summary_stats(&mean_ms, &compile_s)
+                .ok_or_else(|| "no runnable configuration".to_string())?;
+        Ok(Cache {
             space,
             app,
             gpu,
@@ -136,7 +188,7 @@ impl Cache {
             median_ms,
             mean_eval_cost_s,
             salt,
-        }
+        })
     }
 
     /// Assemble a cache from *real* measurements (the PJRT measured-tuning
@@ -156,33 +208,14 @@ impl Cache {
             .copied()
             .find(|a| space.name.starts_with(a.name()))
             .unwrap_or(Application::Gemm);
-        let mut ok: Vec<f64> = mean_ms
-            .iter()
-            .filter(|t| t.is_finite())
-            .map(|&t| t as f64)
-            .collect();
-        ok.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert!(!ok.is_empty(), "no successful measurement");
-        let optimum_ms = ok[0];
-        let median_ms = ok[ok.len() / 2];
-        let n = mean_ms.len();
-        let mean_eval_cost_s = (0..n)
-            .map(|i| {
-                compile_s[i] as f64
-                    + if mean_ms[i].is_finite() {
-                        RUNS_PER_EVAL as f64 * mean_ms[i] as f64 * 1e-3
-                    } else {
-                        FAILURE_COST_S
-                    }
-            })
-            .sum::<f64>()
-            / n as f64;
+        let (optimum_ms, median_ms, mean_eval_cost_s) =
+            Self::summary_stats(&mean_ms, &compile_s).expect("no successful measurement");
         Cache {
             space,
             app,
             gpu: &crate::kernels::gpu::CPU_HOST,
-            mean_ms,
-            compile_s,
+            mean_ms: mean_ms.into(),
+            compile_s: compile_s.into(),
             optimum_ms,
             median_ms,
             mean_eval_cost_s,

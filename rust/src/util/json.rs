@@ -1,8 +1,12 @@
-//! Minimal JSON writer (no serde in the offline environment).
+//! Minimal JSON writer + reader (no serde in the offline environment).
 //!
 //! Only what the results pipeline needs: objects, arrays, strings, numbers,
 //! booleans, with stable key order (insertion order) so result files diff
-//! cleanly between runs.
+//! cleanly between runs. [`Json::parse`] is the matching reader — the
+//! `merge` subcommand uses it to reassemble shard partial reports — and
+//! round-trips every value this writer emits exactly: numbers are printed
+//! with Rust's shortest-round-trip `f64` formatting, so
+//! `parse(x.to_string())` recovers bit-identical values.
 
 use std::fmt::Write as _;
 
@@ -58,6 +62,72 @@ impl Json {
         self.write(&mut s, Some(2), 0);
         s.push('\n');
         s
+    }
+
+    /// Parse a JSON document. Accepts exactly the standard grammar (objects,
+    /// arrays, strings with escapes, numbers, literals); numbers become
+    /// `f64` via Rust's `str::parse`, which inverts both the integer and the
+    /// shortest-round-trip float forms the writer emits, so values
+    /// round-trip bit-exactly. `\uXXXX` escapes outside the BMP (surrogate
+    /// pairs) are rejected — the writer never emits them.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Look up a key on an object (`None` for missing keys / non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Remove and return a key from an object, preserving the order of the
+    /// remaining keys (`None` for missing keys / non-objects).
+    pub fn remove(&mut self, key: &str) -> Option<Json> {
+        match self {
+            Json::Obj(pairs) => {
+                let i = pairs.iter().position(|(k, _)| k == key)?;
+                Some(pairs.remove(i).1)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric value that is a non-negative integer.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && *x == x.trunc() && *x < 9e15 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
@@ -135,6 +205,179 @@ impl Json {
             }
         }
     }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.depth += 1;
+        if self.depth > 128 {
+            return Err("nesting deeper than 128 levels".into());
+        }
+        let v = match self.b.get(self.i) {
+            None => Err("unexpected end of input".into()),
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+        };
+        self.depth -= 1;
+        v
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(value)
+        } else {
+            Err(format!("invalid literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while matches!(
+            self.b.get(self.i),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("invalid number {:?} at byte {}", text, start))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.i += 1; // opening quote
+        let mut out = Vec::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.i += 1;
+                    // Input is &str, so verbatim bytes are valid UTF-8 and
+                    // escape sequences push encoded chars.
+                    return String::from_utf8(out).map_err(|_| "invalid UTF-8".into());
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = *self.b.get(self.i).ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0C),
+                        b'u' => {
+                            let code = self.hex4()?;
+                            let c = char::from_u32(code)
+                                .ok_or_else(|| format!("unsupported \\u{:04x} escape", code))?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        }
+                        _ => return Err(format!("invalid escape at byte {}", self.i - 1)),
+                    }
+                }
+                Some(&c) => {
+                    out.push(c);
+                    self.i += 1;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let text = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| "invalid \\u escape".to_string())?;
+        self.i += 4;
+        u32::from_str_radix(text, 16).map_err(|_| "invalid \\u escape".into())
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.i += 1; // '['
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.i += 1; // '{'
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            if self.b.get(self.i) != Some(&b'"') {
+                return Err(format!("expected object key at byte {}", self.i));
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            if self.b.get(self.i) != Some(&b':') {
+                return Err(format!("expected ':' at byte {}", self.i));
+            }
+            self.i += 1;
+            self.skip_ws();
+            let value = self.value()?;
+            pairs.push((key, value));
+            self.skip_ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+/// Read and parse a JSON file (the reader used by `merge`).
+pub fn read_file(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {}", path.display(), e))?;
+    Json::parse(&text).map_err(|e| format!("{}: {}", path.display(), e))
 }
 
 /// Write a value pretty-printed to `path` (creating parent directories) —
@@ -235,5 +478,50 @@ mod tests {
         let mut o = Json::obj();
         o.set("a", 1.0);
         assert!(o.to_pretty().contains('\n'));
+    }
+
+    #[test]
+    fn parse_inverts_writer() {
+        let mut o = Json::obj();
+        o.set("name", "gemm\"x\\y\n").set("score", 0.7193428711816438);
+        o.set("n", 24usize).set("neg", -1.5e-9).set("flag", true);
+        o.set("none", Json::Null);
+        o.set("curve", vec![0.0, 0.5, 123456789.25]);
+        for text in [o.to_string(), o.to_pretty()] {
+            assert_eq!(Json::parse(&text).unwrap(), o);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_f64_bits() {
+        for x in [0.1 + 0.2, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -2.5] {
+            let text = Json::Num(x).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_unicode_escape() {
+        assert_eq!(
+            Json::parse(r#""a\u0041\u00e9é""#).unwrap(),
+            Json::Str("aAéé".into())
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "{", "[1,]", "{\"a\":}", "tru", "1 2", "\"\\q\"", "nan"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn get_and_remove() {
+        let mut o = Json::parse(r#"{"a":1,"b":2,"c":3}"#).unwrap();
+        assert_eq!(o.get("b").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(o.remove("b"), Some(Json::Num(2.0)));
+        assert_eq!(o.get("b"), None);
+        assert_eq!(o.to_string(), r#"{"a":1,"c":3}"#);
     }
 }

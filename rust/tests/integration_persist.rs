@@ -1,0 +1,383 @@
+//! Integration tests for the persistent cache store and sharded execution
+//! (ISSUE 6 acceptance):
+//!
+//! - round-trip identity: a cache built at width 1 and at width 8, saved
+//!   and loaded back (both owned-read and mmap modes), is byte-identical
+//!   to a fresh build — arenas and summary stats alike;
+//! - fingerprint safety: a file stamped with a foreign fingerprint (a
+//!   stale spec, flipped salt, or bumped format) is rejected and rebuilt,
+//!   never silently reused;
+//! - corruption safety: truncated or bit-flipped files are rejected;
+//! - the registry warm path loads each key exactly once under concurrent
+//!   access, and a warm run produces bit-identical reports to a cold one;
+//! - shard-merge: per-shard partial reports of an uneven K/N split merge
+//!   into exactly the single-process report, byte for byte, including
+//!   the `"jobs"` block.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use llamea_kt::coordinator::{
+    collate_groups, grid_aggregates, grid_jobs, merge_reports, partial_coordinate_json,
+    scores_json, CacheKey, CacheOutcome, CacheRegistry, JobsSummary, ShardJob, ShardSpec,
+};
+use llamea_kt::hypertune::{
+    sweep, sweep_json, sweep_partial_json, MetaStrategy, MetaTuning, SweepOutcome,
+};
+use llamea_kt::kernels::gpu::GpuSpec;
+use llamea_kt::methodology::OptimizerFactory;
+use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::persist::{
+    cache_fp, cache_path, load_cache, load_space, save_cache, save_cache_tagged, save_space,
+    save_space_tagged, space_fp, space_path, LoadError, LoadMode,
+};
+use llamea_kt::searchspace::{Application, NeighborKind};
+use llamea_kt::tuning::Cache;
+use llamea_kt::util::json::Json;
+
+/// A unique temp dir per test (tests share one process).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("llkt-persist-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const APP: Application = Application::Convolution;
+
+fn gpu() -> &'static GpuSpec {
+    GpuSpec::by_name("A4000").unwrap()
+}
+
+#[test]
+fn cache_roundtrip_is_byte_identical_at_widths_1_and_8() {
+    let dir = tmp_dir("roundtrip");
+    let space = Arc::new(APP.build_space());
+    let w1 = Cache::build_with_space_width(APP, gpu(), Arc::clone(&space), 1);
+    let w8 = Cache::build_with_space_width(APP, gpu(), Arc::clone(&space), 8);
+    assert_eq!(&w1.mean_ms[..], &w8.mean_ms[..], "cold builds must not depend on width");
+    assert_eq!(&w1.compile_s[..], &w8.compile_s[..]);
+
+    // Save the wide build; load in both modes; everything must match the
+    // width-1 build bit for bit.
+    let spath = space_path(&dir, APP);
+    let cpath = cache_path(&dir, APP, gpu().name);
+    save_space(&spath, &space).unwrap();
+    save_cache(&cpath, &w8).unwrap();
+    for mode in [LoadMode::Read, LoadMode::Mmap] {
+        let lspace = load_space(&spath, APP, mode).unwrap();
+        assert_eq!(lspace.config_arena(), space.config_arena(), "{mode:?}");
+        for k in NeighborKind::ALL {
+            // save_space persists every graph; the loaded ones must be
+            // present (no lazy rebuild) and identical.
+            assert!(lspace.has_graph(k), "{mode:?} {k:?}");
+            assert_eq!(lspace.graph_parts(k), space.graph_parts(k), "{mode:?} {k:?}");
+        }
+        assert_eq!(space_fp(&lspace), space_fp(&space));
+
+        let loaded = load_cache(&cpath, APP, gpu(), Arc::new(lspace), mode).unwrap();
+        assert_eq!(&loaded.mean_ms[..], &w1.mean_ms[..], "{mode:?}");
+        assert_eq!(&loaded.compile_s[..], &w1.compile_s[..], "{mode:?}");
+        assert_eq!(loaded.optimum_ms.to_bits(), w1.optimum_ms.to_bits(), "{mode:?}");
+        assert_eq!(loaded.median_ms.to_bits(), w1.median_ms.to_bits(), "{mode:?}");
+        assert_eq!(
+            loaded.mean_eval_cost_s.to_bits(),
+            w1.mean_eval_cost_s.to_bits(),
+            "{mode:?}"
+        );
+        assert_eq!(loaded.salt, w1.salt);
+        assert_eq!(cache_fp(&loaded), cache_fp(&w1));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn foreign_fingerprints_are_rejected_and_rebuilt() {
+    let dir = tmp_dir("fingerprint");
+    let space = Arc::new(APP.build_space());
+    let cache = Cache::build_with_space(APP, gpu(), Arc::clone(&space));
+    let spath = space_path(&dir, APP);
+    let cpath = cache_path(&dir, APP, gpu().name);
+
+    // Direct load surface: a flipped fingerprint (stale spec, different
+    // salt, bumped model revision — all collapse to "wrong u64") rejects.
+    save_space_tagged(&spath, &space, space_fp(&space) ^ 1).unwrap();
+    match load_space(&spath, APP, LoadMode::Read) {
+        Err(LoadError::Fingerprint { .. }) => {}
+        other => panic!("expected fingerprint rejection, got {other:?}"),
+    }
+    save_cache_tagged(&cpath, &cache, cache_fp(&cache) ^ 1).unwrap();
+    match load_cache(&cpath, APP, gpu(), Arc::clone(&space), LoadMode::Mmap) {
+        Err(LoadError::Fingerprint { .. }) => {}
+        other => panic!("expected fingerprint rejection, got {other:?}"),
+    }
+
+    // Registry surface: stale files are rebuilt (never reused) and the
+    // rebuild overwrites them with correctly-stamped ones.
+    let reg = CacheRegistry::new();
+    reg.set_cache_dir(Some(dir.clone()));
+    let key = CacheKey::new(APP, gpu());
+    let entry = reg.entry(key);
+    assert_eq!(reg.builds(), 1, "stale cache must rebuild");
+    assert_eq!(reg.loads(), 0);
+    assert_eq!(reg.space_builds(), 1, "stale space must rebuild");
+    assert_eq!(&entry.cache.mean_ms[..], &cache.mean_ms[..]);
+
+    // The overwritten files now load cleanly in a fresh registry.
+    let reg2 = CacheRegistry::new();
+    reg2.set_cache_dir(Some(dir.clone()));
+    let entry2 = reg2.entry(key);
+    assert_eq!(reg2.builds(), 0, "rewritten store must warm-start");
+    assert_eq!(reg2.loads(), 1);
+    assert_eq!(reg2.space_loads(), 1);
+    assert_eq!(&entry2.cache.mean_ms[..], &entry.cache.mean_ms[..]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_and_corrupt_files_are_rejected() {
+    let dir = tmp_dir("corrupt");
+    let space = Arc::new(APP.build_space());
+    let cache = Cache::build_with_space(APP, gpu(), Arc::clone(&space));
+    let cpath = cache_path(&dir, APP, gpu().name);
+    save_cache(&cpath, &cache).unwrap();
+    let good = std::fs::read(&cpath).unwrap();
+
+    // Truncation (a killed writer that somehow bypassed the atomic
+    // rename) is rejected, not mis-read.
+    std::fs::write(&cpath, &good[..good.len() / 2]).unwrap();
+    assert!(
+        !matches!(
+            load_cache(&cpath, APP, gpu(), Arc::clone(&space), LoadMode::Read),
+            Ok(_) | Err(LoadError::Missing)
+        ),
+        "truncated file must be rejected"
+    );
+
+    // A single flipped payload bit is caught by the checksums.
+    let mut flipped = good.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x40;
+    std::fs::write(&cpath, &flipped).unwrap();
+    assert!(
+        load_cache(&cpath, APP, gpu(), Arc::clone(&space), LoadMode::Read).is_err(),
+        "bit-flipped file must be rejected"
+    );
+
+    // Garbage shorter than a header is rejected; the registry falls back
+    // to a cold build and heals the file.
+    std::fs::write(&cpath, b"not a store file").unwrap();
+    let reg = CacheRegistry::new();
+    reg.set_cache_dir(Some(dir.clone()));
+    reg.entry(CacheKey::new(APP, gpu()));
+    assert_eq!((reg.builds(), reg.loads()), (1, 0));
+    assert!(
+        load_cache(&cpath, APP, gpu(), Arc::clone(&space), LoadMode::Read).is_ok(),
+        "registry rebuild must heal the corrupt file"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_registry_access_loads_exactly_once() {
+    let dir = tmp_dir("concurrent");
+    // Pre-populate the store.
+    {
+        let reg = CacheRegistry::new();
+        reg.set_cache_dir(Some(dir.clone()));
+        reg.entry(CacheKey::new(APP, gpu()));
+        assert_eq!(reg.builds(), 1);
+    }
+    // A fresh process-equivalent: 8 threads race the same key; the file
+    // is mapped exactly once and nothing is rebuilt.
+    let reg = CacheRegistry::new();
+    reg.set_cache_dir(Some(dir.clone()));
+    let key = CacheKey::new(APP, gpu());
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            scope.spawn(|| {
+                let e = reg.entry(key);
+                assert!(e.cache.len() > 0);
+            });
+        }
+    });
+    assert_eq!(reg.builds(), 0, "warm store must satisfy all threads");
+    assert_eq!(reg.loads(), 1, "the cache file must be loaded exactly once");
+    assert_eq!(reg.space_loads(), 1, "the space file must be loaded exactly once");
+    let events = reg.events();
+    assert_eq!(events.len(), 2);
+    assert!(events.iter().all(|e| e.outcome == CacheOutcome::Loaded));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_and_cold_reports_are_byte_identical() {
+    let dir = tmp_dir("warm-report");
+    let key = CacheKey::new(APP, gpu());
+    let specs = [OptimizerSpec::named("random"), OptimizerSpec::named("sa")];
+    let report = |reg: &CacheRegistry| -> String {
+        let entries = vec![reg.entry(key)];
+        let factories: Vec<(String, &dyn OptimizerFactory)> =
+            specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+        let jobs = grid_jobs(&entries, &factories, 3, 11);
+        let curves: Vec<Vec<f64>> = jobs.iter().map(|j| j.execute()).collect();
+        let groups: Vec<usize> = jobs.iter().map(|j| j.group).collect();
+        let grouped = collate_groups(factories.len(), &groups, curves);
+        let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+        let results = grid_aggregates(&labels, 1, grouped);
+        let ids = vec![entries[0].cache.id()];
+        let summary = JobsSummary { completed: jobs.len(), cancelled: 0, failed: 0 };
+        scores_json("t", &ids, &results, &summary).to_pretty()
+    };
+
+    let cold = CacheRegistry::new();
+    let cold_report = report(&cold);
+    let seed_store = CacheRegistry::new();
+    seed_store.set_cache_dir(Some(dir.clone()));
+    let first = report(&seed_store); // builds + saves
+    assert_eq!(first, cold_report);
+    let warm = CacheRegistry::new();
+    warm.set_cache_dir(Some(dir.clone()));
+    let warm_report = report(&warm);
+    assert_eq!(warm.loads(), 1, "second store run must be warm");
+    assert_eq!(warm.builds(), 0);
+    assert_eq!(warm_report, cold_report, "warm-start must not change any report byte");
+
+    // The "caches" block is the one legitimate difference between warm
+    // and cold runs — which is exactly why reports carry it as a
+    // strippable top-level key rather than folding it into the scores.
+    let mut with_block = Json::parse(&warm_report).unwrap();
+    with_block.set("caches", warm.caches_json());
+    assert_ne!(with_block.to_pretty(), cold_report);
+    with_block.remove("caches");
+    assert_eq!(with_block.to_pretty(), cold_report);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Serialize a partial as the CLI would and parse it back — the merge
+/// must survive the actual file round trip (f64s included).
+fn through_file(j: Json) -> Json {
+    Json::parse(&j.to_pretty()).unwrap()
+}
+
+#[test]
+fn shard_merge_reproduces_the_coordinate_report_bit_for_bit() {
+    let reg = CacheRegistry::new();
+    let entries = vec![reg.entry(CacheKey::new(APP, gpu()))];
+    let specs = [OptimizerSpec::named("random"), OptimizerSpec::named("sa")];
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+    let ids = vec![entries[0].cache.id()];
+    let (runs, seed) = (3usize, 13u64);
+    let jobs = grid_jobs(&entries, &factories, runs, seed);
+    assert_eq!(jobs.len(), 6);
+
+    // Single-process reference report.
+    let curves: Vec<Vec<f64>> = jobs.iter().map(|j| j.execute()).collect();
+    let groups: Vec<usize> = jobs.iter().map(|j| j.group).collect();
+    let grouped = collate_groups(labels.len(), &groups, curves);
+    let results = grid_aggregates(&labels, 1, grouped);
+    let summary = JobsSummary { completed: jobs.len(), cancelled: 0, failed: 0 };
+    let reference = scores_json("t", &ids, &results, &summary).to_pretty();
+
+    // Uneven split: 6 jobs over 4 shards (2, 2, 1, 1 jobs).
+    let count = 4;
+    let partials: Vec<Json> = (0..count)
+        .map(|k| {
+            let shard = ShardSpec { index: k, count };
+            let rows: Vec<ShardJob> = (0..jobs.len())
+                .filter(|&i| shard.owns(i))
+                .map(|i| ShardJob {
+                    index: i,
+                    group: jobs[i].group,
+                    curve: jobs[i].execute(),
+                })
+                .collect();
+            let summary =
+                JobsSummary { completed: rows.len(), cancelled: 0, failed: 0 };
+            through_file(partial_coordinate_json(
+                "t",
+                &ids,
+                &labels,
+                runs,
+                seed,
+                &shard,
+                jobs.len(),
+                &summary,
+                &rows,
+            ))
+        })
+        .collect();
+
+    let merged = merge_reports(&partials).unwrap();
+    assert_eq!(merged.to_pretty(), reference, "merge must be byte-identical");
+    // Including the jobs block: 2+2+1+1 = the single-process count.
+    assert_eq!(
+        merged.get("jobs").unwrap().get("completed").unwrap().as_usize(),
+        Some(6)
+    );
+    // Order of partials must not matter.
+    let reversed: Vec<Json> = partials.iter().rev().cloned().collect();
+    assert_eq!(merge_reports(&reversed).unwrap().to_pretty(), reference);
+}
+
+/// GA with everything but `elites` pinned: a 4-point meta space.
+fn ga_narrow() -> OptimizerSpec {
+    OptimizerSpec::parse(
+        "ga:population_size=8,tournament_k=2,crossover_rate=0.8,mutation_rate_factor=0.8",
+    )
+    .unwrap()
+}
+
+fn conv_entries() -> Vec<Arc<llamea_kt::coordinator::SpaceEntry>> {
+    vec![CacheRegistry::global().entry(CacheKey::parse("convolution@A4000").unwrap())]
+}
+
+#[test]
+fn sharded_sweep_merges_to_the_single_process_report() {
+    let (runs, seed) = (2usize, 9u64);
+    // Single-process grid sweep.
+    let full_mt = MetaTuning::new(ga_narrow(), conv_entries(), runs, seed, Some(2)).unwrap();
+    let outcome = sweep(&full_mt, &MetaStrategy::Grid, seed);
+    let reference = sweep_json(&full_mt, &outcome, seed).to_pretty();
+
+    // Uneven split: 4 meta-ordinals over 3 shards.
+    let count = 3;
+    let n = full_mt.space().len();
+    let partials: Vec<Json> = (0..count)
+        .map(|k| {
+            let shard = ShardSpec { index: k, count };
+            let mt = MetaTuning::new(ga_narrow(), conv_entries(), runs, seed, Some(2)).unwrap();
+            let cands: Vec<u32> =
+                (0..n as u32).filter(|&o| shard.owns(o as usize)).collect();
+            mt.evaluate_all(&cands, mt.runs());
+            let outcome = SweepOutcome {
+                strategy: MetaStrategy::Grid.label(),
+                leaderboard: mt.leaderboard(),
+                rungs: Vec::new(),
+            };
+            through_file(sweep_partial_json(&mt, &outcome, seed, &shard))
+        })
+        .collect();
+
+    let merged = merge_reports(&partials).unwrap();
+    assert_eq!(merged.to_pretty(), reference, "sweep merge must be byte-identical");
+    // Partials from a different sweep are refused.
+    let other_mt =
+        MetaTuning::new(ga_narrow(), conv_entries(), runs, seed + 1, Some(2)).unwrap();
+    let other = SweepOutcome {
+        strategy: MetaStrategy::Grid.label(),
+        leaderboard: Vec::new(),
+        rungs: Vec::new(),
+    };
+    let bad = through_file(sweep_partial_json(
+        &other_mt,
+        &other,
+        seed + 1,
+        &ShardSpec { index: 0, count },
+    ));
+    let mut mixed = partials.clone();
+    mixed[0] = bad;
+    assert!(merge_reports(&mixed).is_err());
+}
