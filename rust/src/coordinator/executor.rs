@@ -43,7 +43,7 @@ use std::collections::BinaryHeap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Condvar, Mutex};
 
-use super::job::TuningJob;
+use super::job::{OwnedJob, TuningJob};
 use crate::util::cancel::CancelToken;
 use crate::util::error::panic_message;
 use crate::util::json::Json;
@@ -161,23 +161,32 @@ impl JobOutcome {
 
 /// Per-job record of an executor run: the job's slot (position in the
 /// stream — results are reassembled by slot, never by completion order),
-/// its reassembly group and scheduling metadata, and how it ended.
+/// its reassembly group and scheduling metadata, its nominal evaluation
+/// cost, and how it ended.
 #[derive(Debug, Clone)]
 pub struct JobHandle {
     pub slot: usize,
     pub group: usize,
     pub priority: Priority,
     pub seed: u64,
+    /// Nominal evaluation cost of the job in integer microseconds
+    /// (`budget_s × 1e6`, rounded). Integer so per-tenant sums are
+    /// associative: a sharded or multi-session total is bit-identical to
+    /// the single-batch total regardless of summation order.
+    pub cost_us: u64,
     pub outcome: JobOutcome,
 }
 
 /// Completion counters of a batch (the `"jobs"` block of `coordinate
-/// --out` / `sweep --out` reports).
+/// --out` / `sweep --out` reports, and the per-session accounting unit of
+/// the `serve` daemon). `cost_us` sums the nominal evaluation cost of the
+/// **completed** jobs only — the work a tenant actually consumed.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct JobsSummary {
     pub completed: usize,
     pub cancelled: usize,
     pub failed: usize,
+    pub cost_us: u64,
 }
 
 impl JobsSummary {
@@ -194,14 +203,17 @@ impl JobsSummary {
         self.completed += other.completed;
         self.cancelled += other.cancelled;
         self.failed += other.failed;
+        self.cost_us += other.cost_us;
     }
 
-    /// The `{"completed":…,"cancelled":…,"failed":…}` report block.
+    /// The `{"completed":…,"cancelled":…,"failed":…,"cost_us":…}` report
+    /// block.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("completed", self.completed);
         j.set("cancelled", self.cancelled);
         j.set("failed", self.failed);
+        j.set("cost_us", self.cost_us);
         j
     }
 }
@@ -221,6 +233,15 @@ pub struct BatchResult {
 }
 
 impl BatchResult {
+    /// Assemble a result from externally produced handles — the seam for
+    /// execution engines outside this module (the serve pool). The engine
+    /// asserts `fully_drained` itself: a materialized batch whose every
+    /// job got a handle is drained by construction, even when some
+    /// outcomes are `Cancelled`.
+    pub fn from_handles(handles: Vec<JobHandle>, fully_drained: bool) -> BatchResult {
+        BatchResult { handles, drained: fully_drained }
+    }
+
     pub fn len(&self) -> usize {
         self.handles.len()
     }
@@ -233,7 +254,10 @@ impl BatchResult {
         let mut s = JobsSummary::default();
         for h in &self.handles {
             match h.outcome {
-                JobOutcome::Completed(_) => s.completed += 1,
+                JobOutcome::Completed(_) => {
+                    s.completed += 1;
+                    s.cost_us += h.cost_us;
+                }
                 JobOutcome::Cancelled => s.cancelled += 1,
                 JobOutcome::Failed(_) => s.failed += 1,
             }
@@ -250,6 +274,24 @@ impl BatchResult {
     /// Whether the source was pulled to exhaustion (see `drained`).
     pub fn fully_drained(&self) -> bool {
         self.drained
+    }
+
+    /// Completed jobs only, in slot order: each job's reassembly group
+    /// paired with its curve. The partial-tolerant counterpart of
+    /// [`Self::expect_curves`]: a cancelled batch yields the
+    /// completed-prefix view (every curve still bit-identical to its
+    /// drain-all counterpart) instead of panicking. Callers feed the pair
+    /// straight into [`super::report::collate_groups`].
+    pub fn completed(&self) -> (Vec<usize>, Vec<Vec<f64>>) {
+        let mut groups = Vec::new();
+        let mut curves = Vec::new();
+        for h in &self.handles {
+            if let JobOutcome::Completed(curve) = &h.outcome {
+                groups.push(h.group);
+                curves.push(curve.clone());
+            }
+        }
+        (groups, curves)
     }
 
     /// Drain-all view: every job's curve in slot order. Panics with a
@@ -383,6 +425,16 @@ impl Executor {
         self.cancel.clone()
     }
 
+    /// Adopt an externally owned cancellation token instead of the fresh
+    /// per-executor one — the CLI's SIGINT bridge
+    /// ([`crate::util::signal::install_sigint`]) hands every executor the
+    /// one process-wide token so a single Ctrl-C winds down whichever
+    /// batch is in flight.
+    pub fn cancel_via(mut self, token: CancelToken) -> Executor {
+        self.cancel = token;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -453,6 +505,39 @@ impl Executor {
     }
 }
 
+/// The seam between batch producers and execution engines: anything that
+/// can drain a materialized batch of [`OwnedJob`]s and return the
+/// slot-indexed result. Two implementors exist — [`Executor`] (a scoped
+/// worker pool per call, the CLI path) and the serve daemon's persistent
+/// [`SharedPool`](crate::serve::pool::SharedPool) (one long-lived pool
+/// multiplexing many sessions). Consumers like
+/// [`MetaTuning`](crate::hypertune::MetaTuning) program against this
+/// trait, so the same meta-sweep runs unchanged in-process or served —
+/// and because results are slot-indexed and every seed pre-derived, the
+/// two engines are bit-identical for completed jobs.
+pub trait BatchRunner: Send + Sync {
+    /// Drain `jobs` (slot = index in the slice), streaming [`Progress`]
+    /// events to `sink`. Priorities come from each job's `priority` field.
+    fn run_batch(&self, jobs: &[OwnedJob], sink: &ProgressSink) -> BatchResult;
+
+    /// A token that cancels batches submitted through this runner.
+    fn batch_cancel_token(&self) -> CancelToken;
+}
+
+impl BatchRunner for Executor {
+    fn run_batch(&self, jobs: &[OwnedJob], sink: &ProgressSink) -> BatchResult {
+        let mut source = FnSource::new(jobs.len(), |i| SourcedJob {
+            job: jobs[i].as_job(),
+            priority: jobs[i].priority,
+        });
+        self.run_observed(&mut source, sink)
+    }
+
+    fn batch_cancel_token(&self) -> CancelToken {
+        self.cancel_token()
+    }
+}
+
 /// A queued, pulled-but-unstarted job. Max-heap order: higher priority
 /// first, then lower slot — so with equal priorities the pool picks jobs
 /// in stream order.
@@ -484,6 +569,7 @@ struct SlotState {
     group: usize,
     priority: Priority,
     seed: u64,
+    cost_us: u64,
     outcome: Option<JobOutcome>,
 }
 
@@ -538,6 +624,7 @@ impl<'a> Pool<'a, '_, '_> {
                                     group: sj.job.group,
                                     priority: sj.priority,
                                     seed: sj.job.seed,
+                                    cost_us: sj.job.cost_us(),
                                     outcome: None,
                                 });
                                 st.queue.push(QueueEntry {
@@ -609,6 +696,7 @@ impl<'a> Pool<'a, '_, '_> {
                 group: s.group,
                 priority: s.priority,
                 seed: s.seed,
+                cost_us: s.cost_us,
                 outcome: s.outcome.expect("pulled job left without an outcome"),
             })
             .collect();
@@ -617,7 +705,10 @@ impl<'a> Pool<'a, '_, '_> {
 }
 
 /// Run one job with per-job panic isolation and cooperative cancellation.
-fn execute_isolated(job: &TuningJob<'_>, cancel: &CancelToken) -> JobOutcome {
+/// `pub(crate)` so the serve pool maps outcomes through the identical
+/// code path — the two engines must not diverge on edge semantics
+/// (pre-checked cancellation, discarded partial curves, panic payloads).
+pub(crate) fn execute_isolated(job: &TuningJob<'_>, cancel: &CancelToken) -> JobOutcome {
     if cancel.is_cancelled() {
         return JobOutcome::Cancelled;
     }
@@ -657,12 +748,15 @@ mod tests {
 
     #[test]
     fn summary_counts_and_json_block() {
-        let mut s = JobsSummary { completed: 3, cancelled: 1, failed: 0 };
+        let mut s = JobsSummary { completed: 3, cancelled: 1, failed: 0, cost_us: 300 };
         assert_eq!(s.total(), 4);
         assert!(!s.all_completed());
-        s.absorb(JobsSummary { completed: 2, cancelled: 0, failed: 1 });
-        assert_eq!(s, JobsSummary { completed: 5, cancelled: 1, failed: 1 });
-        assert_eq!(s.to_json().to_string(), r#"{"completed":5,"cancelled":1,"failed":1}"#);
+        s.absorb(JobsSummary { completed: 2, cancelled: 0, failed: 1, cost_us: 200 });
+        assert_eq!(s, JobsSummary { completed: 5, cancelled: 1, failed: 1, cost_us: 500 });
+        assert_eq!(
+            s.to_json().to_string(),
+            r#"{"completed":5,"cancelled":1,"failed":1,"cost_us":500}"#
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use super::executor::{FnSource, JobSource, SourcedJob};
+use super::executor::{FnSource, JobSource, Priority, SourcedJob};
 use super::registry::SpaceEntry;
 use crate::methodology::{runner::single_run_cancellable, OptimizerFactory, SpaceSetup};
 use crate::tuning::BackendSource;
@@ -58,6 +58,14 @@ impl TuningJob<'_> {
     pub fn execute_cancellable(&self, cancel: &CancelToken) -> Option<Vec<f64>> {
         let mut opt = self.factory.build();
         single_run_cancellable(self.source, self.setup, opt.as_mut(), self.seed, cancel)
+    }
+
+    /// Nominal evaluation cost of the run in integer microseconds: the
+    /// space's time budget (`budget_s × 1e6`, rounded). Integer so sums
+    /// over jobs are associative — a total accumulated per shard or per
+    /// session is bit-identical to the single-batch total.
+    pub fn cost_us(&self) -> u64 {
+        (self.setup.budget_s * 1e6).round() as u64
     }
 }
 
@@ -153,6 +161,78 @@ pub fn grid_source<'a>(
 /// the lazy generators; also handy in tests).
 pub fn collect_jobs<'a>(source: &mut dyn JobSource<'a>) -> Vec<TuningJob<'a>> {
     std::iter::from_fn(|| source.next_job().map(|sj| sj.job)).collect()
+}
+
+/// A [`TuningJob`] that owns its world: the registry entry and optimizer
+/// spec are held by `Arc` instead of borrowed, so the job can outlive the
+/// stack frame that minted it. This is the unit the `serve` daemon's
+/// persistent pool executes — borrowed `TuningJob`s force every batch to
+/// pin a caller stack frame for its whole lifetime (the `Executor`'s
+/// scoped-thread model), while owned jobs let one long-lived pool drain
+/// batches submitted by many short-lived sessions.
+///
+/// Determinism: [`Self::as_job`] reborrows the exact `(source, setup,
+/// factory, seed, group)` quintuple a borrowed grid would carry, so an
+/// owned job's curve is bit-identical to its borrowed counterpart.
+#[derive(Clone)]
+pub struct OwnedJob {
+    pub entry: Arc<SpaceEntry>,
+    pub spec: Arc<crate::optimizers::OptimizerSpec>,
+    pub seed: u64,
+    pub group: usize,
+    pub priority: Priority,
+}
+
+impl OwnedJob {
+    /// The borrowed view the execution seams consume. The `OptimizerSpec`
+    /// itself is the factory (it implements
+    /// [`OptimizerFactory`]), so seeds derived from `spec.label()`
+    /// match the direct CLI grid exactly.
+    pub fn as_job(&self) -> TuningJob<'_> {
+        TuningJob {
+            source: &self.entry.cache,
+            setup: &self.entry.setup,
+            factory: &*self.spec,
+            seed: self.seed,
+            group: self.group,
+        }
+    }
+
+    /// Nominal evaluation cost in integer microseconds (see
+    /// [`TuningJob::cost_us`]).
+    pub fn cost_us(&self) -> u64 {
+        self.as_job().cost_us()
+    }
+
+    /// The owned twin of [`grid_jobs`]: the identical factory-major
+    /// (optimizer × space × seed) sequence — same slots, seeds, groups —
+    /// materialized as owned jobs (all at priority 0; callers band them
+    /// afterwards). Pinned against [`grid_jobs`] in this module's tests so
+    /// the two expansions cannot drift.
+    pub fn grid(
+        entries: &[Arc<SpaceEntry>],
+        specs: &[Arc<crate::optimizers::OptimizerSpec>],
+        runs: usize,
+        base_seed: u64,
+    ) -> Vec<OwnedJob> {
+        let space_ids: Vec<String> = entries.iter().map(|e| e.cache.space_id()).collect();
+        let mut jobs = Vec::with_capacity(entries.len() * specs.len() * runs);
+        for (fi, spec) in specs.iter().enumerate() {
+            let seed_label = spec.label();
+            for (si, entry) in entries.iter().enumerate() {
+                for r in 0..runs {
+                    jobs.push(OwnedJob {
+                        entry: Arc::clone(entry),
+                        spec: Arc::clone(spec),
+                        seed: job_seed(base_seed, &space_ids[si], &seed_label, r as u64),
+                        group: fi * entries.len() + si,
+                        priority: 0,
+                    });
+                }
+            }
+        }
+        jobs
+    }
 }
 
 /// Expand an (optimizer × source × seed) grid over arbitrary backend
@@ -257,6 +337,44 @@ mod tests {
         }
         let sgot: Vec<(u64, usize)> = sjobs.iter().map(|j| (j.seed, j.group)).collect();
         assert_eq!(sgot, sexpected);
+    }
+
+    #[test]
+    fn owned_grid_matches_the_borrowed_grid_exactly() {
+        // `OwnedJob::grid` must mint the same factory-major sequence as
+        // `grid_jobs` — same seeds, same groups, same curves — or the
+        // daemon's served reports drift from the direct CLI's.
+        use crate::coordinator::registry::{CacheKey, CacheRegistry};
+        use crate::optimizers::OptimizerSpec;
+        let reg = CacheRegistry::new();
+        let entries = vec![
+            reg.entry(CacheKey::parse("convolution@A4000").unwrap()),
+            reg.entry(CacheKey::parse("convolution@W6600").unwrap()),
+        ];
+        let specs: Vec<Arc<OptimizerSpec>> = ["sa", "random"]
+            .iter()
+            .map(|n| Arc::new(OptimizerSpec::parse(n).unwrap()))
+            .collect();
+        let factories: Vec<(String, &dyn OptimizerFactory)> = specs
+            .iter()
+            .map(|s| (s.label(), &**s as &dyn OptimizerFactory))
+            .collect();
+        let runs = 2;
+        let borrowed = grid_jobs(&entries, &factories, runs, 23);
+        let owned = OwnedJob::grid(&entries, &specs, runs, 23);
+        assert_eq!(owned.len(), borrowed.len());
+        for (o, b) in owned.iter().zip(&borrowed) {
+            assert_eq!(o.seed, b.seed);
+            assert_eq!(o.group, b.group);
+            assert_eq!(o.priority, 0);
+            assert_eq!(o.cost_us(), b.cost_us());
+        }
+        // Spot-check execution identity on the first job of each group.
+        let first_of_group: Vec<usize> =
+            (0..4).map(|g| owned.iter().position(|j| j.group == g).unwrap()).collect();
+        for &i in &first_of_group {
+            assert_eq!(owned[i].as_job().execute(), borrowed[i].execute());
+        }
     }
 
     #[test]

@@ -68,13 +68,17 @@ pub mod scheduler;
 pub mod shard;
 
 pub use executor::{
-    BatchResult, Executor, FnSource, IterSource, JobHandle, JobOutcome, JobSource, JobsSummary,
-    Priority, Progress, SourcedJob,
+    BatchResult, BatchRunner, Executor, FnSource, IterSource, JobHandle, JobOutcome, JobSource,
+    JobsSummary, Priority, Progress, SourcedJob,
 };
 pub use job::{
-    collect_jobs, grid_jobs, grid_source, job_seed, source_jobs, source_jobs_source, TuningJob,
+    collect_jobs, grid_jobs, grid_source, job_seed, source_jobs, source_jobs_source, OwnedJob,
+    TuningJob,
 };
 pub use registry::{CacheEvent, CacheKey, CacheOutcome, CacheRegistry, SpaceEntry};
-pub use report::{collate, collate_groups, grid_aggregates, score_table, scores_json};
+pub use report::{
+    collate, collate_groups, coordinate_report, coordinate_results, grid_aggregates, score_table,
+    scores_json, COORDINATE_TITLE,
+};
 pub use scheduler::Scheduler;
 pub use shard::{merge_reports, partial_coordinate_json, ShardJob, ShardSpec};

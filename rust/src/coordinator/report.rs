@@ -1,7 +1,7 @@
 //! Reassembly of flat scheduler output into per-(optimizer, space) curve
 //! groups, aggregate scores, and rendered tables.
 
-use super::executor::JobsSummary;
+use super::executor::{BatchResult, JobsSummary};
 use super::job::TuningJob;
 use crate::methodology::{aggregate, Aggregate};
 use crate::util::json::Json;
@@ -102,6 +102,62 @@ pub fn scores_json(
     j
 }
 
+/// Title of the `coordinate` score report — one constant shared by the
+/// CLI and the serve daemon, because the served report must be
+/// byte-identical to the direct run's.
+pub const COORDINATE_TITLE: &str = "Coordinator: aggregate score P per optimizer";
+
+/// Per-optimizer aggregates from a (possibly partial) factory-major
+/// batch: the scoreable subset — an optimizer makes the list iff every
+/// one of its spaces has at least one completed run (aggregation over an
+/// empty group is undefined). For a fully-completed batch this is every
+/// optimizer, with aggregates identical to the historical
+/// `expect_curves` + [`collate_groups`] + [`grid_aggregates`] path.
+pub fn coordinate_results(
+    labels: &[String],
+    n_spaces: usize,
+    batch: &BatchResult,
+) -> Vec<(String, Aggregate)> {
+    let n_groups = labels.len() * n_spaces;
+    let (groups, curves) = batch.completed();
+    let grouped = collate_groups(n_groups, &groups, curves);
+    let mut results = Vec::with_capacity(labels.len());
+    for (li, label) in labels.iter().enumerate() {
+        let per_space = &grouped[li * n_spaces..(li + 1) * n_spaces];
+        if per_space.iter().all(|runs| !runs.is_empty()) {
+            results.push((label.clone(), aggregate(per_space)));
+        }
+    }
+    results
+}
+
+/// The one report-assembly path behind `coordinate --out` and the serve
+/// daemon's served coordinate sessions: collate a factory-major batch,
+/// aggregate per optimizer, render [`scores_json`]. A batch whose every
+/// job completed produces **exactly** the historical report bytes. A
+/// cancelled or partially-drained batch degrades to the completed-prefix
+/// view instead of panicking: `"interrupted": true` is appended, the
+/// `"jobs"` block keeps honest counters, and a score row appears only
+/// for optimizers with at least one completed run on *every* space
+/// (aggregation over an empty space group is undefined). Completed
+/// curves are bit-identical to their drain-all counterparts either way,
+/// so a partial report is a strict prefix truth, never an approximation.
+pub fn coordinate_report(
+    title: &str,
+    space_ids: &[String],
+    labels: &[String],
+    batch: &BatchResult,
+) -> Json {
+    let summary = batch.summary();
+    let complete = batch.fully_drained() && summary.all_completed();
+    let results = coordinate_results(labels, space_ids.len(), batch);
+    let mut j = scores_json(title, space_ids, &results, &summary);
+    if !complete {
+        j.set("interrupted", true);
+    }
+    j
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,12 +198,15 @@ mod tests {
             completed: 2 * runs,
             cancelled: 0,
             failed: 0,
+            cost_us: 6_000_000,
         };
         let json = scores_json("test", &ids, &results, &jobs_block).to_string();
         assert!(json.contains("\"optimizer\":\"random\""), "{}", json);
         assert!(json.contains("\"spaces\":[\"convolution@A4000\"]"), "{}", json);
         assert!(
-            json.contains("\"jobs\":{\"completed\":6,\"cancelled\":0,\"failed\":0}"),
+            json.contains(
+                "\"jobs\":{\"completed\":6,\"cancelled\":0,\"failed\":0,\"cost_us\":6000000}"
+            ),
             "{}",
             json
         );

@@ -154,7 +154,9 @@ fn require_complete_shards(partials: &[Json]) -> Result<usize, String> {
     Ok(count)
 }
 
-/// Sum the per-shard `"jobs"` completion blocks.
+/// Sum the per-shard `"jobs"` completion blocks. Costs are integer
+/// microseconds, so the sum is associative and the merged block is
+/// bit-identical to the single-process one regardless of shard order.
 fn summed_jobs(partials: &[Json]) -> Result<JobsSummary, String> {
     let mut out = JobsSummary::default();
     for p in partials {
@@ -163,6 +165,7 @@ fn summed_jobs(partials: &[Json]) -> Result<JobsSummary, String> {
             completed: usize_field(jobs, "completed")?,
             cancelled: usize_field(jobs, "cancelled")?,
             failed: usize_field(jobs, "failed")?,
+            cost_us: usize_field(jobs, "cost_us")? as u64,
         });
     }
     Ok(out)
@@ -322,8 +325,12 @@ mod tests {
             .filter(|&i| shard.owns(i))
             .map(|i| ShardJob { index: i, group: i % 2, curve: vec![i as f64, 0.5] })
             .collect();
-        let summary =
-            JobsSummary { completed: jobs.len(), cancelled: 0, failed: 0 };
+        let summary = JobsSummary {
+            completed: jobs.len(),
+            cancelled: 0,
+            failed: 0,
+            cost_us: jobs.len() as u64 * 100,
+        };
         partial_coordinate_json(
             "t",
             &["s".to_string()],

@@ -36,17 +36,19 @@
 //! of the stored curves is bit-identical to a fresh lower-rung grid).
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::space::{decode, meta_space};
 use crate::coordinator::{
-    collate_groups, job_seed, Executor, FnSource, JobsSummary, Progress, SpaceEntry, TuningJob,
+    collate_groups, job_seed, BatchRunner, Executor, FnSource, JobsSummary, OwnedJob, Progress,
+    SpaceEntry, TuningJob,
 };
 use crate::methodology::{aggregate, OptimizerFactory};
 use crate::optimizers::OptimizerSpec;
 use crate::searchspace::SearchSpace;
 use crate::tuning::{BackendSource, EvalBackend};
+use crate::util::cancel::CancelToken;
 use crate::util::rng::avalanche;
 
 /// A sweep-level progress consumer (Send so the sweep setup can move
@@ -96,6 +98,12 @@ pub struct MetaTuning {
     /// through — meta-batches share its width, queue bound and cancel
     /// token instead of spawning ad-hoc per-batch scopes.
     executor: Executor,
+    /// Alternative execution engine ([`MetaTuning::with_runner`]): when
+    /// set, inner batches are materialized as [`OwnedJob`]s and drained
+    /// through it instead of the executor — the serve daemon's persistent
+    /// pool path. Both engines receive the identical slot-ordered job
+    /// sequence, so sweep output is bit-identical either way.
+    runner: Option<Arc<dyn BatchRunner>>,
     /// Optional consumer of the inner jobs' progress events (the CLI's
     /// live sweep line).
     progress: Option<SweepProgress>,
@@ -108,6 +116,10 @@ pub struct MetaTuning {
     jobs_done: Mutex<JobsSummary>,
     hits: AtomicUsize,
     fresh: AtomicUsize,
+    /// Latched when a batch was cut short by a fired cancel token: the
+    /// sweep's stored curves cover a completed prefix only, and scores
+    /// derived from them are partial (see [`MetaTuning::interrupted`]).
+    interrupted: AtomicBool,
 }
 
 impl MetaTuning {
@@ -141,12 +153,14 @@ impl MetaTuning {
             // on failure anyway (the abort latch is per-run, so the
             // shared executor is not poisoned for later batches).
             executor: Executor::with_threads(threads).fail_fast(),
+            runner: None,
             progress: None,
             space,
             store: Mutex::new(HashMap::new()),
             jobs_done: Mutex::new(JobsSummary::default()),
             hits: AtomicUsize::new(0),
             fresh: AtomicUsize::new(0),
+            interrupted: AtomicBool::new(false),
         })
     }
 
@@ -156,6 +170,43 @@ impl MetaTuning {
     pub fn with_progress(mut self, sink: SweepProgress) -> MetaTuning {
         self.progress = Some(sink);
         self
+    }
+
+    /// Cancel the sweep's own executor through `token` instead of a
+    /// private one — the CLI's SIGINT seam
+    /// ([`crate::util::signal::install_sigint`]). Irrelevant once
+    /// [`Self::with_runner`] installs an external runner (the runner's
+    /// token governs then — see [`Self::cancel_token`]).
+    pub fn with_cancel(mut self, token: CancelToken) -> MetaTuning {
+        self.executor = self.executor.cancel_via(token);
+        self
+    }
+
+    /// Drain inner batches through `runner` instead of the sweep's own
+    /// executor — the serve daemon hands every session's `MetaTuning` its
+    /// shared pool (wrapped with the session's cancel token and priority
+    /// band) so one process-wide worker set multiplexes all sweeps.
+    pub fn with_runner(mut self, runner: Arc<dyn BatchRunner>) -> MetaTuning {
+        self.runner = Some(runner);
+        self
+    }
+
+    /// The token that cancels this sweep's inner batches — the runner's
+    /// (per-session, under the daemon) when one is installed, else the
+    /// shared executor's.
+    pub fn cancel_token(&self) -> CancelToken {
+        match &self.runner {
+            Some(r) => r.batch_cancel_token(),
+            None => self.executor.cancel_token(),
+        }
+    }
+
+    /// Whether any inner batch was cut short by a fired cancel token. Once
+    /// set, stored curves cover a completed prefix only: strategies stop
+    /// escalating and report consumers must present the outcome as
+    /// partial.
+    pub fn interrupted(&self) -> bool {
+        self.interrupted.load(Ordering::SeqCst)
     }
 
     /// Cumulative `{completed, cancelled, failed}` counters over every
@@ -264,82 +315,182 @@ impl MetaTuning {
                 total += n_spaces * (runs - have);
                 offsets.push(total);
             }
-            let mut source = FnSource::new(total, |i| {
+            // The one flat-index decode both execution paths share: job
+            // `i` belongs to meta-config `mi`, inner space `si`, run
+            // index `r` (the config already holds `have` stored runs).
+            let decode_at = |i: usize| {
                 let mi = offsets.partition_point(|&off| off <= i) - 1;
                 let (_, have) = missing[mi];
                 let per = runs - have;
                 let local = i - offsets[mi];
                 let (si, r) = (local / per, have + local % per);
-                let e = &self.entries[si];
-                crate::coordinator::SourcedJob {
-                    job: TuningJob {
-                        source: &e.cache,
-                        setup: &e.setup,
-                        factory: &specs[mi] as &dyn OptimizerFactory,
-                        seed: job_seed(base_seeds[mi], &space_ids[si], &labels[mi], r as u64),
-                        group: mi * n_spaces + si,
-                    },
-                    // Rung escalations (configs that already hold stored
-                    // curves) outrank fresh candidates: their scores gate
-                    // the next elimination. Execution order only — seeds
-                    // are grid-derived, so scores never move.
-                    priority: have as i64,
-                }
-            });
+                (mi, si, r, have)
+            };
             let noop = |_: &Progress| {};
             let sink: &(dyn Fn(&Progress) + Sync) = match &self.progress {
                 Some(b) => b.as_ref(),
                 None => &noop,
             };
-            let batch = self.executor.run_observed(&mut source, sink);
-            self.jobs_done.lock().unwrap().absorb(batch.summary());
-            let groups = batch.groups();
-            let grouped =
-                collate_groups(missing.len() * n_spaces, &groups, batch.expect_curves());
-            let mut it = grouped.into_iter();
-            let mut store = self.store.lock().unwrap();
-            for &(o, have) in &missing {
-                let stored = store
-                    .entry(o)
-                    .or_insert_with(|| vec![Vec::new(); self.entries.len()]);
-                for space_runs in stored.iter_mut() {
-                    // Each computed curve belongs at run index `have + j`.
-                    // Append only at exactly the next free slot: a racing
-                    // caller may have stored some of these runs already
-                    // (bit-identical — seeds are per-run-index), and blind
-                    // appends would file curves under the wrong index.
-                    for (j, curve) in
-                        it.next().expect("collate group per (ordinal, space)").into_iter().enumerate()
-                    {
-                        if have + j == space_runs.len() {
-                            space_runs.push(curve);
+            let batch = match &self.runner {
+                // Served path: the identical slot sequence, materialized
+                // as owned jobs for the daemon's long-lived pool.
+                Some(runner) => {
+                    let spec_arcs: Vec<Arc<OptimizerSpec>> =
+                        specs.iter().map(|s| Arc::new(s.clone())).collect();
+                    let jobs: Vec<OwnedJob> = (0..total)
+                        .map(|i| {
+                            let (mi, si, r, have) = decode_at(i);
+                            OwnedJob {
+                                entry: Arc::clone(&self.entries[si]),
+                                spec: Arc::clone(&spec_arcs[mi]),
+                                seed: job_seed(
+                                    base_seeds[mi],
+                                    &space_ids[si],
+                                    &labels[mi],
+                                    r as u64,
+                                ),
+                                group: mi * n_spaces + si,
+                                priority: have as i64,
+                            }
+                        })
+                        .collect();
+                    runner.run_batch(&jobs, sink)
+                }
+                None => {
+                    let mut source = FnSource::new(total, |i| {
+                        let (mi, si, r, have) = decode_at(i);
+                        let e = &self.entries[si];
+                        crate::coordinator::SourcedJob {
+                            job: TuningJob {
+                                source: &e.cache,
+                                setup: &e.setup,
+                                factory: &specs[mi] as &dyn OptimizerFactory,
+                                seed: job_seed(
+                                    base_seeds[mi],
+                                    &space_ids[si],
+                                    &labels[mi],
+                                    r as u64,
+                                ),
+                                group: mi * n_spaces + si,
+                            },
+                            // Rung escalations (configs that already hold
+                            // stored curves) outrank fresh candidates:
+                            // their scores gate the next elimination.
+                            // Execution order only — seeds are
+                            // grid-derived, so scores never move.
+                            priority: have as i64,
+                        }
+                    });
+                    self.executor.run_observed(&mut source, sink)
+                }
+            };
+            let summary = batch.summary();
+            self.jobs_done.lock().unwrap().absorb(summary);
+            let cut_short = !batch.fully_drained() || summary.cancelled > 0;
+            if cut_short && summary.failed == 0 && self.cancel_token().is_cancelled() {
+                // Interrupted by the cancel token (Ctrl-C, or a session
+                // `cancel` under the daemon): keep every completed curve —
+                // each bit-identical to its drain-all counterpart — filed
+                // at its run index, and latch the partial state.
+                self.interrupted.store(true, Ordering::SeqCst);
+                let mut store = self.store.lock().unwrap();
+                for h in &batch.handles {
+                    if let Some(curve) = h.outcome.curve() {
+                        let (mi, si, r, _) = decode_at(h.slot);
+                        let (o, _) = missing[mi];
+                        let stored = store
+                            .entry(o)
+                            .or_insert_with(|| vec![Vec::new(); self.entries.len()]);
+                        // Append only at exactly the next free run index
+                        // (handles are slot-ordered, so `r` ascends within
+                        // each (config, space) group); curves after a gap
+                        // are dropped — a stored prefix must stay a prefix.
+                        if r == stored[si].len() {
+                            stored[si].push(curve.to_vec());
+                        }
+                    }
+                }
+            } else {
+                let groups = batch.groups();
+                let grouped =
+                    collate_groups(missing.len() * n_spaces, &groups, batch.expect_curves());
+                let mut it = grouped.into_iter();
+                let mut store = self.store.lock().unwrap();
+                for &(o, have) in &missing {
+                    let stored = store
+                        .entry(o)
+                        .or_insert_with(|| vec![Vec::new(); self.entries.len()]);
+                    for space_runs in stored.iter_mut() {
+                        // Each computed curve belongs at run index `have + j`.
+                        // Append only at exactly the next free slot: a racing
+                        // caller may have stored some of these runs already
+                        // (bit-identical — seeds are per-run-index), and blind
+                        // appends would file curves under the wrong index.
+                        for (j, curve) in it
+                            .next()
+                            .expect("collate group per (ordinal, space)")
+                            .into_iter()
+                            .enumerate()
+                        {
+                            if have + j == space_runs.len() {
+                                space_runs.push(curve);
+                            }
                         }
                     }
                 }
             }
         }
         let store = self.store.lock().unwrap();
-        ordinals.iter().map(|&o| Self::score_prefix(&store[&o], runs)).collect()
+        ordinals
+            .iter()
+            .map(|&o| match store.get(&o) {
+                // The uninterrupted invariant: every queried ordinal holds
+                // at least `runs` stored runs per space, so this arm is
+                // exactly the old unconditional `score_prefix(_, runs)`.
+                // After an interruption some ordinals hold a shorter
+                // completed prefix (scored over what exists) or nothing at
+                // all (NaN — the sweep is winding down; leaderboards skip
+                // unevaluated ordinals entirely).
+                Some(stored) if stored.iter().all(|rs| !rs.is_empty()) => {
+                    let avail =
+                        stored.iter().map(|rs| rs.len()).min().unwrap_or(0).min(runs);
+                    Self::score_prefix(stored, avail)
+                }
+                _ => MetaScore {
+                    score: f64::NAN,
+                    per_space: vec![f64::NAN; self.entries.len()],
+                },
+            })
+            .collect()
     }
 
     /// Everything evaluated so far, each ordinal at its highest run count,
     /// ranked by score (descending; ties broken by ascending ordinal, so
-    /// the ranking is a pure function of the evaluated set).
+    /// the ranking is a pure function of the evaluated set). After an
+    /// interruption, an ordinal is ranked over the balanced completed
+    /// prefix its spaces share (the minimum stored run count); ordinals
+    /// with no completed run on some space are omitted — a partial
+    /// leaderboard shows only what was actually scored. Uninterrupted
+    /// sweeps store equal run counts everywhere, so the minimum is the
+    /// old `stored[0].len()` exactly.
     pub fn leaderboard(&self) -> Vec<MetaResult> {
         let store = self.store.lock().unwrap();
         let mut out: Vec<MetaResult> = store
             .iter()
-            .map(|(&o, stored)| {
-                let runs = stored[0].len();
+            .filter_map(|(&o, stored)| {
+                let runs = stored.iter().map(|rs| rs.len()).min().unwrap_or(0);
+                if runs == 0 {
+                    return None;
+                }
                 let s = Self::score_prefix(stored, runs);
-                MetaResult {
+                Some(MetaResult {
                     ordinal: o,
                     spec: self.spec_for(o),
                     overrides: decode(&self.space, o),
                     runs,
                     score: s.score,
                     per_space: s.per_space,
-                }
+                })
             })
             .collect();
         drop(store);

@@ -160,6 +160,13 @@ pub fn successive_halving(mt: &MetaTuning, mut cands: Vec<u32>, eta: usize) -> V
         let escalation_floor = eta.saturating_pow(k as u32).min(final_runs);
         let r = budget_scaled.max(escalation_floor).min(final_runs);
         let scores = mt.evaluate_all(&cands, r);
+        if mt.interrupted() {
+            // A fired cancel token cut the rung short: stored curves are a
+            // completed prefix and the scores partial — eliminating on
+            // them would be noise, so stop escalating. The rung trace ends
+            // at the last fully-scored rung.
+            break;
+        }
         let mut ranked: Vec<(u32, f64)> =
             cands.iter().copied().zip(scores.iter().map(|s| s.score)).collect();
         ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
@@ -227,6 +234,13 @@ fn result_row(r: &MetaResult, with_ordinal: bool) -> Json {
 /// with `coordinate --out`.
 pub fn sweep_json(mt: &MetaTuning, outcome: &SweepOutcome, seed: u64) -> Json {
     let mut j = sweep_header(mt, &outcome.strategy, seed);
+    // An interrupted sweep (Ctrl-C, or a served session's `cancel`) is
+    // flagged so the completed-prefix leaderboard below can never pass as
+    // a full result; uninterrupted reports omit the key, keeping their
+    // bytes identical to pre-cancellation builds.
+    if mt.interrupted() {
+        j.set("interrupted", true);
+    }
     // Inner-job completion counters: partial sweeps (a cancelled or
     // partly-failed run) stay diffable against full ones.
     j.set("jobs", mt.jobs_summary().to_json());

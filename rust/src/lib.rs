@@ -23,5 +23,6 @@ pub mod optimizers;
 pub mod persist;
 pub mod runtime;
 pub mod searchspace;
+pub mod serve;
 pub mod tuning;
 pub mod util;

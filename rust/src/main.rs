@@ -9,8 +9,22 @@
 //! `--threads N` fixes the pool width (results are byte-identical for any
 //! width); `coordinate` exposes the job-graph layer directly for ad-hoc
 //! grids, and `coordinate --out`/`sweep --out` reports carry a
-//! `"jobs": {completed, cancelled, failed}` block for diffing partial
-//! runs.
+//! `"jobs": {completed, cancelled, failed, cost_us}` block for diffing
+//! partial runs.
+//!
+//! Ctrl-C on `coordinate`, `sweep`, and `real-tune` is a cooperative
+//! cancellation, not an abort: in-flight jobs observe the token, the
+//! batch drains, and the report degrades to the completed prefix (marked
+//! `"interrupted": true`) — every completed curve still bit-identical to
+//! its drain-all counterpart. A second Ctrl-C kills the process.
+//!
+//! `serve` turns the same machinery into a long-lived daemon: one
+//! process-wide cache registry and worker pool multiplexing concurrent
+//! tuning sessions over newline-delimited JSON on TCP, with fair-share
+//! scheduling, per-session cancellation, and admission control. `client`
+//! is its command-line counterpart; a served coordinate report is
+//! byte-identical to the direct CLI run of the same spec (modulo the
+//! `"caches"` metadata block).
 //!
 //! Subcommands:
 //!   spaces                         print Table-1 style space statistics
@@ -56,6 +70,23 @@
 //!   merge <partial.json>.. --out F collate per-shard partial reports into
 //!                                  exactly the single-process report,
 //!                                  byte for byte
+//!   serve --listen HOST:PORT       run the tuning daemon (port 0 picks a
+//!                                  free port; the bound address is printed
+//!                                  on stdout)
+//!       [--threads N]              shared worker-pool width
+//!       [--queue-cap N]            reject submissions that would push the
+//!                                  pool past N outstanding jobs
+//!       [--max-sessions N]         reject submissions past N concurrent
+//!                                  running sessions
+//!   client <submit|status|cancel|tail> [--addr HOST:PORT]
+//!       submit --kind coordinate|sweep [--spaces a@g,..] [--opts a,b]
+//!              [--opt NAME] [--runs N] [--seed S] [--out FILE]
+//!                                  submit a session, stream its progress,
+//!                                  and write/print the served report
+//!       status                     daemon + per-session accounting JSON
+//!       cancel --session N         request cooperative cancellation
+//!       tail --session N [--out F] re-attach to a session and block until
+//!                                  its report
 //!   options: --runs N --gen-runs N --llm-calls N --seed S --threads N
 //!            --jobs N --backend cached|measured
 //!            --cache-dir DIR (any subcommand: persist exhaustive caches
@@ -68,9 +99,9 @@
 use std::path::{Path, PathBuf};
 
 use llamea_kt::coordinator::{
-    collate_groups, grid_aggregates, grid_jobs, grid_source, merge_reports,
-    partial_coordinate_json, score_table, scores_json, source_jobs, CacheKey, CacheRegistry,
-    Executor, Progress, Scheduler, ShardJob, ShardSpec,
+    coordinate_report, coordinate_results, grid_jobs, grid_source, merge_reports,
+    partial_coordinate_json, score_table, source_jobs, CacheKey, CacheRegistry, Executor,
+    Progress, Scheduler, ShardJob, ShardSpec, COORDINATE_TITLE,
 };
 use llamea_kt::harness::{self, BackendKind, ExpOptions};
 use llamea_kt::hypertune::{
@@ -83,7 +114,10 @@ use llamea_kt::methodology::{OptimizerFactory, SpaceSetup};
 use llamea_kt::optimizers::OptimizerSpec;
 use llamea_kt::runtime::{measured::NOMINAL_EVAL_COST_S, MeasuredSource, PjrtRuntime};
 use llamea_kt::searchspace::Application;
+use llamea_kt::serve::{client, ServeConfig, Server, SubmitSpec};
 use llamea_kt::tuning::{BackendSource, Cache, TuningContext};
+use llamea_kt::util::json::Json;
+use llamea_kt::util::signal::install_sigint;
 use llamea_kt::util::table::Table;
 
 /// A live stderr progress line over executor [`Progress`] events: one
@@ -411,6 +445,7 @@ fn cmd_real_tune(args: &[String]) {
         let t0 = std::time::Instant::now();
         let progress = ProgressLine::new(Some(jobs.len()));
         let batch = Executor::with_threads(opts.threads)
+            .cancel_via(install_sigint())
             .run_jobs_observed(&jobs, &|ev| progress.observe(ev));
         progress.finish();
         report_job_outcomes(&batch.summary());
@@ -477,17 +512,18 @@ fn cmd_real_tune(args: &[String]) {
         let progress = ProgressLine::new(Some(jobs.len()));
         let batch = Executor::with_threads(opts.threads)
             .fail_fast()
+            .cancel_via(install_sigint())
             .run_jobs_observed(&jobs, &|ev| progress.observe(ev));
         progress.finish();
-        let groups = batch.groups();
-        let grouped =
-            collate_groups(factories.len() * entries.len(), &groups, batch.expect_curves());
+        // Completed-prefix collation: a Ctrl-C mid-grid still reports
+        // every optimizer whose runs all finished.
         let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
-        let results = grid_aggregates(&labels, entries.len(), grouped);
+        let results = coordinate_results(&labels, entries.len(), &batch);
         println!(
             "{}",
             score_table("Measured space: aggregate score P per optimizer", &results).to_text()
         );
+        report_job_outcomes(&batch.summary());
     }
 }
 
@@ -517,8 +553,8 @@ fn cmd_coordinate(args: &[String]) {
         specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
     let n_jobs = entries.len() * factories.len() * runs;
     let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
-    let title = "Coordinator: aggregate score P per optimizer";
-    let exec = Executor::with_threads(threads).fail_fast();
+    let title = COORDINATE_TITLE;
+    let exec = Executor::with_threads(threads).fail_fast().cancel_via(install_sigint());
 
     if let Some(shard) = shard_flag(args) {
         // Sharded run: execute only the owned slice of the grid and write
@@ -541,10 +577,18 @@ fn cmd_coordinate(args: &[String]) {
         let batch = exec.run_jobs_observed(&shard_jobs, &|ev| progress.observe(ev));
         progress.finish();
         let summary = batch.summary();
-        let rows: Vec<ShardJob> = picked
+        // Completed jobs only: an interrupted shard still writes an honest
+        // partial report (`merge` refuses incomplete coverage, so nothing
+        // downstream can mistake it for the full slice).
+        let rows: Vec<ShardJob> = batch
+            .handles
             .iter()
-            .zip(batch.expect_curves())
-            .map(|(&i, curve)| ShardJob { index: i, group: all_jobs[i].group, curve })
+            .filter_map(|h| {
+                h.outcome.curve().map(|curve| {
+                    let i = picked[h.slot];
+                    ShardJob { index: i, group: all_jobs[i].group, curve: curve.to_vec() }
+                })
+            })
             .collect();
         let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
         let json = partial_coordinate_json(
@@ -558,6 +602,7 @@ fn cmd_coordinate(args: &[String]) {
             cache_tally(registry),
             t0.elapsed()
         );
+        report_job_outcomes(&summary);
         return;
     }
 
@@ -576,14 +621,15 @@ fn cmd_coordinate(args: &[String]) {
     let progress = ProgressLine::new(Some(n_jobs));
     let batch = exec.run_observed(&mut source, &|ev| progress.observe(ev));
     progress.finish();
-    let summary = batch.summary();
-    let groups = batch.groups();
-    let grouped = collate_groups(factories.len() * entries.len(), &groups, batch.expect_curves());
-    let results = grid_aggregates(&labels, entries.len(), grouped);
+    // Completed-prefix collation (shared with the serve daemon): a fully
+    // completed batch renders the historical report byte-for-byte; a
+    // Ctrl-C'd one degrades to the scoreable subset, marked
+    // `"interrupted": true`, instead of panicking away finished work.
+    let results = coordinate_results(&labels, entries.len(), &batch);
     println!("{}", score_table(title, &results).to_text());
     if let Some(path) = flag_value(args, "--out") {
         let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
-        write_report(&path, scores_json(title, &ids, &results, &summary));
+        write_report(&path, coordinate_report(title, &ids, &labels, &batch));
         eprintln!("score table written to {}", path);
     }
     eprintln!(
@@ -593,6 +639,7 @@ fn cmd_coordinate(args: &[String]) {
         cache_tally(registry),
         t0.elapsed()
     );
+    report_job_outcomes(&batch.summary());
 }
 
 /// The `--backend measured` arm of `coordinate`: one lazily-measured
@@ -636,7 +683,7 @@ fn coordinate_measured(
     let factories: Vec<(String, &dyn OptimizerFactory)> =
         specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
     let jobs = source_jobs(&sources, &factories, runs, opts.seed);
-    let exec = Executor::with_threads(threads);
+    let exec = Executor::with_threads(threads).cancel_via(install_sigint());
     eprintln!(
         "coordinating {} measured jobs ({} optimizers x {} kernels x {} seeds) on {} workers",
         jobs.len(),
@@ -701,6 +748,7 @@ fn cmd_sweep(args: &[String]) {
     let line = std::sync::Arc::clone(&progress);
     let mt = MetaTuning::new(base, entries, runs, opts.seed, threads)
         .unwrap_or_else(|e| panic!("sweep setup: {}", e))
+        .with_cancel(install_sigint())
         .with_progress(Box::new(move |ev| line.observe(ev)));
 
     if let Some(shard) = shard_flag(args) {
@@ -839,6 +887,201 @@ fn cmd_merge(args: &[String]) {
     eprintln!("merged {} partial reports into {}", partials.len(), out);
 }
 
+/// Run the tuning daemon: one process-wide cache registry (honoring the
+/// global `--cache-dir`) and one shared worker pool serving concurrent
+/// sessions over newline-delimited JSON (see `llamea_kt::serve`). Ctrl-C
+/// shuts down cooperatively: running sessions are cancelled, their
+/// completed-prefix reports delivered, the pool joined.
+fn cmd_serve(args: &[String]) {
+    let opts = options(args);
+    let listen = flag_value(args, "--listen").unwrap_or_else(|| "127.0.0.1:4517".into());
+    let queue_cap: usize = flag_value(args, "--queue-cap")
+        .map(|v| v.parse().expect("--queue-cap"))
+        .unwrap_or(0);
+    let max_sessions: usize = flag_value(args, "--max-sessions")
+        .map(|v| v.parse().expect("--max-sessions"))
+        .unwrap_or(0);
+    let config = ServeConfig { threads: opts.threads, queue_cap, max_sessions };
+    let server = Server::bind(&listen, config).unwrap_or_else(|e| {
+        eprintln!("serve: cannot bind {}: {}", listen, e);
+        std::process::exit(2);
+    });
+    let addr = server.local_addr();
+    eprintln!(
+        "llamea-kt serve: listening on {} ({} workers, queue cap {}, session cap {})",
+        addr,
+        server.threads(),
+        if queue_cap == 0 { "none".to_string() } else { queue_cap.to_string() },
+        if max_sessions == 0 { "none".to_string() } else { max_sessions.to_string() },
+    );
+    // Machine-readable bound address (scripts rely on it with port 0);
+    // flushed explicitly because stdout is block-buffered under
+    // redirection and the daemon does not exit.
+    {
+        use std::io::Write;
+        let mut out = std::io::stdout();
+        writeln!(out, "{}", addr).ok();
+        out.flush().ok();
+    }
+    let handle = server.handle();
+    let sigint = install_sigint();
+    std::thread::spawn(move || {
+        while !sigint.is_cancelled() {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        handle.shutdown();
+    });
+    server.run().unwrap_or_else(|e| {
+        eprintln!("serve: {}", e);
+        std::process::exit(1);
+    });
+    eprintln!("llamea-kt serve: shut down");
+}
+
+/// Rehydrate a daemon progress event into the executor's [`Progress`] so
+/// `client submit`/`tail` reuse the CLI's live counter line.
+fn progress_from_event(ev: &Json) -> Option<Progress> {
+    if ev.get("event").and_then(|v| v.as_str()) != Some("progress") {
+        return None;
+    }
+    let slot = ev.get("slot").and_then(|v| v.as_usize())?;
+    match ev.get("kind").and_then(|v| v.as_str())? {
+        "started" => Some(Progress::Started { slot }),
+        "finished" => Some(Progress::Finished {
+            slot,
+            completed: ev.get("completed").and_then(|v| v.as_usize()).unwrap_or(0),
+        }),
+        "cancelled" => Some(Progress::Cancelled { slot }),
+        "failed" => Some(Progress::Failed {
+            slot,
+            error: ev.get("error").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+        }),
+        _ => None,
+    }
+}
+
+/// Deliver a served report: `--out FILE` writes it through the same JSON
+/// writer as direct-CLI reports (byte-identical files), otherwise it
+/// pretty-prints to stdout. Interrupted sessions get a stderr warning.
+fn client_deliver_report(args: &[String], session: u64, report: &Json) {
+    if let Some(path) = flag_value(args, "--out") {
+        llamea_kt::util::json::write_file(Path::new(&path), report)
+            .unwrap_or_else(|e| panic!("writing {}: {}", path, e));
+        eprintln!("served report for session {} written to {}", session, path);
+    } else {
+        println!("{}", report.to_pretty());
+    }
+    if report.get("interrupted").is_some() {
+        eprintln!(
+            "warning: session {} was interrupted; the report covers the completed prefix",
+            session
+        );
+    }
+}
+
+fn client_err(what: &str, e: String) -> ! {
+    eprintln!("client {}: {}", what, e);
+    std::process::exit(1);
+}
+
+/// `--session N` (mandatory for cancel/tail).
+fn client_session(args: &[String], sub: &str) -> u64 {
+    flag_value(args, "--session").map(|v| v.parse().expect("--session")).unwrap_or_else(|| {
+        eprintln!("client {} requires --session N", sub);
+        std::process::exit(2);
+    })
+}
+
+/// Command-line counterpart of the daemon (see `llamea_kt::serve::client`).
+fn cmd_client(args: &[String]) {
+    let sub = args.first().map(|s| s.as_str()).unwrap_or("");
+    let rest = &args[args.len().min(1)..];
+    let addr = flag_value(rest, "--addr").unwrap_or_else(|| "127.0.0.1:4517".into());
+    match sub {
+        "submit" => {
+            let kind = flag_value(rest, "--kind").unwrap_or_else(|| "coordinate".into());
+            let spaces: Vec<String> = flag_value(rest, "--spaces")
+                .unwrap_or_else(|| "convolution@A4000".into())
+                .split(',')
+                .map(str::to_string)
+                .collect();
+            let runs: usize =
+                flag_value(rest, "--runs").map(|v| v.parse().expect("--runs")).unwrap_or(3);
+            let seed: u64 =
+                flag_value(rest, "--seed").map(|v| v.parse().expect("--seed")).unwrap_or(1);
+            let spec = match kind.as_str() {
+                "coordinate" => SubmitSpec::Coordinate {
+                    spaces,
+                    opts: flag_value(rest, "--opts")
+                        .unwrap_or_else(|| "sa,random".into())
+                        .split(',')
+                        .map(str::to_string)
+                        .collect(),
+                    runs,
+                    seed,
+                },
+                "sweep" => SubmitSpec::Sweep {
+                    spaces,
+                    opt: flag_value(rest, "--opt").unwrap_or_else(|| "ga".into()),
+                    runs,
+                    seed,
+                },
+                other => {
+                    eprintln!("client submit: --kind must be coordinate|sweep, got '{}'", other);
+                    std::process::exit(2);
+                }
+            };
+            let progress = ProgressLine::new(None);
+            let mut on_event = |ev: &Json| {
+                if ev.get("event").and_then(|v| v.as_str()) == Some("accepted") {
+                    eprintln!(
+                        "session {} accepted ({} jobs)",
+                        ev.get("session").and_then(|v| v.as_usize()).unwrap_or(0),
+                        ev.get("jobs").and_then(|v| v.as_usize()).unwrap_or(0)
+                    );
+                } else if let Some(p) = progress_from_event(ev) {
+                    progress.observe(&p);
+                }
+            };
+            let (session, report) = client::submit(&addr, &spec, &mut on_event)
+                .unwrap_or_else(|e| client_err("submit", e));
+            progress.finish();
+            client_deliver_report(rest, session, &report);
+        }
+        "status" => {
+            let status =
+                client::status(&addr).unwrap_or_else(|e| client_err("status", e));
+            println!("{}", status.to_pretty());
+        }
+        "cancel" => {
+            let session = client_session(rest, "cancel");
+            client::cancel(&addr, session).unwrap_or_else(|e| client_err("cancel", e));
+            eprintln!("cancellation requested for session {}", session);
+        }
+        "tail" => {
+            let session = client_session(rest, "tail");
+            let progress = ProgressLine::new(None);
+            let mut on_event = |ev: &Json| {
+                if let Some(p) = progress_from_event(ev) {
+                    progress.observe(&p);
+                }
+            };
+            let report = client::tail(&addr, session, &mut on_event)
+                .unwrap_or_else(|e| client_err("tail", e));
+            progress.finish();
+            client_deliver_report(rest, session, &report);
+        }
+        other => {
+            eprintln!(
+                "usage: llamea-kt client <submit|status|cancel|tail> [--addr HOST:PORT] \
+                 (got '{}')",
+                other
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_experiment(args: &[String]) {
     let id = args.first().map(|s| s.as_str()).unwrap_or("all");
     let rest = &args[args.len().min(1)..];
@@ -921,9 +1164,11 @@ fn main() {
         Some("coordinate") => cmd_coordinate(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("merge") => cmd_merge(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("client") => cmd_client(&args[1..]),
         _ => {
             eprintln!(
-                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|sweep|merge> [options]\n\
+                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|sweep|merge|serve|client> [options]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);

@@ -1,0 +1,127 @@
+//! Client side of the serve protocol: blocking helpers, one TCP
+//! connection each, behind the `llamea-kt client` subcommands and the
+//! serve integration tests.
+//!
+//! [`submit`] and [`tail`] hold their connection open and forward every
+//! intermediate event (`accepted`, `progress`, `cancelling`) to the
+//! caller's sink until the final `report` event, whose payload they
+//! return. The report `Json` re-serializes to exactly the bytes the
+//! daemon computed (the parser round-trips every `f64` bit-exactly), so
+//! `client submit --out` files diff byte-for-byte against direct CLI
+//! runs. Server-side `error` events surface as `Err` with the daemon's
+//! diagnostic.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use super::protocol::{submit_request, SubmitSpec};
+use crate::util::json::Json;
+
+fn connect(addr: &str) -> Result<TcpStream, String> {
+    TcpStream::connect(addr).map_err(|e| format!("connect {}: {}", addr, e))
+}
+
+fn send_line(stream: &TcpStream, line: &Json) -> Result<(), String> {
+    let mut w = stream;
+    w.write_all(format!("{}\n", line.to_string()).as_bytes())
+        .map_err(|e| format!("send request: {}", e))
+}
+
+/// Read one event line; `None` on a clean close.
+fn read_event(reader: &mut BufReader<TcpStream>) -> Result<Option<Json>, String> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Err(e) => Err(format!("read response: {}", e)),
+        Ok(0) => Ok(None),
+        Ok(_) => Json::parse(line.trim_end()).map(Some).map_err(|e| format!("bad response line: {}", e)),
+    }
+}
+
+/// Drive a response stream to its `report` event, forwarding everything
+/// before it to `on_event`. Returns `(session, report)`.
+fn await_report(
+    reader: &mut BufReader<TcpStream>,
+    on_event: &mut dyn FnMut(&Json),
+) -> Result<(u64, Json), String> {
+    loop {
+        let Some(mut ev) = read_event(reader)? else {
+            return Err("connection closed before a report arrived".into());
+        };
+        match ev.get("event").and_then(|v| v.as_str()) {
+            Some("report") => {
+                let session = ev.get("session").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+                let report = ev
+                    .remove("report")
+                    .ok_or_else(|| "report event without a report payload".to_string())?;
+                return Ok((session, report));
+            }
+            Some("error") => {
+                return Err(ev
+                    .get("message")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unspecified server error")
+                    .to_string());
+            }
+            _ => on_event(&ev),
+        }
+    }
+}
+
+/// Submit a tuning session and block until its served report. Returns
+/// `(session id, report)`.
+pub fn submit(
+    addr: &str,
+    spec: &SubmitSpec,
+    on_event: &mut dyn FnMut(&Json),
+) -> Result<(u64, Json), String> {
+    let stream = connect(addr)?;
+    send_line(&stream, &submit_request(spec))?;
+    let mut reader = BufReader::new(stream);
+    await_report(&mut reader, on_event)
+}
+
+/// Re-attach to a session (running or finished) and block until its
+/// report.
+pub fn tail(addr: &str, session: u64, on_event: &mut dyn FnMut(&Json)) -> Result<Json, String> {
+    let stream = connect(addr)?;
+    let mut req = Json::obj();
+    req.set("cmd", "tail");
+    req.set("session", session);
+    send_line(&stream, &req)?;
+    let mut reader = BufReader::new(stream);
+    await_report(&mut reader, on_event).map(|(_, report)| report)
+}
+
+/// One request line, one response event.
+fn control(addr: &str, req: &Json) -> Result<Json, String> {
+    let stream = connect(addr)?;
+    send_line(&stream, req)?;
+    let mut reader = BufReader::new(stream);
+    let ev = read_event(&mut reader)?
+        .ok_or_else(|| "connection closed without a response".to_string())?;
+    if ev.get("event").and_then(|v| v.as_str()) == Some("error") {
+        return Err(ev
+            .get("message")
+            .and_then(|v| v.as_str())
+            .unwrap_or("unspecified server error")
+            .to_string());
+    }
+    Ok(ev)
+}
+
+/// The daemon's `status` event: pool width, outstanding jobs, per-session
+/// accounting rows, daemon-wide `"jobs"` totals, cache-registry events.
+pub fn status(addr: &str) -> Result<Json, String> {
+    let mut req = Json::obj();
+    req.set("cmd", "status");
+    control(addr, &req)
+}
+
+/// Fire a session's cancel token; completed work stays (completed-prefix
+/// report).
+pub fn cancel(addr: &str, session: u64) -> Result<Json, String> {
+    let mut req = Json::obj();
+    req.set("cmd", "cancel");
+    req.set("session", session);
+    control(addr, &req)
+}

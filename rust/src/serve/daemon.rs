@@ -1,0 +1,431 @@
+//! The `llamea-kt serve` daemon: a TCP accept loop over the process-wide
+//! [`CacheRegistry`] and one [`SharedPool`].
+//!
+//! One thread per connection; a connection serves one request at a time
+//! (a `submit` occupies it until the report event, which is what keeps
+//! every write to a stream whole-line atomic). Sessions are admitted
+//! against `--max-sessions` (atomically, under the session-table lock)
+//! and `--queue-cap` (pool-wide outstanding jobs); rejected submissions
+//! get an `error` event with a diagnostic naming the limit, never a
+//! dropped connection. Spaces resolve through the **global** registry,
+//! so every session of the daemon's lifetime shares one set of built
+//! caches (and one `--cache-dir`, when main wired it).
+//!
+//! Served reports reuse the CLI's exact assembly paths
+//! ([`coordinate_report`], [`sweep_json`]) and append the registry's
+//! `"caches"` block the same way `--out` files do — byte-identity modulo
+//! that one block is pinned in `rust/tests/integration_serve.rs` and the
+//! CI serve-smoke stage.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use super::pool::{SessionRunner, SharedPool};
+use super::protocol::{
+    accepted_event, cancelling_event, error_event, parse_request, progress_event, report_event,
+    Request, SubmitSpec, MAX_LINE_BYTES,
+};
+use super::session::{Phase, SessionState, Sessions};
+use crate::coordinator::{
+    coordinate_report, BatchRunner, CacheKey, CacheRegistry, OwnedJob, SpaceEntry,
+    COORDINATE_TITLE,
+};
+use crate::hypertune::{sweep, sweep_json, MetaStrategy, MetaTuning};
+use crate::optimizers::OptimizerSpec;
+use crate::util::cancel::CancelToken;
+use crate::util::error::panic_message;
+use crate::util::json::Json;
+
+/// Daemon limits. Zeros mean uncapped.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeConfig {
+    /// Worker width of the shared pool (`None` = process default).
+    pub threads: Option<usize>,
+    /// Pool-wide outstanding-job bound for admission control.
+    pub queue_cap: usize,
+    /// Concurrent running-session bound.
+    pub max_sessions: usize,
+}
+
+struct Shared {
+    pool: Arc<SharedPool>,
+    sessions: Sessions,
+    config: ServeConfig,
+    shutdown: CancelToken,
+}
+
+/// A bound, not-yet-running daemon. `bind` → inspect
+/// [`Server::local_addr`] (supports `--listen 127.0.0.1:0`) → [`Server::run`].
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+}
+
+/// Clonable remote control for a running [`Server`]: fires the shutdown
+/// token and pokes the accept loop awake.
+#[derive(Clone)]
+pub struct ServerHandle {
+    token: CancelToken,
+    addr: SocketAddr,
+}
+
+impl ServerHandle {
+    pub fn shutdown(&self) {
+        self.token.cancel();
+        // The accept loop blocks in `accept`; a throwaway connection
+        // makes it re-check the token.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Server {
+    pub fn bind(addr: &str, config: ServeConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            addr,
+            shared: Arc::new(Shared {
+                pool: SharedPool::new(config.threads),
+                sessions: Sessions::new(),
+                config,
+                shutdown: CancelToken::new(),
+            }),
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn threads(&self) -> usize {
+        self.shared.pool.threads()
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { token: self.shared.shutdown.clone(), addr: self.addr }
+    }
+
+    /// Accept connections until the shutdown token fires, then cancel
+    /// every running session and wind the pool down.
+    pub fn run(self) -> std::io::Result<()> {
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.is_cancelled() {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let shared = Arc::clone(&self.shared);
+            std::thread::spawn(move || handle_conn(shared, stream));
+        }
+        self.shared.sessions.cancel_all();
+        self.shared.pool.shutdown();
+        Ok(())
+    }
+}
+
+/// Write one event line (best effort — a hung-up client just ends its
+/// own connection).
+fn send(stream: &TcpStream, event: &Json) {
+    let mut w = stream;
+    let _ = w.write_all(format!("{}\n", event.to_string()).as_bytes());
+}
+
+/// One request line, bounded by [`MAX_LINE_BYTES`].
+enum Line {
+    /// A complete (or final unterminated) line; the bool is whether a
+    /// newline terminated it — an unterminated line is the connection's
+    /// last.
+    Data(String, bool),
+    TooLong,
+    Eof,
+    NotUtf8(bool),
+}
+
+fn read_line(reader: &mut BufReader<std::io::Take<TcpStream>>) -> Line {
+    reader.get_mut().set_limit((MAX_LINE_BYTES + 1) as u64);
+    let mut buf = Vec::new();
+    match reader.read_until(b'\n', &mut buf) {
+        Err(_) | Ok(0) => return Line::Eof,
+        Ok(_) => {}
+    }
+    let terminated = buf.last() == Some(&b'\n');
+    if terminated {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    } else if buf.len() > MAX_LINE_BYTES {
+        return Line::TooLong;
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Line::Data(s, terminated),
+        Err(_) => Line::NotUtf8(terminated),
+    }
+}
+
+fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half.take((MAX_LINE_BYTES + 1) as u64));
+    loop {
+        let (line, terminated) = match read_line(&mut reader) {
+            Line::Eof => return,
+            Line::TooLong => {
+                // Cannot resync inside an unbounded line; answer and drop.
+                send(&stream, &error_event("request line exceeds 1 MiB"));
+                return;
+            }
+            Line::NotUtf8(t) => {
+                send(&stream, &error_event("request line is not UTF-8"));
+                if t {
+                    continue;
+                }
+                return;
+            }
+            Line::Data(s, t) => (s, t),
+        };
+        if !line.trim().is_empty() {
+            match parse_request(&line) {
+                Err(msg) => send(&stream, &error_event(&msg)),
+                Ok(Request::Status) => send(&stream, &status_event(&shared)),
+                Ok(Request::Cancel { session }) => match shared.sessions.get(session) {
+                    Some(s) => {
+                        s.cancel.cancel();
+                        send(&stream, &cancelling_event(session));
+                    }
+                    None => send(&stream, &error_event(&format!("unknown session {}", session))),
+                },
+                Ok(Request::Tail { session }) => handle_tail(&shared, &stream, session),
+                Ok(Request::Submit(spec)) => handle_submit(&shared, &stream, spec),
+            }
+        }
+        if !terminated {
+            return;
+        }
+    }
+}
+
+fn status_event(shared: &Shared) -> Json {
+    let (rows, totals) = shared.sessions.status_json();
+    let mut j = Json::obj();
+    j.set("event", "status");
+    j.set("threads", shared.pool.threads());
+    j.set("outstanding_jobs", shared.pool.outstanding());
+    j.set("active_sessions", shared.sessions.active());
+    j.set("sessions", rows);
+    j.set("jobs", totals.to_json());
+    j.set("caches", CacheRegistry::global().caches_json());
+    j
+}
+
+fn handle_tail(shared: &Shared, stream: &TcpStream, session: u64) {
+    let Some(s) = shared.sessions.get(session) else {
+        return send(stream, &error_event(&format!("unknown session {}", session)));
+    };
+    let Ok(writer) = stream.try_clone() else { return };
+    if s.attach(writer) {
+        // Attached mid-run: events (and the final report) stream through
+        // the broadcast path; hold the request slot until then.
+        s.wait_finished();
+        return;
+    }
+    // Already finished: answer from the retained report.
+    match s.report() {
+        Some(r) => send(stream, &report_event(s.id, r)),
+        None => send(
+            stream,
+            &error_event(&format!("session {} failed before a report was assembled", s.id)),
+        ),
+    }
+}
+
+/// A resolved, sized submission: everything admission control needs,
+/// with the expensive world (registry entries, meta space) built exactly
+/// once.
+enum Prepared {
+    Coordinate {
+        entries: Vec<Arc<SpaceEntry>>,
+        specs: Vec<Arc<OptimizerSpec>>,
+        runs: usize,
+        seed: u64,
+    },
+    Sweep {
+        mt: MetaTuning,
+        seed: u64,
+    },
+}
+
+fn resolve_spaces(spaces: &[String]) -> Result<Vec<Arc<SpaceEntry>>, String> {
+    spaces
+        .iter()
+        .map(|s| {
+            CacheKey::parse(s)
+                .map(|k| CacheRegistry::global().entry(k))
+                .ok_or_else(|| format!("unknown space '{}' (use app@gpu)", s))
+        })
+        .collect()
+}
+
+fn prepare(spec: &SubmitSpec) -> Result<(Prepared, usize), String> {
+    match spec {
+        SubmitSpec::Coordinate { spaces, opts, runs, seed } => {
+            let entries = resolve_spaces(spaces)?;
+            let specs: Vec<Arc<OptimizerSpec>> = opts
+                .iter()
+                .map(|o| {
+                    OptimizerSpec::parse(o).map(Arc::new).ok_or_else(|| {
+                        format!("bad optimizer spec '{}' (see `llamea-kt optimizers`)", o)
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            let total = entries.len() * specs.len() * runs;
+            Ok((Prepared::Coordinate { entries, specs, runs: *runs, seed: *seed }, total))
+        }
+        SubmitSpec::Sweep { spaces, opt, runs, seed } => {
+            let entries = resolve_spaces(spaces)?;
+            let base = OptimizerSpec::parse(opt)
+                .ok_or_else(|| format!("bad optimizer spec '{}' (see `llamea-kt optimizers`)", opt))?;
+            let n_spaces = entries.len();
+            let mt = MetaTuning::new(base, entries, *runs, *seed, None)
+                .map_err(|e| format!("sweep setup: {}", e))?;
+            let total = mt.space().len() * n_spaces * runs;
+            Ok((Prepared::Sweep { mt, seed: *seed }, total))
+        }
+    }
+}
+
+fn handle_submit(shared: &Arc<Shared>, stream: &TcpStream, spec: SubmitSpec) {
+    let (prepared, jobs_total) = match prepare(&spec) {
+        Err(msg) => return send(stream, &error_event(&msg)),
+        Ok(p) => p,
+    };
+    if shared.config.queue_cap > 0 {
+        let used = shared.pool.outstanding();
+        if used + jobs_total > shared.config.queue_cap {
+            return send(
+                stream,
+                &error_event(&format!(
+                    "queue capacity exceeded: submission needs {} job(s) with {} already \
+                     outstanding against --queue-cap {}; retry after running sessions drain",
+                    jobs_total, used, shared.config.queue_cap
+                )),
+            );
+        }
+    }
+    let Some(session) =
+        shared.sessions.try_register(spec.describe(), jobs_total, shared.config.max_sessions)
+    else {
+        return send(
+            stream,
+            &error_event(&format!(
+                "session limit reached: {} session(s) running at --max-sessions {}; \
+                 retry after one finishes",
+                shared.sessions.active(),
+                shared.config.max_sessions
+            )),
+        );
+    };
+    if shared.shutdown.is_cancelled() {
+        session.cancel.cancel();
+    }
+    let sid = session.id;
+    send(stream, &accepted_event(sid, jobs_total));
+    if let Ok(writer) = stream.try_clone() {
+        session.attach(writer);
+    }
+    let outcome = catch_unwind(AssertUnwindSafe(|| run_session(shared, &session, prepared)));
+    match outcome {
+        Ok((mut report, phase)) => {
+            // Run metadata, outside the byte-identity contract — exactly
+            // like the CLI's `write_report`.
+            report.set("caches", CacheRegistry::global().caches_json());
+            session.finish(phase, Some(report.clone()));
+            session.broadcast(&report_event(sid, report));
+        }
+        Err(payload) => {
+            session.finish(Phase::Failed, None);
+            session.broadcast(&error_event(&format!(
+                "session {} failed: {}",
+                sid,
+                panic_message(payload.as_ref())
+            )));
+        }
+    }
+}
+
+/// Execute an admitted session on the shared pool and assemble its
+/// report through the CLI's own paths.
+fn run_session(
+    shared: &Arc<Shared>,
+    session: &Arc<SessionState>,
+    prepared: Prepared,
+) -> (Json, Phase) {
+    let sid = session.id;
+    match prepared {
+        Prepared::Coordinate { entries, specs, runs, seed } => {
+            let jobs = OwnedJob::grid(&entries, &specs, runs, seed);
+            let runner = SessionRunner::new(Arc::clone(&shared.pool), session.cancel.clone());
+            let observer = Arc::clone(session);
+            let sink = move |ev: &crate::coordinator::Progress| {
+                observer.broadcast(&progress_event(sid, ev));
+            };
+            let batch = runner.run_batch(&jobs, &sink);
+            let summary = batch.summary();
+            session.absorb(summary);
+            let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+            let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
+            let report = coordinate_report(COORDINATE_TITLE, &ids, &labels, &batch);
+            let phase = if summary.failed > 0 {
+                Phase::Failed
+            } else if !summary.all_completed() {
+                Phase::Cancelled
+            } else {
+                Phase::Done
+            };
+            (report, phase)
+        }
+        Prepared::Sweep { mt, seed } => {
+            let runner = Arc::new(SessionRunner::new(
+                Arc::clone(&shared.pool),
+                session.cancel.clone(),
+            ));
+            let observer = Arc::clone(session);
+            let mt = mt
+                .with_runner(runner)
+                .with_progress(Box::new(move |ev| observer.broadcast(&progress_event(sid, ev))));
+            let outcome = sweep(&mt, &MetaStrategy::Grid, seed);
+            let summary = mt.jobs_summary();
+            session.absorb(summary);
+            let report = sweep_json(&mt, &outcome, seed);
+            let phase = if summary.failed > 0 {
+                Phase::Failed
+            } else if mt.interrupted() {
+                Phase::Cancelled
+            } else {
+                Phase::Done
+            };
+            (report, phase)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_run_and_shutdown_complete_without_sessions() {
+        let server =
+            Server::bind("127.0.0.1:0", ServeConfig { threads: Some(1), ..Default::default() })
+                .expect("bind on an ephemeral port");
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0, "port 0 must resolve to the bound port");
+        let handle = server.handle();
+        let runner = std::thread::spawn(move || server.run());
+        handle.shutdown();
+        runner.join().unwrap().expect("accept loop exits cleanly");
+    }
+}

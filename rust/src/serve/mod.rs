@@ -1,0 +1,66 @@
+//! Tuning-as-a-service: the `llamea-kt serve` daemon and its client.
+//!
+//! One long-lived process owns the expensive state — the process-wide
+//! [`CacheRegistry`](crate::coordinator::CacheRegistry) of built search
+//! spaces and one persistent [`pool::SharedPool`] of worker threads —
+//! and serves many tuning sessions over TCP, so repeated experiments pay
+//! cache construction once instead of once per CLI invocation.
+//!
+//! ## Protocol
+//!
+//! Newline-delimited JSON over `std::net::TcpListener`, dependency-free
+//! on both ends (see [`protocol`] for the full request/response grammar).
+//! A client submits a `coordinate`- or grid-`sweep`-shaped session,
+//! receives an `accepted` event with its session id and admitted job
+//! count, then a stream of per-job `progress` events, and finally a
+//! `report` event carrying the finished report. `status`, `cancel`, and
+//! `tail` control requests address sessions by id from any connection.
+//! Malformed, oversized (> 1 MiB), or truncated request lines are
+//! answered with a structured `error` event — never a panic or a hang.
+//!
+//! ## Invariants
+//!
+//! - **Byte identity.** A served coordinate report is byte-identical to
+//!   the direct CLI's (`llamea-kt coordinate --out`) for the same spec —
+//!   modulo the non-deterministic `"caches"` block — for any pool width,
+//!   any number of concurrent sessions, and any cancellation timing of
+//!   *other* sessions. This holds because job seeds are grid-derived,
+//!   results are slot-indexed, and the daemon assembles reports through
+//!   the CLI's own paths
+//!   ([`coordinate_report`](crate::coordinator::coordinate_report),
+//!   [`sweep_json`](crate::hypertune::sweep_json)).
+//! - **Completed-prefix truth.** Cancelling a session keeps every
+//!   completed job's curve bit-identical to its drain-all counterpart;
+//!   the report degrades to the scoreable subset and is marked
+//!   `"interrupted": true` with honest `"jobs"` counters — never a
+//!   truncated or approximated curve.
+//! - **Isolation.** A session's [`CancelToken`](crate::util::cancel)
+//!   fires only its own batch; admission control
+//!   (`--queue-cap`, `--max-sessions`) rejects with a diagnostic event
+//!   rather than degrading running sessions.
+//!
+//! ## Fair share
+//!
+//! The pool interleaves sessions by least-started-first: each free
+//! worker picks the batch with the fewest jobs started (ties to the
+//! earlier arrival) and runs that batch's highest-priority pending job.
+//! [`Priority`](crate::coordinator::Priority) bands therefore order work
+//! *within* the owning session only — a flood of high-priority jobs from
+//! one tenant cannot starve another, and a newly admitted session starts
+//! drawing workers immediately.
+//!
+//! Module map: [`pool`] (the persistent executor), [`session`]
+//! (per-tenant state + accounting), [`protocol`] (wire format),
+//! [`daemon`] (listener + dispatch), [`client`] (blocking client
+//! helpers).
+
+pub mod client;
+pub mod daemon;
+pub mod pool;
+pub mod protocol;
+pub mod session;
+
+pub use daemon::{ServeConfig, Server, ServerHandle};
+pub use pool::{SessionRunner, SharedPool};
+pub use protocol::{parse_request, submit_request, Request, SubmitSpec, MAX_LINE_BYTES};
+pub use session::{Phase, SessionState, Sessions};

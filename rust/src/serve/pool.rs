@@ -1,0 +1,488 @@
+//! The daemon's persistent execution engine: one long-lived worker pool
+//! multiplexing job batches from many concurrent sessions.
+//!
+//! The [`Executor`](crate::coordinator::Executor) cannot serve a daemon
+//! directly: its jobs borrow caches and setups, so every batch pins a
+//! caller stack frame and its workers are scoped to one `run` call.
+//! [`SharedPool`] decouples executor lifetime from batch lifetime by
+//! executing [`OwnedJob`]s — `Arc`-owned worlds — on `'static` worker
+//! threads that outlive every session.
+//!
+//! ## Scheduling and fair share
+//!
+//! Each submitted batch keeps its own pending max-heap with the
+//! executor's exact order (higher [`Priority`] first, then lower slot).
+//! Across batches, a free worker picks from the *least-started* batch
+//! (ties to the earlier submission), so sessions interleave round-robin
+//! at job granularity: a tenant with a thousand queued jobs cannot
+//! starve one with ten. Priorities only reorder work **within** the
+//! owning session's batch — one tenant's priority band can never outrank
+//! another tenant's jobs, which is what makes the bands fair-share
+//! rather than global.
+//!
+//! ## Determinism
+//!
+//! A job's curve is a pure function of its `(source, setup, factory,
+//! seed)` and results land in slot-indexed handles, so completed results
+//! are byte-identical to the same batch on a direct [`Executor`] — for
+//! any worker count, any number of concurrent sessions, and any
+//! cancellation timing of *other* sessions (pinned in
+//! `rust/tests/integration_serve.rs`). Outcome edge semantics
+//! (pre-checked cancellation, discarded partial curves, panic payloads)
+//! go through the executor's own `execute_isolated`, so the two engines
+//! cannot diverge.
+//!
+//! ## Cancellation
+//!
+//! Every batch carries the submitting session's
+//! [`CancelToken`]. A fired token drains the batch's still-pending jobs
+//! to [`JobOutcome::Cancelled`] and winds running ones down at their
+//! next budget check; other batches are untouched. [`SharedPool::shutdown`]
+//! fires every active batch's token, drains all pending work, and joins
+//! the workers.
+
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::executor::{execute_isolated, ProgressSink};
+use crate::coordinator::{
+    BatchResult, BatchRunner, JobHandle, JobOutcome, OwnedJob, Priority, Progress,
+};
+use crate::util::cancel::CancelToken;
+use crate::util::parallel;
+
+/// Pending-queue entry; identical max-heap order to the executor's
+/// internal queue — higher priority first, then lower slot.
+struct Pend {
+    priority: Priority,
+    slot: usize,
+}
+
+impl PartialEq for Pend {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.slot == other.slot
+    }
+}
+impl Eq for Pend {}
+impl PartialOrd for Pend {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pend {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority.cmp(&other.priority).then(other.slot.cmp(&self.slot))
+    }
+}
+
+/// One in-flight batch. Lives in the pool state from submission until
+/// the submitting thread collects the finished result (its `events`
+/// queue buffers progress for that thread to forward — workers never
+/// call a session's sink directly, so sinks may borrow submitter stack
+/// state and a slow consumer can never stall the pool).
+struct Batch {
+    seq: u64,
+    jobs: Vec<OwnedJob>,
+    pending: BinaryHeap<Pend>,
+    outcomes: Vec<Option<JobOutcome>>,
+    cancel: CancelToken,
+    fail_fast: bool,
+    started: usize,
+    finished: usize,
+    completed: usize,
+    events: VecDeque<Progress>,
+    done: bool,
+}
+
+/// Drain a batch's pending jobs to `Cancelled` (session cancel,
+/// fail-fast abort, pool shutdown). Returns how many jobs were drained
+/// so the caller can settle the pool-wide outstanding counter.
+fn drain_pending(b: &mut Batch) -> usize {
+    let mut n = 0;
+    while let Some(p) = b.pending.pop() {
+        b.outcomes[p.slot] = Some(JobOutcome::Cancelled);
+        b.finished += 1;
+        b.events.push_back(Progress::Cancelled { slot: p.slot });
+        n += 1;
+    }
+    if b.finished == b.jobs.len() {
+        b.done = true;
+    }
+    n
+}
+
+struct PoolState {
+    batches: Vec<Batch>,
+    next_seq: u64,
+    /// Queued-or-running jobs across all batches (the admission-control
+    /// input for the daemon's `--queue-cap`).
+    outstanding: usize,
+    shutdown: bool,
+}
+
+/// The long-lived, multi-tenant worker pool (see the module docs). One
+/// per daemon process; sessions submit through [`SessionRunner`] handles.
+pub struct SharedPool {
+    state: Mutex<PoolState>,
+    /// One condvar for both directions: workers wait for work, submitters
+    /// wait for events/completion. Every state change `notify_all`s.
+    cond: Condvar,
+    threads: usize,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl SharedPool {
+    /// Spawn a pool with `threads` workers (`None` = the process default
+    /// width, like [`Executor::auto`](crate::coordinator::Executor::auto)).
+    pub fn new(threads: Option<usize>) -> Arc<SharedPool> {
+        let threads = threads.unwrap_or_else(parallel::default_width).max(1);
+        let pool = Arc::new(SharedPool {
+            state: Mutex::new(PoolState {
+                batches: Vec::new(),
+                next_seq: 0,
+                outstanding: 0,
+                shutdown: false,
+            }),
+            cond: Condvar::new(),
+            threads,
+            workers: Mutex::new(Vec::new()),
+        });
+        let mut handles = pool.workers.lock().unwrap();
+        for _ in 0..threads {
+            let p = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || p.worker()));
+        }
+        drop(handles);
+        pool
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Queued-or-running jobs across all sessions right now.
+    pub fn outstanding(&self) -> usize {
+        self.state.lock().unwrap().outstanding
+    }
+
+    /// Execute one batch to completion under `cancel`, forwarding its
+    /// [`Progress`] events to `sink` **on the calling thread**, and
+    /// return the slot-indexed result. Every job gets a handle (a
+    /// cancelled batch reports `Cancelled` outcomes, never missing
+    /// slots), so the result is always fully drained. After
+    /// [`Self::shutdown`], batches complete immediately as all-cancelled.
+    pub fn run_batch_with(
+        &self,
+        jobs: &[OwnedJob],
+        cancel: &CancelToken,
+        fail_fast: bool,
+        sink: &ProgressSink,
+    ) -> BatchResult {
+        let seq = {
+            let mut st = self.state.lock().unwrap();
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            let mut pending = BinaryHeap::with_capacity(jobs.len());
+            for (slot, j) in jobs.iter().enumerate() {
+                pending.push(Pend { priority: j.priority, slot });
+            }
+            st.outstanding += jobs.len();
+            let mut batch = Batch {
+                seq,
+                jobs: jobs.to_vec(),
+                pending,
+                outcomes: vec![None; jobs.len()],
+                cancel: cancel.clone(),
+                fail_fast,
+                started: 0,
+                finished: 0,
+                completed: 0,
+                events: VecDeque::new(),
+                done: jobs.is_empty(),
+            };
+            if st.shutdown {
+                st.outstanding -= drain_pending(&mut batch);
+            }
+            st.batches.push(batch);
+            seq
+        };
+        self.cond.notify_all();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let bi = st
+                .batches
+                .iter()
+                .position(|b| b.seq == seq)
+                .expect("a batch is removed only by its own submitter");
+            let events: Vec<Progress> = st.batches[bi].events.drain(..).collect();
+            if !events.is_empty() {
+                // Forward outside the lock: a slow sink (a TCP client)
+                // must never stall workers or other submitters.
+                drop(st);
+                for e in &events {
+                    sink(e);
+                }
+                st = self.state.lock().unwrap();
+                continue;
+            }
+            if st.batches[bi].done {
+                let b = st.batches.remove(bi);
+                drop(st);
+                let handles = b
+                    .jobs
+                    .iter()
+                    .zip(b.outcomes)
+                    .enumerate()
+                    .map(|(slot, (job, outcome))| JobHandle {
+                        slot,
+                        group: job.group,
+                        priority: job.priority,
+                        seed: job.seed,
+                        cost_us: job.cost_us(),
+                        outcome: outcome.expect("a done batch has every outcome recorded"),
+                    })
+                    .collect();
+                // Every job of the materialized batch has a handle, so
+                // the stream is drained by construction even when some
+                // outcomes are Cancelled.
+                return BatchResult::from_handles(handles, true);
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Fire every active batch's cancel token, drain pending work, and
+    /// join the workers. In-flight jobs wind down at their next budget
+    /// check; blocked submitters then collect their (partial) results as
+    /// usual. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.shutdown = true;
+            let mut drained = 0;
+            for b in st.batches.iter_mut() {
+                b.cancel.cancel();
+                drained += drain_pending(b);
+            }
+            st.outstanding -= drained;
+        }
+        self.cond.notify_all();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            h.join().expect("pool workers exit cleanly on shutdown");
+        }
+    }
+
+    fn worker(&self) {
+        loop {
+            let (seq, slot, job, cancel) = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    // Short-circuit batches whose session token fired:
+                    // drain them in bulk rather than cycling each job
+                    // through a worker dispatch.
+                    let mut drained = 0;
+                    for b in st.batches.iter_mut() {
+                        if !b.done && !b.pending.is_empty() && b.cancel.is_cancelled() {
+                            drained += drain_pending(b);
+                        }
+                    }
+                    if drained > 0 {
+                        st.outstanding -= drained;
+                        self.cond.notify_all();
+                        continue;
+                    }
+                    // Fair share: least-started batch first, ties to the
+                    // earlier submission; executor order within a batch.
+                    let pick = st
+                        .batches
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, b)| !b.done && !b.pending.is_empty())
+                        .min_by_key(|(_, b)| (b.started, b.seq))
+                        .map(|(i, _)| i);
+                    if let Some(bi) = pick {
+                        let b = &mut st.batches[bi];
+                        let p = b.pending.pop().expect("picked batch has pending work");
+                        b.started += 1;
+                        b.events.push_back(Progress::Started { slot: p.slot });
+                        break (b.seq, p.slot, b.jobs[p.slot].clone(), b.cancel.clone());
+                    }
+                    st = self.cond.wait(st).unwrap();
+                }
+            };
+            // Deliver the Started event before the (long) execution.
+            self.cond.notify_all();
+            let outcome = execute_isolated(&job.as_job(), &cancel);
+            {
+                let mut st = self.state.lock().unwrap();
+                let b = st
+                    .batches
+                    .iter_mut()
+                    .find(|b| b.seq == seq)
+                    .expect("a batch with an in-flight job is never removed");
+                let event = match &outcome {
+                    JobOutcome::Completed(_) => {
+                        b.completed += 1;
+                        Progress::Finished { slot, completed: b.completed }
+                    }
+                    JobOutcome::Cancelled => Progress::Cancelled { slot },
+                    JobOutcome::Failed(e) => Progress::Failed { slot, error: e.clone() },
+                };
+                let failed = matches!(outcome, JobOutcome::Failed(_));
+                b.outcomes[slot] = Some(outcome);
+                b.finished += 1;
+                b.events.push_back(event);
+                let mut settled = 1;
+                if failed && b.fail_fast {
+                    settled += drain_pending(b);
+                }
+                if b.finished == b.jobs.len() {
+                    b.done = true;
+                }
+                st.outstanding -= settled;
+            }
+            self.cond.notify_all();
+        }
+    }
+}
+
+/// One session's view of the [`SharedPool`]: a [`BatchRunner`] carrying
+/// the session's [`CancelToken`], so
+/// [`MetaTuning::with_runner`](crate::hypertune::MetaTuning::with_runner)
+/// and the served coordinate path drain through the shared pool while
+/// cancellation stays per-tenant. Batches run fail-fast, matching the
+/// direct CLI's `coordinate` executor.
+pub struct SessionRunner {
+    pool: Arc<SharedPool>,
+    cancel: CancelToken,
+}
+
+impl SessionRunner {
+    pub fn new(pool: Arc<SharedPool>, cancel: CancelToken) -> SessionRunner {
+        SessionRunner { pool, cancel }
+    }
+}
+
+impl BatchRunner for SessionRunner {
+    fn run_batch(&self, jobs: &[OwnedJob], sink: &ProgressSink) -> BatchResult {
+        self.pool.run_batch_with(jobs, &self.cancel, true, sink)
+    }
+
+    fn batch_cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::{CacheKey, CacheRegistry};
+    use crate::coordinator::Executor;
+    use crate::optimizers::OptimizerSpec;
+
+    fn grid(registry: &CacheRegistry, opts: &[&str], runs: usize, seed: u64) -> Vec<OwnedJob> {
+        let entries = vec![
+            registry.entry(CacheKey::parse("convolution@A4000").unwrap()),
+            registry.entry(CacheKey::parse("convolution@W6600").unwrap()),
+        ];
+        let specs: Vec<Arc<OptimizerSpec>> =
+            opts.iter().map(|n| Arc::new(OptimizerSpec::parse(n).unwrap())).collect();
+        OwnedJob::grid(&entries, &specs, runs, seed)
+    }
+
+    fn curves(batch: BatchResult) -> Vec<Vec<f64>> {
+        batch.expect_curves()
+    }
+
+    #[test]
+    fn pool_results_match_the_executor_bit_for_bit() {
+        let registry = CacheRegistry::new();
+        let jobs = grid(&registry, &["sa", "random"], 2, 11);
+        let reference = curves(Executor::new(2).run_batch(&jobs, &|_| {}));
+        for width in [1, 4] {
+            let pool = SharedPool::new(Some(width));
+            let token = CancelToken::new();
+            let batch = pool.run_batch_with(&jobs, &token, true, &|_| {});
+            assert!(batch.fully_drained());
+            assert_eq!(batch.summary().completed, jobs.len());
+            assert_eq!(curves(batch), reference, "width {}", width);
+            pool.shutdown();
+        }
+    }
+
+    #[test]
+    fn concurrent_sessions_are_isolated_and_deterministic() {
+        let registry = CacheRegistry::new();
+        let a = grid(&registry, &["sa"], 3, 5);
+        let b = grid(&registry, &["random"], 3, 9);
+        let ref_a = curves(Executor::new(2).run_batch(&a, &|_| {}));
+        let ref_b = curves(Executor::new(2).run_batch(&b, &|_| {}));
+        let pool = SharedPool::new(Some(3));
+        std::thread::scope(|scope| {
+            let pa = &pool;
+            let (ja, jb) = (&a, &b);
+            let ta = scope.spawn(move || {
+                pa.run_batch_with(ja, &CancelToken::new(), true, &|_| {})
+            });
+            let got_b = pool.run_batch_with(jb, &CancelToken::new(), true, &|_| {});
+            assert_eq!(curves(got_b), ref_b);
+            assert_eq!(curves(ta.join().unwrap()), ref_a);
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cancelling_one_session_leaves_the_other_byte_identical() {
+        let registry = CacheRegistry::new();
+        let victim = grid(&registry, &["sa", "random"], 8, 3);
+        let bystander = grid(&registry, &["greedy_ils"], 3, 21);
+        let ref_bystander = curves(Executor::new(2).run_batch(&bystander, &|_| {}));
+        let ref_victim = curves(Executor::new(2).run_batch(&victim, &|_| {}));
+        let pool = SharedPool::new(Some(2));
+        let token = CancelToken::new();
+        std::thread::scope(|scope| {
+            let (p, t, jv) = (&pool, &token, &victim);
+            let handle = scope.spawn(move || {
+                // Cancel the victim session after its second completion.
+                p.run_batch_with(jv, t, true, &|ev| {
+                    if matches!(ev, Progress::Finished { completed: 2, .. }) {
+                        t.cancel();
+                    }
+                })
+            });
+            let got = pool.run_batch_with(&bystander, &CancelToken::new(), true, &|_| {});
+            assert_eq!(curves(got), ref_bystander, "bystander unaffected by foreign cancel");
+            let partial = handle.join().unwrap();
+            assert!(partial.fully_drained(), "every slot gets a handle");
+            let s = partial.summary();
+            assert_eq!(s.total(), victim.len());
+            assert!(s.cancelled > 0, "the fired token must cancel pending jobs");
+            // Completed-prefix invariant: whatever did complete is
+            // bit-identical to the drain-all run's same slot.
+            for h in &partial.handles {
+                if let JobOutcome::Completed(curve) = &h.outcome {
+                    assert_eq!(curve, &ref_victim[h.slot], "slot {}", h.slot);
+                }
+            }
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_cancels_everything_and_accepts_no_new_work() {
+        let registry = CacheRegistry::new();
+        let jobs = grid(&registry, &["sa"], 2, 2);
+        let pool = SharedPool::new(Some(2));
+        pool.shutdown();
+        let batch = pool.run_batch_with(&jobs, &CancelToken::new(), true, &|_| {});
+        let s = batch.summary();
+        assert_eq!((s.completed, s.cancelled), (0, jobs.len()));
+        assert_eq!(pool.outstanding(), 0);
+        // Idempotent.
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,272 @@
+//! The daemon's wire protocol: newline-delimited JSON over TCP,
+//! dependency-free on both ends (the [`crate::util::json`] writer/parser
+//! round-trips every `f64` bit-exactly, so a report that crosses the
+//! wire re-serializes to the same bytes the daemon computed).
+//!
+//! ## Requests (one JSON object per line)
+//!
+//! ```text
+//! {"cmd":"submit","kind":"coordinate","spaces":["convolution@A4000"],
+//!  "opts":["sa","random"],"runs":3,"seed":7}
+//! {"cmd":"submit","kind":"sweep","spaces":["convolution@A4000"],
+//!  "opt":"ga","runs":2,"seed":7}
+//! {"cmd":"status"}
+//! {"cmd":"cancel","session":2}
+//! {"cmd":"tail","session":2}
+//! ```
+//!
+//! Served sweeps are grid-shaped (`--meta grid`): the full meta-space is
+//! known up front, which is what makes admission control and the
+//! byte-identity contract checkable at submit time. Adaptive strategies
+//! stay a direct-CLI feature.
+//!
+//! ## Responses (events, one JSON object per line)
+//!
+//! `{"event":"accepted","session":N,"jobs":N}` — submission admitted;
+//! `{"event":"progress","session":N,"kind":"started|finished|cancelled|failed",...}`;
+//! `{"event":"report","session":N,"report":{...}}` — the finished report
+//! (for coordinate sessions, byte-identical to the direct CLI's `--out`
+//! file modulo the non-deterministic `"caches"` block);
+//! `{"event":"cancelling","session":N}`, `{"event":"status",...}`, and
+//! `{"event":"error","message":"..."}`. Malformed or oversized request
+//! lines are answered with an `error` event — never a panic or a hang.
+//!
+//! Seeds ride as JSON numbers, so they are exact up to 2^53 — the same
+//! range every report field already lives in.
+
+use crate::coordinator::Progress;
+use crate::util::json::Json;
+
+/// Hard cap on one request line (defends the daemon's memory against a
+/// client that never sends a newline).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit(SubmitSpec),
+    Status,
+    Cancel { session: u64 },
+    Tail { session: u64 },
+}
+
+/// A tuning-session specification: the same (spaces × optimizers × seeds)
+/// grid the `coordinate` subcommand runs, or a grid-strategy `sweep`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitSpec {
+    Coordinate { spaces: Vec<String>, opts: Vec<String>, runs: usize, seed: u64 },
+    Sweep { spaces: Vec<String>, opt: String, runs: usize, seed: u64 },
+}
+
+impl SubmitSpec {
+    /// One-line description for `status` listings.
+    pub fn describe(&self) -> String {
+        match self {
+            SubmitSpec::Coordinate { spaces, opts, runs, seed } => format!(
+                "coordinate spaces={} opts={} runs={} seed={}",
+                spaces.join(","),
+                opts.join(","),
+                runs,
+                seed
+            ),
+            SubmitSpec::Sweep { spaces, opt, runs, seed } => {
+                format!("sweep opt={} spaces={} runs={} seed={}", opt, spaces.join(","), runs, seed)
+            }
+        }
+    }
+}
+
+fn str_list(j: &Json, key: &str) -> Result<Vec<String>, String> {
+    let arr = j
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("'{}' must be an array of strings", key))?;
+    let out: Vec<String> = arr.iter().filter_map(|v| v.as_str().map(str::to_string)).collect();
+    if out.len() != arr.len() || out.is_empty() {
+        return Err(format!("'{}' must be a non-empty array of strings", key));
+    }
+    Ok(out)
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| format!("'{}' must be a non-negative integer", key))
+}
+
+/// Parse one request line. Every failure is a client-visible message —
+/// the daemon wraps it in an `error` event and keeps the connection.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad request line: {}", e))?;
+    let cmd = j
+        .get("cmd")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "request must carry a string 'cmd'".to_string())?;
+    match cmd {
+        "submit" => {
+            let kind = j
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| "submit needs 'kind': 'coordinate' or 'sweep'".to_string())?;
+            let spaces = str_list(&j, "spaces")?;
+            let runs = usize_field(&j, "runs")?;
+            if runs == 0 {
+                return Err("'runs' must be at least 1".into());
+            }
+            let seed = usize_field(&j, "seed")? as u64;
+            match kind {
+                "coordinate" => {
+                    let opts = str_list(&j, "opts")?;
+                    Ok(Request::Submit(SubmitSpec::Coordinate { spaces, opts, runs, seed }))
+                }
+                "sweep" => {
+                    let opt = j
+                        .get("opt")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| "sweep submit needs a string 'opt'".to_string())?
+                        .to_string();
+                    Ok(Request::Submit(SubmitSpec::Sweep { spaces, opt, runs, seed }))
+                }
+                other => Err(format!("unknown submit kind '{}'", other)),
+            }
+        }
+        "status" => Ok(Request::Status),
+        "cancel" => Ok(Request::Cancel { session: usize_field(&j, "session")? as u64 }),
+        "tail" => Ok(Request::Tail { session: usize_field(&j, "session")? as u64 }),
+        other => Err(format!("unknown cmd '{}'", other)),
+    }
+}
+
+/// Build the request line for a [`SubmitSpec`] (the client side of
+/// [`parse_request`]; round-trips exactly).
+pub fn submit_request(spec: &SubmitSpec) -> Json {
+    let mut j = Json::obj();
+    j.set("cmd", "submit");
+    match spec {
+        SubmitSpec::Coordinate { spaces, opts, runs, seed } => {
+            j.set("kind", "coordinate");
+            j.set("spaces", Json::Arr(spaces.iter().map(|s| Json::from(s.as_str())).collect()));
+            j.set("opts", Json::Arr(opts.iter().map(|s| Json::from(s.as_str())).collect()));
+            j.set("runs", *runs);
+            j.set("seed", *seed);
+        }
+        SubmitSpec::Sweep { spaces, opt, runs, seed } => {
+            j.set("kind", "sweep");
+            j.set("spaces", Json::Arr(spaces.iter().map(|s| Json::from(s.as_str())).collect()));
+            j.set("opt", opt.as_str());
+            j.set("runs", *runs);
+            j.set("seed", *seed);
+        }
+    }
+    j
+}
+
+pub fn accepted_event(session: u64, jobs: usize) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "accepted");
+    j.set("session", session);
+    j.set("jobs", jobs);
+    j
+}
+
+pub fn progress_event(session: u64, ev: &Progress) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "progress");
+    j.set("session", session);
+    match ev {
+        Progress::Started { slot } => {
+            j.set("kind", "started");
+            j.set("slot", *slot);
+        }
+        Progress::Finished { slot, completed } => {
+            j.set("kind", "finished");
+            j.set("slot", *slot);
+            j.set("completed", *completed);
+        }
+        Progress::Cancelled { slot } => {
+            j.set("kind", "cancelled");
+            j.set("slot", *slot);
+        }
+        Progress::Failed { slot, error } => {
+            j.set("kind", "failed");
+            j.set("slot", *slot);
+            j.set("error", error.as_str());
+        }
+    }
+    j
+}
+
+pub fn report_event(session: u64, report: Json) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "report");
+    j.set("session", session);
+    j.set("report", report);
+    j
+}
+
+pub fn cancelling_event(session: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "cancelling");
+    j.set("session", session);
+    j
+}
+
+pub fn error_event(message: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "error");
+    j.set("message", message);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_round_trips_through_the_parser() {
+        let specs = [
+            SubmitSpec::Coordinate {
+                spaces: vec!["convolution@A4000".into(), "gemm@A100".into()],
+                opts: vec!["sa".into(), "random".into()],
+                runs: 3,
+                seed: 7,
+            },
+            SubmitSpec::Sweep {
+                spaces: vec!["convolution@A4000".into()],
+                opt: "ga".into(),
+                runs: 2,
+                seed: 123,
+            },
+        ];
+        for spec in specs {
+            let line = submit_request(&spec).to_string();
+            assert_eq!(parse_request(&line), Ok(Request::Submit(spec)));
+        }
+    }
+
+    #[test]
+    fn control_requests_parse() {
+        assert_eq!(parse_request(r#"{"cmd":"status"}"#), Ok(Request::Status));
+        assert_eq!(
+            parse_request(r#"{"cmd":"cancel","session":4}"#),
+            Ok(Request::Cancel { session: 4 })
+        );
+        assert_eq!(parse_request(r#"{"cmd":"tail","session":1}"#), Ok(Request::Tail { session: 1 }));
+    }
+
+    #[test]
+    fn malformed_lines_yield_messages_not_panics() {
+        for bad in [
+            "{not json",
+            "[]",
+            r#"{"cmd":"warp"}"#,
+            r#"{"cmd":"submit","kind":"coordinate"}"#,
+            r#"{"cmd":"submit","kind":"coordinate","spaces":[],"opts":["sa"],"runs":1,"seed":0}"#,
+            r#"{"cmd":"submit","kind":"coordinate","spaces":["a@b"],"opts":[3],"runs":1,"seed":0}"#,
+            r#"{"cmd":"submit","kind":"coordinate","spaces":["a@b"],"opts":["sa"],"runs":0,"seed":0}"#,
+            r#"{"cmd":"cancel"}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "{} must be rejected", bad);
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Per-tenant session state and the daemon's session table.
+//!
+//! A session is one admitted `submit`: it owns a [`CancelToken`] (the
+//! per-tenant cancellation seam), a set of subscribed event writers (the
+//! submitting connection plus any `tail`ers), per-tenant job accounting
+//! (the completed/cancelled/failed counters and summed evaluation cost
+//! that also land in the report's `"jobs"` block), and — once finished —
+//! the retained report, so late `tail`s and `status` queries answer from
+//! memory instead of re-running anything.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::JobsSummary;
+use crate::util::cancel::CancelToken;
+use crate::util::json::Json;
+
+/// Lifecycle of a session. `Cancelled` and `Failed` still retain a
+/// report when one could be assembled (completed-prefix semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Running,
+    Done,
+    Cancelled,
+    Failed,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Running => "running",
+            Phase::Done => "done",
+            Phase::Cancelled => "cancelled",
+            Phase::Failed => "failed",
+        }
+    }
+}
+
+struct Inner {
+    phase: Phase,
+    summary: JobsSummary,
+    report: Option<Json>,
+    writers: Vec<TcpStream>,
+}
+
+/// One admitted tuning session (see the module docs).
+pub struct SessionState {
+    pub id: u64,
+    /// Human-readable spec (`status` listings).
+    pub desc: String,
+    /// Total jobs admitted against the queue cap (exact for coordinate
+    /// grids; the full-meta-space bound for grid sweeps).
+    pub jobs_total: usize,
+    pub cancel: CancelToken,
+    inner: Mutex<Inner>,
+    /// Notified on phase changes, so `tail` handlers can block until the
+    /// session finishes without polling.
+    finished: Condvar,
+}
+
+impl SessionState {
+    /// Serialize one event and write it to every subscribed stream,
+    /// dropping writers whose client hung up. One `write_all` per
+    /// writer per event keeps lines atomic (all session writes go
+    /// through this one lock).
+    pub fn broadcast(&self, event: &Json) {
+        let line = format!("{}\n", event.to_string());
+        let mut inner = self.inner.lock().unwrap();
+        inner.writers.retain_mut(|w| w.write_all(line.as_bytes()).is_ok());
+    }
+
+    /// Fold one batch's counters into the per-tenant account.
+    pub fn absorb(&self, summary: JobsSummary) {
+        self.inner.lock().unwrap().summary.absorb(summary);
+    }
+
+    pub fn summary(&self) -> JobsSummary {
+        self.inner.lock().unwrap().summary
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.inner.lock().unwrap().phase
+    }
+
+    /// Retain the finished report and mark the session's terminal phase.
+    pub fn finish(&self, phase: Phase, report: Option<Json>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.phase = phase;
+        inner.report = report;
+        self.finished.notify_all();
+    }
+
+    pub fn report(&self) -> Option<Json> {
+        self.inner.lock().unwrap().report.clone()
+    }
+
+    /// Subscribe `stream` to this session's event broadcasts. For a
+    /// still-running session the stream is attached and `true` is
+    /// returned — the caller should then [`Self::wait_finished`]. For a
+    /// finished session nothing is attached (`false`): the caller
+    /// answers from the retained report instead.
+    pub fn attach(&self, stream: TcpStream) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.phase != Phase::Running {
+            return false;
+        }
+        inner.writers.push(stream);
+        true
+    }
+
+    /// Block until the session leaves `Running`.
+    pub fn wait_finished(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.phase == Phase::Running {
+            inner = self.finished.wait(inner).unwrap();
+        }
+    }
+
+    /// The per-tenant accounting row of the daemon's `status` report.
+    pub fn status_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut j = Json::obj();
+        j.set("session", self.id);
+        j.set("spec", self.desc.as_str());
+        j.set("state", inner.phase.label());
+        j.set("jobs_total", self.jobs_total);
+        j.set("jobs", inner.summary.to_json());
+        j
+    }
+}
+
+/// The daemon's session table: monotonic ids, all sessions retained for
+/// the process lifetime (`status`/`tail` answer about finished work; the
+/// daemon is an interactive tool, not an unbounded archive).
+#[derive(Default)]
+pub struct Sessions {
+    next_id: AtomicU64,
+    all: Mutex<Vec<Arc<SessionState>>>,
+}
+
+impl Sessions {
+    pub fn new() -> Sessions {
+        Sessions { next_id: AtomicU64::new(1), all: Mutex::new(Vec::new()) }
+    }
+
+    /// Admit a session: assign the next id, register it, hand it out.
+    pub fn register(&self, desc: String, jobs_total: usize) -> Arc<SessionState> {
+        self.try_register(desc, jobs_total, 0).expect("a cap of 0 never rejects")
+    }
+
+    /// [`Self::register`] under a session cap: the active-count check and
+    /// the registration happen under one lock, so two racing submissions
+    /// cannot both slip past `--max-sessions` (`0` = uncapped). `None`
+    /// means rejected.
+    pub fn try_register(
+        &self,
+        desc: String,
+        jobs_total: usize,
+        max_sessions: usize,
+    ) -> Option<Arc<SessionState>> {
+        let mut all = self.all.lock().unwrap();
+        if max_sessions > 0
+            && all.iter().filter(|s| s.phase() == Phase::Running).count() >= max_sessions
+        {
+            return None;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let session = Arc::new(SessionState {
+            id,
+            desc,
+            jobs_total,
+            cancel: CancelToken::new(),
+            inner: Mutex::new(Inner {
+                phase: Phase::Running,
+                summary: JobsSummary::default(),
+                report: None,
+                writers: Vec::new(),
+            }),
+            finished: Condvar::new(),
+        });
+        all.push(Arc::clone(&session));
+        Some(session)
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<SessionState>> {
+        self.all.lock().unwrap().iter().find(|s| s.id == id).cloned()
+    }
+
+    /// Sessions still running (the `--max-sessions` admission input).
+    pub fn active(&self) -> usize {
+        self.all.lock().unwrap().iter().filter(|s| s.phase() == Phase::Running).count()
+    }
+
+    /// Fire every running session's token (daemon shutdown).
+    pub fn cancel_all(&self) {
+        for s in self.all.lock().unwrap().iter() {
+            s.cancel.cancel();
+        }
+    }
+
+    /// Per-session accounting rows plus daemon-wide totals.
+    pub fn status_json(&self) -> (Json, JobsSummary) {
+        let all = self.all.lock().unwrap();
+        let mut rows = Vec::with_capacity(all.len());
+        let mut totals = JobsSummary::default();
+        for s in all.iter() {
+            rows.push(s.status_json());
+            totals.absorb(s.summary());
+        }
+        (Json::Arr(rows), totals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sessions_account_per_tenant_and_in_total() {
+        let sessions = Sessions::new();
+        let a = sessions.register("coordinate ...".into(), 6);
+        let b = sessions.register("sweep ...".into(), 12);
+        assert_eq!((a.id, b.id), (1, 2));
+        assert_eq!(sessions.active(), 2);
+        a.absorb(JobsSummary { completed: 4, cancelled: 2, failed: 0, cost_us: 400 });
+        b.absorb(JobsSummary { completed: 3, cancelled: 0, failed: 1, cost_us: 300 });
+        b.absorb(JobsSummary { completed: 2, cancelled: 0, failed: 0, cost_us: 200 });
+        a.finish(Phase::Cancelled, None);
+        assert_eq!(sessions.active(), 1);
+        let (rows, totals) = sessions.status_json();
+        assert_eq!(
+            totals,
+            JobsSummary { completed: 9, cancelled: 2, failed: 1, cost_us: 900 }
+        );
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows[0].get("state").and_then(|v| v.as_str()), Some("cancelled"));
+        assert_eq!(
+            rows[1].get("jobs").unwrap().to_string(),
+            r#"{"completed":5,"cancelled":0,"failed":1,"cost_us":500}"#
+        );
+        // Finished sessions answer tail from the retained report.
+        b.finish(Phase::Done, Some(Json::obj()));
+        assert_eq!(b.report(), Some(Json::obj()));
+        b.wait_finished(); // returns immediately once terminal
+    }
+
+    #[test]
+    fn try_register_enforces_the_session_cap_atomically() {
+        let sessions = Sessions::new();
+        let a = sessions.try_register("a".into(), 1, 1).unwrap();
+        assert!(sessions.try_register("b".into(), 1, 1).is_none(), "cap of 1 rejects a second");
+        a.finish(Phase::Done, None);
+        let c = sessions.try_register("c".into(), 1, 1).unwrap();
+        assert_eq!(c.id, 2, "rejected submissions must not burn ids");
+    }
+}

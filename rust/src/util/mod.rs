@@ -1,6 +1,6 @@
 //! Shared utilities: PRNG, statistics, JSON/table rendering, property tests,
-//! error-context plumbing, cooperative cancellation, and the process-wide
-//! parallelism primitives.
+//! error-context plumbing, cooperative cancellation (including the SIGINT
+//! bridge), and the process-wide parallelism primitives.
 //!
 //! The offline build environment provides no `rand`, `serde`, `criterion`,
 //! `proptest` or `anyhow`; these modules are small, tested substitutes (see
@@ -12,5 +12,6 @@ pub mod json;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 pub mod table;

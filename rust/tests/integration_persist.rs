@@ -226,7 +226,12 @@ fn warm_and_cold_reports_are_byte_identical() {
         let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
         let results = grid_aggregates(&labels, 1, grouped);
         let ids = vec![entries[0].cache.id()];
-        let summary = JobsSummary { completed: jobs.len(), cancelled: 0, failed: 0 };
+        let summary = JobsSummary {
+            completed: jobs.len(),
+            cancelled: 0,
+            failed: 0,
+            cost_us: jobs.iter().map(|j| j.cost_us()).sum(),
+        };
         scores_json("t", &ids, &results, &summary).to_pretty()
     };
 
@@ -278,7 +283,12 @@ fn shard_merge_reproduces_the_coordinate_report_bit_for_bit() {
     let groups: Vec<usize> = jobs.iter().map(|j| j.group).collect();
     let grouped = collate_groups(labels.len(), &groups, curves);
     let results = grid_aggregates(&labels, 1, grouped);
-    let summary = JobsSummary { completed: jobs.len(), cancelled: 0, failed: 0 };
+    let summary = JobsSummary {
+        completed: jobs.len(),
+        cancelled: 0,
+        failed: 0,
+        cost_us: jobs.iter().map(|j| j.cost_us()).sum(),
+    };
     let reference = scores_json("t", &ids, &results, &summary).to_pretty();
 
     // Uneven split: 6 jobs over 4 shards (2, 2, 1, 1 jobs).
@@ -294,8 +304,15 @@ fn shard_merge_reproduces_the_coordinate_report_bit_for_bit() {
                     curve: jobs[i].execute(),
                 })
                 .collect();
-            let summary =
-                JobsSummary { completed: rows.len(), cancelled: 0, failed: 0 };
+            let summary = JobsSummary {
+                completed: rows.len(),
+                cancelled: 0,
+                failed: 0,
+                cost_us: (0..jobs.len())
+                    .filter(|&i| shard.owns(i))
+                    .map(|i| jobs[i].cost_us())
+                    .sum(),
+            };
             through_file(partial_coordinate_json(
                 "t",
                 &ids,

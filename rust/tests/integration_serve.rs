@@ -1,0 +1,278 @@
+//! End-to-end tests of the `serve` daemon over real TCP connections —
+//! the master contract: a served coordinate report is **byte-identical**
+//! to the direct CLI path's report for the same spec (modulo the
+//! non-deterministic `"caches"` metadata block), for any pool width, any
+//! number of concurrent sessions, and any cancellation timing of *other*
+//! sessions. Every server here binds port 0 on localhost; the global
+//! cache registry is shared across tests (entries are memoized, and the
+//! `"caches"` block is stripped before every comparison).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use llamea_kt::coordinator::{
+    coordinate_report, grid_jobs, CacheKey, CacheRegistry, Executor, SpaceEntry, COORDINATE_TITLE,
+};
+use llamea_kt::methodology::OptimizerFactory;
+use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::serve::{client, ServeConfig, Server, ServerHandle, SubmitSpec};
+use llamea_kt::util::json::Json;
+
+struct Daemon {
+    addr: String,
+    handle: ServerHandle,
+    join: std::thread::JoinHandle<std::io::Result<()>>,
+}
+
+impl Daemon {
+    fn start(config: ServeConfig) -> Daemon {
+        let server = Server::bind("127.0.0.1:0", config).expect("bind ephemeral port");
+        let addr = server.local_addr().to_string();
+        let handle = server.handle();
+        let join = std::thread::spawn(move || server.run());
+        Daemon { addr, handle, join }
+    }
+
+    fn stop(self) {
+        self.handle.shutdown();
+        self.join.join().unwrap().expect("accept loop exits cleanly");
+    }
+}
+
+/// The direct-CLI report for a coordinate spec: the exact assembly path
+/// `llamea-kt coordinate --out` uses (borrowed grid through the
+/// streaming executor, then [`coordinate_report`]), without the
+/// `"caches"` block `write_report` appends.
+fn direct_report(spaces: &[&str], opts: &[&str], runs: usize, seed: u64, width: usize) -> String {
+    let registry = CacheRegistry::global();
+    let entries: Vec<Arc<SpaceEntry>> =
+        spaces.iter().map(|s| registry.entry(CacheKey::parse(s).unwrap())).collect();
+    let specs: Vec<OptimizerSpec> =
+        opts.iter().map(|o| OptimizerSpec::parse(o).unwrap()).collect();
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+    let jobs = grid_jobs(&entries, &factories, runs, seed);
+    let batch = Executor::with_threads(Some(width)).fail_fast().run_jobs(&jobs);
+    let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+    coordinate_report(COORDINATE_TITLE, &ids, &labels, &batch).to_string()
+}
+
+fn coordinate_spec(spaces: &[&str], opts: &[&str], runs: usize, seed: u64) -> SubmitSpec {
+    SubmitSpec::Coordinate {
+        spaces: spaces.iter().map(|s| s.to_string()).collect(),
+        opts: opts.iter().map(|s| s.to_string()).collect(),
+        runs,
+        seed,
+    }
+}
+
+/// Submit and return the served report with the `"caches"` block
+/// stripped, serialized.
+fn served_report(addr: &str, spec: &SubmitSpec) -> String {
+    let (_, mut report) = client::submit(addr, spec, &mut |_| {}).expect("served report");
+    report.remove("caches").expect("served reports carry a caches block");
+    report.to_string()
+}
+
+#[test]
+fn served_report_is_byte_identical_to_direct_at_widths_1_and_8() {
+    let spaces = ["convolution@A4000"];
+    let opts = ["sa", "random"];
+    let reference = direct_report(&spaces, &opts, 3, 7, 2);
+    for width in [1usize, 8] {
+        let daemon =
+            Daemon::start(ServeConfig { threads: Some(width), ..Default::default() });
+        let served = served_report(&daemon.addr, &coordinate_spec(&spaces, &opts, 3, 7));
+        assert_eq!(served, reference, "served bytes must not depend on pool width {}", width);
+        daemon.stop();
+    }
+}
+
+#[test]
+fn concurrent_sessions_each_match_their_solo_runs() {
+    let a = (["convolution@A4000"], ["sa", "random"], 3usize, 11u64);
+    let b = (["convolution@W6600"], ["greedy_ils", "random"], 2usize, 23u64);
+    let ref_a = direct_report(&a.0, &a.1, a.2, a.3, 2);
+    let ref_b = direct_report(&b.0, &b.1, b.2, b.3, 2);
+    let daemon = Daemon::start(ServeConfig { threads: Some(4), ..Default::default() });
+    let (got_a, got_b) = std::thread::scope(|s| {
+        let ta = s.spawn(|| served_report(&daemon.addr, &coordinate_spec(&a.0, &a.1, a.2, a.3)));
+        let tb = s.spawn(|| served_report(&daemon.addr, &coordinate_spec(&b.0, &b.1, b.2, b.3)));
+        (ta.join().unwrap(), tb.join().unwrap())
+    });
+    assert_eq!(got_a, ref_a, "session A must be isolated from concurrent session B");
+    assert_eq!(got_b, ref_b, "session B must be isolated from concurrent session A");
+    daemon.stop();
+}
+
+#[test]
+fn cancelling_one_session_leaves_the_bystander_byte_identical() {
+    let bystander = (["convolution@A4000"], ["sa", "random"], 3usize, 7u64);
+    let reference = direct_report(&bystander.0, &bystander.1, bystander.2, bystander.3, 2);
+    // Width 1 forces real interleaving and makes the victim's 20-job
+    // grid long enough that a cancel sent at its second finished event
+    // lands mid-run.
+    let daemon = Daemon::start(ServeConfig { threads: Some(1), ..Default::default() });
+    let (victim, bystander_got) = std::thread::scope(|s| {
+        let tv = s.spawn(|| {
+            let spec = coordinate_spec(&["convolution@W6600"], &["sa", "random"], 10, 5);
+            let addr = daemon.addr.clone();
+            let mut fired = false;
+            let mut session_id = 0u64;
+            let mut on_event = |ev: &Json| {
+                if ev.get("event").and_then(|v| v.as_str()) == Some("accepted") {
+                    session_id = ev.get("session").and_then(|v| v.as_usize()).unwrap() as u64;
+                }
+                if !fired
+                    && ev.get("kind").and_then(|v| v.as_str()) == Some("finished")
+                    && ev.get("completed").and_then(|v| v.as_usize()) == Some(2)
+                {
+                    fired = true;
+                    client::cancel(&addr, session_id).expect("cancel reaches the daemon");
+                }
+            };
+            client::submit(&daemon.addr, &spec, &mut on_event).expect("victim still gets a report")
+        });
+        let tb = s.spawn(|| {
+            served_report(
+                &daemon.addr,
+                &coordinate_spec(&bystander.0, &bystander.1, bystander.2, bystander.3),
+            )
+        });
+        (tv.join().unwrap(), tb.join().unwrap())
+    });
+    assert_eq!(
+        bystander_got, reference,
+        "cancelling another tenant must not perturb a bystander's bytes"
+    );
+    let (_, report) = victim;
+    assert_eq!(
+        report.get("interrupted"),
+        Some(&Json::Bool(true)),
+        "a mid-run cancel must mark the report interrupted: {}",
+        report.to_string()
+    );
+    let jobs = report.get("jobs").expect("jobs block");
+    let completed = jobs.get("completed").and_then(|v| v.as_usize()).unwrap();
+    let cancelled = jobs.get("cancelled").and_then(|v| v.as_usize()).unwrap();
+    let failed = jobs.get("failed").and_then(|v| v.as_usize()).unwrap();
+    assert_eq!(completed + cancelled + failed, 20, "every admitted job gets an outcome");
+    assert!(completed >= 2 && cancelled > 0, "completed-prefix: {}", jobs.to_string());
+    daemon.stop();
+}
+
+#[test]
+fn over_cap_submissions_are_rejected_with_diagnostics() {
+    let daemon = Daemon::start(ServeConfig {
+        threads: Some(1),
+        queue_cap: 100,
+        max_sessions: 1,
+    });
+    // Occupy the single session slot with a raw connection we control.
+    let stream = TcpStream::connect(&daemon.addr).unwrap();
+    let spec = coordinate_spec(&["convolution@A4000"], &["sa", "random"], 8, 3);
+    let line = format!("{}\n", llamea_kt::serve::submit_request(&spec).to_string());
+    (&stream).write_all(line.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut accepted = String::new();
+    reader.read_line(&mut accepted).unwrap();
+    assert!(accepted.contains(r#""event":"accepted""#), "{}", accepted);
+
+    // Second session: rejected by the session cap, with a diagnostic.
+    let err = client::submit(&daemon.addr, &coordinate_spec(&["convolution@A4000"], &["sa"], 1, 1), &mut |_| {})
+        .expect_err("the session cap must reject a second session");
+    assert!(err.contains("session limit reached"), "{}", err);
+    assert!(err.contains("--max-sessions 1"), "{}", err);
+
+    // A submission bigger than the queue cap is rejected regardless.
+    let err = client::submit(&daemon.addr, &coordinate_spec(&["convolution@A4000"], &["sa", "random"], 51, 1), &mut |_| {})
+        .expect_err("the queue cap must reject an oversized submission");
+    assert!(err.contains("queue capacity exceeded"), "{}", err);
+
+    // The occupant is untouched: drain it to its report.
+    let mut saw_report = false;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap() > 0 {
+        if line.contains(r#""event":"report""#) {
+            saw_report = true;
+            break;
+        }
+        line.clear();
+    }
+    assert!(saw_report, "the occupying session still completes");
+    daemon.stop();
+}
+
+#[test]
+fn malformed_and_truncated_lines_get_structured_errors_not_hangs() {
+    let daemon = Daemon::start(ServeConfig { threads: Some(1), ..Default::default() });
+
+    // Malformed JSON, unknown commands, and non-UTF-8 all answer with an
+    // error event and keep the connection serving.
+    let stream = TcpStream::connect(&daemon.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    for bad in ["{not json\n", "[]\n", "{\"cmd\":\"warp\"}\n"] {
+        (&stream).write_all(bad.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains(r#""event":"error""#), "{:?} -> {}", bad, line);
+    }
+    (&stream).write_all(b"\xff\xfe\xfd\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("not UTF-8"), "{}", line);
+    // ... and the same connection still answers a well-formed request.
+    (&stream).write_all(b"{\"cmd\":\"status\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains(r#""event":"status""#), "{}", line);
+    drop(reader);
+    drop(stream);
+
+    // A truncated final line (no newline before EOF) is still answered.
+    let stream = TcpStream::connect(&daemon.addr).unwrap();
+    (&stream).write_all(b"{\"cmd\":\"status\"}").unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut response = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_to_string(&mut response).unwrap();
+    assert!(response.contains(r#""event":"status""#), "{}", response);
+
+    // An unterminated line past the 1 MiB cap is answered with an error,
+    // never buffered unboundedly. Exactly cap+1 bytes, so the daemon
+    // consumes everything we sent (clean close, no RST racing the
+    // response).
+    let stream = TcpStream::connect(&daemon.addr).unwrap();
+    let oversized = vec![b'a'; llamea_kt::serve::MAX_LINE_BYTES + 1];
+    (&stream).write_all(&oversized).unwrap();
+    let mut response = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_to_string(&mut response).unwrap();
+    assert!(response.contains("exceeds 1 MiB"), "{}", response);
+
+    // Unknown-session control requests are diagnostics, not panics.
+    let err = client::cancel(&daemon.addr, 999).expect_err("unknown session");
+    assert!(err.contains("unknown session 999"), "{}", err);
+    let err = client::tail(&daemon.addr, 999, &mut |_| {}).expect_err("unknown session");
+    assert!(err.contains("unknown session 999"), "{}", err);
+
+    daemon.stop();
+}
+
+#[test]
+fn tail_replays_a_finished_session_report() {
+    let daemon = Daemon::start(ServeConfig { threads: Some(2), ..Default::default() });
+    let spec = coordinate_spec(&["convolution@A4000"], &["sa"], 2, 9);
+    let (session, mut first) = client::submit(&daemon.addr, &spec, &mut |_| {}).unwrap();
+    let mut tailed =
+        client::tail(&daemon.addr, session, &mut |_| {}).expect("finished sessions replay");
+    first.remove("caches").unwrap();
+    tailed.remove("caches").unwrap();
+    assert_eq!(
+        first.to_string(),
+        tailed.to_string(),
+        "tail must replay the retained report byte-for-byte"
+    );
+    daemon.stop();
+}
