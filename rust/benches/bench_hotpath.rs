@@ -8,6 +8,7 @@
 mod common;
 use llamea_kt::kernels::gpu::GpuSpec;
 use llamea_kt::methodology::{Baseline, SpaceSetup};
+use llamea_kt::obs;
 use llamea_kt::persist;
 use llamea_kt::searchspace::{Application, NeighborKind};
 use llamea_kt::tuning::{Cache, TuningContext};
@@ -137,6 +138,34 @@ fn main() {
     results.push(cold);
     results.push(warm);
     let _ = std::fs::remove_dir_all(&store);
+
+    // Observability recorder: the disabled hot path is the one every
+    // span call site pays in a normal run (contract: one relaxed atomic
+    // load, no clock read); the enabled rows show what a recorded span
+    // actually costs under metrics aggregation and full tracing.
+    common::section("obs_overhead");
+    results.push(common::bench("100k obs spans (disabled)", 1, 5, || {
+        for i in 0..100_000u64 {
+            drop(obs::span("bench.span").kv("i", i));
+        }
+    }));
+    obs::enable(false, true);
+    results.push(common::bench("100k obs spans (metrics)", 1, 5, || {
+        for i in 0..100_000u64 {
+            drop(obs::span("bench.span").kv("i", i));
+        }
+    }));
+    obs::enable(true, false);
+    results.push(common::bench("100k obs spans (trace)", 1, 3, || {
+        for i in 0..100_000u64 {
+            drop(obs::span("bench.span").kv("i", i));
+        }
+        // Truncate between reps so the event buffer stays flat; the
+        // clear is O(events) and negligible next to the records.
+        obs::reset();
+    }));
+    obs::enable(false, false);
+    obs::reset();
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     common::write_json(&out, &results);

@@ -42,8 +42,10 @@
 use std::collections::BinaryHeap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use super::job::{OwnedJob, TuningJob};
+use crate::obs;
 use crate::util::cancel::CancelToken;
 use crate::util::error::panic_message;
 use crate::util::json::Json;
@@ -156,6 +158,15 @@ impl JobOutcome {
 
     pub fn is_completed(&self) -> bool {
         matches!(self, JobOutcome::Completed(_))
+    }
+
+    /// Short outcome tag for trace spans and displays.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobOutcome::Completed(_) => "completed",
+            JobOutcome::Cancelled => "cancelled",
+            JobOutcome::Failed(_) => "failed",
+        }
     }
 }
 
@@ -339,8 +350,12 @@ impl BatchResult {
 pub enum Progress {
     /// A worker picked the job up.
     Started { slot: usize },
-    /// The job completed; `completed` counts completions so far.
-    Finished { slot: usize, completed: usize },
+    /// The job completed; `completed` counts completions so far and
+    /// `elapsed_us` is the monotonic wall time since the batch started —
+    /// a display-only rate signal (live counters derive jobs/s from it).
+    /// Like every `Progress` field it is observational: wall-clock values
+    /// ride in events and never feed back into results.
+    Finished { slot: usize, completed: usize, elapsed_us: u64 },
     /// The job was cancelled before or during execution.
     Cancelled { slot: usize },
     /// The job panicked.
@@ -489,6 +504,7 @@ impl Executor {
             cancel: &self.cancel,
             fail_fast: self.fail_fast,
             sink,
+            t0: Instant::now(),
         };
         if threads <= 1 {
             // Inline fast path: same pull/refill/pick loop, no spawn. Keeps
@@ -545,6 +561,9 @@ struct QueueEntry<'a> {
     priority: Priority,
     slot: usize,
     job: TuningJob<'a>,
+    /// Enqueue time for the queue-wait trace span; `None` when
+    /// observability is off (no clock read on the disabled path).
+    enqueued: Option<Instant>,
 }
 
 impl PartialEq for QueueEntry<'_> {
@@ -598,6 +617,8 @@ struct Pool<'a, 's, 'p> {
     cancel: &'p CancelToken,
     fail_fast: bool,
     sink: &'p ProgressSink,
+    /// Batch start, the origin for `Progress::Finished::elapsed_us`.
+    t0: Instant,
 }
 
 impl<'a> Pool<'a, '_, '_> {
@@ -631,6 +652,11 @@ impl<'a> Pool<'a, '_, '_> {
                                     priority: sj.priority,
                                     slot,
                                     job: sj.job,
+                                    enqueued: if obs::enabled() {
+                                        Some(Instant::now())
+                                    } else {
+                                        None
+                                    },
                                 });
                             }
                             None => st.drained = true,
@@ -646,22 +672,38 @@ impl<'a> Pool<'a, '_, '_> {
                     // wait for a completion to reopen it. A waiting worker
                     // implies another is running a job, and every
                     // completion (and worker exit) notifies — no deadlock.
+                    // The stall span makes backpressure (source-poll window
+                    // exhausted) visible in traces.
+                    let stall = obs::span("executor.stall");
                     st = self.wakeup.wait(st).unwrap();
+                    drop(stall);
                 }
             };
             let Some(entry) = entry else {
                 self.wakeup.notify_all();
                 return;
             };
+            if let Some(enqueued) = entry.enqueued {
+                drop(obs::span_at("executor.queue_wait", enqueued).kv("slot", entry.slot));
+            }
             (self.sink)(&Progress::Started { slot: entry.slot });
+            let mut job_span = obs::span("executor.job")
+                .kv("slot", entry.slot)
+                .kv("priority", entry.priority);
             let outcome = execute_isolated(&entry.job, self.cancel);
+            job_span.note("outcome", outcome.label());
+            drop(job_span);
             let event = {
                 let mut st = self.state.lock().unwrap();
                 st.finished += 1;
                 let event = match &outcome {
                     JobOutcome::Completed(_) => {
                         st.completed += 1;
-                        Progress::Finished { slot: entry.slot, completed: st.completed }
+                        Progress::Finished {
+                            slot: entry.slot,
+                            completed: st.completed,
+                            elapsed_us: self.t0.elapsed().as_micros() as u64,
+                        }
                     }
                     JobOutcome::Cancelled => Progress::Cancelled { slot: entry.slot },
                     JobOutcome::Failed(e) => {

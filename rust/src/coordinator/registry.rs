@@ -48,6 +48,7 @@ use std::time::Instant;
 
 use crate::kernels::gpu::{GpuSpec, ALL_GPUS};
 use crate::methodology::SpaceSetup;
+use crate::obs;
 use crate::persist::{self, LoadError, LoadMode};
 use crate::searchspace::{Application, SearchSpace};
 use crate::tuning::Cache;
@@ -176,6 +177,10 @@ impl CacheRegistry {
     pub fn space(&self, app: Application) -> Arc<SearchSpace> {
         let cell = self.spaces.lock().unwrap().entry(app).or_default().clone();
         cell.get_or_init(|| {
+            let mut sp = obs::span("registry.space");
+            if obs::enabled() {
+                sp.note("id", obs::sym(app.name()));
+            }
             let dir = self.cache_dir.lock().unwrap().clone();
             let t0 = Instant::now();
             if let Some(dir) = &dir {
@@ -188,13 +193,18 @@ impl CacheRegistry {
                             CacheOutcome::Loaded,
                             t0.elapsed().as_secs_f64(),
                         );
+                        sp.note("outcome", "loaded");
+                        sp.note("fingerprint", "valid");
                         return Arc::new(space);
                     }
-                    Err(LoadError::Missing) => {}
-                    Err(e) => eprintln!(
-                        "cache store: rejecting {} ({e}); rebuilding",
-                        path.display()
-                    ),
+                    Err(LoadError::Missing) => sp.note("fingerprint", "missing"),
+                    Err(e) => {
+                        sp.note("fingerprint", "rejected");
+                        eprintln!(
+                            "cache store: rejecting {} ({e}); rebuilding",
+                            path.display()
+                        )
+                    }
                 }
             }
             self.space_builds.fetch_add(1, Ordering::Relaxed);
@@ -210,6 +220,7 @@ impl CacheRegistry {
                 CacheOutcome::Built,
                 t0.elapsed().as_secs_f64(),
             );
+            sp.note("outcome", "built");
             space
         })
         .clone()
@@ -223,6 +234,10 @@ impl CacheRegistry {
         cell.get_or_init(|| {
             let gpu = GpuSpec::by_name(key.gpu).expect("unknown GPU in cache key");
             let space = self.space(key.app);
+            let mut sp = obs::span("registry.cache");
+            if obs::enabled() {
+                sp.note("id", obs::sym(&key.id()));
+            }
             let dir = self.cache_dir.lock().unwrap().clone();
             let t0 = Instant::now();
             if let Some(dir) = &dir {
@@ -233,16 +248,22 @@ impl CacheRegistry {
                         self.cache_loads.fetch_add(1, Ordering::Relaxed);
                         let setup = SpaceSetup::new(&cache);
                         self.record(key.id(), CacheOutcome::Loaded, t0.elapsed().as_secs_f64());
+                        sp.note("outcome", "loaded");
+                        sp.note("fingerprint", "valid");
                         return Arc::new(SpaceEntry { key, cache, setup });
                     }
-                    Err(LoadError::Missing) => {}
-                    Err(e) => eprintln!(
-                        "cache store: rejecting {} ({e}); rebuilding",
-                        path.display()
-                    ),
+                    Err(LoadError::Missing) => sp.note("fingerprint", "missing"),
+                    Err(e) => {
+                        sp.note("fingerprint", "rejected");
+                        eprintln!(
+                            "cache store: rejecting {} ({e}); rebuilding",
+                            path.display()
+                        )
+                    }
                 }
             }
             let cache = Cache::build_with_space(key.app, gpu, space);
+            sp.note("outcome", "built");
             self.cache_builds.fetch_add(1, Ordering::Relaxed);
             if let Some(dir) = &dir {
                 let path = persist::cache_path(dir, key.app, key.gpu);

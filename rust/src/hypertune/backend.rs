@@ -45,6 +45,7 @@ use crate::coordinator::{
     SpaceEntry, TuningJob,
 };
 use crate::methodology::{aggregate, OptimizerFactory};
+use crate::obs;
 use crate::optimizers::OptimizerSpec;
 use crate::searchspace::SearchSpace;
 use crate::tuning::{BackendSource, EvalBackend};
@@ -291,6 +292,7 @@ impl MetaTuning {
                 let have = store.get(&o).map(|s| s[0].len()).unwrap_or(0);
                 if have >= runs {
                     self.hits.fetch_add(1, Ordering::Relaxed);
+                    obs::counter("hypertune.memo_hits", 1);
                 } else if queued.insert(o) {
                     missing.push((o, have));
                 }
@@ -331,6 +333,19 @@ impl MetaTuning {
                 Some(b) => b.as_ref(),
                 None => &noop,
             };
+            // Meta-eval fan-out span: how many configs expanded into how
+            // many inner jobs; per-ordinal expansion marks carry the rung
+            // each config escalates from.
+            let mut meta_span = obs::span("hypertune.meta_eval")
+                .kv("ordinals", missing.len())
+                .kv("jobs", total)
+                .kv("runs", runs);
+            if obs::enabled() {
+                obs::counter("hypertune.fresh_evals", missing.len() as u64);
+                for &(o, have) in &missing {
+                    drop(obs::span("hypertune.expand").kv("ordinal", o).kv("from_runs", have));
+                }
+            }
             let batch = match &self.runner {
                 // Served path: the identical slot sequence, materialized
                 // as owned jobs for the daemon's long-lived pool.
@@ -385,6 +400,8 @@ impl MetaTuning {
                 }
             };
             let summary = batch.summary();
+            meta_span.note("completed", summary.completed);
+            drop(meta_span);
             self.jobs_done.lock().unwrap().absorb(summary);
             let cut_short = !batch.fully_drained() || summary.cancelled > 0;
             if cut_short && summary.failed == 0 && self.cancel_token().is_cancelled() {

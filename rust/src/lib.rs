@@ -19,6 +19,7 @@ pub mod hypertune;
 pub mod kernels;
 pub mod llamea;
 pub mod methodology;
+pub mod obs;
 pub mod optimizers;
 pub mod persist;
 pub mod runtime;

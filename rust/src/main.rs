@@ -93,6 +93,14 @@
 //!            and search spaces to DIR and warm-start from it — stale or
 //!            foreign files are fingerprint-rejected and rebuilt; reports
 //!            gain a "caches" block of per-key built|loaded outcomes)
+//!            --trace FILE (any subcommand: record spans from every layer
+//!            and write a Chrome trace-event JSON at exit — open in
+//!            chrome://tracing or Perfetto; zero overhead when absent,
+//!            and report bytes are identical with tracing on or off)
+//!            --metrics (dump a Prometheus-text metrics snapshot to
+//!            stderr at exit)
+//!            --no-progress (force the live stderr counter line off; the
+//!            final one-line summary still prints)
 
 #![allow(clippy::type_complexity)]
 
@@ -111,6 +119,7 @@ use llamea_kt::hypertune::{
 use llamea_kt::kernels::gpu::{GpuSpec, CPU_HOST};
 use llamea_kt::llamea::{evolve, EvolutionConfig, MockLlm, SpaceInfo};
 use llamea_kt::methodology::{OptimizerFactory, SpaceSetup};
+use llamea_kt::obs;
 use llamea_kt::optimizers::OptimizerSpec;
 use llamea_kt::runtime::{measured::NOMINAL_EVAL_COST_S, MeasuredSource, PjrtRuntime};
 use llamea_kt::searchspace::Application;
@@ -120,60 +129,137 @@ use llamea_kt::util::json::Json;
 use llamea_kt::util::signal::install_sigint;
 use llamea_kt::util::table::Table;
 
+/// TTY detection for the live progress line, via the libc `isatty` the
+/// same way `persist::arena` declares `mmap`: a hand-written extern so
+/// the crate stays dependency-free on every unix.
+#[cfg(unix)]
+mod tty {
+    use std::os::raw::c_int;
+    extern "C" {
+        fn isatty(fd: c_int) -> c_int;
+    }
+    /// Whether stderr (fd 2) is a terminal.
+    pub fn stderr_is_tty() -> bool {
+        // SAFETY: isatty only inspects the process's fd table.
+        unsafe { isatty(2) == 1 }
+    }
+}
+
+#[cfg(not(unix))]
+mod tty {
+    /// No TTY probe off unix: the live line stays off, the final
+    /// summary still prints.
+    pub fn stderr_is_tty() -> bool {
+        false
+    }
+}
+
+/// `--no-progress`: force the live rewritten line off even on a TTY
+/// (set once in `main` before any batch runs).
+static NO_PROGRESS: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Live progress counters over executor [`Progress`] events.
+#[derive(Default)]
+struct Counts {
+    started: usize,
+    completed: usize,
+    cancelled: usize,
+    failed: usize,
+    /// Largest `Progress::Finished::elapsed_us` seen — monotonic time
+    /// since the batch started, stamped by the pool itself so the
+    /// jobs/s rate survives redirection and served sessions alike.
+    elapsed_us: u64,
+}
+
+impl Counts {
+    fn done(&self) -> usize {
+        self.completed + self.cancelled + self.failed
+    }
+
+    /// `", N.N jobs/s"` once at least one job finished with a non-zero
+    /// batch clock (rehydrated events from an old daemon carry 0).
+    fn rate(&self) -> String {
+        if self.completed == 0 || self.elapsed_us == 0 {
+            return String::new();
+        }
+        format!(", {:.1} jobs/s", self.completed as f64 / (self.elapsed_us as f64 / 1e6))
+    }
+}
+
 /// A live stderr progress line over executor [`Progress`] events: one
 /// `\r`-rewritten counter line while a batch drains, active only when
-/// stderr is a terminal (silent under redirection/CI). Consumers observe
-/// only — the line can never change results.
+/// stderr is a terminal (detected via `isatty`, so redirection/CI get
+/// no control-character spam) and `--no-progress` is absent. A final
+/// one-line summary with the jobs/s rate prints either way. Consumers
+/// observe only — the line can never change results.
 struct ProgressLine {
     /// Total jobs when the batch size is known up front (`None` for
     /// sweeps, whose fan-out depends on memo state).
     total: Option<usize>,
     enabled: bool,
-    /// (started, completed, cancelled, failed) counters.
-    counts: std::sync::Mutex<(usize, usize, usize, usize)>,
+    counts: std::sync::Mutex<Counts>,
 }
 
 impl ProgressLine {
     fn new(total: Option<usize>) -> ProgressLine {
-        use std::io::IsTerminal;
         ProgressLine {
             total,
-            enabled: std::io::stderr().is_terminal(),
-            counts: std::sync::Mutex::new((0, 0, 0, 0)),
+            enabled: tty::stderr_is_tty()
+                && !NO_PROGRESS.load(std::sync::atomic::Ordering::Relaxed),
+            counts: std::sync::Mutex::new(Counts::default()),
+        }
+    }
+
+    fn total_suffix(&self) -> String {
+        match self.total {
+            Some(t) => format!("/{}", t),
+            None => String::new(),
         }
     }
 
     fn observe(&self, event: &Progress) {
         let mut c = self.counts.lock().unwrap();
         match event {
-            Progress::Started { .. } => c.0 += 1,
-            Progress::Finished { .. } => c.1 += 1,
-            Progress::Cancelled { .. } => c.2 += 1,
-            Progress::Failed { .. } => c.3 += 1,
+            Progress::Started { .. } => c.started += 1,
+            Progress::Finished { elapsed_us, .. } => {
+                c.completed += 1;
+                c.elapsed_us = c.elapsed_us.max(*elapsed_us);
+            }
+            Progress::Cancelled { .. } => c.cancelled += 1,
+            Progress::Failed { .. } => c.failed += 1,
         }
         if !self.enabled {
             return;
         }
-        let done = c.1 + c.2 + c.3;
-        let total = match self.total {
-            Some(t) => format!("/{}", t),
-            None => String::new(),
-        };
+        let done = c.done();
         eprint!(
-            "\r{}{} jobs done ({} running, {} cancelled, {} failed)   ",
+            "\r{}{} jobs done ({} running, {} cancelled, {} failed{})   ",
             done,
-            total,
-            c.0.saturating_sub(done),
-            c.2,
-            c.3
+            self.total_suffix(),
+            c.started.saturating_sub(done),
+            c.cancelled,
+            c.failed,
+            c.rate()
         );
     }
 
-    /// End the rewritten line (call once, after the batch).
+    /// Replace the rewritten line with the final summary (call once,
+    /// after the batch). Prints even when the live line was off, so a
+    /// redirected run still records its throughput.
     fn finish(&self) {
+        let c = self.counts.lock().unwrap();
         if self.enabled {
-            eprintln!();
+            // Clear the rewritten line before the summary replaces it.
+            eprint!("\r{:79}\r", "");
         }
+        eprintln!(
+            "{}{} jobs done ({} cancelled, {} failed{})",
+            c.done(),
+            self.total_suffix(),
+            c.cancelled,
+            c.failed,
+            c.rate()
+        );
     }
 }
 
@@ -190,6 +276,9 @@ fn report_job_outcomes(summary: &llamea_kt::coordinator::JobsSummary) {
             summary.total(),
             summary.cancelled
         );
+        // Deliver the trace/metrics of the partial run before exiting:
+        // a failing batch is exactly when the trace is wanted.
+        obs::export::finalize();
         std::process::exit(1);
     }
     if !summary.all_completed() {
@@ -855,8 +944,11 @@ fn cmd_merge(args: &[String]) {
             skip = false;
             continue;
         }
-        if a == "--out" || a == "--cache-dir" {
+        if a == "--out" || a == "--cache-dir" || a == "--trace" {
             skip = true;
+            continue;
+        }
+        if a == "--metrics" || a == "--no-progress" {
             continue;
         }
         if a.starts_with("--") {
@@ -950,6 +1042,7 @@ fn progress_from_event(ev: &Json) -> Option<Progress> {
         "finished" => Some(Progress::Finished {
             slot,
             completed: ev.get("completed").and_then(|v| v.as_usize()).unwrap_or(0),
+            elapsed_us: ev.get("elapsed_us").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
         }),
         "cancelled" => Some(Progress::Cancelled { slot }),
         "failed" => Some(Progress::Failed {
@@ -1153,6 +1246,20 @@ fn main() {
             }
         }
     }
+    // Observability flags work on every subcommand and are strictly
+    // out-of-band: `--trace FILE` records spans process-wide and writes
+    // a Chrome trace at exit, `--metrics` dumps a Prometheus snapshot
+    // to stderr. With neither flag the recorder never turns on and the
+    // per-span cost is one relaxed atomic load.
+    let trace_path = flag_value(&args, "--trace").map(PathBuf::from);
+    let dump_metrics = has_flag(&args, "--metrics");
+    if trace_path.is_some() || dump_metrics {
+        obs::enable(trace_path.is_some(), dump_metrics);
+        obs::export::configure(trace_path, dump_metrics);
+    }
+    if has_flag(&args, "--no-progress") {
+        NO_PROGRESS.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
     match args.first().map(|s| s.as_str()) {
         Some("spaces") => cmd_spaces(),
         Some("testbed") => println!("{}", harness::testbed_summary().to_text()),
@@ -1174,4 +1281,8 @@ fn main() {
             std::process::exit(2);
         }
     }
+    // The exit point every successful subcommand reaches; failed
+    // batches finalize in `report_job_outcomes` before their exit(1).
+    // Idempotent, so both paths can call it unconditionally.
+    obs::export::finalize();
 }

@@ -112,7 +112,20 @@ pub fn single_run_cancellable(
     let mut backend = source.backend();
     let mut ctx = TuningContext::with_backend(backend.as_mut(), setup.budget_s, seed);
     ctx.set_cancel_token(cancel.clone());
+    let mut run_span = crate::obs::span("tuning.run");
     opt.run(&mut ctx);
+    // Per-run evaluation accounting: observational only — recorded after
+    // the optimizer finishes, read from (never written to) the context.
+    if crate::obs::enabled() {
+        let evals = ctx.eval_calls();
+        let dedup_hits = evals - ctx.unique_evals();
+        run_span.note("evals", evals);
+        run_span.note("dedup_hits", dedup_hits);
+        run_span.note("budget_frac", ctx.budget_spent_fraction());
+        crate::obs::counter("tuning.evals", evals);
+        crate::obs::counter("tuning.dedup_hits", dedup_hits);
+    }
+    drop(run_span);
     if ctx.cancellation_observed() {
         return None;
     }

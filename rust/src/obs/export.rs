@@ -1,0 +1,181 @@
+//! Exporters for the recorder: Chrome trace-event JSON (`--trace FILE`,
+//! loadable in `chrome://tracing` / Perfetto), a Prometheus text
+//! snapshot (`--metrics`, dumped to stderr at exit), and a JSON metrics
+//! block for the serve daemon's `status` response.
+//!
+//! All exporters read the same canonical snapshot: events sorted by
+//! `(epoch-ns, thread, seq)` and name-sorted metric aggregates, so the
+//! outputs of two runs diff structurally.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+use super::{snapshot_events, snapshot_metrics, sym_name, ArgValue, BUCKET_BOUNDS_NS};
+use crate::util::json::{self, Json};
+
+fn arg_json(v: &ArgValue) -> Json {
+    match v {
+        ArgValue::U64(x) => Json::Num(*x as f64),
+        ArgValue::F64(x) => Json::Num(*x),
+        ArgValue::Str(s) => Json::Str((*s).to_string()),
+        ArgValue::Sym(s) => Json::Str(sym_name(*s)),
+    }
+}
+
+/// The full trace as a Chrome trace-event document. Every event is a
+/// complete ("X") span — closed by construction — with microsecond
+/// `ts`/`dur` (truncated; the exact nanosecond start and per-thread
+/// sequence number ride in `args` so the canonical order stays visible
+/// after truncation).
+pub fn chrome_trace() -> Json {
+    let mut events = Json::Arr(Vec::new());
+    for e in snapshot_events() {
+        let mut j = Json::obj();
+        j.set("name", e.name);
+        j.set("cat", "obs");
+        j.set("ph", "X");
+        j.set("ts", e.ns / 1_000);
+        j.set("dur", e.dur_ns / 1_000);
+        j.set("pid", 1u64);
+        j.set("tid", e.thread as u64);
+        let mut args = Json::obj();
+        args.set("ns", e.ns);
+        args.set("seq", e.seq);
+        for (key, value) in e.args.iter().take(e.n_args as usize) {
+            args.set(key, arg_json(value));
+        }
+        j.set("args", args);
+        events.push(j);
+    }
+    let mut doc = Json::obj();
+    doc.set("traceEvents", events);
+    doc.set("displayTimeUnit", "ms");
+    doc
+}
+
+/// `a.b.c` → `a_b_c`: Prometheus metric names allow `[a-zA-Z0-9_:]`.
+fn metric_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Prometheus text-exposition snapshot: one `_total` counter per
+/// [`super::counter`] name and one `_seconds` histogram per span name.
+pub fn metrics_text() -> String {
+    use std::fmt::Write as _;
+    let (counters, hists) = snapshot_metrics();
+    let mut out = String::new();
+    for (name, value) in counters {
+        let m = metric_name(name);
+        let _ = writeln!(out, "# TYPE llamea_{m}_total counter");
+        let _ = writeln!(out, "llamea_{m}_total {value}");
+    }
+    for (name, h) in hists {
+        let m = metric_name(name);
+        let _ = writeln!(out, "# TYPE llamea_{m}_seconds histogram");
+        let mut cumulative = 0u64;
+        for (i, count) in h.buckets.iter().enumerate() {
+            cumulative += count;
+            if i < BUCKET_BOUNDS_NS.len() {
+                let le = BUCKET_BOUNDS_NS[i] as f64 / 1e9;
+                let _ = writeln!(out, "llamea_{m}_seconds_bucket{{le=\"{le}\"}} {cumulative}");
+            } else {
+                let _ = writeln!(out, "llamea_{m}_seconds_bucket{{le=\"+Inf\"}} {cumulative}");
+            }
+        }
+        let _ = writeln!(out, "llamea_{m}_seconds_sum {}", h.sum_ns as f64 / 1e9);
+        let _ = writeln!(out, "llamea_{m}_seconds_count {}", h.count);
+    }
+    out
+}
+
+/// The `"metrics"` block of the serve daemon's `status` response:
+/// counters plus per-span-name latency summaries. Present even when
+/// aggregation is off (all-zero), so consumers can rely on the shape.
+pub fn metrics_json() -> Json {
+    let (counters, hists) = snapshot_metrics();
+    let mut c = Json::obj();
+    for (name, value) in counters {
+        c.set(name, value);
+    }
+    let mut s = Json::obj();
+    for (name, h) in hists {
+        let mut row = Json::obj();
+        row.set("count", h.count);
+        row.set("total_s", h.sum_ns as f64 / 1e9);
+        if h.count > 0 {
+            row.set("mean_s", h.sum_ns as f64 / 1e9 / h.count as f64);
+        }
+        s.set(name, row);
+    }
+    let mut block = Json::obj();
+    block.set("counters", c);
+    block.set("spans", s);
+    block
+}
+
+struct ExportConfig {
+    trace_path: Option<PathBuf>,
+    dump_metrics: bool,
+}
+
+fn config() -> &'static Mutex<ExportConfig> {
+    static CONFIG: OnceLock<Mutex<ExportConfig>> = OnceLock::new();
+    CONFIG.get_or_init(|| Mutex::new(ExportConfig { trace_path: None, dump_metrics: false }))
+}
+
+/// Register what [`finalize`] should emit. Called once by `main` after
+/// flag parsing, before any work runs.
+pub fn configure(trace_path: Option<PathBuf>, dump_metrics: bool) {
+    let mut cfg = config().lock().unwrap_or_else(PoisonError::into_inner);
+    cfg.trace_path = trace_path;
+    cfg.dump_metrics = dump_metrics;
+}
+
+/// Write the configured exports: the Chrome trace to `--trace FILE` and
+/// the Prometheus snapshot to stderr under `--metrics`. Idempotent — the
+/// first call wins — so both the normal end of `main` and early
+/// `process::exit` paths can call it unconditionally.
+pub fn finalize() {
+    static DONE: AtomicBool = AtomicBool::new(false);
+    if DONE.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let cfg = config().lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some(path) = &cfg.trace_path {
+        let trace = chrome_trace();
+        if let Err(e) = json::write_file(path, &trace) {
+            eprintln!("obs: cannot write trace {} ({e})", path.display());
+        }
+    }
+    if cfg.dump_metrics {
+        eprint!("{}", metrics_text());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_names_are_sanitized() {
+        assert_eq!(metric_name("executor.job"), "executor_job");
+        assert_eq!(metric_name("serve.rejected-cap"), "serve_rejected_cap");
+    }
+
+    #[test]
+    fn metrics_json_has_stable_shape_when_empty() {
+        let block = metrics_json();
+        assert!(block.get("counters").is_some());
+        assert!(block.get("spans").is_some());
+    }
+
+    #[test]
+    fn chrome_trace_is_an_object_with_event_array() {
+        let doc = chrome_trace();
+        assert!(doc.get("traceEvents").is_some());
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    }
+}

@@ -1,0 +1,562 @@
+//! Process-wide, dependency-free tracing & metrics recorder.
+//!
+//! Every layer of the pipeline — cache registry, persistent store,
+//! streaming executor, hypertune meta-evals, tuning runs, and the serve
+//! daemon — reports spans and counters through this module. It exists so
+//! the questions the ROADMAP's budget-reallocation items need answered
+//! ("where does tuning time actually go?", "what stalls the pool?") are
+//! observable without attaching a debugger or grepping stderr.
+//!
+//! # Event model
+//!
+//! Three primitives:
+//!
+//! - **Spans** ([`span`] / [`span_at`]): an RAII guard measuring one
+//!   delimited piece of work (`obs::span("cache.build").kv("id", ...)`),
+//!   recorded on drop as a *complete* event — start, duration, thread,
+//!   per-thread sequence number, and up to [`MAX_ARGS`] key/value tags.
+//!   Closed-by-construction: a guard cannot leak an unclosed span into
+//!   the trace. Spans feed both the trace buffer (when tracing) and a
+//!   fixed-bucket latency histogram keyed by span name (when metrics
+//!   are on).
+//! - **Counters** ([`counter`]): monotonically increasing named totals
+//!   (admission rejections, dedup hits, pool picks), aggregated in
+//!   place — O(distinct names) memory, never per-event.
+//! - **Symbols** ([`sym`]): dynamic strings (cache ids, optimizer
+//!   labels) interned once to a small integer so recording an event
+//!   never allocates; the string table is resolved at export.
+//!
+//! Timestamps are monotonic [`Instant`]s normalized to a process epoch
+//! (pinned when recording is first enabled), exported as integer
+//! nanoseconds. The canonical event order is `(epoch-ns, thread, seq)` —
+//! [`export::chrome_trace`] sorts by exactly that key, so two traces of
+//! the same run diff structurally.
+//!
+//! # Overhead contract
+//!
+//! - **Disabled** (the default): every entry point loads one relaxed
+//!   atomic and returns. No clock read, no lock, no allocation, no
+//!   thread-local registration. `bench_hotpath`'s `obs_overhead`
+//!   section pins this.
+//! - **Enabled**: events append to a per-thread shard — an
+//!   uncontended `Mutex<Vec<Event>>` registered on first use (shards of
+//!   exited threads are recycled, so the shard list is bounded by peak
+//!   thread count, not thread churn). An event is a fixed-size struct;
+//!   pushing one performs no per-event heap allocation beyond the
+//!   buffer's amortized growth. Metrics aggregate in place (counters
+//!   and fixed-bucket histograms), so a long-lived daemon can keep
+//!   metrics on forever with bounded memory; only tracing accumulates
+//!   per-event state.
+//!
+//! # Out-of-band invariant
+//!
+//! Observability is strictly write-only with respect to results: no
+//! code path reads recorder state to make a scheduling, seeding, or
+//! reporting decision, so report bytes are identical with tracing on or
+//! off at any thread width (pinned in `rust/tests/integration_obs.rs`).
+//! Wall-clock readings taken here ride only in traces, metrics, and
+//! `Progress` events — never in reports.
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+const TRACE: u8 = 1;
+const METRICS: u8 = 2;
+
+/// Global mode word. The disabled hot path is a single relaxed load of
+/// this atomic — nothing else.
+static FLAGS: AtomicU8 = AtomicU8::new(0);
+
+/// Is the trace buffer recording?
+#[inline]
+pub fn trace_on() -> bool {
+    FLAGS.load(Ordering::Relaxed) & TRACE != 0
+}
+
+/// Are metrics (counters + histograms) aggregating?
+#[inline]
+pub fn metrics_on() -> bool {
+    FLAGS.load(Ordering::Relaxed) & METRICS != 0
+}
+
+/// Is any recording enabled?
+#[inline]
+pub fn enabled() -> bool {
+    FLAGS.load(Ordering::Relaxed) != 0
+}
+
+/// Set the recording mode. Pins the process epoch on first call so all
+/// subsequently recorded timestamps share one origin.
+pub fn enable(trace: bool, metrics: bool) {
+    let _ = epoch();
+    let bits = if trace { TRACE } else { 0 } | if metrics { METRICS } else { 0 };
+    FLAGS.store(bits, Ordering::Relaxed);
+}
+
+/// Turn metrics aggregation on without touching the tracing bit (the
+/// serve daemon keeps daemon-wide metrics live regardless of `--metrics`).
+pub fn enable_metrics() {
+    let _ = epoch();
+    FLAGS.fetch_or(METRICS, Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Maximum key/value tags per event (fixed so events stay `Copy` and
+/// recording never allocates).
+pub const MAX_ARGS: usize = 4;
+
+/// An interned dynamic string (see [`sym`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sym(u32);
+
+/// One tag value. Dynamic strings must come in as [`Sym`]s.
+#[derive(Debug, Clone, Copy)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+    Sym(Sym),
+}
+
+impl From<u64> for ArgValue {
+    fn from(x: u64) -> ArgValue {
+        ArgValue::U64(x)
+    }
+}
+impl From<usize> for ArgValue {
+    fn from(x: usize) -> ArgValue {
+        ArgValue::U64(x as u64)
+    }
+}
+impl From<u32> for ArgValue {
+    fn from(x: u32) -> ArgValue {
+        ArgValue::U64(x as u64)
+    }
+}
+impl From<i64> for ArgValue {
+    fn from(x: i64) -> ArgValue {
+        ArgValue::F64(x as f64)
+    }
+}
+impl From<f64> for ArgValue {
+    fn from(x: f64) -> ArgValue {
+        ArgValue::F64(x)
+    }
+}
+impl From<&'static str> for ArgValue {
+    fn from(x: &'static str) -> ArgValue {
+        ArgValue::Str(x)
+    }
+}
+impl From<Sym> for ArgValue {
+    fn from(x: Sym) -> ArgValue {
+        ArgValue::Sym(x)
+    }
+}
+
+const NO_ARG: (&str, ArgValue) = ("", ArgValue::U64(0));
+
+/// One recorded event: a closed span (or instant, `dur_ns == 0`).
+#[derive(Clone, Copy)]
+pub(crate) struct Event {
+    pub ns: u64,
+    pub dur_ns: u64,
+    pub name: &'static str,
+    pub thread: u32,
+    pub seq: u64,
+    pub n_args: u8,
+    pub args: [(&'static str, ArgValue); MAX_ARGS],
+}
+
+/// Fixed latency buckets (nanoseconds): decades from 1 µs to 10 s, plus
+/// the implicit +Inf bucket. Fixed so histogram memory is constant and
+/// Prometheus `le` labels are stable across runs.
+pub(crate) const BUCKET_BOUNDS_NS: [u64; 8] = [
+    1_000,
+    10_000,
+    100_000,
+    1_000_000,
+    10_000_000,
+    100_000_000,
+    1_000_000_000,
+    10_000_000_000,
+];
+
+#[derive(Clone, Copy)]
+pub(crate) struct Hist {
+    pub buckets: [u64; BUCKET_BOUNDS_NS.len() + 1],
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl Hist {
+    fn zero() -> Hist {
+        Hist { buckets: [0; BUCKET_BOUNDS_NS.len() + 1], count: 0, sum_ns: 0 }
+    }
+
+    fn observe(&mut self, ns: u64) {
+        let i = BUCKET_BOUNDS_NS
+            .iter()
+            .position(|&b| ns <= b)
+            .unwrap_or(BUCKET_BOUNDS_NS.len());
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+    }
+}
+
+/// Per-thread recording shard. Only its owner thread writes (export
+/// takes the locks briefly), so the mutexes are effectively uncontended.
+struct Shard {
+    thread: u32,
+    seq: AtomicU64,
+    events: Mutex<Vec<Event>>,
+    counters: Mutex<Vec<(&'static str, u64)>>,
+    hists: Mutex<Vec<(&'static str, Hist)>>,
+}
+
+struct Shards {
+    all: Vec<Arc<Shard>>,
+    /// Shards whose owner thread exited, available for reuse so thread
+    /// churn (e.g. one serve connection thread per client) does not grow
+    /// the shard list without bound.
+    free: Vec<Arc<Shard>>,
+    next_thread: u32,
+}
+
+fn shards() -> &'static Mutex<Shards> {
+    static SHARDS: OnceLock<Mutex<Shards>> = OnceLock::new();
+    SHARDS.get_or_init(|| Mutex::new(Shards { all: Vec::new(), free: Vec::new(), next_thread: 0 }))
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Owner handle parked in a thread-local; returning the shard to the
+/// free list on thread exit is what bounds the shard count.
+struct LocalHandle(Arc<Shard>);
+
+impl Drop for LocalHandle {
+    fn drop(&mut self) {
+        lock(shards()).free.push(Arc::clone(&self.0));
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalHandle>> = const { RefCell::new(None) };
+}
+
+/// Run `f` against this thread's shard, registering one on first use.
+/// Silently drops the record if the thread-local is already destroyed
+/// (only possible from other TLS destructors, which never record).
+fn with_shard(f: impl FnOnce(&Shard)) {
+    let _ = LOCAL.try_with(|cell| {
+        let mut cell = cell.borrow_mut();
+        if cell.is_none() {
+            let mut s = lock(shards());
+            let shard = s.free.pop().unwrap_or_else(|| {
+                let shard = Arc::new(Shard {
+                    thread: s.next_thread,
+                    seq: AtomicU64::new(0),
+                    events: Mutex::new(Vec::new()),
+                    counters: Mutex::new(Vec::new()),
+                    hists: Mutex::new(Vec::new()),
+                });
+                s.next_thread += 1;
+                s.all.push(Arc::clone(&shard));
+                shard
+            });
+            *cell = Some(LocalHandle(shard));
+        }
+        f(&cell.as_ref().expect("shard registered above").0);
+    });
+}
+
+struct Interner {
+    map: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+fn interner() -> &'static Mutex<Interner> {
+    static INTERNER: OnceLock<Mutex<Interner>> = OnceLock::new();
+    INTERNER.get_or_init(|| Mutex::new(Interner { map: HashMap::new(), names: Vec::new() }))
+}
+
+/// Intern a dynamic string so events can carry it without allocating.
+/// Call only on enabled paths (gate on [`enabled`] first): interning
+/// itself takes a lock and may allocate once per distinct string.
+pub fn sym(s: &str) -> Sym {
+    let mut int = lock(interner());
+    if let Some(&id) = int.map.get(s) {
+        return Sym(id);
+    }
+    let id = int.names.len() as u32;
+    int.map.insert(s.to_string(), id);
+    int.names.push(s.to_string());
+    Sym(id)
+}
+
+/// Resolve an interned symbol back to its string (export-time only).
+pub(crate) fn sym_name(s: Sym) -> String {
+    lock(interner()).names.get(s.0 as usize).cloned().unwrap_or_default()
+}
+
+/// An in-flight span. Dropping it records the event; [`Span::kv`] /
+/// [`Span::note`] attach tags (the builder form for construction-time
+/// tags, the `&mut` form for outcomes known only at the end).
+pub struct Span {
+    active: bool,
+    name: &'static str,
+    start_ns: u64,
+    n_args: u8,
+    args: [(&'static str, ArgValue); MAX_ARGS],
+}
+
+/// Open a span starting now. When recording is off this is one relaxed
+/// atomic load and a trivially droppable return value.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if FLAGS.load(Ordering::Relaxed) == 0 {
+        return Span { active: false, name, start_ns: 0, n_args: 0, args: [NO_ARG; MAX_ARGS] };
+    }
+    Span { active: true, name, start_ns: now_ns(), n_args: 0, args: [NO_ARG; MAX_ARGS] }
+}
+
+/// Open a span retroactively, starting at `started` (e.g. a queue-wait
+/// measured from enqueue time). Instants predating the process epoch
+/// clamp to 0.
+#[inline]
+pub fn span_at(name: &'static str, started: Instant) -> Span {
+    if FLAGS.load(Ordering::Relaxed) == 0 {
+        return Span { active: false, name, start_ns: 0, n_args: 0, args: [NO_ARG; MAX_ARGS] };
+    }
+    let start_ns = started
+        .checked_duration_since(epoch())
+        .map_or(0, |d| d.as_nanos() as u64);
+    Span { active: true, name, start_ns, n_args: 0, args: [NO_ARG; MAX_ARGS] }
+}
+
+impl Span {
+    /// Attach a tag (builder form). Tags beyond [`MAX_ARGS`] are dropped.
+    #[inline]
+    pub fn kv(mut self, key: &'static str, value: impl Into<ArgValue>) -> Span {
+        self.note(key, value);
+        self
+    }
+
+    /// Attach a tag to a held guard (for outcomes known at completion).
+    #[inline]
+    pub fn note(&mut self, key: &'static str, value: impl Into<ArgValue>) {
+        if !self.active {
+            return;
+        }
+        if (self.n_args as usize) < MAX_ARGS {
+            self.args[self.n_args as usize] = (key, value.into());
+            self.n_args += 1;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_ns();
+        let dur_ns = end.saturating_sub(self.start_ns);
+        let (name, start_ns, n_args, args) = (self.name, self.start_ns, self.n_args, self.args);
+        let flags = FLAGS.load(Ordering::Relaxed);
+        with_shard(|shard| {
+            if flags & TRACE != 0 {
+                let seq = shard.seq.fetch_add(1, Ordering::Relaxed);
+                lock(&shard.events).push(Event {
+                    ns: start_ns,
+                    dur_ns,
+                    name,
+                    thread: shard.thread,
+                    seq,
+                    n_args,
+                    args,
+                });
+            }
+            if flags & METRICS != 0 {
+                let mut hists = lock(&shard.hists);
+                match hists.iter_mut().find(|(n, _)| *n == name) {
+                    Some((_, h)) => h.observe(dur_ns),
+                    None => {
+                        let mut h = Hist::zero();
+                        h.observe(dur_ns);
+                        hists.push((name, h));
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Bump a named monotone counter. One relaxed load when recording is
+/// off; aggregated in place (no per-event state) when on.
+#[inline]
+pub fn counter(name: &'static str, delta: u64) {
+    if FLAGS.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    with_shard(|shard| {
+        let mut counters = lock(&shard.counters);
+        match counters.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, v)) => *v += delta,
+            None => counters.push((name, delta)),
+        }
+    });
+}
+
+/// Number of trace events recorded so far, across all threads.
+pub fn event_count() -> usize {
+    let s = lock(shards());
+    s.all.iter().map(|shard| lock(&shard.events).len()).sum()
+}
+
+/// Clear all recorded events, counters, and histograms (shards stay
+/// registered). A test/bench seam: production code never truncates.
+pub fn reset() {
+    let s = lock(shards());
+    for shard in &s.all {
+        lock(&shard.events).clear();
+        lock(&shard.counters).clear();
+        lock(&shard.hists).clear();
+    }
+}
+
+/// Canonical snapshot of all events, sorted by `(ns, thread, seq)`.
+pub(crate) fn snapshot_events() -> Vec<Event> {
+    let s = lock(shards());
+    let mut out = Vec::new();
+    for shard in &s.all {
+        out.extend(lock(&shard.events).iter().copied());
+    }
+    drop(s);
+    out.sort_by_key(|e| (e.ns, e.thread, e.seq));
+    out
+}
+
+/// Aggregated (counters, histograms), each sorted by name.
+pub(crate) fn snapshot_metrics() -> (Vec<(&'static str, u64)>, Vec<(&'static str, Hist)>) {
+    let s = lock(shards());
+    let mut counters: Vec<(&'static str, u64)> = Vec::new();
+    let mut hists: Vec<(&'static str, Hist)> = Vec::new();
+    for shard in &s.all {
+        for &(name, v) in lock(&shard.counters).iter() {
+            match counters.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, total)) => *total += v,
+                None => counters.push((name, v)),
+            }
+        }
+        for &(name, h) in lock(&shard.hists).iter() {
+            match hists.iter_mut().find(|(n, _)| *n == name) {
+                Some((_, total)) => {
+                    for (b, add) in total.buckets.iter_mut().zip(h.buckets.iter()) {
+                        *b += add;
+                    }
+                    total.count += h.count;
+                    total.sum_ns = total.sum_ns.saturating_add(h.sum_ns);
+                }
+                None => hists.push((name, h)),
+            }
+        }
+    }
+    counters.sort_by_key(|(n, _)| *n);
+    hists.sort_by_key(|(n, _)| *n);
+    (counters, hists)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Recording is process-global; serialize the tests that toggle it.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    // Other unit tests in this binary run concurrently through
+    // instrumented code, so while a test here has recording enabled the
+    // global buffers may pick up their events too — assert only on this
+    // module's own "test."-prefixed names.
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = guard();
+        enable(false, false);
+        reset();
+        {
+            let _s = span("test.noop").kv("k", 1u64);
+        }
+        counter("test.counter", 3);
+        let events = snapshot_events();
+        assert!(events.iter().all(|e| !e.name.starts_with("test.")));
+        let (counters, hists) = snapshot_metrics();
+        assert!(counters.iter().all(|(n, _)| !n.starts_with("test.")));
+        assert!(hists.iter().all(|(n, _)| !n.starts_with("test.")));
+    }
+
+    #[test]
+    fn spans_record_args_and_canonical_order() {
+        let _g = guard();
+        enable(true, true);
+        {
+            let mut s = span("test.outer").kv("n", 2u64);
+            s.note("outcome", "ok");
+        }
+        {
+            let _s = span("test.inner");
+        }
+        counter("test.hits", 2);
+        counter("test.hits", 1);
+        let events = snapshot_events();
+        enable(false, false);
+        reset();
+        let mine: Vec<_> = events.iter().filter(|e| e.name.starts_with("test.")).collect();
+        assert_eq!(mine.len(), 2);
+        // Canonical order: by start ns (outer opened first).
+        assert_eq!(mine[0].name, "test.outer");
+        assert_eq!(mine[0].n_args, 2);
+        assert!(events.windows(2).all(|w| {
+            (w[0].ns, w[0].thread, w[0].seq) <= (w[1].ns, w[1].thread, w[1].seq)
+        }));
+    }
+
+    #[test]
+    fn syms_intern_and_resolve() {
+        let a = sym("gemm@A100");
+        let b = sym("gemm@A100");
+        assert_eq!(a, b);
+        assert_eq!(sym_name(a), "gemm@A100");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_safe() {
+        let mut h = Hist::zero();
+        h.observe(500); // ≤ 1µs bucket
+        h.observe(5_000_000); // ≤ 10ms bucket
+        h.observe(u64::MAX); // +Inf bucket
+        assert_eq!(h.count, 3);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[BUCKET_BOUNDS_NS.len()], 1);
+    }
+}

@@ -39,6 +39,7 @@ use super::arena::slice_bytes;
 use super::format::{self, LoadError, LoadMode, SectionOut, FORMAT_VERSION};
 use crate::kernels::gpu::GpuSpec;
 use crate::kernels::{space_salt, MODEL_REVISION};
+use crate::obs;
 use crate::searchspace::constraint::Constraint;
 use crate::searchspace::param::{ParamSet, Value};
 use crate::searchspace::{Application, NeighborKind, SearchSpace};
@@ -199,6 +200,7 @@ pub fn save_space_tagged(
     space: &SearchSpace,
     fingerprint: u64,
 ) -> std::io::Result<()> {
+    let mut sp = obs::span("persist.save_space");
     let parts: Vec<(&[u64], &[u32])> = NeighborKind::ALL
         .iter()
         .map(|&k| space.graph_parts(k))
@@ -209,13 +211,34 @@ pub fn save_space_tagged(
         sections.push((sec_csr_offsets(slot), 8, slice_bytes(offsets)));
         sections.push((sec_csr_data(slot), 4, slice_bytes(rows)));
     }
-    format::write(path, FORMAT_VERSION, fingerprint, &sections)
+    let out = format::write(path, FORMAT_VERSION, fingerprint, &sections);
+    sp.note("outcome", if out.is_ok() { "ok" } else { "error" });
+    out
 }
 
 /// Load a space for `app`, verifying fingerprint, checksums and every
 /// structural invariant. `LoadMode::Mmap` yields arenas borrowing the
 /// mapping (zero-copy); `LoadMode::Read` copies into owned `Vec`s.
 pub fn load_space(path: &Path, app: Application, mode: LoadMode) -> Result<SearchSpace, LoadError> {
+    let mut sp = obs::span("persist.load_space");
+    let out = load_space_inner(path, app, mode);
+    sp.note("outcome", load_outcome_label(&out));
+    out
+}
+
+fn load_outcome_label<T>(out: &Result<T, LoadError>) -> &'static str {
+    match out {
+        Ok(_) => "ok",
+        Err(LoadError::Missing) => "missing",
+        Err(_) => "rejected",
+    }
+}
+
+fn load_space_inner(
+    path: &Path,
+    app: Application,
+    mode: LoadMode,
+) -> Result<SearchSpace, LoadError> {
     let spec = app.space_spec();
     let expected = space_fingerprint(spec.name, &spec.params, spec.constraints.iter().copied());
     let loaded = format::read(path, mode)?;
@@ -257,13 +280,16 @@ pub fn save_cache(path: &Path, cache: &Cache) -> std::io::Result<()> {
 
 /// [`save_cache`] with an explicit fingerprint tag (test tamper seam).
 pub fn save_cache_tagged(path: &Path, cache: &Cache, fingerprint: u64) -> std::io::Result<()> {
+    let mut sp = obs::span("persist.save_cache");
     let summary = [cache.optimum_ms, cache.median_ms, cache.mean_eval_cost_s];
     let sections: Vec<SectionOut<'_>> = vec![
         (SEC_MEAN_MS, 4, slice_bytes(&cache.mean_ms)),
         (SEC_COMPILE_S, 4, slice_bytes(&cache.compile_s)),
         (SEC_SUMMARY, 8, slice_bytes(&summary)),
     ];
-    format::write(path, FORMAT_VERSION, fingerprint, &sections)
+    let out = format::write(path, FORMAT_VERSION, fingerprint, &sections);
+    sp.note("outcome", if out.is_ok() { "ok" } else { "error" });
+    out
 }
 
 /// Load the cache for (app, gpu) against an already-resolved space,
@@ -271,6 +297,19 @@ pub fn save_cache_tagged(path: &Path, cache: &Cache, fingerprint: u64) -> std::i
 /// statistics from the loaded arenas and asserting exact (bitwise f64)
 /// equality with the stored triple.
 pub fn load_cache(
+    path: &Path,
+    app: Application,
+    gpu: &'static GpuSpec,
+    space: Arc<SearchSpace>,
+    mode: LoadMode,
+) -> Result<Cache, LoadError> {
+    let mut sp = obs::span("persist.load_cache");
+    let out = load_cache_inner(path, app, gpu, space, mode);
+    sp.note("outcome", load_outcome_label(&out));
+    out
+}
+
+fn load_cache_inner(
     path: &Path,
     app: Application,
     gpu: &'static GpuSpec,

@@ -33,6 +33,7 @@ use crate::coordinator::{
     COORDINATE_TITLE,
 };
 use crate::hypertune::{sweep, sweep_json, MetaStrategy, MetaTuning};
+use crate::obs;
 use crate::optimizers::OptimizerSpec;
 use crate::util::cancel::CancelToken;
 use crate::util::error::panic_message;
@@ -85,6 +86,10 @@ impl Server {
     pub fn bind(addr: &str, config: ServeConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
+        // A daemon always aggregates metrics: they feed the `status`
+        // response's "metrics" block. Aggregation is in-place (bounded
+        // memory), so this is safe for arbitrarily long uptimes.
+        obs::enable_metrics();
         Ok(Server {
             listener,
             addr,
@@ -217,6 +222,7 @@ fn status_event(shared: &Shared) -> Json {
     j.set("active_sessions", shared.sessions.active());
     j.set("sessions", rows);
     j.set("jobs", totals.to_json());
+    j.set("metrics", obs::export::metrics_json());
     j.set("caches", CacheRegistry::global().caches_json());
     j
 }
@@ -305,6 +311,7 @@ fn handle_submit(shared: &Arc<Shared>, stream: &TcpStream, spec: SubmitSpec) {
     if shared.config.queue_cap > 0 {
         let used = shared.pool.outstanding();
         if used + jobs_total > shared.config.queue_cap {
+            obs::counter("serve.rejected_queue_cap", 1);
             return send(
                 stream,
                 &error_event(&format!(
@@ -318,6 +325,7 @@ fn handle_submit(shared: &Arc<Shared>, stream: &TcpStream, spec: SubmitSpec) {
     let Some(session) =
         shared.sessions.try_register(spec.describe(), jobs_total, shared.config.max_sessions)
     else {
+        obs::counter("serve.rejected_sessions", 1);
         return send(
             stream,
             &error_event(&format!(
@@ -336,9 +344,11 @@ fn handle_submit(shared: &Arc<Shared>, stream: &TcpStream, spec: SubmitSpec) {
     if let Ok(writer) = stream.try_clone() {
         session.attach(writer);
     }
+    let mut session_span = obs::span("serve.session").kv("session", sid).kv("jobs", jobs_total);
     let outcome = catch_unwind(AssertUnwindSafe(|| run_session(shared, &session, prepared)));
     match outcome {
         Ok((mut report, phase)) => {
+            session_span.note("outcome", phase.label());
             // Run metadata, outside the byte-identity contract — exactly
             // like the CLI's `write_report`.
             report.set("caches", CacheRegistry::global().caches_json());
@@ -346,6 +356,7 @@ fn handle_submit(shared: &Arc<Shared>, stream: &TcpStream, spec: SubmitSpec) {
             session.broadcast(&report_event(sid, report));
         }
         Err(payload) => {
+            session_span.note("outcome", Phase::Failed.label());
             session.finish(Phase::Failed, None);
             session.broadcast(&error_event(&format!(
                 "session {} failed: {}",

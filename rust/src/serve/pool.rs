@@ -43,11 +43,13 @@
 
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::coordinator::executor::{execute_isolated, ProgressSink};
 use crate::coordinator::{
     BatchResult, BatchRunner, JobHandle, JobOutcome, OwnedJob, Priority, Progress,
 };
+use crate::obs;
 use crate::util::cancel::CancelToken;
 use crate::util::parallel;
 
@@ -92,6 +94,8 @@ struct Batch {
     completed: usize,
     events: VecDeque<Progress>,
     done: bool,
+    /// Submission time, the origin for `Progress::Finished::elapsed_us`.
+    t0: Instant,
 }
 
 /// Drain a batch's pending jobs to `Cancelled` (session cancel,
@@ -199,6 +203,7 @@ impl SharedPool {
                 completed: 0,
                 events: VecDeque::new(),
                 done: jobs.is_empty(),
+                t0: Instant::now(),
             };
             if st.shutdown {
                 st.outstanding -= drain_pending(&mut batch);
@@ -305,6 +310,7 @@ impl SharedPool {
                         .min_by_key(|(_, b)| (b.started, b.seq))
                         .map(|(i, _)| i);
                     if let Some(bi) = pick {
+                        obs::counter("serve.pool.picks", 1);
                         let b = &mut st.batches[bi];
                         let p = b.pending.pop().expect("picked batch has pending work");
                         b.started += 1;
@@ -316,7 +322,12 @@ impl SharedPool {
             };
             // Deliver the Started event before the (long) execution.
             self.cond.notify_all();
+            let mut job_span = obs::span("serve.pool.job")
+                .kv("slot", slot)
+                .kv("priority", job.priority);
             let outcome = execute_isolated(&job.as_job(), &cancel);
+            job_span.note("outcome", outcome.label());
+            drop(job_span);
             {
                 let mut st = self.state.lock().unwrap();
                 let b = st
@@ -327,7 +338,11 @@ impl SharedPool {
                 let event = match &outcome {
                     JobOutcome::Completed(_) => {
                         b.completed += 1;
-                        Progress::Finished { slot, completed: b.completed }
+                        Progress::Finished {
+                            slot,
+                            completed: b.completed,
+                            elapsed_us: b.t0.elapsed().as_micros() as u64,
+                        }
                     }
                     JobOutcome::Cancelled => Progress::Cancelled { slot },
                     JobOutcome::Failed(e) => Progress::Failed { slot, error: e.clone() },

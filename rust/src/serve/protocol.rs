@@ -178,10 +178,11 @@ pub fn progress_event(session: u64, ev: &Progress) -> Json {
             j.set("kind", "started");
             j.set("slot", *slot);
         }
-        Progress::Finished { slot, completed } => {
+        Progress::Finished { slot, completed, elapsed_us } => {
             j.set("kind", "finished");
             j.set("slot", *slot);
             j.set("completed", *completed);
+            j.set("elapsed_us", *elapsed_us);
         }
         Progress::Cancelled { slot } => {
             j.set("kind", "cancelled");

@@ -1,0 +1,156 @@
+//! Integration: the observability layer's master contract.
+//!
+//! - **Out-of-band invariant**: report bytes are identical with tracing
+//!   on vs off, for a coordinate-style grid and a grid sweep, at widths
+//!   1 and 8 (`LLAMEA_KT_TEST_THREADS` governs the wide width, matching
+//!   the CI matrix).
+//! - **Trace well-formedness**: every exported event is a complete
+//!   ("X") span — closed by construction — the canonical
+//!   `(epoch-ns, thread, seq)` order is monotone, and the trace carries
+//!   spans from at least four layers of the stack.
+//! - **Disabled recorder**: a full grid run with recording off stores
+//!   exactly zero events and an empty metrics snapshot.
+
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use llamea_kt::coordinator::{
+    coordinate_report, grid_jobs, CacheKey, CacheRegistry, Executor, SpaceEntry, COORDINATE_TITLE,
+};
+use llamea_kt::hypertune::{sweep, sweep_json, MetaStrategy, MetaTuning};
+use llamea_kt::methodology::OptimizerFactory;
+use llamea_kt::obs;
+use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::util::json::Json;
+use llamea_kt::util::parallel::test_width;
+
+/// Recording is process-global; every test here toggles it, so they
+/// serialize on one lock and restore the disabled state before exiting.
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn conv_entries(reg: &CacheRegistry) -> Vec<Arc<SpaceEntry>> {
+    vec![
+        reg.entry(CacheKey::parse("convolution@A4000").unwrap()),
+        reg.entry(CacheKey::parse("convolution@W6600").unwrap()),
+    ]
+}
+
+/// GA with everything but `elites` pinned: a 4-point meta space keeps
+/// the sweep cheap.
+fn ga_narrow() -> OptimizerSpec {
+    OptimizerSpec::parse(
+        "ga:population_size=8,tournament_k=2,crossover_rate=0.8,mutation_rate_factor=0.8",
+    )
+    .unwrap()
+}
+
+/// One coordinate-style grid run at `width`, serialized to report bytes.
+/// Library-level reports carry no `"caches"` block (that is `main`'s
+/// run-metadata append), so this is a true byte-for-byte comparison.
+fn coordinate_bytes(reg: &CacheRegistry, width: usize) -> String {
+    let entries = conv_entries(reg);
+    let owned: Vec<(String, OptimizerSpec)> = ["sa", "random"]
+        .iter()
+        .map(|n| (n.to_string(), OptimizerSpec::named(*n)))
+        .collect();
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        owned.iter().map(|(l, s)| (l.clone(), s as &dyn OptimizerFactory)).collect();
+    let jobs = grid_jobs(&entries, &factories, 2, 2026);
+    let batch = Executor::new(width).run_jobs(&jobs);
+    let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+    coordinate_report(COORDINATE_TITLE, &ids, &labels, &batch).to_string()
+}
+
+/// One grid-strategy sweep at `width`, serialized to report bytes.
+fn sweep_bytes(width: usize) -> String {
+    let entries =
+        vec![CacheRegistry::global().entry(CacheKey::parse("convolution@A4000").unwrap())];
+    let mt = MetaTuning::new(ga_narrow(), entries, 2, 9, Some(width)).unwrap();
+    let outcome = sweep(&mt, &MetaStrategy::Grid, 9);
+    sweep_json(&mt, &outcome, 9).to_string()
+}
+
+/// The master contract: observability is strictly out-of-band, so the
+/// exact report bytes of a traced run equal the untraced reference at
+/// every thread width.
+#[test]
+fn reports_are_byte_identical_with_tracing_on_and_off() {
+    let _g = guard();
+    obs::enable(false, false);
+    let reg = CacheRegistry::global();
+    let coordinate_ref = coordinate_bytes(reg, 1);
+    let sweep_ref = sweep_bytes(1);
+    obs::enable(true, true);
+    for width in [1, test_width(8)] {
+        assert_eq!(
+            coordinate_bytes(reg, width),
+            coordinate_ref,
+            "coordinate report changed with tracing on at width {}",
+            width
+        );
+        assert_eq!(
+            sweep_bytes(width),
+            sweep_ref,
+            "sweep report changed with tracing on at width {}",
+            width
+        );
+    }
+    obs::enable(false, false);
+    obs::reset();
+}
+
+#[test]
+fn trace_is_well_formed_and_spans_every_layer() {
+    let _g = guard();
+    obs::enable(true, true);
+    obs::reset();
+    // A fresh registry so the cache-resolution spans fire here (the
+    // global registry may already hold these keys); the sweep adds the
+    // hypertune layer on top of executor + tuning.
+    let reg = CacheRegistry::new();
+    let _ = coordinate_bytes(&reg, test_width(8));
+    let _ = sweep_bytes(2);
+    let doc = obs::export::chrome_trace();
+    obs::enable(false, false);
+    obs::reset();
+
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "a full grid + sweep must record spans");
+    let mut last = (0u64, 0u64, 0u64);
+    for (i, e) in events.iter().enumerate() {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "event {} not complete", i);
+        assert!(e.get("dur").and_then(Json::as_usize).is_some(), "event {} has no dur", i);
+        let args = e.get("args").expect("events carry args");
+        let key = (
+            args.get("ns").and_then(Json::as_usize).expect("exact ns in args") as u64,
+            e.get("tid").and_then(Json::as_usize).expect("tid") as u64,
+            args.get("seq").and_then(Json::as_usize).expect("seq in args") as u64,
+        );
+        assert!(i == 0 || last <= key, "canonical order violated: {:?} then {:?}", last, key);
+        last = key;
+    }
+    // Spans from at least four layers of the stack.
+    for prefix in ["registry.", "executor.", "tuning.", "hypertune."] {
+        assert!(
+            events.iter().any(|e| {
+                e.get("name").and_then(Json::as_str).unwrap_or("").starts_with(prefix)
+            }),
+            "no {}* span in the trace",
+            prefix
+        );
+    }
+}
+
+#[test]
+fn disabled_recorder_stores_exactly_zero_events_under_a_full_grid() {
+    let _g = guard();
+    obs::enable(false, false);
+    obs::reset();
+    let reg = CacheRegistry::new();
+    let _ = coordinate_bytes(&reg, test_width(8));
+    assert_eq!(obs::event_count(), 0, "disabled recorder must store nothing");
+    assert_eq!(obs::export::metrics_text(), "", "disabled metrics must be empty");
+}
