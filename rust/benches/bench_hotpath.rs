@@ -139,6 +139,51 @@ fn main() {
     results.push(warm);
     let _ = std::fs::remove_dir_all(&store);
 
+    // Portfolio-racing overhead: the bandit's rung-boundary decision over
+    // a 16-arm roster (reward ingestion + UCB ranking + halving keep),
+    // and the GP surrogate's fit-plus-acquisition step at the largest
+    // train_window the domain grid allows. Both sit on the tuning control
+    // path, so their per-step cost must stay microseconds.
+    common::section("racing");
+    results.push(common::bench("bandit_step 16-arm decision", 1, 10, || {
+        use llamea_kt::coordinator::{decide, rung_rewards, Bandit};
+        let mut acc = 0usize;
+        for round in 0..1_000u64 {
+            let mut bandit = Bandit::new(16);
+            let live: Vec<usize> = (0..16).collect();
+            let inputs: Vec<(usize, f64, f64, f64)> = (0..16)
+                .map(|a| (a, 0.5 + ((a as u64 + round) % 7) as f64 * 0.05, 0.4, 30.0))
+                .collect();
+            let rewards = rung_rewards(&inputs);
+            let last: Vec<f64> = inputs.iter().map(|&(_, s, _, _)| s).collect();
+            let (survivors, _) = decide(&mut bandit, &live, &rewards, &last, 2);
+            acc += survivors.len();
+        }
+        std::hint::black_box(acc);
+    }));
+
+    let gp_points: Vec<(Vec<f64>, f64)> = {
+        let mut rng = Rng::new(7);
+        let mut pts = Vec::with_capacity(96);
+        while pts.len() < 96 {
+            let i = rng.below(space.len()) as u32;
+            let y = cache.mean_ms[i as usize];
+            if y.is_finite() {
+                pts.push((space.values_f64(i), y));
+            }
+        }
+        pts
+    };
+    results.push(common::bench("gp_fit_predict 96pts + 1k EI queries", 1, 5, || {
+        use llamea_kt::optimizers::bayes_opt::fit_gp;
+        let gp = fit_gp(&gp_points, 2.0).expect("bench window must be fittable");
+        let mut acc = 0.0;
+        for (x, _) in gp_points.iter().cycle().take(1_000) {
+            acc += gp.expected_improvement(x, 0.01);
+        }
+        std::hint::black_box(acc);
+    }));
+
     // Observability recorder: the disabled hot path is the one every
     // span call site pays in a normal run (contract: one relaxed atomic
     // load, no clock read); the enabled rows show what a recorded span

@@ -31,6 +31,11 @@
 //!   (`catch_unwind` → [`executor::JobOutcome::Failed`]), and streams
 //!   [`executor::Progress`] events to an optional consumer (the CLI live
 //!   line, sweep counters).
+//! - [`race`]: portfolio racing over the executor seam — many optimizers
+//!   on one space as Hyperband-style budget rungs, a UCB1 bandit
+//!   reallocating evaluation budget by observed improvement-per-cost,
+//!   escalating winners' priorities and cancelling losers through
+//!   pre-fired tokens (see the module's determinism contract).
 //! - [`scheduler`]: the drain-all compatibility wrapper
 //!   ([`scheduler::Scheduler::run`] = run every job, return plain
 //!   curves) kept over the executor during the execution-API transition.
@@ -62,6 +67,7 @@
 
 pub mod executor;
 pub mod job;
+pub mod race;
 pub mod registry;
 pub mod report;
 pub mod scheduler;
@@ -74,6 +80,10 @@ pub use executor::{
 pub use job::{
     collect_jobs, grid_jobs, grid_source, job_seed, source_jobs, source_jobs_source, OwnedJob,
     TuningJob,
+};
+pub use race::{
+    decide, race_json, race_report, race_table, run_race, run_race_observed, rung_rewards,
+    ArmResult, ArmStats, Bandit, Decision, RaceConfig, RaceOutcome, RACE_TITLE,
 };
 pub use registry::{CacheEvent, CacheKey, CacheOutcome, CacheRegistry, SpaceEntry};
 pub use report::{

@@ -1,0 +1,748 @@
+//! Optimizer portfolio racing: bandit budget reallocation over the
+//! executor's priority/cancel seam.
+//!
+//! The paper's central observation is that no single optimizer dominates
+//! across (kernel, GPU, budget) triples. A **race** exploits that at
+//! runtime: many optimizers (the *arms* — any registry spec, including
+//! LLaMEA genomes) attack the same space as one streamed batch, and a
+//! UCB1 bandit reallocates evaluation budget toward whoever is winning
+//! instead of draining the full grid uniformly.
+//!
+//! ## Vocabulary
+//!
+//! - **Arm**: one `OptimizerSpec` in the portfolio. Each arm's seed is
+//!   `job_seed(seed, space, label, 0)` — exactly the seed a
+//!   `coordinate --runs 1` grid gives that optimizer on that space.
+//! - **Rung**: one Hyperband-style budget level. Rung `k` of `R` runs
+//!   every surviving arm as a *complete, uninterrupted* tuning job at
+//!   budget `B / eta^(R−1−k)`; the final rung uses the space's canonical
+//!   [`SpaceSetup`] verbatim (same budget, same sample grid), so a
+//!   finalist's curve is bit-identical to its standalone run.
+//! - **Decision**: at each rung boundary the bandit ingests one reward
+//!   per arm — observed score improvement per modeled second spent
+//!   ([`rung_rewards`]), min-max normalized across the rung — and keeps
+//!   the top `⌈n/eta⌉` by UCB ([`crate::hypertune::halving_keep`], the
+//!   same rule as hypertune's successive halving), always including the
+//!   incumbent (current best score). Survivors' job [`Priority`]s are
+//!   escalated by UCB rank; each eliminated arm has a pre-fired
+//!   [`CancelToken`] attached to one last next-rung job, so its
+//!   cancellation flows through the real executor seam (counted in the
+//!   batch's `JobsSummary`) instead of being silently skipped.
+//! - **Winner**: the best final-rung score (ties to the lowest arm
+//!   ordinal).
+//!
+//! A single surviving arm short-circuits the remaining intermediate
+//! rungs and jumps straight to the final full-budget rung — the
+//! "hopeless rungs are never drained" half of Hyperband.
+//!
+//! ## Determinism contract
+//!
+//! Bandit decisions consume only the deterministic modeled signals — the
+//! simulated-clock trajectory (`spent_s`, scores from performance
+//! curves) — never wall-clock or `obs` measurements. Decisions happen
+//! only at rung boundaries, after every roster job has a slot-indexed
+//! outcome (pre-fired tokens cancel deterministically at the first
+//! budget check), so a race outcome is a pure function of
+//! `(entry, specs, eta, rungs, seed)`: byte-identical reports for any
+//! `--threads` width, and a curve that completes under racing is
+//! bit-identical to its standalone run (cancellation varies *which* arms
+//! finish, never a finished curve — the PR 5 invariant).
+//!
+//! Instrumentation (`race.decision` spans, `race.escalations` /
+//! `race.cancellations` counters) is strictly out-of-band, like every
+//! other `obs` hook.
+
+use std::sync::{Arc, Mutex};
+
+use super::executor::{
+    Executor, FnSource, JobOutcome, JobsSummary, Priority, Progress, ProgressSink, SourcedJob,
+};
+use super::job::{job_seed, TuningJob};
+use super::registry::SpaceEntry;
+use crate::hypertune::halving_keep;
+use crate::methodology::curve::sample_times;
+use crate::methodology::{Baseline, OptimizerFactory, SpaceSetup};
+use crate::obs;
+use crate::optimizers::{Optimizer, OptimizerSpec};
+use crate::tuning::{BackendSource, TuningContext};
+use crate::util::cancel::CancelToken;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+
+/// Title of the race report (the analog of `COORDINATE_TITLE`).
+pub const RACE_TITLE: &str = "LLaMEA-KT portfolio race";
+
+/// Race parameters. `eta`/`rungs` shape the budget ladder; `seed` feeds
+/// [`job_seed`]; `cancel` is the external (Ctrl-C) token — per-arm racing
+/// tokens are managed internally.
+#[derive(Clone)]
+pub struct RaceConfig {
+    /// Halving reduction factor (clamped to ≥ 2).
+    pub eta: usize,
+    /// Number of budget rungs (clamped to ≥ 1); the final rung runs at
+    /// the space's full canonical budget.
+    pub rungs: usize,
+    /// Base seed for [`job_seed`] derivation.
+    pub seed: u64,
+    /// Worker count (`None` = process default). Never changes output.
+    pub threads: Option<usize>,
+    /// External cancellation (SIGINT); fires `interrupted` outcomes.
+    pub cancel: Option<CancelToken>,
+}
+
+impl Default for RaceConfig {
+    fn default() -> RaceConfig {
+        RaceConfig { eta: 2, rungs: 3, seed: 0, threads: None, cancel: None }
+    }
+}
+
+/// A UCB1 bandit over a fixed arm set. Deterministic: no randomness —
+/// `rank_subset` breaks ties by ascending arm ordinal, and unplayed arms
+/// rank first (infinite optimism), also by ordinal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bandit {
+    sums: Vec<f64>,
+    plays: Vec<u64>,
+    total: u64,
+}
+
+impl Bandit {
+    pub fn new(arms: usize) -> Bandit {
+        Bandit { sums: vec![0.0; arms], plays: vec![0; arms], total: 0 }
+    }
+
+    pub fn arms(&self) -> usize {
+        self.plays.len()
+    }
+
+    /// Ingest one reward observation (non-finite rewards count as 0).
+    pub fn update(&mut self, arm: usize, reward: f64) {
+        self.sums[arm] += if reward.is_finite() { reward } else { 0.0 };
+        self.plays[arm] += 1;
+        self.total += 1;
+    }
+
+    /// The UCB1 index: mean reward plus the exploration bonus
+    /// `sqrt(2 ln T / n_arm)`; infinite for unplayed arms.
+    pub fn ucb(&self, arm: usize) -> f64 {
+        let n = self.plays[arm];
+        if n == 0 {
+            return f64::INFINITY;
+        }
+        let mean = self.sums[arm] / n as f64;
+        mean + (2.0 * (self.total.max(1) as f64).ln() / n as f64).sqrt()
+    }
+
+    /// Rank a subset of arms by UCB, best first; ties (including the
+    /// all-infinite cold start) break by ascending arm ordinal.
+    pub fn rank_subset(&self, arms: &[usize]) -> Vec<usize> {
+        let mut ranked: Vec<usize> = arms.to_vec();
+        ranked.sort_by(|&a, &b| self.ucb(b).total_cmp(&self.ucb(a)).then(a.cmp(&b)));
+        ranked
+    }
+}
+
+/// Deterministic per-run statistics captured from the tuning context by
+/// the probe wrapper — all modeled (simulated clock), never wall-clock.
+#[derive(Debug, Clone, Copy)]
+pub struct ArmStats {
+    pub evals: u64,
+    pub unique_evals: u64,
+    /// Modeled seconds consumed (`ctx.elapsed_s()`).
+    pub spent_s: f64,
+    pub best_ms: f64,
+}
+
+/// One rung's reward inputs for a single arm: `(arm, score, prev_score,
+/// spent_s)` — this rung's score, the arm's previous-rung score (0 on the
+/// first rung), and the modeled seconds the rung consumed.
+pub type RewardInput = (usize, f64, f64, f64);
+
+/// The bandit reward of each arm for one rung: raw reward is score
+/// improvement per modeled second (`max(0, score − prev) / spent`),
+/// min-max normalized to `[0, 1]` across the rung so one space's score
+/// scale never drowns the exploration bonus. A degenerate rung (all
+/// equal) rewards everyone 0.5.
+pub fn rung_rewards(inputs: &[RewardInput]) -> Vec<(usize, f64)> {
+    let raw: Vec<(usize, f64)> = inputs
+        .iter()
+        .map(|&(arm, score, prev, spent)| (arm, (score - prev).max(0.0) / spent.max(1e-9)))
+        .collect();
+    let lo = raw.iter().map(|&(_, r)| r).fold(f64::INFINITY, f64::min);
+    let hi = raw.iter().map(|&(_, r)| r).fold(f64::NEG_INFINITY, f64::max);
+    raw.iter()
+        .map(|&(arm, r)| (arm, if hi > lo { (r - lo) / (hi - lo) } else { 0.5 }))
+        .collect()
+}
+
+/// One rung-boundary decision: feed the rewards to the bandit, rank the
+/// live arms by UCB, keep [`halving_keep`] survivors — always including
+/// the incumbent (best `last_score`, ties to the lowest ordinal), which
+/// displaces the worst-ranked survivor if the bandit dropped it. Returns
+/// `(survivors, eliminated)`, both ascending. Pure — replayable from a
+/// recorded reward trajectory.
+pub fn decide(
+    bandit: &mut Bandit,
+    live: &[usize],
+    rewards: &[(usize, f64)],
+    last_score: &[f64],
+    eta: usize,
+) -> (Vec<usize>, Vec<usize>) {
+    for &(arm, r) in rewards {
+        bandit.update(arm, r);
+    }
+    let ranked = bandit.rank_subset(live);
+    let keep = halving_keep(live.len(), eta);
+    let mut survivors: Vec<usize> = ranked.iter().take(keep).copied().collect();
+    let incumbent = live
+        .iter()
+        .copied()
+        .max_by(|&a, &b| last_score[a].total_cmp(&last_score[b]).then(b.cmp(&a)));
+    if let Some(inc) = incumbent {
+        if !survivors.contains(&inc) {
+            survivors.pop();
+            survivors.push(inc);
+        }
+    }
+    survivors.sort_unstable();
+    let eliminated: Vec<usize> =
+        live.iter().copied().filter(|a| !survivors.contains(a)).collect();
+    (survivors, eliminated)
+}
+
+/// The record of one rung boundary, kept in the outcome so decisions can
+/// be replayed (and are, in `integration_race.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    pub rung: usize,
+    /// The rung's per-arm budget (modeled seconds).
+    pub budget_s: f64,
+    /// Normalized rewards fed to the bandit, by arm ordinal.
+    pub rewards: Vec<(usize, f64)>,
+    pub survivors: Vec<usize>,
+    pub eliminated: Vec<usize>,
+}
+
+/// Everything the race learned about one arm.
+#[derive(Debug, Clone)]
+pub struct ArmResult {
+    pub label: String,
+    /// Cumulative across rungs (modeled signals from [`ArmStats`]).
+    pub evals: u64,
+    pub unique_evals: u64,
+    pub spent_s: f64,
+    /// Score of each completed rung, in rung order.
+    pub scores: Vec<f64>,
+    pub cancelled_jobs: usize,
+    pub failed_jobs: usize,
+    /// Rung index of the decision that eliminated the arm.
+    pub eliminated_at: Option<usize>,
+    /// Final-rung performance curve — present only for finalists, and
+    /// bit-identical to the arm's standalone `coordinate --runs 1` run.
+    pub curve: Option<Vec<f64>>,
+    /// Final-rung score (`stats::mean` of `curve`).
+    pub score: Option<f64>,
+}
+
+/// The outcome of one race on one space.
+#[derive(Debug, Clone)]
+pub struct RaceOutcome {
+    pub space: String,
+    pub arms: Vec<ArmResult>,
+    pub decisions: Vec<Decision>,
+    /// Winning arm ordinal (`None` only for interrupted/degenerate races).
+    pub winner: Option<usize>,
+    pub escalations: u64,
+    pub cancellations: u64,
+    pub jobs: JobsSummary,
+    pub interrupted: bool,
+}
+
+impl RaceOutcome {
+    /// The race's best-found score: the winner's final-rung score.
+    pub fn best_score(&self) -> Option<f64> {
+        self.winner.and_then(|w| self.arms[w].score)
+    }
+}
+
+/// The probe wrapper: runs the arm's real optimizer with the arm's
+/// racing token attached (alongside the executor's batch token — the
+/// multi-token `TuningContext` seam), then stashes the run's modeled
+/// statistics for the bandit. Transparent otherwise: the inner optimizer
+/// sees the exact context a standalone run would, so completed curves
+/// stay bit-identical.
+struct ProbedOptimizer {
+    inner: Box<dyn Optimizer>,
+    token: CancelToken,
+    out: Arc<Mutex<Option<ArmStats>>>,
+}
+
+impl Optimizer for ProbedOptimizer {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        ctx.set_cancel_token(self.token.clone());
+        self.inner.run(ctx);
+        let stats = ArmStats {
+            evals: ctx.eval_calls(),
+            unique_evals: ctx.unique_evals(),
+            spent_s: ctx.elapsed_s(),
+            best_ms: ctx.best().map(|(_, v)| v).unwrap_or(f64::INFINITY),
+        };
+        *self.out.lock().unwrap_or_else(|e| e.into_inner()) = Some(stats);
+    }
+}
+
+/// Per-roster-slot factory: builds the arm's optimizer wrapped in the
+/// probe. `label()` delegates to the spec so seeds derived from it match
+/// the plain `coordinate` grid exactly.
+struct ArmFactory {
+    spec: OptimizerSpec,
+    token: CancelToken,
+    stats: Arc<Mutex<Option<ArmStats>>>,
+}
+
+impl OptimizerFactory for ArmFactory {
+    fn build(&self) -> Box<dyn Optimizer> {
+        Box::new(ProbedOptimizer {
+            inner: self.spec.build(),
+            token: self.token.clone(),
+            out: Arc::clone(&self.stats),
+        })
+    }
+
+    fn label(&self) -> String {
+        self.spec.label()
+    }
+}
+
+/// Race a portfolio on one space (no progress consumer).
+pub fn run_race(entry: &SpaceEntry, specs: &[OptimizerSpec], cfg: &RaceConfig) -> RaceOutcome {
+    run_race_observed(entry, specs, cfg, &|_: &Progress| {})
+}
+
+/// Race a portfolio on one space, streaming each rung's [`Progress`]
+/// events to `sink`. See the module docs for the algorithm and the
+/// determinism contract.
+pub fn run_race_observed(
+    entry: &SpaceEntry,
+    specs: &[OptimizerSpec],
+    cfg: &RaceConfig,
+    sink: &ProgressSink,
+) -> RaceOutcome {
+    let n = specs.len();
+    let rungs = cfg.rungs.max(1);
+    let eta = cfg.eta.max(2);
+    let space_id = entry.cache.space_id();
+    let seeds: Vec<u64> =
+        specs.iter().map(|s| job_seed(cfg.seed, &space_id, &s.label(), 0)).collect();
+    let arms: Vec<ArmResult> = specs
+        .iter()
+        .map(|s| ArmResult {
+            label: s.label(),
+            evals: 0,
+            unique_evals: 0,
+            spent_s: 0.0,
+            scores: Vec::new(),
+            cancelled_jobs: 0,
+            failed_jobs: 0,
+            eliminated_at: None,
+            curve: None,
+            score: None,
+        })
+        .collect();
+    let mut out = RaceOutcome {
+        space: space_id,
+        arms,
+        decisions: Vec::new(),
+        winner: None,
+        escalations: 0,
+        cancellations: 0,
+        jobs: JobsSummary::default(),
+        interrupted: false,
+    };
+    if n == 0 {
+        return out;
+    }
+    let mut bandit = Bandit::new(n);
+    let mut live: Vec<usize> = (0..n).collect();
+    // Arms eliminated at the previous decision: each gets one more job
+    // next rung with a pre-fired token, so its cancellation is observed
+    // at the first budget check and flows through the executor seam.
+    let mut doomed: Vec<usize> = Vec::new();
+    let mut last_priority: Vec<Priority> = vec![Priority::MIN; n];
+    let mut rung = 0usize;
+    while rung < rungs {
+        let is_final = rung + 1 == rungs;
+        if !is_final && live.len() == 1 && doomed.is_empty() {
+            // A lone survivor has nothing left to race: skip the
+            // intermediate rungs and score it at full budget.
+            rung = rungs - 1;
+            continue;
+        }
+        // Budget ladder: B / eta^(R−1−k); the final rung reuses the
+        // canonical setup verbatim so finalist curves are bit-identical
+        // to standalone runs (same budget AND same sample-time grid).
+        let scaled;
+        let setup: &SpaceSetup = if is_final {
+            &entry.setup
+        } else {
+            let denom = (eta as f64).powi((rungs - 1 - rung) as i32);
+            let b = entry.setup.budget_s / denom;
+            scaled = SpaceSetup {
+                baseline: Baseline::from_cache(&entry.cache),
+                budget_s: b,
+                times: sample_times(b, entry.setup.times.len()),
+            };
+            &scaled
+        };
+        // Roster: survivors by UCB rank (priority escalates every rung a
+        // survivor outlives — the rung offset keeps later-rung jobs above
+        // earlier levels), then the doomed arms at the bottom.
+        let ranked = bandit.rank_subset(&live);
+        let mut roster: Vec<(usize, Priority, CancelToken)> = Vec::new();
+        for (r_i, &arm) in ranked.iter().enumerate() {
+            let prio = (rung * n + (live.len() - r_i)) as Priority;
+            if prio > last_priority[arm] && last_priority[arm] != Priority::MIN {
+                out.escalations += 1;
+                obs::counter("race.escalations", 1);
+            }
+            last_priority[arm] = prio;
+            roster.push((arm, prio, CancelToken::new()));
+        }
+        for &arm in &doomed {
+            let token = CancelToken::new();
+            token.cancel(); // pre-fired: observed at the first budget check
+            roster.push((arm, Priority::MIN, token));
+        }
+        doomed.clear();
+        let slots: Vec<Arc<Mutex<Option<ArmStats>>>> =
+            roster.iter().map(|_| Arc::new(Mutex::new(None))).collect();
+        let factories: Vec<ArmFactory> = roster
+            .iter()
+            .zip(&slots)
+            .map(|((arm, _, token), slot)| ArmFactory {
+                spec: specs[*arm].clone(),
+                token: token.clone(),
+                stats: Arc::clone(slot),
+            })
+            .collect();
+        let mut ex = Executor::with_threads(cfg.threads);
+        if let Some(token) = &cfg.cancel {
+            ex = ex.cancel_via(token.clone());
+        }
+        let mut source = FnSource::new(roster.len(), |i| {
+            let (arm, prio, _) = &roster[i];
+            SourcedJob {
+                job: TuningJob {
+                    source: &entry.cache,
+                    setup,
+                    factory: &factories[i],
+                    seed: seeds[*arm],
+                    group: *arm,
+                },
+                priority: *prio,
+            }
+        });
+        let batch = ex.run_observed(&mut source, sink);
+        out.jobs.absorb(batch.summary());
+        let mut span = obs::span("race.decision")
+            .kv("rung", rung)
+            .kv("roster", roster.len())
+            .kv("budget_s", setup.budget_s);
+        // Harvest slot-ordered outcomes.
+        let mut rung_spent: Vec<f64> = vec![0.0; n];
+        for (slot, (arm, _, _)) in roster.iter().enumerate() {
+            match &batch.handles[slot].outcome {
+                JobOutcome::Completed(curve) => {
+                    let score = stats::mean(curve);
+                    out.arms[*arm].scores.push(score);
+                    if let Some(st) = slots[slot].lock().unwrap_or_else(|e| e.into_inner()).take()
+                    {
+                        out.arms[*arm].evals += st.evals;
+                        out.arms[*arm].unique_evals += st.unique_evals;
+                        out.arms[*arm].spent_s += st.spent_s;
+                        rung_spent[*arm] = st.spent_s;
+                    }
+                    if is_final {
+                        out.arms[*arm].score = Some(score);
+                        out.arms[*arm].curve = Some(curve.clone());
+                    }
+                }
+                JobOutcome::Cancelled => {
+                    out.arms[*arm].cancelled_jobs += 1;
+                    out.cancellations += 1;
+                    obs::counter("race.cancellations", 1);
+                }
+                JobOutcome::Failed(_) => out.arms[*arm].failed_jobs += 1,
+            }
+        }
+        if cfg.cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+            out.interrupted = true;
+            span.note("outcome", "interrupted");
+            return out;
+        }
+        // Arms still rankable (a panicked arm drops out of the race — it
+        // has no score to rank on).
+        let live_done: Vec<usize> =
+            live.iter().copied().filter(|&a| !out.arms[a].scores.is_empty()).collect();
+        if live_done.is_empty() {
+            span.note("outcome", "dead");
+            return out;
+        }
+        if is_final {
+            let winner = live_done
+                .iter()
+                .copied()
+                .filter(|&a| out.arms[a].score.is_some())
+                .max_by(|&a, &b| {
+                    let sa = out.arms[a].score.unwrap_or(f64::NEG_INFINITY);
+                    let sb = out.arms[b].score.unwrap_or(f64::NEG_INFINITY);
+                    sa.total_cmp(&sb).then(b.cmp(&a))
+                });
+            out.winner = winner;
+            if let Some(w) = winner {
+                span.note("winner", w);
+            }
+        } else {
+            let inputs: Vec<RewardInput> = live_done
+                .iter()
+                .map(|&a| {
+                    let s = &out.arms[a].scores;
+                    let cur = *s.last().unwrap();
+                    let prev = if s.len() >= 2 { s[s.len() - 2] } else { 0.0 };
+                    (a, cur, prev, rung_spent[a])
+                })
+                .collect();
+            let rewards = rung_rewards(&inputs);
+            let last: Vec<f64> = (0..n)
+                .map(|a| out.arms[a].scores.last().copied().unwrap_or(f64::NEG_INFINITY))
+                .collect();
+            let (survivors, eliminated) = decide(&mut bandit, &live_done, &rewards, &last, eta);
+            span.note("survivors", survivors.len());
+            span.note("eliminated", eliminated.len());
+            for &a in &eliminated {
+                out.arms[a].eliminated_at = Some(rung);
+            }
+            out.decisions.push(Decision {
+                rung,
+                budget_s: setup.budget_s,
+                rewards,
+                survivors: survivors.clone(),
+                eliminated: eliminated.clone(),
+            });
+            doomed = eliminated;
+            live = survivors;
+        }
+        drop(span);
+        rung += 1;
+    }
+    out
+}
+
+/// The per-space `"race"` report block: winner, counters, per-arm
+/// accounting and the decision trace. A pure function of the outcome —
+/// no wall-clock, no thread counts — so report bytes are identical for
+/// any `--threads` width.
+pub fn race_json(outcome: &RaceOutcome) -> Json {
+    let mut j = Json::obj();
+    j.set("space", outcome.space.clone());
+    if let Some(w) = outcome.winner {
+        j.set("winner", outcome.arms[w].label.clone());
+    }
+    j.set("escalations", outcome.escalations);
+    j.set("cancellations", outcome.cancellations as u64);
+    if outcome.interrupted {
+        j.set("interrupted", true);
+    }
+    j.set("jobs", outcome.jobs.to_json());
+    let mut arms: Vec<Json> = Vec::with_capacity(outcome.arms.len());
+    for a in &outcome.arms {
+        let mut row = Json::obj();
+        row.set("label", a.label.clone());
+        row.set("evals", a.evals);
+        row.set("unique_evals", a.unique_evals);
+        row.set("spent_s", a.spent_s);
+        row.set("scores", a.scores.clone());
+        row.set("cancelled_jobs", a.cancelled_jobs);
+        if let Some(r) = a.eliminated_at {
+            row.set("eliminated_at", r);
+        }
+        if let Some(s) = a.score {
+            row.set("score", s);
+        }
+        arms.push(row);
+    }
+    j.set("arms", Json::Arr(arms));
+    let mut decisions: Vec<Json> = Vec::with_capacity(outcome.decisions.len());
+    for d in &outcome.decisions {
+        let mut row = Json::obj();
+        row.set("rung", d.rung);
+        row.set("budget_s", d.budget_s);
+        let label = |&a: &usize| Json::from(outcome.arms[a].label.clone());
+        row.set("survivors", Json::Arr(d.survivors.iter().map(label).collect()));
+        row.set("eliminated", Json::Arr(d.eliminated.iter().map(label).collect()));
+        let mut rw: Vec<Json> = Vec::with_capacity(d.rewards.len());
+        for &(a, r) in &d.rewards {
+            let mut e = Json::obj();
+            e.set("arm", outcome.arms[a].label.clone());
+            e.set("reward", r);
+            rw.push(e);
+        }
+        row.set("rewards", Json::Arr(rw));
+        decisions.push(row);
+    }
+    j.set("decisions", Json::Arr(decisions));
+    j
+}
+
+/// The full `race --out` report: header, aggregate `"jobs"` counters and
+/// one [`race_json`] block per raced space.
+pub fn race_report(outcomes: &[RaceOutcome], cfg: &RaceConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("title", RACE_TITLE);
+    j.set(
+        "spaces",
+        Json::Arr(outcomes.iter().map(|o| Json::from(o.space.clone())).collect()),
+    );
+    j.set("eta", cfg.eta.max(2));
+    j.set("rungs", cfg.rungs.max(1));
+    j.set("seed", cfg.seed);
+    if outcomes.iter().any(|o| o.interrupted) {
+        j.set("interrupted", true);
+    }
+    let mut jobs = JobsSummary::default();
+    for o in outcomes {
+        jobs.absorb(o.jobs);
+    }
+    j.set("jobs", jobs.to_json());
+    j.set("race", Json::Arr(outcomes.iter().map(race_json).collect()));
+    j
+}
+
+/// Render one race outcome for the CLI.
+pub fn race_table(outcome: &RaceOutcome) -> Table {
+    let title = format!("{} — {}", RACE_TITLE, outcome.space);
+    let mut t = Table::new(&title, &["Arm", "Rungs", "Evals", "Spent s", "Score P", "Status"]);
+    for (i, a) in outcome.arms.iter().enumerate() {
+        let status = if outcome.winner == Some(i) {
+            "winner".to_string()
+        } else if let Some(r) = a.eliminated_at {
+            format!("eliminated @ rung {}", r)
+        } else if a.failed_jobs > 0 {
+            "failed".to_string()
+        } else {
+            "finalist".to_string()
+        };
+        let score = a.score.or(a.scores.last().copied());
+        t.row(vec![
+            a.label.clone(),
+            format!("{}", a.scores.len()),
+            format!("{}", a.evals),
+            f(a.spent_s, 1),
+            score.map(|s| f(s, 3)).unwrap_or_else(|| "-".into()),
+            status,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::{CacheKey, CacheRegistry};
+
+    #[test]
+    fn bandit_is_deterministic_and_optimistic() {
+        let mut b = Bandit::new(4);
+        // Cold start: all infinite, ordinal order.
+        assert_eq!(b.rank_subset(&[2, 0, 3, 1]), vec![0, 1, 2, 3]);
+        b.update(0, 0.1);
+        b.update(1, 0.9);
+        b.update(2, 0.5);
+        // Unplayed arm 3 stays first (infinite optimism), then by UCB.
+        let ranked = b.rank_subset(&[0, 1, 2, 3]);
+        assert_eq!(ranked[0], 3);
+        assert_eq!(ranked[1], 1, "highest observed mean ranks next");
+        assert!(b.ucb(1) > b.ucb(0));
+        // Same updates → same ranking, bit for bit.
+        let mut c = Bandit::new(4);
+        c.update(0, 0.1);
+        c.update(1, 0.9);
+        c.update(2, 0.5);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn rewards_are_normalized_per_rung() {
+        let r = rung_rewards(&[(0, 2.0, 1.0, 10.0), (1, 3.0, 1.0, 10.0), (2, 1.0, 1.0, 10.0)]);
+        assert_eq!(r[1], (1, 1.0), "biggest improvement per second gets 1");
+        assert_eq!(r[2], (2, 0.0), "no improvement gets 0");
+        assert!(r[0].1 > 0.0 && r[0].1 < 1.0);
+        // Degenerate rung: everyone equal → 0.5 each.
+        let d = rung_rewards(&[(0, 1.0, 0.0, 5.0), (1, 1.0, 0.0, 5.0)]);
+        assert!(d.iter().all(|&(_, v)| v == 0.5));
+    }
+
+    #[test]
+    fn decide_keeps_the_incumbent() {
+        // Arm 2 has the best score but the worst reward history; the
+        // incumbent rule must keep it in the survivor set anyway.
+        let mut b = Bandit::new(4);
+        for _ in 0..3 {
+            b.update(0, 0.9);
+            b.update(1, 0.8);
+            b.update(2, 0.0);
+            b.update(3, 0.7);
+        }
+        let live = [0, 1, 2, 3];
+        let last = [0.4, 0.3, 0.9, 0.2];
+        let (survivors, eliminated) = decide(&mut b, &live, &[], &last, 2);
+        assert_eq!(survivors.len(), 2);
+        assert!(survivors.contains(&2), "incumbent dropped: {:?}", survivors);
+        assert_eq!(survivors.len() + eliminated.len(), live.len());
+    }
+
+    #[test]
+    fn race_is_deterministic_and_crowns_a_winner() {
+        let reg = CacheRegistry::new();
+        let entry = reg.entry(CacheKey::parse("convolution@A4000").unwrap());
+        let specs: Vec<OptimizerSpec> = ["sa", "random", "greedy_ils"]
+            .iter()
+            .map(|n| OptimizerSpec::parse(n).unwrap())
+            .collect();
+        let cfg = RaceConfig { eta: 2, rungs: 2, seed: 11, ..RaceConfig::default() };
+        let a = run_race(&entry, &specs, &cfg);
+        let b = run_race(&entry, &specs, &cfg);
+        assert_eq!(
+            race_json(&a).to_string(),
+            race_json(&b).to_string(),
+            "race reports must be byte-identical run to run"
+        );
+        let w = a.winner.expect("uninterrupted race crowns a winner");
+        assert!(a.arms[w].score.is_some() && a.arms[w].curve.is_some());
+        assert!(!a.interrupted);
+        // Every eliminated arm produced exactly one executor-observed
+        // cancellation (the pre-fired doomed job).
+        let eliminated = a.arms.iter().filter(|x| x.eliminated_at.is_some()).count();
+        assert_eq!(a.cancellations as usize, eliminated);
+        assert_eq!(a.jobs.cancelled, eliminated);
+        assert_eq!(a.jobs.failed, 0);
+    }
+
+    #[test]
+    fn lone_arm_skips_straight_to_the_final_rung() {
+        let reg = CacheRegistry::new();
+        let entry = reg.entry(CacheKey::parse("convolution@A4000").unwrap());
+        let specs = vec![OptimizerSpec::parse("random").unwrap()];
+        let cfg = RaceConfig { eta: 2, rungs: 4, seed: 3, ..RaceConfig::default() };
+        let out = run_race(&entry, &specs, &cfg);
+        assert_eq!(out.winner, Some(0));
+        assert_eq!(out.arms[0].scores.len(), 1, "intermediate rungs skipped");
+        assert_eq!(out.jobs.completed, 1);
+        assert!(out.decisions.is_empty());
+    }
+}

@@ -40,6 +40,6 @@ pub mod strategy;
 pub use backend::{meta_seed, MetaBackend, MetaResult, MetaScore, MetaTuning, SweepProgress};
 pub use space::{decode, meta_space};
 pub use strategy::{
-    leaderboard_table, successive_halving, sweep, sweep_json, sweep_partial_json, MetaStrategy,
-    Rung, SweepOutcome,
+    halving_keep, leaderboard_table, successive_halving, sweep, sweep_json, sweep_partial_json,
+    MetaStrategy, Rung, SweepOutcome,
 };

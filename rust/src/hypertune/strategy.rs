@@ -126,6 +126,20 @@ fn sample_ordinals(mt: &MetaTuning, evals: usize, seed: u64) -> Vec<u32> {
     sample
 }
 
+/// The halving keep-count: how many of `n` candidates survive one rung at
+/// reduction factor `eta` — the top `⌈n/eta⌉`, collapsing to a single
+/// survivor once the field is down to one. Shared by [`successive_halving`]
+/// and the racing ladder (`crate::coordinator::race`), so both elimination
+/// schedules stay the same function.
+pub fn halving_keep(n: usize, eta: usize) -> usize {
+    let eta = eta.max(2);
+    if n > 1 {
+        n.div_ceil(eta)
+    } else {
+        1
+    }
+}
+
 /// Successive halving with seeds-per-rung escalation: rung `k` of `L`
 /// evaluates its candidates at `min(runs, max(runs / eta^(L−k), eta^k))`
 /// seeds — the budget-scaled schedule, floored by `eta^k` so every
@@ -170,7 +184,7 @@ pub fn successive_halving(mt: &MetaTuning, mut cands: Vec<u32>, eta: usize) -> V
         let mut ranked: Vec<(u32, f64)> =
             cands.iter().copied().zip(scores.iter().map(|s| s.score)).collect();
         ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
-        let keep = if cands.len() > 1 { cands.len().div_ceil(eta) } else { 1 };
+        let keep = halving_keep(cands.len(), eta);
         let mut survivors: Vec<u32> = ranked.iter().take(keep).map(|&(o, _)| o).collect();
         survivors.sort_unstable();
         rungs.push(Rung { runs: r, candidates: cands.clone(), survivors: survivors.clone() });
@@ -310,5 +324,15 @@ mod tests {
         assert!(MetaStrategy::parse("not_an_optimizer", 4).is_none());
         // Off-grid overrides fail at strategy parse time too.
         assert!(MetaStrategy::parse("sa:alpha=0.123", 4).is_none());
+    }
+
+    #[test]
+    fn halving_keep_matches_the_sha_rule() {
+        assert_eq!(halving_keep(16, 2), 8);
+        assert_eq!(halving_keep(9, 3), 3);
+        assert_eq!(halving_keep(4, 3), 2); // ceil
+        assert_eq!(halving_keep(2, 3), 1);
+        assert_eq!(halving_keep(1, 3), 1); // lone survivor stays
+        assert_eq!(halving_keep(8, 0), 4); // eta clamps to 2
     }
 }

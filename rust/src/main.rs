@@ -50,6 +50,20 @@
 //!       [--shard K/N]              run only grid jobs with index % N == K
 //!                                  and write a partial report (requires
 //!                                  --out; collate with `merge`)
+//!   race [--opts a,b:k=v,..]       race an optimizer portfolio on each
+//!        [--spaces app@gpu,..]     space: Hyperband-style budget rungs
+//!                                  with a UCB1 bandit keeping the top
+//!                                  arms (priorities escalated, losers
+//!                                  cancelled through the executor seam);
+//!                                  the final rung runs at the canonical
+//!                                  budget, so the winner's curve is
+//!                                  bit-identical to its solo
+//!                                  `coordinate --runs 1` run
+//!       [--eta N]                  halving factor (default 2)
+//!       [--rungs N]                budget levels (default 3)
+//!       [--out FILE]               write the race report (a "race" block
+//!                                  per space; byte-identical for any
+//!                                  --threads width)
 //!   sweep --opt NAME[:k=v,..]      meta-tune an optimizer's hyperparameters
 //!                                  (overridden keys are pinned out of the
 //!                                  sweep); spaces default to
@@ -108,8 +122,9 @@ use std::path::{Path, PathBuf};
 
 use llamea_kt::coordinator::{
     coordinate_report, coordinate_results, grid_jobs, grid_source, merge_reports,
-    partial_coordinate_json, score_table, source_jobs, CacheKey, CacheRegistry, Executor,
-    Progress, Scheduler, ShardJob, ShardSpec, COORDINATE_TITLE,
+    partial_coordinate_json, race_report, race_table, run_race_observed, score_table, source_jobs,
+    CacheKey, CacheRegistry, Executor, Progress, RaceConfig, Scheduler, ShardJob, ShardSpec,
+    COORDINATE_TITLE,
 };
 use llamea_kt::harness::{self, BackendKind, ExpOptions};
 use llamea_kt::hypertune::{
@@ -731,6 +746,67 @@ fn cmd_coordinate(args: &[String]) {
     report_job_outcomes(&batch.summary());
 }
 
+/// `race`: race an optimizer portfolio on each space through the bandit
+/// rung ladder (`coordinator::race`). Every flag that shapes the outcome
+/// (`--opts`, `--spaces`, `--eta`, `--rungs`, `--seed`) is deterministic
+/// input; `--threads` only changes wall-clock. Ctrl-C cancels
+/// cooperatively — the report keeps completed rungs and is marked
+/// `"interrupted": true`.
+fn cmd_race(args: &[String]) {
+    let opts = options(args);
+    let eta: usize =
+        flag_value(args, "--eta").map(|v| v.parse().expect("--eta")).unwrap_or(2);
+    let rungs: usize =
+        flag_value(args, "--rungs").map(|v| v.parse().expect("--rungs")).unwrap_or(3);
+    let registry = CacheRegistry::global();
+    let entries = space_entries(args, "");
+    let all_names: Vec<&str> = llamea_kt::optimizers::all_names().collect();
+    let specs: Vec<OptimizerSpec> = opt_specs(args, &all_names);
+    let cfg = RaceConfig {
+        eta,
+        rungs,
+        seed: opts.seed,
+        threads: opts.threads,
+        cancel: Some(install_sigint()),
+    };
+    eprintln!(
+        "racing {} arms over {} spaces ({} rungs, eta {})",
+        specs.len(),
+        entries.len(),
+        rungs.max(1),
+        eta.max(2)
+    );
+    let t0 = std::time::Instant::now();
+    let mut outcomes = Vec::with_capacity(entries.len());
+    for entry in &entries {
+        let progress = ProgressLine::new(None);
+        let outcome = run_race_observed(entry, &specs, &cfg, &|ev| progress.observe(ev));
+        progress.finish();
+        println!("{}", race_table(&outcome).to_text());
+        let stop = outcome.interrupted;
+        outcomes.push(outcome);
+        if stop {
+            break; // Ctrl-C: keep the completed spaces, skip the rest
+        }
+    }
+    let mut jobs = llamea_kt::coordinator::JobsSummary::default();
+    for o in &outcomes {
+        jobs.absorb(o.jobs);
+    }
+    if let Some(path) = flag_value(args, "--out") {
+        write_report(&path, race_report(&outcomes, &cfg));
+        eprintln!("race report written to {}", path);
+    }
+    eprintln!(
+        "{} jobs over {} spaces (caches: {}) in {:?}",
+        jobs.total(),
+        outcomes.len(),
+        cache_tally(registry),
+        t0.elapsed()
+    );
+    report_job_outcomes(&jobs);
+}
+
 /// The `--backend measured` arm of `coordinate`: one lazily-measured
 /// variant space per kernel in the artifact manifest, tuned through the
 /// same job graph. Each space shares one measurement store, so the whole
@@ -1269,13 +1345,14 @@ fn main() {
         Some("real-tune") => cmd_real_tune(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("coordinate") => cmd_coordinate(&args[1..]),
+        Some("race") => cmd_race(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("merge") => cmd_merge(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
         _ => {
             eprintln!(
-                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|sweep|merge|serve|client> [options]\n\
+                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|race|sweep|merge|serve|client> [options]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);

@@ -1,0 +1,605 @@
+//! Bayesian optimization — the surrogate-model family the paper
+//! benchmarks its generated algorithms against (Kernel Tuner's `bayes_opt`
+//! strategy), dependency-free.
+//!
+//! A Gaussian-process surrogate (squared-exponential kernel, Cholesky
+//! factorization, hand-rolled — no linear-algebra crates) is fit on a
+//! sliding window of the deduplicated observations; the next point is the
+//! expected-improvement argmax over a candidate pool drawn from the CSR
+//! neighbor rows of the best configurations found so far, topped up with
+//! random valid samples. The GP works in per-dimension-standardized value
+//! space (`SearchSpace::values_f64`), so parameter scales don't leak into
+//! the kernel metric.
+//!
+//! Window and pool sizes are hyperparameters: the Cholesky is O(w³) with
+//! `train_window` ≤ 96, so surrogate fitting stays microseconds per step
+//! (tracked by the `gp_fit_predict` section of `BENCH_hotpath.json`).
+//! Degenerate posteriors (too few points, a flat window, a factorization
+//! failure after jitter escalation) fall back to the first unevaluated
+//! neighbor — a deterministic hill step, never a crash.
+//!
+//! Ask/tell is supported (init batch, then one EI argmax per suggest);
+//! `run` is the same proposal loop driven sequentially. All randomness
+//! flows through `ctx.rng`, so runs are a pure function of the seed.
+
+use std::collections::HashSet;
+
+use super::{HyperParamDomain, Optimizer};
+use crate::searchspace::space::FxBuildHasher;
+use crate::searchspace::{NeighborKind, SearchSpace};
+use crate::tuning::TuningContext;
+
+/// Sweepable grid around the tuned defaults.
+const DOMAINS: &[HyperParamDomain] = &[
+    HyperParamDomain::new("init_samples", 16.0, &[8.0, 16.0, 32.0]),
+    HyperParamDomain::new("candidate_pool", 64.0, &[32.0, 64.0, 128.0]),
+    HyperParamDomain::new("train_window", 48.0, &[24.0, 48.0, 96.0]),
+    HyperParamDomain::new("length_scale", 2.0, &[1.0, 2.0, 4.0]),
+    HyperParamDomain::new("xi", 0.01, &[0.0, 0.01, 0.05, 0.1]),
+];
+
+/// How many best-so-far configurations seed the neighbor part of the
+/// candidate pool.
+const POOL_SEEDS: usize = 4;
+
+/// Ask/tell phase.
+#[derive(Debug, Default)]
+enum State {
+    #[default]
+    Fresh,
+    AwaitInit,
+    Ready,
+    AwaitPoint,
+}
+
+#[derive(Debug)]
+pub struct BayesOpt {
+    pub init_samples: usize,
+    pub candidate_pool: usize,
+    pub train_window: usize,
+    pub length_scale: f64,
+    pub xi: f64,
+    /// Deduplicated successful observations, in evaluation order.
+    history: Vec<(u32, f64)>,
+    /// Every index already proposed/evaluated (successful or not).
+    tried: HashSet<u32, FxBuildHasher>,
+    state: State,
+}
+
+impl Default for BayesOpt {
+    fn default() -> Self {
+        BayesOpt {
+            init_samples: 16,
+            candidate_pool: 64,
+            train_window: 48,
+            length_scale: 2.0,
+            xi: 0.01,
+            history: Vec::new(),
+            tried: HashSet::with_hasher(FxBuildHasher::default()),
+            state: State::Fresh,
+        }
+    }
+}
+
+impl BayesOpt {
+    /// Record one evaluation outcome. Failed/skipped evaluations mark the
+    /// index as tried (never re-proposed) but stay out of the GP window.
+    fn record(&mut self, idx: u32, value: Option<f64>) {
+        let fresh = self.tried.insert(idx);
+        if let Some(v) = value {
+            if v.is_finite() && fresh {
+                self.history.push((idx, v));
+            }
+        }
+    }
+
+    /// The candidate pool: unevaluated CSR neighbors of the best
+    /// configurations seen, topped up with random valid samples. Order is
+    /// deterministic (CSR row order, then draw order), which also makes
+    /// the EI tie-break (first wins) deterministic.
+    fn candidates(&self, space: &SearchSpace, ctx: &mut TuningContext) -> Vec<u32> {
+        let pool_cap = self.candidate_pool.max(4);
+        let mut pool: Vec<u32> = Vec::with_capacity(pool_cap);
+        let mut in_pool: HashSet<u32, FxBuildHasher> =
+            HashSet::with_hasher(FxBuildHasher::default());
+        let mut seeds: Vec<(f64, u32)> =
+            self.history.iter().map(|&(i, v)| (v, i)).collect();
+        seeds.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(_, s) in seeds.iter().take(POOL_SEEDS) {
+            for &n in space.neighbors_of(s, NeighborKind::Hamming) {
+                if pool.len() >= pool_cap {
+                    break;
+                }
+                if !self.tried.contains(&n) && in_pool.insert(n) {
+                    pool.push(n);
+                }
+            }
+        }
+        // Top up with random exploration so the pool never collapses onto
+        // one basin; bounded attempts keep small spaces from spinning.
+        let mut attempts = 4 * pool_cap;
+        while pool.len() < pool_cap && attempts > 0 {
+            attempts -= 1;
+            let i = space.random_valid(&mut ctx.rng);
+            if !self.tried.contains(&i) && in_pool.insert(i) {
+                pool.push(i);
+            }
+        }
+        pool
+    }
+
+    /// Pick the next configuration: EI argmax over the candidate pool,
+    /// with deterministic fallbacks when the pool or the posterior is
+    /// degenerate. `None` means the space is exhausted.
+    fn propose(&self, space: &SearchSpace, ctx: &mut TuningContext) -> Option<u32> {
+        if self.tried.len() >= space.len() {
+            return None;
+        }
+        let pool = self.candidates(space, ctx);
+        if pool.is_empty() {
+            // Everything near the incumbents is tried and random draws
+            // found nothing fresh: take any valid config (re-evaluating a
+            // seen one only costs the cached-eval tick, so the budget
+            // clock still advances and `run` terminates).
+            for _ in 0..64 {
+                let i = space.random_valid(&mut ctx.rng);
+                if !self.tried.contains(&i) {
+                    return Some(i);
+                }
+            }
+            return Some(space.random_valid(&mut ctx.rng));
+        }
+        let window = self.window();
+        let points: Vec<(Vec<f64>, f64)> =
+            window.iter().map(|&(i, v)| (space.values_f64(i), v)).collect();
+        match fit_gp(&points, self.length_scale) {
+            Some(gp) => {
+                let mut best = pool[0];
+                let mut best_ei = f64::NEG_INFINITY;
+                for &c in &pool {
+                    let ei = gp.expected_improvement(&space.values_f64(c), self.xi);
+                    if ei > best_ei {
+                        best_ei = ei;
+                        best = c;
+                    }
+                }
+                Some(best)
+            }
+            // Degenerate posterior: first unevaluated neighbor of the
+            // best config — a plain deterministic hill step.
+            None => Some(pool[0]),
+        }
+    }
+
+    /// The GP training window: the best half of the window budget plus
+    /// the most recent remainder — incumbent basins modeled precisely,
+    /// recent exploration keeping the posterior current.
+    fn window(&self) -> Vec<(u32, f64)> {
+        let w = self.train_window.max(8);
+        if self.history.len() <= w {
+            return self.history.clone();
+        }
+        let mut best: Vec<(u32, f64)> = self.history.clone();
+        best.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        let keep_best = w / 2;
+        let mut chosen: HashSet<u32, FxBuildHasher> =
+            HashSet::with_hasher(FxBuildHasher::default());
+        let mut out: Vec<(u32, f64)> = Vec::with_capacity(w);
+        for &(i, v) in best.iter().take(keep_best) {
+            chosen.insert(i);
+            out.push((i, v));
+        }
+        for &(i, v) in self.history.iter().rev() {
+            if out.len() >= w {
+                break;
+            }
+            if chosen.insert(i) {
+                out.push((i, v));
+            }
+        }
+        out
+    }
+}
+
+impl Optimizer for BayesOpt {
+    fn name(&self) -> &str {
+        "bayes_opt"
+    }
+
+    fn set_hyperparam(&mut self, key: &str, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        match key {
+            "init_samples" => self.init_samples = (value as usize).max(2),
+            "candidate_pool" => self.candidate_pool = (value as usize).max(4),
+            "train_window" => self.train_window = (value as usize).max(8),
+            "length_scale" => self.length_scale = value.max(1e-3),
+            "xi" => self.xi = value.max(0.0),
+            _ => return false,
+        }
+        true
+    }
+
+    fn hyperparam_domains(&self) -> &'static [HyperParamDomain] {
+        DOMAINS
+    }
+
+    fn run(&mut self, ctx: &mut TuningContext) {
+        let space = ctx.space_handle();
+        for (i, v) in ctx.evaluate_random_sample(self.init_samples.max(2)) {
+            self.record(i, v);
+        }
+        while !ctx.budget_exhausted() {
+            let Some(pick) = self.propose(&space, ctx) else {
+                return; // space exhausted
+            };
+            let v = ctx.evaluate(pick);
+            self.record(pick, v);
+        }
+    }
+
+    fn suggest(&mut self, ctx: &mut TuningContext, _limit: usize) -> Option<Vec<u32>> {
+        let space = ctx.space_handle();
+        match std::mem::take(&mut self.state) {
+            State::Fresh => {
+                self.state = State::AwaitInit;
+                Some(space.random_sample(&mut ctx.rng, self.init_samples.max(2)))
+            }
+            State::Ready => match self.propose(&space, ctx) {
+                Some(pick) => {
+                    self.state = State::AwaitPoint;
+                    Some(vec![pick])
+                }
+                None => {
+                    self.state = State::Ready;
+                    Some(Vec::new()) // converged: space exhausted
+                }
+            },
+            awaiting => {
+                // suggest() twice without an observe(): keep the phase.
+                self.state = awaiting;
+                Some(Vec::new())
+            }
+        }
+    }
+
+    fn observe(&mut self, _ctx: &mut TuningContext, batch: &[u32], results: &[Option<f64>]) {
+        match std::mem::take(&mut self.state) {
+            State::AwaitInit | State::AwaitPoint => {
+                for (&i, r) in batch.iter().zip(results) {
+                    self.record(i, *r);
+                }
+                self.state = State::Ready;
+            }
+            state => self.state = state,
+        }
+    }
+}
+
+/// A fitted Gaussian-process posterior over standardized inputs/outputs.
+/// Exposed (with [`fit_gp`]) so the hot-path bench can track fit+query
+/// cost without constructing a whole tuning run.
+#[derive(Debug)]
+pub struct Gp {
+    /// Standardized training inputs, row-major `n × dims`.
+    xs: Vec<f64>,
+    dims: usize,
+    n: usize,
+    /// Per-dimension input standardizers.
+    x_mean: Vec<f64>,
+    x_std: Vec<f64>,
+    /// Lower-triangular Cholesky factor of the kernel matrix, `n × n`.
+    chol: Vec<f64>,
+    /// K⁻¹ y (standardized targets).
+    alpha: Vec<f64>,
+    y_mean: f64,
+    y_std: f64,
+    /// Best (minimum) standardized target — the EI incumbent.
+    y_best: f64,
+    /// Kernel length normalizer: 2·ℓ²·dims.
+    ell2d: f64,
+}
+
+impl Gp {
+    fn standardize(&self, x: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        for d in 0..self.dims {
+            out.push((x[d] - self.x_mean[d]) / self.x_std[d]);
+        }
+    }
+
+    fn kernel_to_train(&self, z: &[f64], k: &mut Vec<f64>) {
+        k.clear();
+        for r in 0..self.n {
+            let row = &self.xs[r * self.dims..(r + 1) * self.dims];
+            let d2: f64 = row.iter().zip(z).map(|(a, b)| (a - b) * (a - b)).sum();
+            k.push((-d2 / self.ell2d).exp());
+        }
+    }
+
+    /// Posterior mean and standard deviation at `x` (raw feature space),
+    /// in standardized-target units.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        assert_eq!(x.len(), self.dims, "feature dimensionality mismatch");
+        let mut z = Vec::with_capacity(self.dims);
+        self.standardize(x, &mut z);
+        let mut k = Vec::with_capacity(self.n);
+        self.kernel_to_train(&z, &mut k);
+        let mu: f64 = k.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        // σ² = k(x,x) + nugget − vᵀv with v = L⁻¹ k.
+        let mut v = k;
+        forward_solve(&self.chol, self.n, &mut v);
+        let var = 1.0 + NUGGET - v.iter().map(|a| a * a).sum::<f64>();
+        (mu, var.max(1e-12).sqrt())
+    }
+
+    /// Expected improvement (minimization) of `x` over the incumbent, in
+    /// standardized-target units; always ≥ 0.
+    pub fn expected_improvement(&self, x: &[f64], xi: f64) -> f64 {
+        let (mu, sigma) = self.predict(x);
+        let imp = self.y_best - mu - xi;
+        let z = imp / sigma;
+        (imp * normal_cdf(z) + sigma * normal_pdf(z)).max(0.0)
+    }
+
+    /// Posterior mean mapped back to raw target units (ms).
+    pub fn mean_ms(&self, x: &[f64]) -> f64 {
+        self.predict(x).0 * self.y_std + self.y_mean
+    }
+}
+
+/// Diagonal jitter: observation noise plus numerical insurance.
+const NUGGET: f64 = 1e-6;
+
+/// Fit a GP on `(raw features, raw target)` points. Returns `None` when
+/// the posterior would be degenerate: fewer than 3 points, a flat target
+/// window, a zero-variance feature set, or a kernel matrix that stays
+/// non-positive-definite through jitter escalation.
+pub fn fit_gp(points: &[(Vec<f64>, f64)], length_scale: f64) -> Option<Gp> {
+    let n = points.len();
+    if n < 3 {
+        return None;
+    }
+    let dims = points[0].0.len();
+    if dims == 0 || points.iter().any(|(x, _)| x.len() != dims) {
+        return None;
+    }
+    // Target standardization.
+    let y_mean = points.iter().map(|(_, y)| y).sum::<f64>() / n as f64;
+    let y_var = points.iter().map(|(_, y)| (y - y_mean) * (y - y_mean)).sum::<f64>() / n as f64;
+    let y_std = y_var.sqrt();
+    if !(y_std.is_finite() && y_std > 1e-12) {
+        return None;
+    }
+    // Per-dimension feature standardization (constant dims get std 1, so
+    // they simply contribute distance 0).
+    let mut x_mean = vec![0.0; dims];
+    let mut x_std = vec![0.0; dims];
+    for (x, _) in points {
+        for d in 0..dims {
+            x_mean[d] += x[d];
+        }
+    }
+    for m in &mut x_mean {
+        *m /= n as f64;
+    }
+    for (x, _) in points {
+        for d in 0..dims {
+            let c = x[d] - x_mean[d];
+            x_std[d] += c * c;
+        }
+    }
+    for s in &mut x_std {
+        *s = (*s / n as f64).sqrt();
+        if !(*s > 1e-12) {
+            *s = 1.0;
+        }
+    }
+    let mut xs = Vec::with_capacity(n * dims);
+    for (x, _) in points {
+        for d in 0..dims {
+            xs.push((x[d] - x_mean[d]) / x_std[d]);
+        }
+    }
+    let ell2d = 2.0 * length_scale * length_scale * dims as f64;
+    // Kernel matrix, then Cholesky with escalating jitter.
+    let mut base = vec![0.0; n * n];
+    for r in 0..n {
+        for c in 0..=r {
+            let xr = &xs[r * dims..(r + 1) * dims];
+            let xc = &xs[c * dims..(c + 1) * dims];
+            let d2: f64 = xr.iter().zip(xc).map(|(a, b)| (a - b) * (a - b)).sum();
+            let k = (-d2 / ell2d).exp();
+            base[r * n + c] = k;
+            base[c * n + r] = k;
+        }
+    }
+    let ys: Vec<f64> = points.iter().map(|(_, y)| (y - y_mean) / y_std).collect();
+    let mut jitter = NUGGET;
+    for _ in 0..5 {
+        let mut k = base.clone();
+        for i in 0..n {
+            k[i * n + i] += jitter;
+        }
+        if cholesky_in_place(&mut k, n) {
+            let mut alpha = ys.clone();
+            forward_solve(&k, n, &mut alpha);
+            backward_solve(&k, n, &mut alpha);
+            let y_best = ys.iter().copied().fold(f64::INFINITY, f64::min);
+            return Some(Gp {
+                xs,
+                dims,
+                n,
+                x_mean,
+                x_std,
+                chol: k,
+                alpha,
+                y_mean,
+                y_std,
+                y_best,
+                ell2d,
+            });
+        }
+        jitter *= 10.0;
+    }
+    None
+}
+
+/// In-place Cholesky factorization (lower triangle; the upper is left
+/// stale and never read). Returns `false` when the matrix is not
+/// positive-definite at working precision.
+fn cholesky_in_place(a: &mut [f64], n: usize) -> bool {
+    for r in 0..n {
+        for c in 0..=r {
+            let mut s = a[r * n + c];
+            for k in 0..c {
+                s -= a[r * n + k] * a[c * n + k];
+            }
+            if r == c {
+                if s <= 0.0 || !s.is_finite() {
+                    return false;
+                }
+                a[r * n + r] = s.sqrt();
+            } else {
+                a[r * n + c] = s / a[c * n + c];
+            }
+        }
+    }
+    true
+}
+
+/// Solve L·x = b in place (L lower-triangular from `cholesky_in_place`).
+fn forward_solve(l: &[f64], n: usize, b: &mut [f64]) {
+    for r in 0..n {
+        let mut s = b[r];
+        for c in 0..r {
+            s -= l[r * n + c] * b[c];
+        }
+        b[r] = s / l[r * n + r];
+    }
+}
+
+/// Solve Lᵀ·x = b in place.
+fn backward_solve(l: &[f64], n: usize, b: &mut [f64]) {
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in r + 1..n {
+            s -= l[c * n + r] * b[c];
+        }
+        b[r] = s / l[r * n + r];
+    }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun 7.1.26 erf polynomial
+/// (|err| < 1.5e-7 — far below the noise floor of the surrogate).
+fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizers::{run_ask_tell, testutil, OptimizerSpec};
+
+    #[test]
+    fn gp_interpolates_and_ranks_by_improvement() {
+        // y = (x-3)² on a 1-D grid: the posterior mean must roughly
+        // recover held-out values and EI must prefer the basin.
+        let pts: Vec<(Vec<f64>, f64)> = [0.0, 1.0, 2.0, 4.0, 5.0, 6.0]
+            .iter()
+            .map(|&x| (vec![x], (x - 3.0) * (x - 3.0)))
+            .collect();
+        let gp = fit_gp(&pts, 1.0).expect("well-posed fit");
+        let near = gp.mean_ms(&[3.0]);
+        assert!(near < 4.0, "posterior at the basin should be low, got {}", near);
+        let ei_basin = gp.expected_improvement(&[3.0], 0.0);
+        let ei_edge = gp.expected_improvement(&[6.5], 0.0);
+        assert!(
+            ei_basin > ei_edge,
+            "EI must prefer the basin: {} vs {}",
+            ei_basin,
+            ei_edge
+        );
+    }
+
+    #[test]
+    fn degenerate_windows_refuse_to_fit() {
+        assert!(fit_gp(&[], 2.0).is_none(), "empty");
+        let two = vec![(vec![0.0], 1.0), (vec![1.0], 2.0)];
+        assert!(fit_gp(&two, 2.0).is_none(), "too few points");
+        let flat: Vec<(Vec<f64>, f64)> =
+            (0..5).map(|i| (vec![i as f64], 7.0)).collect();
+        assert!(fit_gp(&flat, 2.0).is_none(), "flat targets");
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        assert!((erf(0.0)).abs() < 1e-12);
+        assert!((erf(1.0) - 0.842_700_79).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.842_700_79).abs() < 1e-6);
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!(normal_cdf(8.0) > 0.999_999);
+    }
+
+    #[test]
+    fn runs_are_deterministic_per_seed() {
+        let cache = testutil::conv_cache();
+        let run = |seed: u64| {
+            let mut ctx = crate::tuning::TuningContext::new(&cache, 300.0, seed);
+            BayesOpt::default().run(&mut ctx);
+            (ctx.trajectory.clone(), ctx.unique_evals())
+        };
+        assert_eq!(run(3), run(3));
+        let (tr, evals) = run(4);
+        assert!(!tr.is_empty() && evals > 16);
+    }
+
+    #[test]
+    fn beats_median_with_budget() {
+        let cache = testutil::conv_cache();
+        let mut bo = BayesOpt::default();
+        let (best, _) = testutil::run_on(&mut bo, &cache, 600.0, 9);
+        assert!(best < cache.median_ms);
+    }
+
+    #[test]
+    fn ask_tell_variant_is_deterministic() {
+        let cache = testutil::conv_cache();
+        let run = |seed: u64| {
+            let mut ctx = crate::tuning::TuningContext::new(&cache, 300.0, seed);
+            let mut bo = BayesOpt::default();
+            assert!(run_ask_tell(&mut bo, &mut ctx), "bayes_opt must support ask/tell");
+            (ctx.trajectory.clone(), ctx.unique_evals())
+        };
+        assert_eq!(run(5), run(5));
+        let (tr, evals) = run(6);
+        assert!(!tr.is_empty() && evals > 16);
+    }
+
+    #[test]
+    fn spec_parsing_enforces_the_domain_grid() {
+        // Satellite contract: off-grid overrides are rejected at parse
+        // time, exactly like every other registry entry.
+        assert!(OptimizerSpec::parse("bayes_opt").is_some());
+        assert!(OptimizerSpec::parse("bayes_opt:xi=0.05").is_some());
+        assert!(OptimizerSpec::parse("bayes_opt:train_window=96,xi=0.1").is_some());
+        assert!(OptimizerSpec::parse("bayes_opt:xi=0.33").is_none(), "off-grid");
+        assert!(OptimizerSpec::parse("bayes_opt:length_scale=3").is_none(), "off-grid");
+        assert!(OptimizerSpec::parse("bayes_opt:no_such_knob=1").is_none());
+    }
+}

@@ -3,7 +3,9 @@
 //! Human-designed baselines: random search, genetic algorithm and simulated
 //! annealing (Kernel Tuner's two strongest, hyperparameter-tuned per
 //! Willemsen et al. 2025b), differential evolution (pyATF's best), particle
-//! swarm, greedy/iterated/multi-start local search and basin hopping.
+//! swarm, greedy/iterated/multi-start local search, basin hopping, and a
+//! dependency-free Bayesian optimizer ([`bayes_opt`]: GP surrogate with
+//! expected-improvement acquisition, the main classical rival).
 //!
 //! Generated algorithms (the paper's §4.3): [`generated::HybridVndx`]
 //! (Algorithm 1) and [`generated::AdaptiveTabuGreyWolf`] (Algorithm 2),
@@ -38,6 +40,7 @@
 //! spaces `crate::hypertune` sweeps over.
 
 pub mod basin_hopping;
+pub mod bayes_opt;
 pub mod components;
 pub mod differential_evolution;
 pub mod generated;
@@ -180,8 +183,8 @@ pub struct RegistryEntry {
 /// be registered in one place and forgotten in another.
 ///
 /// Names: `random`, `ga`, `sa`, `de` (pyATF), `pso`, `greedy_ils`, `mls`,
-/// `basin_hopping`, `hybrid_vndx`, `atgw`.
-pub static REGISTRY: [RegistryEntry; 10] = [
+/// `basin_hopping`, `hybrid_vndx`, `atgw`, `bayes_opt`.
+pub static REGISTRY: [RegistryEntry; 11] = [
     RegistryEntry { name: "random", build: || Box::new(random_search::RandomSearch::default()) },
     RegistryEntry {
         name: "ga",
@@ -213,6 +216,7 @@ pub static REGISTRY: [RegistryEntry; 10] = [
         name: "atgw",
         build: || Box::new(generated::adaptive_tabu_grey_wolf::AdaptiveTabuGreyWolf::default()),
     },
+    RegistryEntry { name: "bayes_opt", build: || Box::new(bayes_opt::BayesOpt::default()) },
 ];
 
 /// Instantiate a named optimizer with its tuned default hyperparameters.

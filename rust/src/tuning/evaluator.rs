@@ -93,9 +93,12 @@ pub struct TuningContext<'a> {
     batch_calls: u64,
     batched_evals: u64,
     largest_batch: usize,
-    /// Cooperative cancellation: when set and fired, the budget reads as
-    /// exhausted so the optimizer winds down between evaluations.
-    cancel: Option<CancelToken>,
+    /// Cooperative cancellation: when any attached token fires, the budget
+    /// reads as exhausted so the optimizer winds down between evaluations.
+    /// Several tokens can coexist (the executor's batch token plus a
+    /// per-arm racing token, say); observing *any* fired one cancels the
+    /// run. Empty = not cancellable.
+    cancel: Vec<CancelToken>,
     /// Whether a budget check ever *observed* the fired token. A run that
     /// completes without observing it behaved bit-identically to an
     /// uncancelled run; a run that observed it was cut short and its
@@ -136,7 +139,7 @@ impl<'a> TuningContext<'a> {
             batch_calls: 0,
             batched_evals: 0,
             largest_batch: 0,
-            cancel: None,
+            cancel: Vec::new(),
             cancel_observed: Cell::new(false),
         }
     }
@@ -145,10 +148,14 @@ impl<'a> TuningContext<'a> {
     /// check reports the budget as spent, so the optimizer winds down at
     /// its next between-evaluations check (`budget_spent_fraction` /
     /// `budget_exhausted` are the natural sites — every registry optimizer
-    /// loops on them). The run-level contract lives in
-    /// [`Self::cancellation_observed`].
+    /// loops on them). Tokens accumulate: calling this again *adds* a
+    /// token rather than replacing the first, so a per-job token (the
+    /// executor's batch-wide Ctrl-C) and a per-arm token (portfolio
+    /// racing's loser cut, attached from inside the optimizer wrapper)
+    /// both stay live — whichever fires first cancels the run. The
+    /// run-level contract lives in [`Self::cancellation_observed`].
     pub fn set_cancel_token(&mut self, token: CancelToken) {
-        self.cancel = Some(token);
+        self.cancel.push(token);
     }
 
     /// True once a budget check has observed the fired token. The caller
@@ -161,16 +168,14 @@ impl<'a> TuningContext<'a> {
         self.cancel_observed.get()
     }
 
-    /// Poll the token (if any), recording the observation.
+    /// Poll the attached tokens (if any), recording the observation.
     #[inline]
     fn check_cancelled(&self) -> bool {
-        match &self.cancel {
-            Some(t) if t.is_cancelled() => {
-                self.cancel_observed.set(true);
-                true
-            }
-            _ => false,
+        if self.cancel.iter().any(CancelToken::is_cancelled) {
+            self.cancel_observed.set(true);
+            return true;
         }
+        false
     }
 
     /// The search space under tuning.
@@ -505,6 +510,23 @@ mod tests {
         let before = ctx.eval_calls();
         assert!(ctx.evaluate_batch(&[1, 2, 3]).iter().all(Option::is_none));
         assert_eq!(ctx.eval_calls(), before);
+    }
+
+    #[test]
+    fn any_of_several_tokens_cancels_the_run() {
+        // Multi-token attachment: the batch-wide token and a per-arm
+        // token coexist; whichever fires first is observed.
+        let cache = ctx_cache();
+        let batch_token = CancelToken::new();
+        let arm_token = CancelToken::new();
+        let mut ctx = TuningContext::new(&cache, 1e9, 6);
+        ctx.set_cancel_token(batch_token.clone());
+        ctx.set_cancel_token(arm_token.clone());
+        assert!(!ctx.budget_exhausted());
+        arm_token.cancel();
+        assert!(ctx.budget_exhausted(), "second token must cancel too");
+        assert!(ctx.cancellation_observed());
+        assert!(!batch_token.is_cancelled(), "tokens stay independent");
     }
 
     #[test]

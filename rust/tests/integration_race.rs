@@ -1,0 +1,182 @@
+//! Integration: portfolio racing over the executor seam — width
+//! determinism of the race report, finalist bit-identity to standalone
+//! runs, mid-race interruption through the external token, replay of the
+//! recorded bandit-decision trajectory, and the acceptance property that
+//! a raced portfolio is never worse than its best single arm's drain-all
+//! run at the same canonical budget.
+//!
+//! Width-sensitive checks use `util::parallel::test_width` (the
+//! `LLAMEA_KT_TEST_THREADS` knob) so CI's width matrix exercises them at
+//! 1 and 8 workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use llamea_kt::coordinator::{
+    decide, job_seed, race_json, run_race, run_race_observed, Bandit, CacheKey, CacheRegistry,
+    Progress, RaceConfig, TuningJob,
+};
+use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::util::cancel::CancelToken;
+use llamea_kt::util::parallel::test_width;
+use llamea_kt::util::stats;
+
+fn specs(names: &[&str]) -> Vec<OptimizerSpec> {
+    names.iter().map(|n| OptimizerSpec::named(*n)).collect()
+}
+
+fn cfg(rungs: usize, seed: u64, threads: usize) -> RaceConfig {
+    RaceConfig { eta: 2, rungs, seed, threads: Some(threads), cancel: None }
+}
+
+/// The tentpole's determinism contract: the race report — decisions,
+/// rewards, counters, curves, winner — is byte-identical for any worker
+/// count, because the bandit consumes only modeled signals and results
+/// land in stream slots.
+#[test]
+fn race_report_identical_across_thread_counts() {
+    let reg = CacheRegistry::global();
+    let entry = reg.entry(CacheKey::parse("convolution@A4000").unwrap());
+    let portfolio = specs(&["sa", "random", "greedy_ils", "bayes_opt"]);
+    let narrow = run_race(&entry, &portfolio, &cfg(3, 17, 1));
+    let wide = run_race(&entry, &portfolio, &cfg(3, 17, test_width(8)));
+    assert_eq!(
+        race_json(&narrow).to_string(),
+        race_json(&wide).to_string(),
+        "race report depends on executor width"
+    );
+    assert!(narrow.winner.is_some(), "a full race must crown a winner");
+    assert!(narrow.cancellations > 0, "losers must be cancelled through the seam");
+}
+
+/// Finalist curves are bit-identical to the arm's standalone run — even
+/// though doomed arms were being cancelled in the same rung batches. The
+/// final rung reuses the canonical setup verbatim and arm seeds come
+/// from `job_seed` with run index 0, so a finalist's curve must equal
+/// the curve of a plain `coordinate --runs 1` job byte for byte.
+#[test]
+fn finalist_curves_match_standalone_runs_bit_for_bit() {
+    let reg = CacheRegistry::global();
+    let entry = reg.entry(CacheKey::parse("convolution@A4000").unwrap());
+    let portfolio = specs(&["sa", "random", "greedy_ils", "ga"]);
+    let outcome = run_race(&entry, &portfolio, &cfg(2, 5, test_width(8)));
+    assert!(outcome.cancellations > 0, "eta 2 over 4 arms must cancel someone");
+    let space_id = entry.cache.space_id();
+    let mut finalists = 0;
+    for (arm, spec) in outcome.arms.iter().zip(&portfolio) {
+        let Some(curve) = &arm.curve else { continue };
+        finalists += 1;
+        let solo = TuningJob {
+            source: &entry.cache,
+            setup: &entry.setup,
+            factory: spec,
+            seed: job_seed(5, &space_id, &spec.label(), 0),
+            group: 0,
+        }
+        .execute();
+        assert_eq!(curve, &solo, "{}: raced curve diverged from the standalone run", arm.label);
+        assert_eq!(arm.score, Some(stats::mean(&solo)));
+    }
+    assert!(finalists >= 1, "the final rung must complete at least one arm");
+}
+
+/// External interruption (the CLI's SIGINT token) observed at a rung
+/// boundary: the completed rung's scores survive, nothing is truncated,
+/// and the outcome is flagged — no winner is invented from partial data.
+#[test]
+fn mid_race_interruption_keeps_completed_rungs() {
+    let reg = CacheRegistry::global();
+    let entry = reg.entry(CacheKey::parse("convolution@A4000").unwrap());
+    let portfolio = specs(&["sa", "random", "greedy_ils"]);
+    let token = CancelToken::new();
+    let mut config = cfg(3, 11, test_width(8));
+    config.cancel = Some(token.clone());
+    // Fire the external token once every rung-0 job has finished: the
+    // race must notice at the rung boundary and stop before deciding.
+    let finished = AtomicUsize::new(0);
+    let outcome = run_race_observed(&entry, &portfolio, &config, &|ev| {
+        if matches!(ev, Progress::Finished { .. })
+            && finished.fetch_add(1, Ordering::SeqCst) + 1 == 3
+        {
+            token.cancel();
+        }
+    });
+    assert!(outcome.interrupted, "a fired external token must flag the outcome");
+    assert!(outcome.winner.is_none(), "an interrupted race crowns no winner");
+    assert!(outcome.decisions.is_empty(), "interruption lands before the decision");
+    assert_eq!(outcome.jobs.completed, 3, "the completed rung is preserved");
+    for arm in &outcome.arms {
+        assert_eq!(arm.scores.len(), 1, "{}: rung-0 score must survive", arm.label);
+        assert!(arm.scores[0].is_finite());
+        assert!(arm.evals > 0, "{}: probe stats must be captured", arm.label);
+    }
+}
+
+/// Decisions are replayable: feeding the recorded per-rung rewards to a
+/// fresh bandit through the same pure `decide` rule reproduces every
+/// survivor/eliminated split exactly. This is what makes the `"race"`
+/// report block an audit trail rather than a summary.
+#[test]
+fn recorded_decision_trajectory_replays_exactly() {
+    let reg = CacheRegistry::global();
+    let entry = reg.entry(CacheKey::parse("convolution@W6600").unwrap());
+    let portfolio = specs(&["sa", "random", "greedy_ils", "ga", "pso", "bayes_opt"]);
+    let outcome = run_race(&entry, &portfolio, &cfg(3, 23, test_width(8)));
+    assert!(outcome.decisions.len() >= 2, "6 arms over 3 rungs decide at least twice");
+    let n = portfolio.len();
+    let mut bandit = Bandit::new(n);
+    let mut live: Vec<usize> = (0..n).collect();
+    for (i, d) in outcome.decisions.iter().enumerate() {
+        // A live arm's score at decision `i` is its rung-`i` entry (it
+        // played every rung so far); eliminated arms are never ranked.
+        let last: Vec<f64> = (0..n)
+            .map(|a| outcome.arms[a].scores.get(i).copied().unwrap_or(f64::NEG_INFINITY))
+            .collect();
+        let (survivors, eliminated) = decide(&mut bandit, &live, &d.rewards, &last, 2);
+        assert_eq!(survivors, d.survivors, "decision {} survivors diverged on replay", i);
+        assert_eq!(eliminated, d.eliminated, "decision {} eliminations diverged on replay", i);
+        live = survivors;
+    }
+}
+
+/// The acceptance property: on both seed spaces, an 8-arm raced
+/// portfolio reaches a best-found score at least as good as the best
+/// single arm's drain-all run at the same canonical budget. The solo
+/// goldens are computed in-test from the same jobs the `coordinate` grid
+/// would run — nothing stored.
+#[test]
+fn raced_portfolio_matches_best_solo_arm_on_seed_spaces() {
+    let reg = CacheRegistry::global();
+    let portfolio =
+        specs(&["hybrid_vndx", "sa", "greedy_ils", "ga", "pso", "mls", "random", "bayes_opt"]);
+    for key in ["convolution@A4000", "convolution@W6600"] {
+        let entry = reg.entry(CacheKey::parse(key).unwrap());
+        let space_id = entry.cache.space_id();
+        let outcome = run_race(&entry, &portfolio, &cfg(2, 2026, test_width(8)));
+        let raced = outcome.best_score().expect("a full race must score a winner");
+        let mut best_solo = f64::NEG_INFINITY;
+        let mut best_label = String::new();
+        for spec in &portfolio {
+            let curve = TuningJob {
+                source: &entry.cache,
+                setup: &entry.setup,
+                factory: spec,
+                seed: job_seed(2026, &space_id, &spec.label(), 0),
+                group: 0,
+            }
+            .execute();
+            let score = stats::mean(&curve);
+            if score > best_solo {
+                best_solo = score;
+                best_label = spec.label();
+            }
+        }
+        assert!(
+            raced >= best_solo,
+            "{}: raced portfolio scored {} but solo {} reached {}",
+            key,
+            raced,
+            best_label,
+            best_solo
+        );
+    }
+}
