@@ -212,6 +212,37 @@ fn main() {
     obs::enable(false, false);
     obs::reset();
 
+    // Fleet wire codec: one curve row (the dominant line type on a fleet
+    // connection) serialized to its newline-delimited JSON form, and the
+    // coordinator-side parse back to a typed event. Both sit on the
+    // streaming path of every remotely executed job, so they must stay
+    // far below the cost of the tuning run that produced the row.
+    common::section("wire_codec");
+    let wire_curve: Vec<f64> = (0..1_000).map(|i| 1.0 + (i as f64) * 1.5e-3).collect();
+    results.push(common::bench("wire_codec row serialize 1k-point curve", 1, 5, || {
+        use llamea_kt::remote::protocol::row_event;
+        let mut bytes = 0usize;
+        for i in 0..100usize {
+            bytes += row_event(i, i % 4, &wire_curve).to_string().len();
+        }
+        std::hint::black_box(bytes);
+    }));
+    let wire_line = {
+        use llamea_kt::remote::protocol::row_event;
+        row_event(42, 3, &wire_curve).to_string()
+    };
+    results.push(common::bench("wire_codec row parse 1k-point curve", 1, 5, || {
+        use llamea_kt::remote::protocol::{parse_event, WorkerEvent};
+        let mut acc = 0usize;
+        for _ in 0..100usize {
+            match parse_event(&wire_line).expect("row line parses") {
+                WorkerEvent::Row { curve, .. } => acc += curve.len(),
+                other => panic!("expected row, got {:?}", other),
+            }
+        }
+        std::hint::black_box(acc);
+    }));
+
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_hotpath.json");
     common::write_json(&out, &results);
 }

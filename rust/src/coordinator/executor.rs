@@ -779,6 +779,7 @@ mod tests {
             priority,
             slot,
             job: TuningJob { source: &cache, setup: &setup, factory: &factory, seed: 0, group: 0 },
+            enqueued: None,
         };
         let mut heap = BinaryHeap::new();
         heap.push(entry(0, 2));

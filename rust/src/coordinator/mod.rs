@@ -75,7 +75,7 @@ pub mod shard;
 
 pub use executor::{
     BatchResult, BatchRunner, Executor, FnSource, IterSource, JobHandle, JobOutcome, JobSource,
-    JobsSummary, Priority, Progress, SourcedJob,
+    JobsSummary, Priority, Progress, ProgressSink, SourcedJob,
 };
 pub use job::{
     collect_jobs, grid_jobs, grid_source, job_seed, source_jobs, source_jobs_source, OwnedJob,

@@ -22,6 +22,7 @@ pub mod methodology;
 pub mod obs;
 pub mod optimizers;
 pub mod persist;
+pub mod remote;
 pub mod runtime;
 pub mod searchspace;
 pub mod serve;

@@ -50,6 +50,13 @@
 //!       [--shard K/N]              run only grid jobs with index % N == K
 //!                                  and write a partial report (requires
 //!                                  --out; collate with `merge`)
+//!       [--workers h:p,h:p,..]     fan the grid across remote `worker`
+//!                                  daemons instead of the local pool —
+//!                                  the collated report is byte-identical
+//!                                  to the single-process run (modulo
+//!                                  "caches"); lost workers re-dispatch
+//!                                  to survivors, duplicates dedup by
+//!                                  index, Ctrl-C cancels the fleet
 //!   race [--opts a,b:k=v,..]       race an optimizer portfolio on each
 //!        [--spaces app@gpu,..]     space: Hyperband-style budget rungs
 //!                                  with a UCB1 bandit keeping the top
@@ -81,6 +88,8 @@
 //!       [--shard K/N]              evaluate only meta-ordinals with
 //!                                  o % N == K (grid strategy only) and
 //!                                  write a partial report (requires --out)
+//!       [--workers h:p,h:p,..]     drain the sweep's inner batches
+//!                                  through remote `worker` daemons
 //!   merge <partial.json>.. --out F collate per-shard partial reports into
 //!                                  exactly the single-process report,
 //!                                  byte for byte
@@ -92,6 +101,14 @@
 //!                                  pool past N outstanding jobs
 //!       [--max-sessions N]         reject submissions past N concurrent
 //!                                  running sessions
+//!   worker --listen HOST:PORT      run a fleet worker daemon (port 0 picks
+//!                                  a free port; the bound address is
+//!                                  printed on stdout): executes batches
+//!                                  dispatched by `coordinate`/`sweep`
+//!                                  `--workers` coordinators and streams
+//!                                  rows home; honors the global
+//!                                  --cache-dir warm start
+//!       [--threads N]              local pool width
 //!   client <submit|status|cancel|tail> [--addr HOST:PORT]
 //!       submit --kind coordinate|sweep [--spaces a@g,..] [--opts a,b]
 //!              [--opt NAME] [--runs N] [--seed S] [--out FILE]
@@ -123,8 +140,8 @@ use std::path::{Path, PathBuf};
 use llamea_kt::coordinator::{
     coordinate_report, coordinate_results, grid_jobs, grid_source, merge_reports,
     partial_coordinate_json, race_report, race_table, run_race_observed, score_table, source_jobs,
-    CacheKey, CacheRegistry, Executor, Progress, RaceConfig, Scheduler, ShardJob, ShardSpec,
-    COORDINATE_TITLE,
+    BatchRunner, CacheKey, CacheRegistry, Executor, OwnedJob, Progress, RaceConfig, Scheduler,
+    ShardJob, ShardSpec, COORDINATE_TITLE,
 };
 use llamea_kt::harness::{self, BackendKind, ExpOptions};
 use llamea_kt::hypertune::{
@@ -136,6 +153,7 @@ use llamea_kt::llamea::{evolve, EvolutionConfig, MockLlm, SpaceInfo};
 use llamea_kt::methodology::{OptimizerFactory, SpaceSetup};
 use llamea_kt::obs;
 use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::remote::{RemoteRunner, Worker, WorkerConfig};
 use llamea_kt::runtime::{measured::NOMINAL_EVAL_COST_S, MeasuredSource, PjrtRuntime};
 use llamea_kt::searchspace::Application;
 use llamea_kt::serve::{client, ServeConfig, Server, SubmitSpec};
@@ -658,6 +676,44 @@ fn cmd_coordinate(args: &[String]) {
     let n_jobs = entries.len() * factories.len() * runs;
     let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
     let title = COORDINATE_TITLE;
+
+    if let Some(workers) = workers_flag(args) {
+        // Fleet run: same grid, same slots, same seeds — partitioned
+        // across remote workers and collated by index, so the report is
+        // byte-identical to the local run (modulo "caches", which now
+        // reflects the workers' registries, not this process's).
+        if shard_flag(args).is_some() {
+            eprintln!("--workers and --shard are mutually exclusive (the fleet partitions dynamically)");
+            std::process::exit(2);
+        }
+        let arc_specs: Vec<std::sync::Arc<OptimizerSpec>> =
+            specs.iter().cloned().map(std::sync::Arc::new).collect();
+        let jobs = OwnedJob::grid(&entries, &arc_specs, runs, opts.seed);
+        eprintln!(
+            "coordinating {} jobs ({} optimizers x {} spaces x {} seeds) over {} remote workers",
+            n_jobs,
+            specs.len(),
+            entries.len(),
+            runs,
+            workers.len()
+        );
+        let t0 = std::time::Instant::now();
+        let runner = RemoteRunner::new(workers).cancel_via(install_sigint());
+        let progress = ProgressLine::new(Some(n_jobs));
+        let batch = runner.run_batch(&jobs, &|ev| progress.observe(ev));
+        progress.finish();
+        let results = coordinate_results(&labels, entries.len(), &batch);
+        println!("{}", score_table(title, &results).to_text());
+        if let Some(path) = flag_value(args, "--out") {
+            let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+            write_report(&path, coordinate_report(title, &ids, &labels, &batch));
+            eprintln!("score table written to {}", path);
+        }
+        report_worker_tallies(&runner);
+        eprintln!("{} jobs over {} spaces in {:?}", n_jobs, entries.len(), t0.elapsed());
+        report_job_outcomes(&batch.summary());
+        return;
+    }
     let exec = Executor::with_threads(threads).fail_fast().cancel_via(install_sigint());
 
     if let Some(shard) = shard_flag(args) {
@@ -911,12 +967,25 @@ fn cmd_sweep(args: &[String]) {
     // line (total unknown up front: the fan-out depends on memo state).
     let progress = std::sync::Arc::new(ProgressLine::new(None));
     let line = std::sync::Arc::clone(&progress);
-    let mt = MetaTuning::new(base, entries, runs, opts.seed, threads)
+    // `--workers`: drain every inner batch through the remote fleet
+    // instead of the sweep's own executor (scores and reports stay
+    // byte-identical — the runner seam guarantees collation by slot).
+    let remote = workers_flag(args)
+        .map(|workers| std::sync::Arc::new(RemoteRunner::new(workers).cancel_via(install_sigint())));
+    let mut mt = MetaTuning::new(base, entries, runs, opts.seed, threads)
         .unwrap_or_else(|e| panic!("sweep setup: {}", e))
         .with_cancel(install_sigint())
         .with_progress(Box::new(move |ev| line.observe(ev)));
+    if let Some(runner) = &remote {
+        mt = mt.with_runner(std::sync::Arc::clone(runner) as std::sync::Arc<dyn BatchRunner>);
+    }
+    let mt = mt;
 
     if let Some(shard) = shard_flag(args) {
+        if remote.is_some() {
+            eprintln!("--workers and --shard are mutually exclusive (the fleet partitions dynamically)");
+            std::process::exit(2);
+        }
         // Sharded sweep: only the grid strategy has an up-front job set
         // (adaptive strategies pick later evaluations from earlier
         // scores, so their work cannot be partitioned before running).
@@ -992,6 +1061,9 @@ fn cmd_sweep(args: &[String]) {
     if let Some(path) = flag_value(args, "--out") {
         write_report(&path, sweep_json(&mt, &outcome, opts.seed));
         eprintln!("sweep report written to {}", path);
+    }
+    if let Some(runner) = &remote {
+        report_worker_tallies(runner);
     }
     let jobs = mt.jobs_summary();
     eprintln!(
@@ -1104,6 +1176,88 @@ fn cmd_serve(args: &[String]) {
         std::process::exit(1);
     });
     eprintln!("llamea-kt serve: shut down");
+}
+
+/// `--workers h:p,h:p,..` — remote fleet addresses for
+/// `coordinate`/`sweep`.
+fn workers_flag(args: &[String]) -> Option<Vec<String>> {
+    let raw = flag_value(args, "--workers")?;
+    let workers: Vec<String> =
+        raw.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect();
+    if workers.is_empty() {
+        eprintln!("--workers needs at least one HOST:PORT address");
+        std::process::exit(2);
+    }
+    Some(workers)
+}
+
+/// Per-worker fleet accounting on stderr: one tally line per worker plus
+/// the absorbed fleet total. Observational — the report's `"jobs"` block
+/// comes from the deduped batch, not from these.
+fn report_worker_tallies(runner: &RemoteRunner) {
+    let tallies = runner.tallies();
+    let mut fleet = llamea_kt::coordinator::JobsSummary::default();
+    for t in &tallies {
+        fleet.absorb(t.jobs);
+        eprintln!(
+            "worker {}: dispatched {}, rows {}, duplicates {}, completed {}, cancelled {}, failed {}{}",
+            t.addr,
+            t.dispatched,
+            t.rows,
+            t.duplicates,
+            t.jobs.completed,
+            t.jobs.cancelled,
+            t.jobs.failed,
+            if t.lost { " (lost)" } else { "" }
+        );
+    }
+    eprintln!(
+        "fleet total: {} completed, {} cancelled, {} failed across {} workers",
+        fleet.completed,
+        fleet.cancelled,
+        fleet.failed,
+        tallies.len()
+    );
+}
+
+/// Run a fleet worker daemon: accept batches dispatched by
+/// `coordinate`/`sweep` `--workers` coordinators, execute them on a
+/// local deterministic pool (honoring the global `--cache-dir` warm
+/// start), and stream rows home. Ctrl-C shuts down cooperatively: a
+/// running batch is cancelled and its coordinator re-dispatches the
+/// unfinished indices to surviving workers.
+fn cmd_worker(args: &[String]) {
+    let opts = options(args);
+    let listen = flag_value(args, "--listen").unwrap_or_else(|| "127.0.0.1:4518".into());
+    let config = WorkerConfig { threads: opts.threads, ..WorkerConfig::default() };
+    let worker = Worker::bind(&listen, config).unwrap_or_else(|e| {
+        eprintln!("worker: cannot bind {}: {}", listen, e);
+        std::process::exit(2);
+    });
+    let addr = worker.local_addr();
+    eprintln!("llamea-kt worker: listening on {} ({} threads)", addr, worker.threads());
+    // Machine-readable bound address (scripts rely on it with port 0);
+    // flushed explicitly because stdout is block-buffered under
+    // redirection and the daemon does not exit.
+    {
+        use std::io::Write;
+        let mut out = std::io::stdout();
+        writeln!(out, "{}", addr).ok();
+        out.flush().ok();
+    }
+    let handle = worker.handle();
+    let sigint = install_sigint();
+    std::thread::spawn(move || {
+        while !sigint.is_cancelled() {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        handle.shutdown();
+    });
+    worker.run().unwrap_or_else(|e| {
+        eprintln!("worker: {}", e);
+        std::process::exit(1);
+    });
+    eprintln!("llamea-kt worker: shut down");
 }
 
 /// Rehydrate a daemon progress event into the executor's [`Progress`] so
@@ -1349,10 +1503,11 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("merge") => cmd_merge(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
         _ => {
             eprintln!(
-                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|race|sweep|merge|serve|client> [options]\n\
+                "usage: llamea-kt <spaces|testbed|optimizers|tune|evolve|real-tune|experiment|coordinate|race|sweep|merge|serve|worker|client> [options]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);

@@ -11,7 +11,10 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, OnceLock, PoisonError};
 
-use super::{snapshot_events, snapshot_metrics, sym_name, ArgValue, BUCKET_BOUNDS_NS};
+use super::{
+    snapshot_events, snapshot_imported, snapshot_metrics, sym_name, ArgValue, ImportedEvent,
+    BUCKET_BOUNDS_NS,
+};
 use crate::util::json::{self, Json};
 
 fn arg_json(v: &ArgValue) -> Json {
@@ -23,22 +26,31 @@ fn arg_json(v: &ArgValue) -> Json {
     }
 }
 
+fn trace_row(name: &str, ns: u64, dur_ns: u64, pid: u64, tid: u64, seq: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("name", name);
+    j.set("cat", "obs");
+    j.set("ph", "X");
+    j.set("ts", ns / 1_000);
+    j.set("dur", dur_ns / 1_000);
+    j.set("pid", pid);
+    j.set("tid", tid);
+    j
+}
+
 /// The full trace as a Chrome trace-event document. Every event is a
 /// complete ("X") span — closed by construction — with microsecond
 /// `ts`/`dur` (truncated; the exact nanosecond start and per-thread
 /// sequence number ride in `args` so the canonical order stays visible
-/// after truncation).
+/// after truncation). Local events carry pid 1; events imported from
+/// fleet workers keep their assigned worker pid, and the merged stream
+/// is sorted by the canonical `(epoch-ns, pid, tid, seq)` key — for a
+/// single-process run (constant pid 1) that is exactly the historical
+/// `(epoch-ns, thread, seq)` order.
 pub fn chrome_trace() -> Json {
-    let mut events = Json::Arr(Vec::new());
+    let mut rows: Vec<((u64, u64, u64, u64), Json)> = Vec::new();
     for e in snapshot_events() {
-        let mut j = Json::obj();
-        j.set("name", e.name);
-        j.set("cat", "obs");
-        j.set("ph", "X");
-        j.set("ts", e.ns / 1_000);
-        j.set("dur", e.dur_ns / 1_000);
-        j.set("pid", 1u64);
-        j.set("tid", e.thread as u64);
+        let mut j = trace_row(e.name, e.ns, e.dur_ns, 1, e.thread as u64, e.seq);
         let mut args = Json::obj();
         args.set("ns", e.ns);
         args.set("seq", e.seq);
@@ -46,12 +58,93 @@ pub fn chrome_trace() -> Json {
             args.set(key, arg_json(value));
         }
         j.set("args", args);
+        rows.push(((e.ns, 1, e.thread as u64, e.seq), j));
+    }
+    for e in snapshot_imported() {
+        let mut j = trace_row(&e.name, e.ns, e.dur_ns, e.pid, e.tid, e.seq);
+        let mut args = Json::obj();
+        args.set("ns", e.ns);
+        args.set("seq", e.seq);
+        for (key, value) in &e.args {
+            args.set(key, value.clone());
+        }
+        j.set("args", args);
+        rows.push(((e.ns, e.pid, e.tid, e.seq), j));
+    }
+    rows.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut events = Json::Arr(Vec::new());
+    for (_, j) in rows {
         events.push(j);
     }
     let mut doc = Json::obj();
     doc.set("traceEvents", events);
     doc.set("displayTimeUnit", "ms");
     doc
+}
+
+/// The local trace buffer as a plain JSON array (`{name, ns, dur_ns,
+/// thread, seq, args}` per event, symbols resolved) — the form a fleet
+/// worker ships home with its final rows. Timestamps are the worker's
+/// own epoch-nanoseconds; the coordinator renormalizes them via
+/// [`import_worker_events`].
+pub fn events_json() -> Json {
+    let mut arr = Json::Arr(Vec::new());
+    for e in snapshot_events() {
+        let mut j = Json::obj();
+        j.set("name", e.name);
+        j.set("ns", e.ns);
+        j.set("dur_ns", e.dur_ns);
+        j.set("thread", e.thread as u64);
+        j.set("seq", e.seq);
+        let mut args = Json::obj();
+        for (key, value) in e.args.iter().take(e.n_args as usize) {
+            args.set(key, arg_json(value));
+        }
+        j.set("args", args);
+        arr.push(j);
+    }
+    arr
+}
+
+/// Decode a worker's [`events_json`] array and fold it into the imported
+/// buffer under `pid`, shifting every timestamp by `offset_ns` (the
+/// coordinator's clock reading at dispatch minus the worker's reported
+/// `base_ns`, so fleet spans land on the coordinator's epoch; negative
+/// results clamp to 0). Malformed entries are skipped — trace shipping
+/// is best-effort and must never fail a batch. Returns the number of
+/// events imported.
+pub fn import_worker_events(spans: &[Json], pid: u64, offset_ns: i64) -> usize {
+    let mut out = Vec::new();
+    for s in spans {
+        let name = s.get("name").and_then(Json::as_str);
+        let ns = s.get("ns").and_then(Json::as_usize);
+        let dur_ns = s.get("dur_ns").and_then(Json::as_usize);
+        let tid = s.get("thread").and_then(Json::as_usize);
+        let seq = s.get("seq").and_then(Json::as_usize);
+        let (Some(name), Some(ns), Some(dur_ns), Some(tid), Some(seq)) =
+            (name, ns, dur_ns, tid, seq)
+        else {
+            continue;
+        };
+        let mut args = Vec::new();
+        if let Some(Json::Obj(pairs)) = s.get("args") {
+            for (k, v) in pairs {
+                args.push((k.clone(), v.clone()));
+            }
+        }
+        out.push(ImportedEvent {
+            ns: (ns as i64).saturating_add(offset_ns).max(0) as u64,
+            dur_ns: dur_ns as u64,
+            name: name.to_string(),
+            pid,
+            tid: tid as u64,
+            seq: seq as u64,
+            args,
+        });
+    }
+    let n = out.len();
+    super::import_events(out);
+    n
 }
 
 /// `a.b.c` → `a_b_c`: Prometheus metric names allow `[a-zA-Z0-9_:]`.
@@ -178,4 +271,5 @@ mod tests {
         assert!(doc.get("traceEvents").is_some());
         assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
     }
+
 }

@@ -110,8 +110,12 @@ fn epoch() -> Instant {
     *EPOCH.get_or_init(Instant::now)
 }
 
+/// Nanoseconds since the process recording epoch. Public so the remote
+/// fleet layer can renormalize worker-shipped span timestamps onto the
+/// coordinator's clock (offset = coordinator dispatch ns − worker
+/// `base_ns`); everything else should go through [`span`] / [`span_at`].
 #[inline]
-fn now_ns() -> u64 {
+pub fn now_ns() -> u64 {
     epoch().elapsed().as_nanos() as u64
 }
 
@@ -432,7 +436,9 @@ pub fn event_count() -> usize {
 }
 
 /// Clear all recorded events, counters, and histograms (shards stay
-/// registered). A test/bench seam: production code never truncates.
+/// registered), plus any worker-imported events. A test/bench seam —
+/// production code never truncates — and the worker daemon's
+/// between-batches truncation point.
 pub fn reset() {
     let s = lock(shards());
     for shard in &s.all {
@@ -440,6 +446,47 @@ pub fn reset() {
         lock(&shard.counters).clear();
         lock(&shard.hists).clear();
     }
+    drop(s);
+    lock(imported()).clear();
+}
+
+/// A span imported from another process (a fleet worker), already
+/// renormalized to this process's epoch. Unlike the in-process `Event`
+/// it owns its strings — worker names arrive over the wire, not from
+/// `&'static str` call sites — and carries an explicit `pid` so the
+/// Chrome trace keeps each worker's rows distinct from the
+/// coordinator's (local events export as pid 1; workers get 2, 3, ...).
+#[derive(Debug, Clone)]
+pub struct ImportedEvent {
+    pub ns: u64,
+    pub dur_ns: u64,
+    pub name: String,
+    pub pid: u64,
+    pub tid: u64,
+    pub seq: u64,
+    pub args: Vec<(String, crate::util::json::Json)>,
+}
+
+fn imported() -> &'static Mutex<Vec<ImportedEvent>> {
+    static IMPORTED: OnceLock<Mutex<Vec<ImportedEvent>>> = OnceLock::new();
+    IMPORTED.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Append worker-shipped events to the imported buffer (the coordinator
+/// side of fleet tracing; see [`export::import_worker_events`] for the
+/// wire-JSON decoding and epoch renormalization that produce them).
+pub fn import_events(events: Vec<ImportedEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    lock(imported()).extend(events);
+}
+
+/// Snapshot of all imported events, sorted by `(ns, pid, tid, seq)`.
+pub(crate) fn snapshot_imported() -> Vec<ImportedEvent> {
+    let mut out = lock(imported()).clone();
+    out.sort_by(|a, b| (a.ns, a.pid, a.tid, a.seq).cmp(&(b.ns, b.pid, b.tid, b.seq)));
+    out
 }
 
 /// Canonical snapshot of all events, sorted by `(ns, thread, seq)`.
@@ -539,6 +586,34 @@ mod tests {
         assert!(events.windows(2).all(|w| {
             (w[0].ns, w[0].thread, w[0].seq) <= (w[1].ns, w[1].thread, w[1].seq)
         }));
+    }
+
+    #[test]
+    fn worker_events_import_renormalized_and_reset_clears_them() {
+        let _g = guard();
+        use crate::util::json::Json;
+        let mut ev = Json::obj();
+        ev.set("name", "remote.job");
+        ev.set("ns", 5_000u64);
+        ev.set("dur_ns", 40u64);
+        ev.set("thread", 3u64);
+        ev.set("seq", 9u64);
+        let mut args = Json::obj();
+        args.set("index", 2u64);
+        ev.set("args", args);
+        let garbage = Json::parse("{\"name\":\"half\"}").unwrap();
+        // The offset pushes the events below the epoch: they clamp to 0.
+        let n = export::import_worker_events(&[ev.clone(), garbage, ev], 7, -6_000);
+        assert_eq!(n, 2, "both well-formed events import; garbage is skipped");
+        let mine: Vec<_> = snapshot_imported().into_iter().filter(|e| e.pid == 7).collect();
+        assert_eq!(mine.len(), 2);
+        assert_eq!(mine[0].ns, 0, "pre-epoch timestamps clamp to 0");
+        assert_eq!(mine[0].name, "remote.job");
+        assert_eq!(mine[0].tid, 3);
+        assert_eq!(mine[0].seq, 9);
+        assert_eq!(mine[0].args.len(), 1);
+        reset();
+        assert!(snapshot_imported().iter().all(|e| e.pid != 7), "reset clears imports");
     }
 
     #[test]

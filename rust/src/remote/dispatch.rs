@@ -1,0 +1,150 @@
+//! Pure fleet-dispatch bookkeeping: partitioning slot indices across
+//! workers and tracking which slots still need an outcome. No sockets —
+//! everything here is deterministic, synchronous, and unit-tested in
+//! isolation; [`super::runner`] wires it to real connections.
+
+use crate::coordinator::JobOutcome;
+
+/// Round-robin partition: bucket `w` receives `indices[k]` for every
+/// `k % ways == w`. On the first dispatch round `indices` is `0..n`, so
+/// this is exactly the `ShardSpec` rule (`index % ways == w`) that PR 6
+/// proved valid for any partition — seeds are grid-derived, never
+/// order-derived. Re-dispatch rounds pass the surviving unfinished
+/// indices (sorted ascending), which stay balanced the same way.
+pub fn split_round_robin(indices: &[usize], ways: usize) -> Vec<Vec<usize>> {
+    let ways = ways.max(1);
+    let mut out = vec![Vec::new(); ways];
+    for (k, &i) in indices.iter().enumerate() {
+        out[k % ways].push(i);
+    }
+    out
+}
+
+/// What [`SlotTable::record`] did with a delivered outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Record {
+    /// First outcome for this slot — recorded.
+    Fresh,
+    /// The slot already holds an outcome — dropped. Benign: re-dispatch
+    /// can legitimately produce the same row twice, and identical seeds
+    /// make either copy bit-equal, so first-write-wins loses nothing.
+    Duplicate,
+    /// The index is outside the batch — a protocol violation by the
+    /// sender (the runner drops that worker).
+    OutOfRange,
+}
+
+/// Slot-indexed outcome table for one fleet batch. Deduplication by
+/// index lives here — *upstream* of report assembly, because
+/// `merge_coordinate` treats a duplicate index as an error — and
+/// first-write-wins is sound because a re-run of the same seed is
+/// bit-equal to the original.
+pub struct SlotTable {
+    slots: Vec<Option<JobOutcome>>,
+    filled: usize,
+}
+
+impl SlotTable {
+    pub fn new(n: usize) -> SlotTable {
+        SlotTable { slots: vec![None; n], filled: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Number of slots holding an outcome.
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// Record `outcome` for `index` (first write wins).
+    pub fn record(&mut self, index: usize, outcome: JobOutcome) -> Record {
+        match self.slots.get_mut(index) {
+            None => Record::OutOfRange,
+            Some(Some(_)) => Record::Duplicate,
+            Some(slot @ None) => {
+                *slot = Some(outcome);
+                self.filled += 1;
+                Record::Fresh
+            }
+        }
+    }
+
+    /// Slots with no outcome yet, ascending.
+    pub fn unfinished(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .collect()
+    }
+
+    /// Consume the table into per-slot outcomes, filling any still-empty
+    /// slot by calling `fill` with its index (cancelled fleet →
+    /// `Cancelled`, no surviving workers → `Failed`).
+    pub fn into_outcomes(self, mut fill: impl FnMut(usize) -> JobOutcome) -> Vec<JobOutcome> {
+        self.slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.unwrap_or_else(|| fill(i)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_round_split_matches_the_shard_rule() {
+        let indices: Vec<usize> = (0..11).collect();
+        let buckets = split_round_robin(&indices, 3);
+        assert_eq!(buckets.len(), 3);
+        for (w, bucket) in buckets.iter().enumerate() {
+            for &i in bucket {
+                assert_eq!(i % 3, w, "first-round bucket {} must obey i % ways == w", w);
+            }
+        }
+        let total: usize = buckets.iter().map(Vec::len).sum();
+        assert_eq!(total, 11, "every index lands in exactly one bucket");
+    }
+
+    #[test]
+    fn redispatch_split_balances_survivor_load() {
+        let remaining = [2, 5, 8, 11, 14];
+        let buckets = split_round_robin(&remaining, 2);
+        assert_eq!(buckets[0], vec![2, 8, 14]);
+        assert_eq!(buckets[1], vec![5, 11]);
+        // Degenerate ways are clamped, never a panic.
+        assert_eq!(split_round_robin(&remaining, 0).len(), 1);
+        assert_eq!(split_round_robin(&[], 4).iter().map(Vec::len).sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn slot_table_dedups_by_index_and_tracks_unfinished() {
+        let mut table = SlotTable::new(4);
+        assert_eq!(table.unfinished(), vec![0, 1, 2, 3]);
+        assert_eq!(table.record(1, JobOutcome::Completed(vec![1.0])), Record::Fresh);
+        assert_eq!(
+            table.record(1, JobOutcome::Completed(vec![2.0])),
+            Record::Duplicate,
+            "second delivery for a slot is dropped"
+        );
+        assert_eq!(table.record(9, JobOutcome::Completed(vec![0.0])), Record::OutOfRange);
+        assert_eq!(table.record(3, JobOutcome::Failed("x".into())), Record::Fresh);
+        assert_eq!(table.filled(), 2);
+        assert_eq!(table.unfinished(), vec![0, 2]);
+        let outcomes = table.into_outcomes(|_| JobOutcome::Cancelled);
+        assert_eq!(outcomes.len(), 4);
+        // First write won: the duplicate's curve never displaced the original.
+        assert_eq!(outcomes[1], JobOutcome::Completed(vec![1.0]));
+        assert_eq!(outcomes[0], JobOutcome::Cancelled);
+        assert_eq!(outcomes[2], JobOutcome::Cancelled);
+        assert_eq!(outcomes[3], JobOutcome::Failed("x".into()));
+    }
+}

@@ -1,0 +1,79 @@
+//! Fleet execution: fan one batch across remote worker daemons and
+//! collate the rows into a result byte-identical to the single-process
+//! run (modulo the non-deterministic `"caches"` block).
+//!
+//! Two halves over one newline-delimited-JSON TCP protocol (the serve
+//! daemon's conventions — [`crate::serve::protocol`] supplies the shared
+//! line reader and limits):
+//!
+//! - [`worker::Worker`] — the daemon behind `llamea-kt worker`: one
+//!   batch per connection, executed on a local deterministic pool,
+//!   rows streamed home as they finish.
+//! - [`runner::RemoteRunner`] — a [`crate::coordinator::BatchRunner`]
+//!   that partitions the batch over workers, re-dispatches after
+//!   failures, and deduplicates by slot index.
+//!
+//! ## Wire grammar
+//!
+//! One JSON object per `\n`-terminated line, at most
+//! [`protocol::MAX_LINE_BYTES`] per line. Coordinator → worker:
+//!
+//! ```text
+//! {"cmd":"run","trace":false,"jobs":[
+//!   {"index":4,"space":"convolution@A4000","opt":"sa",
+//!    "seed":"17349...202","group":1,"priority":0}, ...]}
+//! {"cmd":"cancel"}
+//! ```
+//!
+//! Worker → coordinator (in order: `hello`, then interleaved
+//! `row`/`job_failed`/`heartbeat`, then exactly one `done`):
+//!
+//! ```text
+//! {"event":"hello","threads":8,"jobs":12}
+//! {"event":"row","index":4,"group":1,"curve":[201.5,...]}
+//! {"event":"job_failed","index":7,"error":"..."}
+//! {"event":"heartbeat"}
+//! {"event":"done","jobs":{"completed":11,"cancelled":0,"failed":1,
+//!  "cost_us":33000000},"base_ns":"41527","spans":[...]}
+//! {"event":"error","message":"..."}
+//! ```
+//!
+//! Seeds and `base_ns` are decimal *strings* (JSON numbers are `f64`,
+//! exact only to 2^53; see [`protocol`]); curves are plain JSON arrays,
+//! bit-exact through [`crate::util::json`].
+//!
+//! ## Why re-dispatch is idempotent
+//!
+//! The determinism contract makes every job a pure function of
+//! `(source, setup, factory, seed)`, and each job's seed travels in its
+//! wire record — derived from grid coordinates, never from which host
+//! runs it or when. So executing a job twice (the coordinator re-sends a
+//! lost worker's unfinished indices; the "lost" worker may in fact still
+//! be computing) yields bit-equal curves, and first-write-wins dedup by
+//! slot index ([`dispatch::SlotTable`]) loses nothing whichever copy
+//! lands first. Collation fills slots by index, so the merged batch is
+//! byte-identical to the single-process run at any fleet width, any
+//! partition, and under any kill/retry timing — the same argument that
+//! justified `ShardSpec` grid sharding, promoted from static shards to
+//! dynamic fan-out.
+//!
+//! ## One fleet trace, one clock
+//!
+//! Workers record [`crate::obs`] spans against their own process epoch
+//! and ship them in `done` (`spans`, with `base_ns` = the worker's epoch
+//! reading at batch start). The coordinator renormalizes each worker's
+//! timestamps by `offset = dispatch_ns - base_ns` — the connection's
+//! dispatch instant on the coordinator clock — clamped at zero, and tags
+//! them `pid = worker index + 2` (the coordinator itself is `pid` 1).
+//! `--trace` then emits one fleet-wide Chrome trace in the canonical
+//! `(epoch-ns, pid, tid, seq)` order, which degenerates to the
+//! historical `(epoch-ns, thread, seq)` order when everything ran in one
+//! process.
+
+pub mod dispatch;
+pub mod protocol;
+pub mod runner;
+pub mod worker;
+
+pub use runner::{RemoteRunner, WorkerTally};
+pub use worker::{Worker, WorkerConfig, WorkerHandle};

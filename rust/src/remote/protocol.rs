@@ -1,0 +1,387 @@
+//! The fleet wire protocol: newline-delimited JSON between the
+//! coordinator-side [`RemoteRunner`](super::runner::RemoteRunner) and
+//! `llamea-kt worker` daemons, following the serve protocol's
+//! conventions (one JSON object per line, [`MAX_LINE_BYTES`] cap,
+//! structured `error` events for every malformed input — never a panic
+//! or a hang). See [`super`] for the full grammar.
+//!
+//! Two wire rules keep the determinism contract intact across hosts:
+//!
+//! - **Seeds are decimal strings.** Per-job seeds are avalanched over
+//!   the full 64-bit range, and JSON numbers are `f64` (exact only to
+//!   2^53), so `seed` (and the worker's `base_ns`) cross the wire as
+//!   strings and re-parse with `str::parse::<u64>` — bit-exact.
+//! - **Only registry specs travel.** A `genome:<name>`
+//!   [`OptimizerSpec`] does not round-trip through `Display`/`parse`
+//!   (pinned by `genome_display_is_explicitly_partial`), so
+//!   [`wire_job`] rejects genome jobs up front with a structured error
+//!   instead of silently running the wrong optimizer remotely.
+//!
+//! Curves are `Vec<f64>` riding as plain JSON arrays —
+//! [`crate::util::json`] round-trips every `f64` bit-exactly, which is
+//! what makes fleet collation byte-identical to the single-process run.
+
+use crate::coordinator::{JobsSummary, OwnedJob};
+use crate::optimizers::OptimizerSpec;
+use crate::util::json::Json;
+
+pub use crate::serve::protocol::{error_event, MAX_LINE_BYTES};
+
+/// One job as it crosses the wire: the batch-slot index plus everything
+/// a worker needs to reconstruct the [`OwnedJob`] against its own
+/// registry (space key, optimizer spec rendering, exact seed, group,
+/// priority).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireJob {
+    pub index: usize,
+    pub space: String,
+    pub opt: String,
+    pub seed: u64,
+    pub group: usize,
+    pub priority: i64,
+}
+
+/// A parsed coordinator→worker request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerRequest {
+    /// Run a batch; the worker streams `row`/`job_failed` events per job
+    /// and closes with a `done` event.
+    Run { jobs: Vec<WireJob>, trace: bool },
+    /// Cancel the batch running on this connection (cooperative:
+    /// completed rows already sent stay valid).
+    Cancel,
+}
+
+/// A parsed worker→coordinator event line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerEvent {
+    /// First event on a run connection: the worker accepted the batch.
+    Hello { threads: usize, jobs: usize },
+    /// One completed job (streamed as soon as it finishes).
+    Row { index: usize, group: usize, curve: Vec<f64> },
+    /// One failed job (panic isolated worker-side).
+    JobFailed { index: usize, error: String },
+    /// Liveness pulse while a batch runs; any read-timeout on the
+    /// coordinator side therefore means the worker is lost or stalled.
+    Heartbeat,
+    /// Batch finished (or wound down after a cancel): per-worker
+    /// accounting, the worker's trace epoch, and its span buffer (empty
+    /// unless the run requested tracing).
+    Done { summary: JobsSummary, base_ns: u64, spans: Vec<Json> },
+    /// Structured failure (bad request, unknown space, ...).
+    Error { message: String },
+}
+
+/// Serialize one job for the wire. Fails (with the structured message
+/// the coordinator reports) for genome specs, which cannot round-trip.
+pub fn wire_job(index: usize, job: &OwnedJob) -> Result<Json, String> {
+    if matches!(&*job.spec, OptimizerSpec::Genome(_)) {
+        return Err(format!(
+            "job {}: optimizer spec '{}' is a genome, which does not round-trip over the wire; \
+             remote fleets accept registry specs only",
+            index,
+            job.spec.label()
+        ));
+    }
+    let mut j = Json::obj();
+    j.set("index", index);
+    j.set("space", job.entry.key.id());
+    j.set("opt", job.spec.to_string());
+    j.set("seed", job.seed.to_string());
+    j.set("group", job.group);
+    j.set("priority", job.priority);
+    Ok(j)
+}
+
+/// Build a `run` request line from pre-serialized [`wire_job`] objects.
+pub fn run_request(jobs: Vec<Json>, trace: bool) -> Json {
+    let mut j = Json::obj();
+    j.set("cmd", "run");
+    j.set("trace", trace);
+    j.set("jobs", Json::Arr(jobs));
+    j
+}
+
+/// Build the `cancel` request line.
+pub fn cancel_request() -> Json {
+    let mut j = Json::obj();
+    j.set("cmd", "cancel");
+    j
+}
+
+fn u64_string_field(j: &Json, key: &str) -> Result<u64, String> {
+    let s = j.get(key).and_then(|v| v.as_str()).ok_or_else(|| {
+        format!("'{}' must be a decimal string (64-bit values overflow JSON numbers)", key)
+    })?;
+    s.parse::<u64>().map_err(|e| format!("'{}' is not a u64: {}", key, e))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| format!("'{}' must be a non-negative integer", key))
+}
+
+fn parse_wire_job(j: &Json) -> Result<WireJob, String> {
+    let index = usize_field(j, "index")?;
+    let space = j
+        .get("space")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "job 'space' must be a string".to_string())?
+        .to_string();
+    let opt = j
+        .get("opt")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "job 'opt' must be a string".to_string())?
+        .to_string();
+    let seed = u64_string_field(j, "seed")?;
+    let group = usize_field(j, "group")?;
+    let priority = j.get("priority").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64;
+    Ok(WireJob { index, space, opt, seed, group, priority })
+}
+
+/// Parse one coordinator→worker request line. Every failure is a
+/// client-visible message the worker wraps in an `error` event.
+pub fn parse_request(line: &str) -> Result<WorkerRequest, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad request line: {}", e))?;
+    let cmd = j
+        .get("cmd")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "request must carry a string 'cmd'".to_string())?;
+    match cmd {
+        "run" => {
+            let trace = j.get("trace").map(|v| matches!(v, Json::Bool(true))).unwrap_or(false);
+            let arr = j
+                .get("jobs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| "'jobs' must be an array".to_string())?;
+            if arr.is_empty() {
+                return Err("'jobs' must be non-empty".into());
+            }
+            let jobs = arr.iter().map(parse_wire_job).collect::<Result<Vec<_>, _>>()?;
+            Ok(WorkerRequest::Run { jobs, trace })
+        }
+        "cancel" => Ok(WorkerRequest::Cancel),
+        other => Err(format!("unknown cmd '{}'", other)),
+    }
+}
+
+pub fn hello_event(threads: usize, jobs: usize) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "hello");
+    j.set("threads", threads);
+    j.set("jobs", jobs);
+    j
+}
+
+pub fn row_event(index: usize, group: usize, curve: &[f64]) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "row");
+    j.set("index", index);
+    j.set("group", group);
+    j.set("curve", curve.to_vec());
+    j
+}
+
+pub fn job_failed_event(index: usize, error: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "job_failed");
+    j.set("index", index);
+    j.set("error", error);
+    j
+}
+
+pub fn heartbeat_event() -> Json {
+    let mut j = Json::obj();
+    j.set("event", "heartbeat");
+    j
+}
+
+pub fn done_event(summary: &JobsSummary, base_ns: u64, spans: Json) -> Json {
+    let mut j = Json::obj();
+    j.set("event", "done");
+    j.set("jobs", summary.to_json());
+    j.set("base_ns", base_ns.to_string());
+    j.set("spans", spans);
+    j
+}
+
+fn summary_from_json(j: &Json) -> Result<JobsSummary, String> {
+    Ok(JobsSummary {
+        completed: usize_field(j, "completed")?,
+        cancelled: usize_field(j, "cancelled")?,
+        failed: usize_field(j, "failed")?,
+        cost_us: usize_field(j, "cost_us")? as u64,
+    })
+}
+
+/// Parse one worker→coordinator event line. A parse failure means the
+/// worker is speaking garbage — the runner treats it as worker loss.
+pub fn parse_event(line: &str) -> Result<WorkerEvent, String> {
+    let mut j = Json::parse(line).map_err(|e| format!("bad event line: {}", e))?;
+    let event = j
+        .get("event")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "event line must carry a string 'event'".to_string())?
+        .to_string();
+    match event.as_str() {
+        "hello" => Ok(WorkerEvent::Hello {
+            threads: usize_field(&j, "threads")?,
+            jobs: usize_field(&j, "jobs")?,
+        }),
+        "row" => {
+            let index = usize_field(&j, "index")?;
+            let group = usize_field(&j, "group")?;
+            let arr = j
+                .get("curve")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| "row 'curve' must be an array".to_string())?;
+            let curve = arr
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| "row 'curve' must hold numbers".to_string()))
+                .collect::<Result<Vec<f64>, _>>()?;
+            Ok(WorkerEvent::Row { index, group, curve })
+        }
+        "job_failed" => Ok(WorkerEvent::JobFailed {
+            index: usize_field(&j, "index")?,
+            error: j
+                .get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unspecified worker-side failure")
+                .to_string(),
+        }),
+        "heartbeat" => Ok(WorkerEvent::Heartbeat),
+        "done" => {
+            let summary = summary_from_json(
+                j.get("jobs").ok_or_else(|| "done event needs a 'jobs' summary".to_string())?,
+            )?;
+            let base_ns = u64_string_field(&j, "base_ns")?;
+            let spans = match j.remove("spans") {
+                Some(Json::Arr(spans)) => spans,
+                _ => Vec::new(),
+            };
+            Ok(WorkerEvent::Done { summary, base_ns, spans })
+        }
+        "error" => Ok(WorkerEvent::Error {
+            message: j
+                .get("message")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unspecified worker error")
+                .to_string(),
+        }),
+        other => Err(format!("unknown event '{}'", other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CacheKey, CacheRegistry};
+    use std::sync::Arc;
+
+    fn owned_job(seed: u64) -> OwnedJob {
+        let entry = CacheRegistry::global().entry(CacheKey::parse("convolution@A4000").unwrap());
+        OwnedJob {
+            entry,
+            spec: Arc::new(OptimizerSpec::parse("sa").unwrap()),
+            seed,
+            group: 3,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn run_request_round_trips_with_full_u64_seeds() {
+        // A seed far beyond 2^53: exact only because it rides as a string.
+        let seed = u64::MAX - 12345;
+        let wire = wire_job(7, &owned_job(seed)).expect("registry specs serialize");
+        let line = run_request(vec![wire], true).to_string();
+        let parsed = parse_request(&line).expect("round trip");
+        match parsed {
+            WorkerRequest::Run { jobs, trace } => {
+                assert!(trace);
+                assert_eq!(jobs.len(), 1);
+                assert_eq!(jobs[0].index, 7);
+                assert_eq!(jobs[0].space, "convolution@A4000");
+                assert_eq!(jobs[0].opt, "sa");
+                assert_eq!(jobs[0].seed, seed, "seed must survive the wire bit-exactly");
+                assert_eq!(jobs[0].group, 3);
+                assert_eq!(jobs[0].priority, 0);
+            }
+            other => panic!("expected run, got {:?}", other),
+        }
+        assert_eq!(parse_request(&cancel_request().to_string()), Ok(WorkerRequest::Cancel));
+    }
+
+    #[test]
+    fn genome_jobs_are_rejected_at_serialization() {
+        let mut job = owned_job(1);
+        let genome = crate::llamea::Genome::hybrid_vndx_like();
+        job.spec = Arc::new(OptimizerSpec::Genome(genome));
+        let err = wire_job(0, &job).expect_err("genomes cannot round-trip");
+        assert!(err.contains("genome"), "{}", err);
+        assert!(err.contains("job 0"), "{}", err);
+    }
+
+    #[test]
+    fn events_round_trip() {
+        let curve = vec![1.5, f64::MIN_POSITIVE, 2.25e-300];
+        let row = row_event(4, 2, &curve).to_string();
+        assert_eq!(parse_event(&row), Ok(WorkerEvent::Row { index: 4, group: 2, curve }));
+
+        let hello = hello_event(8, 20).to_string();
+        assert_eq!(parse_event(&hello), Ok(WorkerEvent::Hello { threads: 8, jobs: 20 }));
+
+        assert_eq!(parse_event(&heartbeat_event().to_string()), Ok(WorkerEvent::Heartbeat));
+
+        let failed = job_failed_event(9, "boom").to_string();
+        assert_eq!(
+            parse_event(&failed),
+            Ok(WorkerEvent::JobFailed { index: 9, error: "boom".into() })
+        );
+
+        let summary =
+            JobsSummary { completed: 5, cancelled: 1, failed: 0, cost_us: 123_456 };
+        let base_ns = u64::MAX / 3;
+        let done = done_event(&summary, base_ns, Json::Arr(Vec::new())).to_string();
+        match parse_event(&done).expect("done parses") {
+            WorkerEvent::Done { summary: s, base_ns: b, spans } => {
+                assert_eq!(s.completed, 5);
+                assert_eq!(s.cancelled, 1);
+                assert_eq!(s.failed, 0);
+                assert_eq!(s.cost_us, 123_456);
+                assert_eq!(b, base_ns, "base_ns must survive the wire bit-exactly");
+                assert!(spans.is_empty());
+            }
+            other => panic!("expected done, got {:?}", other),
+        }
+
+        let err = error_event("no such space").to_string();
+        assert_eq!(parse_event(&err), Ok(WorkerEvent::Error { message: "no such space".into() }));
+    }
+
+    #[test]
+    fn malformed_lines_yield_messages_not_panics() {
+        for bad in [
+            "{not json",
+            "[]",
+            r#"{"cmd":"warp"}"#,
+            r#"{"cmd":"run","jobs":[]}"#,
+            r#"{"cmd":"run","jobs":[{"index":0}]}"#,
+            // Numeric seeds are rejected: they would silently lose bits.
+            r#"{"cmd":"run","jobs":[{"index":0,"space":"a@b","opt":"sa","seed":7,"group":0}]}"#,
+            r#"{"cmd":"run","jobs":[{"index":0,"space":"a@b","opt":"sa","seed":"x","group":0}]}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "{} must be rejected", bad);
+        }
+        for bad in [
+            "{not json",
+            r#"{"event":"comet"}"#,
+            r#"{"event":"row","index":0,"group":0,"curve":["a"]}"#,
+            r#"{"event":"done","jobs":{"completed":1},"base_ns":"0"}"#,
+            r#"{"event":"done","jobs":{"completed":1,"cancelled":0,"failed":0,"cost_us":0},"base_ns":9}"#,
+        ] {
+            assert!(parse_event(bad).is_err(), "{} must be rejected", bad);
+        }
+    }
+}

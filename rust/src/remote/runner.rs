@@ -1,0 +1,320 @@
+//! Coordinator side of the fleet: a [`RemoteRunner`] implements
+//! [`BatchRunner`] by partitioning the batch across worker daemons,
+//! streaming their rows into a slot table, and re-dispatching the
+//! unfinished remainder of any lost worker to the survivors.
+//!
+//! Fault model: a worker is *lost* when its connection fails, a read
+//! times out (workers heartbeat well inside [`RemoteRunner::read_timeout`],
+//! so silence means gone, not busy), the stream ends before `done`, or it
+//! sends garbage. Lost workers are dropped for the rest of the batch;
+//! their unfinished indices re-partition round-robin over the survivors.
+//! Re-dispatch is idempotent — seeds travel with the jobs, so a re-run
+//! is bit-equal and the slot table's first-write-wins dedup (see
+//! [`super::dispatch`]) makes duplicate rows harmless. With no survivors
+//! the remaining slots fail with a structured error; a fleet-wide cancel
+//! (Ctrl-C) marks them cancelled instead — both are honest
+//! completed-prefix results, never a hang.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::dispatch::{split_round_robin, Record, SlotTable};
+use super::protocol::{cancel_request, parse_event, run_request, wire_job, WorkerEvent};
+use crate::coordinator::{
+    BatchResult, BatchRunner, JobHandle, JobOutcome, JobsSummary, OwnedJob, Progress, ProgressSink,
+};
+use crate::obs;
+use crate::util::cancel::CancelToken;
+use crate::util::json::Json;
+
+/// Per-worker accounting: what was dispatched (over all rounds and
+/// batches), what came back, and the worker's own `done` summaries
+/// (absorbed across its connections). `lost` marks a worker dropped
+/// mid-batch; its `jobs` then under-counts, which is why the report's
+/// `"jobs"` block is computed from the deduped slot table, not from
+/// these tallies — they are for the operator, not the result.
+#[derive(Debug, Clone)]
+pub struct WorkerTally {
+    pub addr: String,
+    /// Jobs sent to this worker, summed over dispatch rounds.
+    pub dispatched: usize,
+    /// Fresh rows this worker delivered (first arrival for the slot).
+    pub rows: usize,
+    /// Rows dropped as duplicates (slot already filled — benign).
+    pub duplicates: usize,
+    /// The worker's own completion counters, from its `done` events.
+    pub jobs: JobsSummary,
+    /// Dropped mid-batch (connect failure, timeout, protocol garbage).
+    pub lost: bool,
+}
+
+/// A [`BatchRunner`] that fans one batch across `llamea-kt worker`
+/// daemons. Construct with the worker addresses, optionally adopt the
+/// CLI's SIGINT token via [`RemoteRunner::cancel_via`], and hand it to
+/// anything that drives a `BatchRunner` (the coordinate path, the sweep
+/// meta-tuner, hypertune's backend).
+pub struct RemoteRunner {
+    workers: Vec<String>,
+    cancel: CancelToken,
+    read_timeout: Duration,
+    tallies: Mutex<Vec<WorkerTally>>,
+}
+
+impl RemoteRunner {
+    pub fn new(workers: Vec<String>) -> RemoteRunner {
+        RemoteRunner {
+            tallies: Mutex::new(Vec::with_capacity(workers.len())),
+            workers,
+            cancel: CancelToken::new(),
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+
+    /// Adopt an externally owned cancellation token (the CLI's SIGINT
+    /// bridge) instead of the fresh per-runner one.
+    pub fn cancel_via(mut self, token: CancelToken) -> RemoteRunner {
+        self.cancel = token;
+        self
+    }
+
+    /// Per-read bound on worker silence. Workers heartbeat every ~500ms
+    /// while a batch runs, so the default 10s is ~20 missed pulses —
+    /// decisively lost, yet instant against real tuning runs.
+    pub fn read_timeout(mut self, timeout: Duration) -> RemoteRunner {
+        self.read_timeout = timeout;
+        self
+    }
+
+    /// Per-worker accounting, accumulated over every batch run through
+    /// this runner (a sweep drains many inner batches through one).
+    pub fn tallies(&self) -> Vec<WorkerTally> {
+        self.tallies.lock().unwrap().clone()
+    }
+
+    fn fail_all(&self, jobs: &[OwnedJob], sink: &ProgressSink, msg: &str) -> BatchResult {
+        for i in 0..jobs.len() {
+            sink(&Progress::Failed { slot: i, error: msg.to_string() });
+        }
+        let handles = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| handle(i, j, JobOutcome::Failed(msg.to_string())))
+            .collect();
+        BatchResult::from_handles(handles, true)
+    }
+
+    /// Drive one worker connection through one dispatch round. Returns
+    /// `false` when the worker must be dropped (connect/read/protocol
+    /// failure before its `done`).
+    #[allow(clippy::too_many_arguments)]
+    fn run_worker(
+        &self,
+        w: usize,
+        bucket: &[usize],
+        wire: &[Json],
+        trace: bool,
+        table: &Mutex<SlotTable>,
+        completed: &AtomicUsize,
+        t0: Instant,
+        sink: &ProgressSink,
+    ) -> bool {
+        let addr = self.workers[w].clone();
+        let Ok(stream) = TcpStream::connect(&addr) else { return false };
+        if stream.set_read_timeout(Some(self.read_timeout)).is_err() {
+            return false;
+        }
+        // The worker's trace epoch (`base_ns` in its `done`) is pinned
+        // just before it starts executing, i.e. "now" from this side —
+        // dispatch time is the renormalization anchor.
+        let dispatch_ns = obs::now_ns();
+        let batch: Vec<Json> = bucket.iter().map(|&i| wire[i].clone()).collect();
+        {
+            let mut wtr = &stream;
+            let line = format!("{}\n", run_request(batch, trace).to_string());
+            if wtr.write_all(line.as_bytes()).is_err() {
+                return false;
+            }
+        }
+        self.tallies.lock().unwrap()[w].dispatched += bucket.len();
+
+        let Ok(read_half) = stream.try_clone() else { return false };
+        let mut reader = BufReader::new(read_half);
+        let mut cancel_sent = false;
+        loop {
+            // Heartbeats bound every read to ~500ms, so a fleet cancel
+            // propagates within one pulse even on an idle stream.
+            if self.cancel.is_cancelled() && !cancel_sent {
+                cancel_sent = true;
+                let mut wtr = &stream;
+                let _ = wtr.write_all(format!("{}\n", cancel_request().to_string()).as_bytes());
+            }
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Err(_) | Ok(0) => return false,
+                Ok(_) => {}
+            }
+            let event = match parse_event(line.trim_end()) {
+                Ok(ev) => ev,
+                Err(_) => return false,
+            };
+            match event {
+                WorkerEvent::Hello { .. } | WorkerEvent::Heartbeat => {}
+                WorkerEvent::Row { index, group: _, curve } => {
+                    match table.lock().unwrap().record(index, JobOutcome::Completed(curve)) {
+                        Record::Fresh => {
+                            self.tallies.lock().unwrap()[w].rows += 1;
+                            let done = completed.fetch_add(1, Ordering::SeqCst) + 1;
+                            sink(&Progress::Finished {
+                                slot: index,
+                                completed: done,
+                                elapsed_us: t0.elapsed().as_micros() as u64,
+                            });
+                        }
+                        Record::Duplicate => self.tallies.lock().unwrap()[w].duplicates += 1,
+                        Record::OutOfRange => return false,
+                    }
+                }
+                WorkerEvent::JobFailed { index, error } => {
+                    match table.lock().unwrap().record(index, JobOutcome::Failed(error.clone())) {
+                        Record::Fresh => sink(&Progress::Failed { slot: index, error }),
+                        Record::Duplicate => self.tallies.lock().unwrap()[w].duplicates += 1,
+                        Record::OutOfRange => return false,
+                    }
+                }
+                WorkerEvent::Done { summary, base_ns: worker_base, spans } => {
+                    self.tallies.lock().unwrap()[w].jobs.absorb(summary);
+                    if trace && !spans.is_empty() {
+                        // pid 1 is this process; workers get 2, 3, ...
+                        let offset = dispatch_ns as i64 - worker_base as i64;
+                        obs::export::import_worker_events(&spans, w as u64 + 2, offset);
+                    }
+                    return true;
+                }
+                WorkerEvent::Error { message: _ } => return false,
+            }
+        }
+    }
+}
+
+fn handle(slot: usize, job: &OwnedJob, outcome: JobOutcome) -> JobHandle {
+    JobHandle {
+        slot,
+        group: job.group,
+        priority: job.priority,
+        seed: job.seed,
+        cost_us: job.cost_us(),
+        outcome,
+    }
+}
+
+impl BatchRunner for RemoteRunner {
+    fn run_batch(&self, jobs: &[OwnedJob], sink: &ProgressSink) -> BatchResult {
+        let n = jobs.len();
+        {
+            // First batch initializes the tallies; later batches keep
+            // accumulating, and a worker lost in one batch is retried in
+            // the next (it may have restarted) — `lost` then reads
+            // "lost at least once".
+            let mut tallies = self.tallies.lock().unwrap();
+            if tallies.len() != self.workers.len() {
+                *tallies = self
+                    .workers
+                    .iter()
+                    .map(|a| WorkerTally {
+                        addr: a.clone(),
+                        dispatched: 0,
+                        rows: 0,
+                        duplicates: 0,
+                        jobs: JobsSummary::default(),
+                        lost: false,
+                    })
+                    .collect();
+            }
+        }
+        if self.workers.is_empty() {
+            return self.fail_all(jobs, sink, "no remote workers configured");
+        }
+        let wire: Result<Vec<Json>, String> =
+            jobs.iter().enumerate().map(|(i, j)| wire_job(i, j)).collect();
+        let wire = match wire {
+            Ok(w) => w,
+            Err(msg) => return self.fail_all(jobs, sink, &msg),
+        };
+        for i in 0..n {
+            sink(&Progress::Started { slot: i });
+        }
+
+        let trace = obs::trace_on();
+        let table = Mutex::new(SlotTable::new(n));
+        let completed = AtomicUsize::new(0);
+        let t0 = Instant::now();
+        let alive: Vec<AtomicBool> = self.workers.iter().map(|_| AtomicBool::new(true)).collect();
+
+        loop {
+            if self.cancel.is_cancelled() {
+                break;
+            }
+            let remaining = table.lock().unwrap().unfinished();
+            if remaining.is_empty() {
+                break;
+            }
+            let survivors: Vec<usize> = (0..self.workers.len())
+                .filter(|&w| alive[w].load(Ordering::SeqCst))
+                .collect();
+            if survivors.is_empty() {
+                break;
+            }
+            let buckets = split_round_robin(&remaining, survivors.len());
+            std::thread::scope(|s| {
+                for (k, bucket) in buckets.iter().enumerate() {
+                    if bucket.is_empty() {
+                        continue;
+                    }
+                    let w = survivors[k];
+                    let (wire, table, completed, alive) = (&wire, &table, &completed, &alive);
+                    s.spawn(move || {
+                        let ok =
+                            self.run_worker(w, bucket, wire, trace, table, completed, t0, sink);
+                        if !ok {
+                            alive[w].store(false, Ordering::SeqCst);
+                            self.tallies.lock().unwrap()[w].lost = true;
+                        }
+                    });
+                }
+            });
+        }
+
+        let cancelled = self.cancel.is_cancelled();
+        let table = table.into_inner().unwrap();
+        for &i in &table.unfinished() {
+            if cancelled {
+                sink(&Progress::Cancelled { slot: i });
+            } else {
+                sink(&Progress::Failed {
+                    slot: i,
+                    error: "no surviving remote workers".to_string(),
+                });
+            }
+        }
+        let outcomes = table.into_outcomes(|_| {
+            if cancelled {
+                JobOutcome::Cancelled
+            } else {
+                JobOutcome::Failed("no surviving remote workers".to_string())
+            }
+        });
+        let handles = outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, outcome)| handle(i, &jobs[i], outcome))
+            .collect();
+        BatchResult::from_handles(handles, true)
+    }
+
+    fn batch_cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+}

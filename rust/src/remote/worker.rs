@@ -1,0 +1,329 @@
+//! The fleet worker daemon: accepts one batch per connection, executes
+//! it on a deterministic local pool, and streams rows home as they
+//! finish. Runs behind `llamea-kt worker --listen ADDR`; the global
+//! `--cache-dir` flag gives it persist warm-starts like any other
+//! subcommand (the registry is process-wide).
+//!
+//! The worker holds no fleet state: every connection is one
+//! self-contained batch (`run` request → `hello`, `row`/`job_failed`
+//! stream, `done`), so a coordinator that loses a worker simply
+//! reconnects elsewhere and re-sends the unfinished indices — job seeds
+//! travel with the jobs, which is what makes a re-run bit-equal to the
+//! lost original (see [`super`]).
+//!
+//! Liveness: a heartbeat event every [`WorkerConfig::heartbeat`] while a
+//! batch runs, so the coordinator's read timeout cleanly separates "busy"
+//! from "gone". Cancellation is cooperative and arrives on the same
+//! connection (a `cancel` line, or EOF when the coordinator vanishes —
+//! both fire the batch's token, and completed rows stay valid).
+//!
+//! Trace buffers are process-global: a traced batch resets and drains
+//! the `obs` ring, so run traced fleets against dedicated workers, not a
+//! worker shared by concurrent coordinators.
+
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::protocol::{
+    done_event, error_event, heartbeat_event, hello_event, job_failed_event, parse_request,
+    row_event, WireJob, WorkerRequest, MAX_LINE_BYTES,
+};
+use crate::coordinator::executor::execute_isolated;
+use crate::coordinator::{CacheKey, CacheRegistry, JobOutcome, JobsSummary, OwnedJob};
+use crate::obs;
+use crate::optimizers::OptimizerSpec;
+use crate::serve::protocol::{read_line, Line};
+use crate::util::cancel::CancelToken;
+use crate::util::json::Json;
+
+/// Worker daemon knobs.
+pub struct WorkerConfig {
+    /// Local pool width; `None` means the machine default
+    /// ([`crate::util::parallel::default_width`]).
+    pub threads: Option<usize>,
+    /// Liveness pulse period while a batch runs. Must sit well under the
+    /// coordinator's read timeout (default 500ms against 10s).
+    pub heartbeat: Duration,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> WorkerConfig {
+        WorkerConfig { threads: None, heartbeat: Duration::from_millis(500) }
+    }
+}
+
+/// A bound, not-yet-running worker. `bind` → inspect
+/// [`Worker::local_addr`] (supports `--listen 127.0.0.1:0`) →
+/// [`Worker::run`].
+pub struct Worker {
+    listener: TcpListener,
+    addr: SocketAddr,
+    threads: usize,
+    heartbeat: Duration,
+    shutdown: CancelToken,
+}
+
+/// Clonable remote control for a running [`Worker`]: fires the shutdown
+/// token and pokes the accept loop awake.
+#[derive(Clone)]
+pub struct WorkerHandle {
+    token: CancelToken,
+    addr: SocketAddr,
+}
+
+impl WorkerHandle {
+    pub fn shutdown(&self) {
+        self.token.cancel();
+        // The accept loop blocks in `accept`; a throwaway connection
+        // makes it re-check the token.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Worker {
+    pub fn bind(addr: &str, config: WorkerConfig) -> std::io::Result<Worker> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let threads = config.threads.unwrap_or_else(crate::util::parallel::default_width).max(1);
+        Ok(Worker { listener, addr, threads, heartbeat: config.heartbeat, shutdown: CancelToken::new() })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn handle(&self) -> WorkerHandle {
+        WorkerHandle { token: self.shutdown.clone(), addr: self.addr }
+    }
+
+    /// Accept connections until the shutdown token fires. Each
+    /// connection is handled on its own thread; shutdown also cancels
+    /// any batch still running (its coordinator sees the wound-down
+    /// `done` and re-dispatches elsewhere).
+    pub fn run(self) -> std::io::Result<()> {
+        for stream in self.listener.incoming() {
+            if self.shutdown.is_cancelled() {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let threads = self.threads;
+            let heartbeat = self.heartbeat;
+            let shutdown = self.shutdown.clone();
+            std::thread::spawn(move || handle_conn(stream, threads, heartbeat, shutdown));
+        }
+        Ok(())
+    }
+}
+
+/// Write one event line (best effort — a hung-up coordinator just ends
+/// this batch via the watcher's EOF).
+fn send(stream: &TcpStream, event: &Json) {
+    let mut w = stream;
+    let _ = w.write_all(format!("{}\n", event.to_string()).as_bytes());
+}
+
+/// Same, under the shared write lock — rows, heartbeats, and failures
+/// are emitted by different threads, and the lock keeps every event
+/// line-atomic on the wire.
+fn send_locked(stream: &Mutex<TcpStream>, event: &Json) {
+    let guard = stream.lock().unwrap();
+    send(&guard, event);
+}
+
+fn handle_conn(stream: TcpStream, threads: usize, heartbeat: Duration, shutdown: CancelToken) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half.take((MAX_LINE_BYTES + 1) as u64));
+    loop {
+        let (line, terminated) = match read_line(&mut reader) {
+            Line::Eof => return,
+            Line::TooLong => {
+                // Cannot resync inside an unbounded line; answer and drop.
+                send(&stream, &error_event("request line exceeds 1 MiB"));
+                return;
+            }
+            Line::NotUtf8(t) => {
+                send(&stream, &error_event("request line is not UTF-8"));
+                if t {
+                    continue;
+                }
+                return;
+            }
+            Line::Data(s, t) => (s, t),
+        };
+        if !line.trim().is_empty() {
+            match parse_request(&line) {
+                Err(msg) => send(&stream, &error_event(&msg)),
+                // A cancel with no batch on this connection is a no-op.
+                Ok(WorkerRequest::Cancel) => {}
+                Ok(WorkerRequest::Run { jobs, trace }) => {
+                    // One run per connection: the reader moves to the
+                    // watcher thread, and the batch's end ends the
+                    // connection's useful life.
+                    run_batch_conn(stream, reader, jobs, trace, threads, heartbeat, shutdown);
+                    return;
+                }
+            }
+        }
+        if !terminated {
+            return;
+        }
+    }
+}
+
+/// Reconstruct the batch against the local registry. Any failure aborts
+/// the whole batch with a structured error — a coordinator that sent one
+/// unknown space would otherwise get a silently partial run.
+fn resolve_jobs(wire: &[WireJob]) -> Result<Vec<OwnedJob>, String> {
+    let registry = CacheRegistry::global();
+    wire.iter()
+        .map(|wj| {
+            let key = CacheKey::parse(&wj.space)
+                .ok_or_else(|| format!("unknown space '{}' (use app@gpu)", wj.space))?;
+            let spec = OptimizerSpec::parse(&wj.opt)
+                .ok_or_else(|| format!("unknown optimizer spec '{}'", wj.opt))?;
+            Ok(OwnedJob {
+                entry: registry.entry(key),
+                spec: Arc::new(spec),
+                seed: wj.seed,
+                group: wj.group,
+                priority: wj.priority,
+            })
+        })
+        .collect()
+}
+
+fn run_batch_conn(
+    stream: TcpStream,
+    mut reader: BufReader<std::io::Take<TcpStream>>,
+    wire: Vec<WireJob>,
+    trace: bool,
+    threads: usize,
+    heartbeat: Duration,
+    shutdown: CancelToken,
+) {
+    let owned = match resolve_jobs(&wire) {
+        Ok(owned) => owned,
+        Err(msg) => {
+            send(&stream, &error_event(&msg));
+            return;
+        }
+    };
+
+    let token = CancelToken::new();
+    // Watcher: consume the connection for the batch's lifetime. A
+    // `cancel` line or the coordinator vanishing (EOF, garbage) fires
+    // the batch token. Detached on purpose: it blocks in a read until
+    // the coordinator closes, which may be after `done` is sent.
+    {
+        let token = token.clone();
+        std::thread::spawn(move || loop {
+            match read_line(&mut reader) {
+                Line::Eof | Line::TooLong => {
+                    token.cancel();
+                    return;
+                }
+                Line::NotUtf8(t) => {
+                    if !t {
+                        token.cancel();
+                        return;
+                    }
+                }
+                Line::Data(line, t) => {
+                    if matches!(parse_request(&line), Ok(WorkerRequest::Cancel)) {
+                        token.cancel();
+                    }
+                    if !t {
+                        return;
+                    }
+                }
+            }
+        });
+    }
+
+    if trace {
+        obs::enable(true, false);
+        obs::reset();
+    }
+    let base_ns = obs::now_ns();
+
+    let pool = threads.min(wire.len()).max(1);
+    let stream = Mutex::new(stream);
+    send_locked(&stream, &hello_event(pool, wire.len()));
+
+    let summary = Mutex::new(JobsSummary::default());
+    let next = AtomicUsize::new(0);
+    let finished = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // Heartbeat + shutdown relay: pulses while the batch runs, and
+        // forwards a daemon-wide shutdown into this batch's token.
+        let hb = s.spawn(|| {
+            let mut since_pulse = Duration::ZERO;
+            let tick = Duration::from_millis(25);
+            while !finished.load(Ordering::SeqCst) {
+                if shutdown.is_cancelled() {
+                    token.cancel();
+                }
+                std::thread::sleep(tick);
+                since_pulse += tick;
+                if since_pulse >= heartbeat {
+                    since_pulse = Duration::ZERO;
+                    send_locked(&stream, &heartbeat_event());
+                }
+            }
+        });
+        let runners: Vec<_> = (0..pool)
+            .map(|_| {
+                s.spawn(|| loop {
+                    let k = next.fetch_add(1, Ordering::SeqCst);
+                    let Some(job) = owned.get(k) else { return };
+                    let index = wire[k].index;
+                    let mut sp = obs::span("remote.job").kv("index", index);
+                    match execute_isolated(&job.as_job(), &token) {
+                        JobOutcome::Completed(curve) => {
+                            sp.note("outcome", "completed");
+                            {
+                                let mut sum = summary.lock().unwrap();
+                                sum.completed += 1;
+                                sum.cost_us += job.cost_us();
+                            }
+                            send_locked(&stream, &row_event(index, job.group, &curve));
+                        }
+                        JobOutcome::Cancelled => {
+                            sp.note("outcome", "cancelled");
+                            summary.lock().unwrap().cancelled += 1;
+                        }
+                        JobOutcome::Failed(e) => {
+                            sp.note("outcome", "failed");
+                            summary.lock().unwrap().failed += 1;
+                            send_locked(&stream, &job_failed_event(index, &e));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for r in runners {
+            let _ = r.join();
+        }
+        finished.store(true, Ordering::SeqCst);
+        let _ = hb.join();
+    });
+
+    let spans = if trace {
+        let spans = crate::obs::export::events_json();
+        obs::enable(false, false);
+        obs::reset();
+        spans
+    } else {
+        Json::Arr(Vec::new())
+    };
+    let summary = *summary.lock().unwrap();
+    send_locked(&stream, &done_event(&summary, base_ns, spans));
+}

@@ -10,15 +10,35 @@
 //! `client submit --out` files diff byte-for-byte against direct CLI
 //! runs. Server-side `error` events surface as `Err` with the daemon's
 //! diagnostic.
+//!
+//! Every read is bounded: a daemon that dies mid-stream (killed process,
+//! dropped network) turns into a structured timeout error instead of a
+//! client blocked forever. Control round-trips ([`status`]/[`cancel`])
+//! use the short [`CONTROL_TIMEOUT`]; [`submit`]/[`tail`] streams use the
+//! generous [`STREAM_TIMEOUT`] because a busy session is legitimately
+//! silent between progress events.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use super::protocol::{submit_request, SubmitSpec};
 use crate::util::json::Json;
 
-fn connect(addr: &str) -> Result<TcpStream, String> {
-    TcpStream::connect(addr).map_err(|e| format!("connect {}: {}", addr, e))
+/// Read timeout for one-request/one-response control round-trips.
+pub const CONTROL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Read timeout between events on a `submit`/`tail` stream. Generous:
+/// a large admitted grid can be event-silent while earlier sessions
+/// drain, but a daemon silent this long is gone, not busy.
+pub const STREAM_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {}: {}", addr, e))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| format!("connect {}: set read timeout: {}", addr, e))?;
+    Ok(stream)
 }
 
 fn send_line(stream: &TcpStream, line: &Json) -> Result<(), String> {
@@ -27,10 +47,23 @@ fn send_line(stream: &TcpStream, line: &Json) -> Result<(), String> {
         .map_err(|e| format!("send request: {}", e))
 }
 
-/// Read one event line; `None` on a clean close.
-fn read_event(reader: &mut BufReader<TcpStream>) -> Result<Option<Json>, String> {
+/// Read one event line; `None` on a clean close. A read timeout means
+/// the daemon died (or stalled) mid-stream — surfaced as a structured
+/// error naming the bound, never an indefinite block.
+fn read_event(reader: &mut BufReader<TcpStream>, timeout: Duration) -> Result<Option<Json>, String> {
     let mut line = String::new();
     match reader.read_line(&mut line) {
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            Err(format!(
+                "timed out after {}s waiting for the daemon (it may have died mid-stream)",
+                timeout.as_secs()
+            ))
+        }
         Err(e) => Err(format!("read response: {}", e)),
         Ok(0) => Ok(None),
         Ok(_) => Json::parse(line.trim_end()).map(Some).map_err(|e| format!("bad response line: {}", e)),
@@ -44,7 +77,7 @@ fn await_report(
     on_event: &mut dyn FnMut(&Json),
 ) -> Result<(u64, Json), String> {
     loop {
-        let Some(mut ev) = read_event(reader)? else {
+        let Some(mut ev) = read_event(reader, STREAM_TIMEOUT)? else {
             return Err("connection closed before a report arrived".into());
         };
         match ev.get("event").and_then(|v| v.as_str()) {
@@ -74,7 +107,7 @@ pub fn submit(
     spec: &SubmitSpec,
     on_event: &mut dyn FnMut(&Json),
 ) -> Result<(u64, Json), String> {
-    let stream = connect(addr)?;
+    let stream = connect(addr, STREAM_TIMEOUT)?;
     send_line(&stream, &submit_request(spec))?;
     let mut reader = BufReader::new(stream);
     await_report(&mut reader, on_event)
@@ -83,7 +116,7 @@ pub fn submit(
 /// Re-attach to a session (running or finished) and block until its
 /// report.
 pub fn tail(addr: &str, session: u64, on_event: &mut dyn FnMut(&Json)) -> Result<Json, String> {
-    let stream = connect(addr)?;
+    let stream = connect(addr, STREAM_TIMEOUT)?;
     let mut req = Json::obj();
     req.set("cmd", "tail");
     req.set("session", session);
@@ -94,10 +127,10 @@ pub fn tail(addr: &str, session: u64, on_event: &mut dyn FnMut(&Json)) -> Result
 
 /// One request line, one response event.
 fn control(addr: &str, req: &Json) -> Result<Json, String> {
-    let stream = connect(addr)?;
+    let stream = connect(addr, CONTROL_TIMEOUT)?;
     send_line(&stream, req)?;
     let mut reader = BufReader::new(stream);
-    let ev = read_event(&mut reader)?
+    let ev = read_event(&mut reader, CONTROL_TIMEOUT)?
         .ok_or_else(|| "connection closed without a response".to_string())?;
     if ev.get("event").and_then(|v| v.as_str()) == Some("error") {
         return Err(ev

@@ -17,15 +17,15 @@
 //! that one block is pinned in `rust/tests/integration_serve.rs` and the
 //! CI serve-smoke stage.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use super::pool::{SessionRunner, SharedPool};
 use super::protocol::{
-    accepted_event, cancelling_event, error_event, parse_request, progress_event, report_event,
-    Request, SubmitSpec, MAX_LINE_BYTES,
+    accepted_event, cancelling_event, error_event, parse_request, progress_event, read_line,
+    report_event, Line, Request, SubmitSpec, MAX_LINE_BYTES,
 };
 use super::session::{Phase, SessionState, Sessions};
 use crate::coordinator::{
@@ -137,39 +137,6 @@ impl Server {
 fn send(stream: &TcpStream, event: &Json) {
     let mut w = stream;
     let _ = w.write_all(format!("{}\n", event.to_string()).as_bytes());
-}
-
-/// One request line, bounded by [`MAX_LINE_BYTES`].
-enum Line {
-    /// A complete (or final unterminated) line; the bool is whether a
-    /// newline terminated it — an unterminated line is the connection's
-    /// last.
-    Data(String, bool),
-    TooLong,
-    Eof,
-    NotUtf8(bool),
-}
-
-fn read_line(reader: &mut BufReader<std::io::Take<TcpStream>>) -> Line {
-    reader.get_mut().set_limit((MAX_LINE_BYTES + 1) as u64);
-    let mut buf = Vec::new();
-    match reader.read_until(b'\n', &mut buf) {
-        Err(_) | Ok(0) => return Line::Eof,
-        Ok(_) => {}
-    }
-    let terminated = buf.last() == Some(&b'\n');
-    if terminated {
-        buf.pop();
-        if buf.last() == Some(&b'\r') {
-            buf.pop();
-        }
-    } else if buf.len() > MAX_LINE_BYTES {
-        return Line::TooLong;
-    }
-    match String::from_utf8(buf) {
-        Ok(s) => Line::Data(s, terminated),
-        Err(_) => Line::NotUtf8(terminated),
-    }
 }
 
 fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {

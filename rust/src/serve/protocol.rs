@@ -34,12 +34,56 @@
 //! Seeds ride as JSON numbers, so they are exact up to 2^53 — the same
 //! range every report field already lives in.
 
+use std::io::BufRead;
+use std::net::TcpStream;
+
 use crate::coordinator::Progress;
 use crate::util::json::Json;
 
 /// Hard cap on one request line (defends the daemon's memory against a
 /// client that never sends a newline).
 pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// One request line, bounded by [`MAX_LINE_BYTES`]. Shared by every
+/// newline-delimited-JSON server in the crate (the serve daemon and the
+/// remote fleet worker), so the robustness rules — bounded buffering,
+/// structured answers for oversized / non-UTF-8 / truncated lines — stay
+/// identical across protocols.
+pub enum Line {
+    /// A complete (or final unterminated) line; the bool is whether a
+    /// newline terminated it — an unterminated line is the connection's
+    /// last.
+    Data(String, bool),
+    TooLong,
+    Eof,
+    NotUtf8(bool),
+}
+
+/// Read one bounded request line from a connection reader (wrap the
+/// stream as `BufReader::new(stream.take((MAX_LINE_BYTES + 1) as u64))`;
+/// the limit is re-armed per call so the cap applies per line, not per
+/// connection).
+pub fn read_line(reader: &mut std::io::BufReader<std::io::Take<TcpStream>>) -> Line {
+    reader.get_mut().set_limit((MAX_LINE_BYTES + 1) as u64);
+    let mut buf = Vec::new();
+    match reader.read_until(b'\n', &mut buf) {
+        Err(_) | Ok(0) => return Line::Eof,
+        Ok(_) => {}
+    }
+    let terminated = buf.last() == Some(&b'\n');
+    if terminated {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    } else if buf.len() > MAX_LINE_BYTES {
+        return Line::TooLong;
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Line::Data(s, terminated),
+        Err(_) => Line::NotUtf8(terminated),
+    }
+}
 
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq)]

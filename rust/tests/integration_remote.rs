@@ -1,0 +1,295 @@
+//! End-to-end tests of the remote fleet over real TCP connections — the
+//! master contract extended across hosts: a fleet-collated coordinate
+//! report is **byte-identical** to the single-process run of the same
+//! grid, for any fleet size, any worker pool width, and any worker
+//! loss/retry timing. Fault injection uses scripted fake workers (a
+//! listener that dies after `hello`, one that delivers every row twice)
+//! alongside real in-process [`Worker`] daemons on port 0.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use llamea_kt::coordinator::{
+    coordinate_report, grid_jobs, BatchRunner, CacheKey, CacheRegistry, Executor, JobsSummary,
+    OwnedJob, SpaceEntry, COORDINATE_TITLE,
+};
+use llamea_kt::methodology::OptimizerFactory;
+use llamea_kt::optimizers::OptimizerSpec;
+use llamea_kt::remote::protocol::{done_event, hello_event, row_event, MAX_LINE_BYTES};
+use llamea_kt::remote::{RemoteRunner, Worker, WorkerConfig, WorkerHandle, WorkerTally};
+use llamea_kt::util::json::Json;
+
+struct Fleet {
+    addr: String,
+    handle: WorkerHandle,
+    join: std::thread::JoinHandle<std::io::Result<()>>,
+}
+
+fn start_worker(threads: usize) -> Fleet {
+    let worker = Worker::bind(
+        "127.0.0.1:0",
+        WorkerConfig { threads: Some(threads), ..Default::default() },
+    )
+    .expect("bind ephemeral port");
+    let addr = worker.local_addr().to_string();
+    let handle = worker.handle();
+    let join = std::thread::spawn(move || worker.run());
+    Fleet { addr, handle, join }
+}
+
+impl Fleet {
+    fn stop(self) {
+        self.handle.shutdown();
+        self.join.join().unwrap().expect("accept loop exits cleanly");
+    }
+}
+
+/// The single-process report for a coordinate grid: the exact assembly
+/// path `llamea-kt coordinate --out` uses, without the `"caches"` block
+/// `write_report` appends.
+fn direct_report(spaces: &[&str], opts: &[&str], runs: usize, seed: u64, width: usize) -> String {
+    let registry = CacheRegistry::global();
+    let entries: Vec<Arc<SpaceEntry>> =
+        spaces.iter().map(|s| registry.entry(CacheKey::parse(s).unwrap())).collect();
+    let specs: Vec<OptimizerSpec> =
+        opts.iter().map(|o| OptimizerSpec::parse(o).unwrap()).collect();
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+    let jobs = grid_jobs(&entries, &factories, runs, seed);
+    let batch = Executor::with_threads(Some(width)).fail_fast().run_jobs(&jobs);
+    let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+    let labels: Vec<String> = factories.iter().map(|(l, _)| l.clone()).collect();
+    coordinate_report(COORDINATE_TITLE, &ids, &labels, &batch).to_string()
+}
+
+fn owned_grid(spaces: &[&str], opts: &[&str], runs: usize, seed: u64) -> (Vec<OwnedJob>, Vec<String>, Vec<String>) {
+    let registry = CacheRegistry::global();
+    let entries: Vec<Arc<SpaceEntry>> =
+        spaces.iter().map(|s| registry.entry(CacheKey::parse(s).unwrap())).collect();
+    let specs: Vec<Arc<OptimizerSpec>> =
+        opts.iter().map(|o| Arc::new(OptimizerSpec::parse(o).unwrap())).collect();
+    let jobs = OwnedJob::grid(&entries, &specs, runs, seed);
+    let ids: Vec<String> = entries.iter().map(|e| e.cache.id()).collect();
+    let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
+    (jobs, ids, labels)
+}
+
+/// Run the grid through a fleet and render the collated report.
+fn fleet_report(
+    workers: Vec<String>,
+    spaces: &[&str],
+    opts: &[&str],
+    runs: usize,
+    seed: u64,
+) -> (String, Vec<WorkerTally>) {
+    let (jobs, ids, labels) = owned_grid(spaces, opts, runs, seed);
+    let runner = RemoteRunner::new(workers);
+    let batch = runner.run_batch(&jobs, &|_| {});
+    (coordinate_report(COORDINATE_TITLE, &ids, &labels, &batch).to_string(), runner.tallies())
+}
+
+#[test]
+fn fleet_report_is_byte_identical_to_direct_at_widths_1_and_8() {
+    let spaces = ["convolution@A4000"];
+    let opts = ["sa", "random"];
+    let reference = direct_report(&spaces, &opts, 3, 7, 2);
+    for width in [1usize, 8] {
+        let a = start_worker(width);
+        let b = start_worker(width);
+        let (report, tallies) =
+            fleet_report(vec![a.addr.clone(), b.addr.clone()], &spaces, &opts, 3, 7);
+        assert_eq!(
+            report, reference,
+            "fleet bytes must not depend on worker pool width {}",
+            width
+        );
+        assert!(
+            tallies.iter().all(|t| !t.lost) && tallies.iter().map(|t| t.rows).sum::<usize>() == 6,
+            "healthy fleet: every row fresh, no losses: {:?}",
+            tallies
+        );
+        a.stop();
+        b.stop();
+    }
+}
+
+/// A scripted worker that accepts one batch, says hello, and dies
+/// without delivering a single row — the "SIGKILL mid-grid" case.
+fn dying_worker() -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let join = std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            let _ = reader.read_line(&mut line); // the run request
+            let _ = (&stream)
+                .write_all(format!("{}\n", hello_event(1, 1).to_string()).as_bytes());
+            // Connection drops here: no rows, no done.
+        }
+    });
+    (addr, join)
+}
+
+#[test]
+fn a_worker_lost_mid_grid_redispatches_to_the_survivor_byte_identically() {
+    let spaces = ["convolution@A4000"];
+    let opts = ["sa", "random"];
+    let reference = direct_report(&spaces, &opts, 3, 7, 2);
+    let survivor = start_worker(2);
+    let (dead_addr, dead_join) = dying_worker();
+    let (report, tallies) =
+        fleet_report(vec![dead_addr, survivor.addr.clone()], &spaces, &opts, 3, 7);
+    assert_eq!(
+        report, reference,
+        "losing a worker mid-grid must not change a byte of the collated report"
+    );
+    assert!(tallies[0].lost, "the dead worker is recorded as lost: {:?}", tallies);
+    assert!(!tallies[1].lost, "the survivor is not: {:?}", tallies);
+    assert_eq!(
+        tallies[1].rows, 6,
+        "every row ultimately came from the survivor: {:?}",
+        tallies
+    );
+    dead_join.join().unwrap();
+    survivor.stop();
+}
+
+/// A scripted worker that delivers every row twice before `done` — the
+/// "retry raced the original" case, compressed into one connection.
+fn duplicating_worker(rows: Vec<(usize, usize, Vec<f64>)>) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let join = std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            let _ = reader.read_line(&mut line);
+            let send = |j: &Json| {
+                let _ = (&stream).write_all(format!("{}\n", j.to_string()).as_bytes());
+            };
+            send(&hello_event(1, rows.len()));
+            for (i, g, curve) in &rows {
+                send(&row_event(*i, *g, curve));
+                send(&row_event(*i, *g, curve));
+            }
+            let summary =
+                JobsSummary { completed: rows.len(), cancelled: 0, failed: 0, cost_us: 0 };
+            send(&done_event(&summary, 0, Json::Arr(Vec::new())));
+        }
+    });
+    (addr, join)
+}
+
+#[test]
+fn duplicate_rows_are_deduped_by_index() {
+    let spaces = ["convolution@A4000"];
+    let opts = ["sa"];
+    let reference = direct_report(&spaces, &opts, 2, 9, 2);
+    // Script the fake from the real curves so its duplicates are honest
+    // re-deliveries, exactly what a retry raced by the original sends.
+    let (jobs, ids, labels) = owned_grid(&spaces, &opts, 2, 9);
+    let registry = CacheRegistry::global();
+    let entries: Vec<Arc<SpaceEntry>> = spaces
+        .iter()
+        .map(|s| registry.entry(CacheKey::parse(s).unwrap()))
+        .collect();
+    let specs: Vec<OptimizerSpec> =
+        opts.iter().map(|o| OptimizerSpec::parse(o).unwrap()).collect();
+    let factories: Vec<(String, &dyn OptimizerFactory)> =
+        specs.iter().map(|s| (s.label(), s as &dyn OptimizerFactory)).collect();
+    let direct = Executor::with_threads(Some(2))
+        .fail_fast()
+        .run_jobs(&grid_jobs(&entries, &factories, 2, 9));
+    let rows: Vec<(usize, usize, Vec<f64>)> = direct
+        .handles
+        .iter()
+        .map(|h| (h.slot, h.group, h.outcome.curve().expect("completed").to_vec()))
+        .collect();
+    let n = rows.len();
+
+    let (addr, join) = duplicating_worker(rows);
+    let runner = RemoteRunner::new(vec![addr]);
+    let batch = runner.run_batch(&jobs, &|_| {});
+    let report = coordinate_report(COORDINATE_TITLE, &ids, &labels, &batch).to_string();
+    assert_eq!(report, reference, "deduped fleet bytes must match the single-process run");
+    let tallies = runner.tallies();
+    assert_eq!(tallies[0].rows, n, "first delivery of each slot is fresh: {:?}", tallies);
+    assert_eq!(
+        tallies[0].duplicates, n,
+        "second delivery of each slot is dropped as a duplicate: {:?}",
+        tallies
+    );
+    assert!(!tallies[0].lost, "duplicates are benign, not a protocol violation: {:?}", tallies);
+    join.join().unwrap();
+}
+
+#[test]
+fn malformed_truncated_and_oversized_lines_get_structured_errors_not_hangs() {
+    let worker = start_worker(1);
+
+    // Malformed JSON, unknown commands, and non-UTF-8 all answer with an
+    // error event and keep the connection serving.
+    let stream = TcpStream::connect(&worker.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    for bad in ["{not json\n", "[]\n", "{\"cmd\":\"warp\"}\n", "{\"cmd\":\"run\",\"jobs\":[]}\n"] {
+        (&stream).write_all(bad.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains(r#""event":"error""#), "{:?} -> {}", bad, line);
+    }
+    (&stream).write_all(b"\xff\xfe\xfd\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("not UTF-8"), "{}", line);
+    drop(reader);
+    drop(stream);
+
+    // A resolvable-looking batch naming an unknown space aborts whole,
+    // with a structured error — never a silently partial run.
+    let stream = TcpStream::connect(&worker.addr).unwrap();
+    (&stream)
+        .write_all(
+            b"{\"cmd\":\"run\",\"jobs\":[{\"index\":0,\"space\":\"nope@nowhere\",\
+              \"opt\":\"sa\",\"seed\":\"1\",\"group\":0}]}\n",
+        )
+        .unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains("unknown space 'nope@nowhere'"), "{}", line);
+    drop(stream);
+
+    // Same for an optimizer spec the local registry cannot reconstruct.
+    let stream = TcpStream::connect(&worker.addr).unwrap();
+    (&stream)
+        .write_all(
+            b"{\"cmd\":\"run\",\"jobs\":[{\"index\":0,\"space\":\"convolution@A4000\",\
+              \"opt\":\"warp\",\"seed\":\"1\",\"group\":0}]}\n",
+        )
+        .unwrap();
+    let mut line = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains("unknown optimizer spec 'warp'"), "{}", line);
+    drop(stream);
+
+    // A truncated final line (no newline before EOF) is still answered.
+    let stream = TcpStream::connect(&worker.addr).unwrap();
+    (&stream).write_all(b"{not json").unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut response = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_to_string(&mut response).unwrap();
+    assert!(response.contains(r#""event":"error""#), "{}", response);
+
+    // An unterminated line past the 1 MiB cap is answered with an error,
+    // never buffered unboundedly.
+    let stream = TcpStream::connect(&worker.addr).unwrap();
+    let oversized = vec![b'a'; MAX_LINE_BYTES + 1];
+    (&stream).write_all(&oversized).unwrap();
+    let mut response = String::new();
+    BufReader::new(stream.try_clone().unwrap()).read_to_string(&mut response).unwrap();
+    assert!(response.contains("exceeds 1 MiB"), "{}", response);
+
+    worker.stop();
+}
